@@ -1,0 +1,68 @@
+//! Fold explorer: print every homomorphic variant RFold would consider
+//! for a job shape, with its cube cost on a given cluster — a debugging /
+//! capacity-planning tool for operators.
+//!
+//! Run with: `cargo run --release --example fold_explorer -- 4 8 2 [cube_n]`
+
+use rfold::placement::reconfig_place;
+use rfold::shape::fold::enumerate_variants;
+use rfold::shape::{verify, JobShape};
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+
+fn main() {
+    let args: Vec<usize> = std::env::args()
+        .skip(1)
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    let (a, b, c) = match args.as_slice() {
+        [a, b, c, ..] => (*a, *b, *c),
+        _ => (4, 8, 2),
+    };
+    let n = args.get(3).copied().unwrap_or(4);
+    let shape = JobShape::new(a, b, c);
+    let cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
+
+    println!(
+        "shape {shape} ({} XPUs, {}D) on {n}^3 cubes:\n",
+        shape.size(),
+        shape.dimensionality()
+    );
+    println!(
+        "{:<12} {:<36} {:>6} {:>6} {:>8} {:>8}",
+        "placed", "fold", "cubes", "ocs", "wrap", "verified"
+    );
+
+    let mut best: Option<(usize, String)> = None;
+    for v in enumerate_variants(shape, 256) {
+        let verified = verify::verify(&v, v.requires_wrap).is_ok();
+        let (cubes, ocs, wrap) = match reconfig_place::place(&cluster, &v, 1) {
+            Some(p) => (
+                p.cubes.len().to_string(),
+                p.ocs_entries().to_string(),
+                format!("{:?}", p.wrap.map(|w| w as u8)),
+            ),
+            None => ("-".into(), "-".into(), "unplaceable".into()),
+        };
+        println!(
+            "{:<12} {:<36} {:>6} {:>6} {:>8} {:>8}",
+            v.placed.to_string(),
+            format!("{:?}", v.kind),
+            cubes,
+            ocs,
+            wrap,
+            if verified { "ok" } else { "FAIL" }
+        );
+        assert!(verified, "generated variants must verify");
+        if let Ok(nc) = cubes.parse::<usize>() {
+            if best.as_ref().map(|(b, _)| nc < *b).unwrap_or(true) {
+                best = Some((nc, v.placed.to_string()));
+            }
+        }
+    }
+    match best {
+        Some((nc, placed)) => {
+            println!("\nRFold would commit: {placed} using {nc} cube(s)");
+        }
+        None => println!("\nshape is unplaceable on this topology"),
+    }
+}

@@ -1,0 +1,69 @@
+//! End-to-end driver (DESIGN.md §3): run the full system on a realistic
+//! workload — a Philly-style synthetic trace on the 4096-XPU reconfigurable
+//! cluster — through every policy, and report the paper's headline metrics
+//! (JCR / JCT percentiles / utilization). This is the run recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example philly_sim [-- jobs runs]`
+
+use rfold::metrics::{report, summarize};
+use rfold::placement::PolicyKind;
+use rfold::sim::engine::{SimConfig, Simulation};
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace::gen::{generate, TraceConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let runs: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    println!("== RFold end-to-end: {runs} trace(s) x {jobs} jobs on 4096 XPUs ==");
+
+    let cells = [
+        ("FirstFit (16^3)", PolicyKind::FirstFit, ClusterTopo::static_4096()),
+        ("Folding (16^3)", PolicyKind::Folding, ClusterTopo::static_4096()),
+        ("Reconfig (4^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(4)),
+        ("RFold (4^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(4)),
+    ];
+
+    let mut summaries = Vec::new();
+    for (label, policy, topo) in cells {
+        let mut pairs = Vec::new();
+        let mut traces = Vec::new();
+        for seed in 1..=runs as u64 {
+            traces.push(generate(&TraceConfig {
+                num_jobs: jobs,
+                seed,
+                ..Default::default()
+            }));
+        }
+        let t0 = std::time::Instant::now();
+        for t in &traces {
+            let r = Simulation::new(SimConfig::new(topo, policy)).run(t);
+            pairs.push((r, t.as_slice()));
+        }
+        let s = summarize(label, &pairs);
+        println!(
+            "{label:<18} jcr={:>6.2}%  jct p50/p90/p99 = {} / {} / {}  util={:.3}  ({:.1}s)",
+            s.avg_jcr_pct,
+            report::fmt_secs(s.jct_p50),
+            report::fmt_secs(s.jct_p90),
+            report::fmt_secs(s.jct_p99),
+            s.avg_util,
+            t0.elapsed().as_secs_f64(),
+        );
+        summaries.push(s);
+    }
+
+    // Headline checks (the paper's qualitative claims).
+    let jcr = |l: &str| summaries.iter().find(|s| s.label == l).unwrap().avg_jcr_pct;
+    let p50 = |l: &str| summaries.iter().find(|s| s.label == l).unwrap().jct_p50;
+    let util = |l: &str| summaries.iter().find(|s| s.label == l).unwrap().avg_util;
+    println!("\nheadlines:");
+    println!("  JCR  FirstFit {:.1}% < Folding {:.1}% < RFold {:.1}%", jcr("FirstFit (16^3)"), jcr("Folding (16^3)"), jcr("RFold (4^3)"));
+    println!("  JCT  RFold/Reconfig p50 speedup = {:.2}x", p50("Reconfig (4^3)") / p50("RFold (4^3)"));
+    println!("  UTIL RFold - FirstFit = {:+.1} points (absolute)", 100.0 * (util("RFold (4^3)") - util("FirstFit (16^3)")));
+    assert!(jcr("RFold (4^3)") > 99.9, "RFold(4^3) must schedule everything");
+    assert!(p50("RFold (4^3)") <= p50("Reconfig (4^3)"), "RFold must not be slower");
+    println!("philly_sim OK");
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the RFold public API in ~60 lines.
+//!
+//! Builds the paper's reconfigurable 4096-XPU cluster (64 cubes of 4³),
+//! walks the three Figure-2 jobs through folding + reconfiguration, and
+//! prints what each policy decides.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::shape::JobShape;
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+
+fn main() {
+    // The paper's evaluation cluster: 64 reconfigurable 4×4×4 cubes.
+    let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let mut rfold = Policy::new(PolicyKind::RFold);
+    let mut reconfig = Policy::new(PolicyKind::Reconfig);
+
+    println!("cluster: {} XPUs, {} free", cluster.num_nodes(), cluster.free_count());
+
+    // The three jobs of Figure 2.
+    let jobs = [
+        (1u64, JobShape::new(18, 1, 1), "green 1D job (DP-only ring of 18)"),
+        (2, JobShape::new(1, 6, 4), "blue 2D job (6-way TP x 4-way DP)"),
+        (3, JobShape::new(4, 8, 2), "red 3D job (DP x TP x PP)"),
+    ];
+
+    for (id, shape, desc) in jobs {
+        println!("\njob {id}: {shape}  — {desc}");
+
+        // What would reconfiguration alone do?
+        if let Some(plan) = reconfig.plan(&cluster, id + 100, shape) {
+            println!(
+                "  Reconfig : {} as-is, {} cube(s), {} OCS circuits",
+                plan.variant.placed,
+                plan.cubes.len(),
+                plan.ocs_entries()
+            );
+        }
+
+        // RFold folds the shape first, then reconfigures.
+        let plan = rfold.plan(&cluster, id, shape).expect("placeable");
+        println!(
+            "  RFold    : folded to {} ({:?}), {} cube(s), {} OCS circuits",
+            plan.variant.placed,
+            plan.variant.kind,
+            plan.cubes.len(),
+            plan.ocs_entries()
+        );
+
+        // Commit: nodes become busy, OCS circuits are reserved, and the
+        // homomorphism of the fold is re-verified in debug builds.
+        plan.commit(&mut cluster).expect("commit");
+        let alloc = cluster.allocation(id).unwrap();
+        println!(
+            "  committed: {} XPUs, rings {:?} (len, closed)",
+            alloc.nodes.len(),
+            alloc.rings
+        );
+    }
+
+    println!(
+        "\nfinal: {} / {} XPUs busy, {} OCS entries reserved",
+        cluster.busy_count(),
+        cluster.num_nodes(),
+        cluster.ocs().unwrap().reserved_entries()
+    );
+    cluster.check_consistency().expect("invariants hold");
+    println!("quickstart OK");
+}

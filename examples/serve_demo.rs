@@ -1,0 +1,79 @@
+//! Live-coordinator demo: spawn the RFold leader with a TCP front end,
+//! drive it with a burst of mixed-shape submissions over the socket, and
+//! print the stats stream — the "cluster operator" view of the system.
+//!
+//! Run with: `cargo run --release --example serve_demo`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use rfold::coordinator::leader::Leader;
+use rfold::coordinator::server;
+use rfold::placement::PolicyKind;
+use rfold::topology::cluster::ClusterTopo;
+
+fn main() {
+    // 10'000× time compression: a 1-hour job runs for 360 ms.
+    let scale = 1e-4;
+    let (handle, join) = Leader::new(
+        ClusterTopo::reconfigurable_4096(4),
+        PolicyKind::RFold,
+        scale,
+    )
+    .spawn();
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    println!("leader listening on {addr}");
+    let h2 = handle.clone();
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let h = h2.clone();
+            std::thread::spawn(move || server::handle_conn(stream, h));
+        }
+    });
+
+    // A client submits the paper's example jobs plus a burst of small ones.
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut submit = |a: usize, b: usize, c: usize, dur: f64| {
+        writeln!(conn, "SUBMIT {a} {b} {c} {dur}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        println!("  SUBMIT {a}x{b}x{c} {dur}s -> {}", line.trim());
+    };
+
+    println!("\nsubmitting the Figure-2 jobs:");
+    submit(18, 1, 1, 1800.0);
+    submit(1, 6, 4, 3600.0);
+    submit(4, 8, 2, 3600.0);
+    println!("\nsubmitting a burst of small jobs:");
+    for i in 0..12 {
+        submit(2, 2 + i % 3, 2, 600.0 + 100.0 * i as f64);
+    }
+    // An impossible shape is rejected, not queued (FIFO stays live).
+    submit(64, 64, 64, 60.0);
+
+    // Poll stats until the cluster drains.
+    loop {
+        writeln!(conn, "STATS").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        println!("  {}", line.trim());
+        if line.contains("\"running\":0") && line.contains("\"queued\":0") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(120));
+    }
+
+    writeln!(conn, "QUIT").unwrap();
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    println!(
+        "\nfinal: submitted={} finished={} rejected={}",
+        stats.submitted, stats.finished, stats.rejected
+    );
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.finished, stats.submitted - 1);
+    println!("serve_demo OK");
+}

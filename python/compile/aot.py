@@ -1,0 +1,122 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; the Rust runtime
+(rust/src/runtime/) loads every ``*.hlo.txt`` listed in
+``artifacts/manifest.json`` at startup. Python never runs on the request
+path.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Candidate batch width the Rust side pads to. One row per candidate plan.
+PLAN_BATCH = 64
+# Feature-row batch for the comm-time model.
+COMM_BATCH = 256
+# Physical torus extent of the 4096-XPU cluster (16x16x16 node coordinates).
+TORUS = (16, 16, 16)
+
+# (artifact stem, cube count C, cube side N). 64*4^3 = 8*8^3 = 512*2^3 = 4096.
+SCORER_VARIANTS = [
+    ("plan_scorer_n4", 64, 4),
+    ("plan_scorer_n8", 8, 8),
+    ("plan_scorer_n2", 512, 2),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scorer(cubes: int, n: int) -> str:
+    occ = jax.ShapeDtypeStruct((PLAN_BATCH, cubes, n, n, n), jnp.float32)
+    loads = jax.ShapeDtypeStruct((3,) + TORUS, jnp.float32)
+    mask = jax.ShapeDtypeStruct((PLAN_BATCH,) + TORUS, jnp.float32)
+    return to_hlo_text(jax.jit(model.plan_score).lower(occ, loads, mask))
+
+
+def lower_comm_model() -> str:
+    feat = jax.ShapeDtypeStruct((COMM_BATCH, ref.COMM_FEATURES), jnp.float32)
+    return to_hlo_text(jax.jit(model.comm_time).lower(feat))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file target; "
+                    "writes the n4 scorer there and the rest alongside")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    out_dir = out_dir or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "plan_batch": PLAN_BATCH,
+        "comm_batch": COMM_BATCH,
+        "torus": list(TORUS),
+        "score_cols": model.SCORE_COLS,
+        "comm_features": ref.COMM_FEATURES,
+        "modules": {},
+    }
+
+    for stem, cubes, n in SCORER_VARIANTS:
+        text = lower_scorer(cubes, n)
+        path = os.path.join(out_dir, f"{stem}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][stem] = {
+            "file": f"{stem}.hlo.txt",
+            "kind": "plan_scorer",
+            "cubes": cubes,
+            "cube_side": n,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    text = lower_comm_model()
+    path = os.path.join(out_dir, "comm_model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["modules"]["comm_model"] = {
+        "file": "comm_model.hlo.txt",
+        "kind": "comm_model",
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    if args.out:
+        # Legacy Makefile target: alias of the n4 scorer.
+        n4 = os.path.join(out_dir, "plan_scorer_n4.hlo.txt")
+        with open(n4) as f, open(args.out, "w") as g:
+            g.write(f.read())
+        print(f"wrote {args.out} (alias of plan_scorer_n4)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for RFold's plan-scoring hot spot.
+
+``ref`` holds the pure-jnp oracles; ``frag`` and ``contention`` hold the
+Pallas implementations validated against them.
+"""
+
+from . import contention, frag, ref  # noqa: F401

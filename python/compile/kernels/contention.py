@@ -1,0 +1,96 @@
+"""Pallas kernels: link-contention scoring and the AllReduce time model.
+
+``contention_stats`` streams one candidate mask (X·Y·Z f32 = 16 KiB at 16³)
+plus the shared 3-axis load field into VMEM per program instance and
+reduces with dense VPU ops; the torus +1 neighbour shift is expressed with
+``jnp.roll`` which lowers to cheap slice/concat pairs.
+
+``comm_time`` is a purely elementwise batch model; a single program instance
+processes a row block of the feature matrix.
+
+Both run under ``interpret=True`` (CPU PJRT cannot execute Mosaic calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _contention_kernel(loads_ref, mask_ref, out_ref):
+    loads = loads_ref[...]  # [3, X, Y, Z]
+    mask = mask_ref[0]  # [X, Y, Z]
+    mx = jnp.float32(0.0)
+    tot = jnp.float32(0.0)
+    cnt = jnp.float32(0.0)
+    for axis in range(3):
+        rolled = jnp.roll(mask, shift=-1, axis=axis)
+        adj = jnp.maximum(mask, rolled)
+        masked = adj * loads[axis]
+        mx = jnp.maximum(mx, masked.max())
+        tot = tot + masked.sum()
+        cnt = cnt + adj.sum()
+    out_ref[0, :] = jnp.stack([mx, tot, cnt]).astype(jnp.float32)
+
+
+@jax.jit
+def contention_stats(loads: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Pallas counterpart of :func:`ref.contention_stats` (same contract)."""
+    k = mask.shape[0]
+    x, y, z = mask.shape[1], mask.shape[2], mask.shape[3]
+    return pl.pallas_call(
+        _contention_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((3, x, y, z), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, x, y, z), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ref.CONT_STATS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ref.CONT_STATS), jnp.float32),
+        interpret=True,
+    )(loads, mask)
+
+
+# Rows per program instance for the elementwise comm-time model. 128 rows ×
+# 5 features is a natural VPU lane tile.
+_COMM_BLOCK = 128
+
+
+def _comm_kernel(feat_ref, out_ref):
+    feat = feat_ref[...]  # [B_blk, 5]
+    n = feat[:, 0]
+    nbytes = feat[:, 1]
+    bw = feat[:, 2]
+    has_ring = feat[:, 3]
+    cont = feat[:, 4]
+    n_safe = jnp.maximum(n, 2.0)
+    base = 2.0 * (n_safe - 1.0) / n_safe * nbytes / jnp.maximum(bw, 1e-9)
+    line_penalty = jnp.where(has_ring > 0.5, 1.0, 2.0)
+    t = base * line_penalty * jnp.maximum(cont, 1.0)
+    t = jnp.where(n > 1.5, t, 0.0)
+    out_ref[...] = t[:, None].astype(jnp.float32)
+
+
+@jax.jit
+def comm_time(feat: jnp.ndarray) -> jnp.ndarray:
+    """Pallas counterpart of :func:`ref.comm_time` (same contract)."""
+    b = feat.shape[0]
+    blk = min(_COMM_BLOCK, b)
+    if b % blk != 0:  # pad to a whole number of blocks, slice after
+        pad = blk - b % blk
+        feat = jnp.concatenate([feat, jnp.zeros((pad, feat.shape[1]), feat.dtype)])
+    padded = feat.shape[0]
+    out = pl.pallas_call(
+        _comm_kernel,
+        grid=(padded // blk,),
+        in_specs=[pl.BlockSpec((blk, ref.COMM_FEATURES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, 1), jnp.float32),
+        interpret=True,
+    )(feat)
+    return out[:b]

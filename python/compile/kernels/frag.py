@@ -1,0 +1,69 @@
+"""Pallas kernel: batched fragmentation scoring of candidate plans.
+
+TPU-oriented layout (see DESIGN.md §Hardware-Adaptation): the grid iterates
+over candidate plans; each program instance streams one plan's full cube
+occupancy block (C·N³ f32 ≈ 16 KiB for the 64×4³ cluster — far below VMEM)
+from HBM into VMEM and reduces it with dense VPU ops. No scalar loops, no
+atomics: the output block is indexed by the grid so each instance owns its
+row.
+
+``interpret=True`` is mandatory on this image — real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _frag_kernel(occ_ref, out_ref, *, n: int):
+    """Scores one plan: occ_ref is ``f32[1, C, N, N, N]`` in VMEM."""
+    occ = occ_ref[0]  # [C, N, N, N]
+    free = 1.0 - occ
+    per_cube_busy = occ.sum(axis=(1, 2, 3))  # [C]
+    total_free = free.sum()
+    is_partial = jnp.logical_and(per_cube_busy > 0.0, per_cube_busy < n**3)
+    partial_cubes = is_partial.astype(jnp.float32).sum()
+    empty_cubes = (per_cube_busy == 0.0).astype(jnp.float32).sum()
+
+    if n >= 3:
+        stranded = free[:, 1 : n - 1, 1 : n - 1, 1 : n - 1].sum()
+    else:
+        stranded = jnp.float32(0.0)
+
+    thru = (
+        (free[:, 0, :, :] * free[:, n - 1, :, :]).sum()
+        + (free[:, :, 0, :] * free[:, :, n - 1, :]).sum()
+        + (free[:, :, :, 0] * free[:, :, :, n - 1]).sum()
+    )
+
+    transitions = (
+        jnp.abs(occ[:, 1:, :, :] - occ[:, :-1, :, :]).sum()
+        + jnp.abs(occ[:, :, 1:, :] - occ[:, :, :-1, :]).sum()
+        + jnp.abs(occ[:, :, :, 1:] - occ[:, :, :, :-1]).sum()
+    )
+
+    out_ref[0, :] = jnp.stack(
+        [total_free, partial_cubes, stranded, thru, transitions, empty_cubes]
+    ).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def frag_stats(occ: jnp.ndarray) -> jnp.ndarray:
+    """Pallas counterpart of :func:`ref.frag_stats` (same contract)."""
+    k, c, n = occ.shape[0], occ.shape[1], occ.shape[2]
+    kernel = functools.partial(_frag_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, c, n, n, n), lambda i: (i, 0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ref.FRAG_STATS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ref.FRAG_STATS), jnp.float32),
+        interpret=True,
+    )(occ)

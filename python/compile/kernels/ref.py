@@ -1,0 +1,133 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must agree (allclose) with the function of the same name here, across the
+shape/dtype sweep in ``python/tests/``.
+
+All functions operate on float32 0/1 indicator grids so the same HLO runs
+unchanged on any PJRT backend.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Number of statistic columns emitted per plan by the fragmentation scorer.
+FRAG_STATS = 6
+# Number of statistic columns emitted per plan by the contention scorer.
+CONT_STATS = 3
+# Feature columns consumed by the ring-AllReduce step-time model.
+COMM_FEATURES = 5
+
+
+def frag_stats(occ: jnp.ndarray) -> jnp.ndarray:
+    """Fragmentation statistics for a batch of candidate plans.
+
+    Args:
+      occ: ``f32[K, C, N, N, N]`` occupancy (1.0 = busy) of every cube
+        *after* hypothetically committing plan ``k``.
+
+    Returns:
+      ``f32[K, FRAG_STATS]`` with columns:
+        0. total free XPUs
+        1. partially used cubes (neither empty nor full) — the paper's
+           "fewest cubes touched" heuristic penalises these
+        2. stranded-core free XPUs (free cells with no face exposure;
+           unreachable by OCS reconfiguration, §3.2 inefficiency #1)
+        3. pass-through capacity: per axis, positions free on *both*
+           opposite faces (position-aligned OCS ports, §2) summed
+        4. surface transitions free→busy along each axis (fragmentation
+           proxy: perimeter of the occupied region)
+        5. fully free cubes (the currency of reconfiguration)
+    """
+    k, c, n = occ.shape[0], occ.shape[1], occ.shape[2]
+    free = 1.0 - occ
+    per_cube_busy = occ.sum(axis=(2, 3, 4))  # [K, C]
+    total_free = free.sum(axis=(1, 2, 3, 4))  # [K]
+    is_partial = jnp.logical_and(per_cube_busy > 0.0, per_cube_busy < n**3)
+    partial_cubes = is_partial.astype(jnp.float32).sum(axis=1)
+    empty_cubes = (per_cube_busy == 0.0).astype(jnp.float32).sum(axis=1)
+
+    if n >= 3:
+        core = free[:, :, 1 : n - 1, 1 : n - 1, 1 : n - 1]
+        stranded = core.sum(axis=(1, 2, 3, 4))
+    else:
+        stranded = jnp.zeros((k,), jnp.float32)
+
+    thru_x = (free[:, :, 0, :, :] * free[:, :, n - 1, :, :]).sum(axis=(1, 2, 3))
+    thru_y = (free[:, :, :, 0, :] * free[:, :, :, n - 1, :]).sum(axis=(1, 2, 3))
+    thru_z = (free[:, :, :, :, 0] * free[:, :, :, :, n - 1]).sum(axis=(1, 2, 3))
+    thru = thru_x + thru_y + thru_z
+
+    tx = jnp.abs(occ[:, :, 1:, :, :] - occ[:, :, :-1, :, :]).sum(axis=(1, 2, 3, 4))
+    ty = jnp.abs(occ[:, :, :, 1:, :] - occ[:, :, :, :-1, :]).sum(axis=(1, 2, 3, 4))
+    tz = jnp.abs(occ[:, :, :, :, 1:] - occ[:, :, :, :, :-1]).sum(axis=(1, 2, 3, 4))
+    transitions = tx + ty + tz
+
+    return jnp.stack(
+        [total_free, partial_cubes, stranded, thru, transitions, empty_cubes],
+        axis=1,
+    ).astype(jnp.float32)
+
+
+def contention_stats(loads: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Contention statistics for a batch of candidate placements.
+
+    Args:
+      loads: ``f32[3, X, Y, Z]`` — current traffic load on the *positive*
+        direction link of each node, per axis (dimension-order routing
+        aggregates both directions onto this field symmetrically).
+      mask: ``f32[K, X, Y, Z]`` — 1.0 on nodes the candidate would occupy.
+
+    Returns:
+      ``f32[K, CONT_STATS]``: [max load on any adjacent link,
+      total load over adjacent links, number of adjacent links].
+
+    A link on axis ``a`` at node ``p`` is *adjacent* to the placement if
+    either endpoint (``p`` or its +a torus neighbour) is in the mask.
+    """
+    k = mask.shape[0]
+    maxes, totals, counts = [], [], []
+    for axis in range(3):
+        rolled = jnp.roll(mask, shift=-1, axis=axis + 1)
+        adj = jnp.maximum(mask, rolled)  # [K, X, Y, Z]
+        lod = loads[axis][None, :, :, :]  # [1, X, Y, Z]
+        masked = adj * lod
+        maxes.append(masked.reshape(k, -1).max(axis=1))
+        totals.append(masked.reshape(k, -1).sum(axis=1))
+        counts.append(adj.reshape(k, -1).sum(axis=1))
+    mx = jnp.maximum(jnp.maximum(maxes[0], maxes[1]), maxes[2])
+    tot = totals[0] + totals[1] + totals[2]
+    cnt = counts[0] + counts[1] + counts[2]
+    return jnp.stack([mx, tot, cnt], axis=1).astype(jnp.float32)
+
+
+def comm_time(feat: jnp.ndarray) -> jnp.ndarray:
+    """Ring-AllReduce step-time model (§2, §3.1 calibration).
+
+    Args:
+      feat: ``f32[B, COMM_FEATURES]`` columns:
+        0. ring length ``n`` (participants)
+        1. payload bytes
+        2. per-link bandwidth (bytes/s)
+        3. has_ring (1.0 if the placement provides a closed cycle,
+           0.0 → the logical ring folds back over a line, doubling the
+           worst-link load: 2× penalty)
+        4. contention multiplier (≥ 1.0; from ``contention_stats``)
+
+    Returns:
+      ``f32[B, 1]`` seconds for one AllReduce of ``bytes`` over the ring:
+      ``2*(n-1)/n * bytes / bw * line_penalty * contention``.
+      Degenerate rings (n <= 1) take 0.
+    """
+    n = feat[:, 0]
+    nbytes = feat[:, 1]
+    bw = feat[:, 2]
+    has_ring = feat[:, 3]
+    cont = feat[:, 4]
+    n_safe = jnp.maximum(n, 2.0)
+    base = 2.0 * (n_safe - 1.0) / n_safe * nbytes / jnp.maximum(bw, 1e-9)
+    line_penalty = jnp.where(has_ring > 0.5, 1.0, 2.0)
+    t = base * line_penalty * jnp.maximum(cont, 1.0)
+    t = jnp.where(n > 1.5, t, 0.0)
+    return t[:, None].astype(jnp.float32)

@@ -1,0 +1,75 @@
+"""L2: the RFold plan-scoring graph, composed from the L1 Pallas kernels.
+
+This is the numeric hot spot of the scheduler: every placement decision
+evaluates up to K candidate plans; the score vector drives the ranking
+heuristic in the Rust coordinator (fewest cubes / fewest OCS links / least
+fragmentation, §3.1 of the paper).
+
+Lowered ONCE by ``aot.py`` to HLO text; the Rust runtime loads and runs the
+artifact via PJRT. Python never executes on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import contention, frag, ref
+
+# Combined score width: frag stats ++ contention stats ++ 1 composite rank.
+SCORE_COLS = ref.FRAG_STATS + ref.CONT_STATS + 1
+
+# Ranking weights (mirrored in rust/src/placement/score.rs — keep in sync).
+# Lower composite = better plan.
+W_PARTIAL_CUBES = 64.0  # paper heuristic: touch the fewest cubes
+W_STRANDED = 8.0  # §3.2 inefficiency 1: unreachable core XPUs
+W_THRU_LOST = 1.0  # every blocked pass-through position costs OCS options
+W_TRANSITIONS = 0.5  # surface fragmentation proxy
+W_MAX_LOAD = 32.0  # contention dominates when links are shared
+
+
+def plan_score(occ: jnp.ndarray, loads: jnp.ndarray, mask: jnp.ndarray) -> tuple:
+    """Score K candidate plans.
+
+    Args:
+      occ:   f32[K, C, N, N, N] post-plan cube occupancy.
+      loads: f32[3, X, Y, Z] current per-axis link loads.
+      mask:  f32[K, X, Y, Z] nodes each plan would occupy.
+
+    Returns:
+      1-tuple of f32[K, SCORE_COLS]: frag stats, contention stats, composite.
+    """
+    f = frag.frag_stats(occ)  # [K, 6]
+    c = contention.contention_stats(loads, mask)  # [K, 3]
+    n = occ.shape[2]
+    cubes = occ.shape[1]
+    max_thru = 3.0 * n * n * cubes
+    composite = (
+        W_PARTIAL_CUBES * f[:, 1]
+        + W_STRANDED * f[:, 2]
+        + W_THRU_LOST * (max_thru - f[:, 3])
+        + W_TRANSITIONS * f[:, 4]
+        + W_MAX_LOAD * c[:, 0]
+    )
+    return (jnp.concatenate([f, c, composite[:, None]], axis=1),)
+
+
+def plan_score_ref(occ: jnp.ndarray, loads: jnp.ndarray, mask: jnp.ndarray) -> tuple:
+    """Oracle twin of :func:`plan_score` built on the pure-jnp kernels."""
+    f = ref.frag_stats(occ)
+    c = ref.contention_stats(loads, mask)
+    n = occ.shape[2]
+    cubes = occ.shape[1]
+    max_thru = 3.0 * n * n * cubes
+    composite = (
+        W_PARTIAL_CUBES * f[:, 1]
+        + W_STRANDED * f[:, 2]
+        + W_THRU_LOST * (max_thru - f[:, 3])
+        + W_TRANSITIONS * f[:, 4]
+        + W_MAX_LOAD * c[:, 0]
+    )
+    return (jnp.concatenate([f, c, composite[:, None]], axis=1),)
+
+
+def comm_time(feat: jnp.ndarray) -> tuple:
+    """AllReduce step-time model over a feature batch (see kernels.ref)."""
+    return (contention.comm_time(feat),)

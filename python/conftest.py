@@ -1,0 +1,8 @@
+"""Make the `compile` package importable whether pytest runs from the
+repository root (`pytest python/tests/`) or from `python/` (the Makefile's
+`cd python && pytest tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

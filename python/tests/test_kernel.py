@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes and occupancy densities; every kernel must be
+allclose to its ``ref.py`` twin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is installed in CI
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import contention, frag, ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand_occ(rng, k, c, n, density=0.5):
+    return (rng.random((k, c, n, n, n)) < density).astype(np.float32)
+
+
+def rand_mask(rng, k, dims, density=0.2):
+    return (rng.random((k,) + dims) < density).astype(np.float32)
+
+
+# ---------------------------------------------------------------- frag
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+@pytest.mark.parametrize("c,n", [(64, 4), (8, 8), (512, 2), (27, 3)])
+def test_frag_matches_ref(k, c, n):
+    rng = np.random.default_rng(k * 1000 + c + n)
+    occ = jnp.asarray(rand_occ(rng, k, c, n))
+    got = frag.frag_stats(occ)
+    want = ref.frag_stats(occ)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_frag_all_free():
+    occ = jnp.zeros((2, 4, 4, 4, 4), jnp.float32)
+    s = np.asarray(frag.frag_stats(occ))
+    assert s[0, 0] == 4 * 64  # total free
+    assert s[0, 1] == 0  # no partial cubes
+    assert s[0, 2] == 4 * 8  # all cores free (2^3 per 4^3 cube)
+    assert s[0, 3] == 4 * 3 * 16  # every pass-through open
+    assert s[0, 4] == 0  # no transitions
+    assert s[0, 5] == 4  # all cubes empty
+
+
+def test_frag_all_busy():
+    occ = jnp.ones((1, 4, 4, 4, 4), jnp.float32)
+    s = np.asarray(frag.frag_stats(occ))
+    assert s[0, 0] == 0 and s[0, 1] == 0 and s[0, 2] == 0
+    assert s[0, 3] == 0 and s[0, 4] == 0 and s[0, 5] == 0
+
+
+def test_frag_single_cell():
+    occ = np.zeros((1, 1, 4, 4, 4), np.float32)
+    occ[0, 0, 0, 0, 0] = 1.0  # a corner cell
+    s = np.asarray(frag.frag_stats(jnp.asarray(occ)))
+    assert s[0, 0] == 63
+    assert s[0, 1] == 1  # one partial cube
+    assert s[0, 2] == 8  # core untouched
+    # corner cell blocks one position on each of the three minus-faces
+    assert s[0, 3] == 3 * 16 - 3
+    assert s[0, 4] == 3  # one transition along each axis
+    assert s[0, 5] == 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 6),
+        cn=st.sampled_from([(2, 2), (4, 3), (8, 4), (3, 5)]),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_frag_hypothesis(k, cn, density, seed):
+        c, n = cn
+        rng = np.random.default_rng(seed)
+        occ = jnp.asarray(rand_occ(rng, k, c, n, density))
+        np.testing.assert_allclose(
+            frag.frag_stats(occ), ref.frag_stats(occ), rtol=RTOL, atol=ATOL
+        )
+
+
+# ---------------------------------------------------------- contention
+
+
+@pytest.mark.parametrize("k", [1, 4])
+@pytest.mark.parametrize("dims", [(16, 16, 16), (4, 4, 4), (8, 4, 2)])
+def test_contention_matches_ref(k, dims):
+    rng = np.random.default_rng(sum(dims) + k)
+    loads = jnp.asarray(rng.random((3,) + dims).astype(np.float32))
+    mask = jnp.asarray(rand_mask(rng, k, dims))
+    got = contention.contention_stats(loads, mask)
+    want = ref.contention_stats(loads, mask)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_contention_empty_mask():
+    loads = jnp.ones((3, 4, 4, 4), jnp.float32)
+    mask = jnp.zeros((2, 4, 4, 4), jnp.float32)
+    s = np.asarray(contention.contention_stats(loads, mask))
+    np.testing.assert_allclose(s, 0.0)
+
+
+def test_contention_counts_wraparound_neighbor():
+    # A single node at x=3 (the +x face) is adjacent to the wraparound link
+    # whose other endpoint is x=0: both its own +x link and the one at x=2.
+    loads = np.zeros((3, 4, 1, 1), np.float32)
+    loads[0, 3, 0, 0] = 5.0  # node's own +x link
+    loads[0, 2, 0, 0] = 2.0  # predecessor's +x link (we are its +neighbour)
+    mask = np.zeros((1, 4, 1, 1), np.float32)
+    mask[0, 3, 0, 0] = 1.0
+    s = np.asarray(
+        contention.contention_stats(jnp.asarray(loads), jnp.asarray(mask))
+    )
+    assert s[0, 0] == 5.0
+    assert s[0, 1] == 7.0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 5),
+        dims=st.sampled_from([(2, 2, 2), (4, 4, 4), (5, 3, 2), (16, 4, 4)]),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_contention_hypothesis(k, dims, density, seed):
+        rng = np.random.default_rng(seed)
+        loads = jnp.asarray((rng.random((3,) + dims) * 10).astype(np.float32))
+        mask = jnp.asarray(rand_mask(rng, k, dims, density))
+        np.testing.assert_allclose(
+            contention.contention_stats(loads, mask),
+            ref.contention_stats(loads, mask),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+
+# ----------------------------------------------------------- comm_time
+
+
+@pytest.mark.parametrize("b", [1, 7, 128, 300])
+def test_comm_time_matches_ref(b):
+    rng = np.random.default_rng(b)
+    feat = np.stack(
+        [
+            rng.integers(1, 64, b).astype(np.float32),  # ring length
+            rng.random(b).astype(np.float32) * 1e9,  # bytes
+            np.full(b, 25e9, np.float32),  # bw
+            (rng.random(b) < 0.5).astype(np.float32),  # has_ring
+            1.0 + rng.random(b).astype(np.float32) * 3,  # contention
+        ],
+        axis=1,
+    )
+    feat = jnp.asarray(feat)
+    got = contention.comm_time(feat)
+    want = ref.comm_time(feat)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_comm_time_ring_halves_line():
+    base = [8.0, 1e9, 25e9, 1.0, 1.0]
+    line = [8.0, 1e9, 25e9, 0.0, 1.0]
+    feat = jnp.asarray(np.array([base, line], np.float32))
+    t = np.asarray(contention.comm_time(feat))
+    np.testing.assert_allclose(t[1, 0] / t[0, 0], 2.0, rtol=1e-6)
+
+
+def test_comm_time_single_node_free():
+    feat = jnp.asarray(np.array([[1.0, 1e9, 25e9, 1.0, 1.0]], np.float32))
+    assert float(contention.comm_time(feat)[0, 0]) == 0.0

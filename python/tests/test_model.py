@@ -1,0 +1,84 @@
+"""L2 plan-score graph: shapes, composition with kernels, AOT lowering."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _inputs(k=4, c=8, n=4, torus=(8, 8, 8), seed=0):
+    rng = np.random.default_rng(seed)
+    occ = jnp.asarray((rng.random((k, c, n, n, n)) < 0.4).astype(np.float32))
+    loads = jnp.asarray((rng.random((3,) + torus) * 5).astype(np.float32))
+    mask = jnp.asarray((rng.random((k,) + torus) < 0.15).astype(np.float32))
+    return occ, loads, mask
+
+
+def test_plan_score_shape():
+    occ, loads, mask = _inputs()
+    (s,) = model.plan_score(occ, loads, mask)
+    assert s.shape == (4, model.SCORE_COLS)
+
+
+def test_plan_score_matches_oracle():
+    occ, loads, mask = _inputs(k=6, seed=3)
+    (got,) = model.plan_score(occ, loads, mask)
+    (want,) = model.plan_score_ref(occ, loads, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_composite_prefers_fewer_partial_cubes():
+    # Plan A splits a 2x2x2 job across two cubes; plan B packs one cube.
+    c, n = 4, 4
+    occ = np.zeros((2, c, n, n, n), np.float32)
+    occ[0, 0, :2, :2, :1] = 1.0  # half in cube 0
+    occ[0, 1, :2, :2, :1] = 1.0  # half in cube 1
+    occ[1, 0, :2, :2, :2] = 1.0  # all in cube 0
+    loads = np.zeros((3, 8, 8, 8), np.float32)
+    mask = np.zeros((2, 8, 8, 8), np.float32)
+    (s,) = model.plan_score(jnp.asarray(occ), jnp.asarray(loads), jnp.asarray(mask))
+    s = np.asarray(s)
+    assert s[1, -1] < s[0, -1], "packed plan must rank better (lower)"
+
+
+def test_composite_penalizes_contention():
+    occ = np.zeros((2, 4, 4, 4, 4), np.float32)
+    loads = np.zeros((3, 8, 8, 8), np.float32)
+    loads[0, 0, 0, 0] = 10.0
+    mask = np.zeros((2, 8, 8, 8), np.float32)
+    mask[0, 0, 0, 0] = 1.0  # plan 0 sits on the hot link
+    mask[1, 4, 4, 4] = 1.0  # plan 1 avoids it
+    (s,) = model.plan_score(jnp.asarray(occ), jnp.asarray(loads), jnp.asarray(mask))
+    s = np.asarray(s)
+    assert s[1, -1] < s[0, -1]
+
+
+def test_comm_time_tuple():
+    feat = jnp.zeros((8, ref.COMM_FEATURES), jnp.float32)
+    (t,) = model.comm_time(feat)
+    assert t.shape == (8, 1)
+
+
+# ------------------------------------------------------------- AOT path
+
+
+@pytest.mark.parametrize("cubes,n", [(8, 4)])
+def test_lower_scorer_emits_hlo(cubes, n):
+    text = aot.lower_scorer(cubes, n)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_lower_comm_model_emits_hlo():
+    text = aot.lower_comm_model()
+    assert "HloModule" in text
+
+
+def test_scorer_variants_cover_cluster():
+    for _, cubes, n in aot.SCORER_VARIANTS:
+        assert cubes * n**3 == 4096

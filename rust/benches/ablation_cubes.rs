@@ -1,0 +1,54 @@
+//! Bench: **ablation A1** (cube-size sweep 8³/4³/2³ for Reconfig & RFold)
+//! and **A2** (folding-dimensionality knockouts for RFold 4³) — the design
+//! choices §5 calls out.
+
+use rfold::metrics::report;
+use rfold::placement::PolicyKind;
+use rfold::sim::experiments as exp;
+use rfold::topology::cluster::ClusterTopo;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let runs = env("RFOLD_BENCH_RUNS", 5);
+    let jobs = env("RFOLD_BENCH_JOBS", 256);
+    let seed = env("RFOLD_BENCH_SEED", 1) as u64;
+
+    rfold::util::bench::section("Ablation A1 — cube-size sweep");
+    for cell in exp::ablation_cube_cells() {
+        let s = exp::run_cell(cell, runs, jobs, seed);
+        println!(
+            "ABLATION-CUBES {:<16} jcr={:>6.2}% p50={:>10} p99={:>10} util={:.3}",
+            s.label,
+            s.avg_jcr_pct,
+            report::fmt_secs(s.jct_p50),
+            report::fmt_secs(s.jct_p99),
+            s.avg_util
+        );
+    }
+
+    rfold::util::bench::section("Ablation A2 — folding dimensionality (RFold 4^3)");
+    let cell = exp::Cell {
+        policy: PolicyKind::RFold,
+        topo: ClusterTopo::reconfigurable_4096(4),
+        label: "RFold (4^3)",
+    };
+    for (label, dims) in [
+        ("all folds", [true, true, true]),
+        ("no 1D folds", [false, true, true]),
+        ("no 2D folds", [true, false, true]),
+        ("no 3D folds", [true, true, false]),
+        ("rotations only", [false, false, false]),
+    ] {
+        let s = exp::run_cell_with(cell, runs, jobs, seed, dims);
+        println!(
+            "ABLATION-FOLDS {:<16} jcr={:>6.2}% p50={:>10} util={:.3}",
+            label,
+            s.avg_jcr_pct,
+            report::fmt_secs(s.jct_p50),
+            s.avg_util
+        );
+    }
+}

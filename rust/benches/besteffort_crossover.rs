@@ -1,0 +1,52 @@
+//! Bench: **§5 "revisiting best-effort placement"** — sweep offered load
+//! and find where non-contiguous placement (immediate start + contention)
+//! beats contiguous RFold (queueing + exclusive links).
+
+use rfold::placement::PolicyKind;
+use rfold::sim::engine::{SimConfig, Simulation};
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace::gen::{generate, TraceConfig};
+use rfold::util::stats;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let runs = env("RFOLD_BENCH_RUNS", 3);
+    let jobs = env("RFOLD_BENCH_JOBS", 192);
+    rfold::util::bench::section(
+        "§5 crossover — best-effort vs RFold across offered load",
+    );
+    println!(
+        "{:>10} {:>14} {:>14} {:>9}",
+        "lull(s)", "RFold p50 JCT", "BestEff p50", "winner"
+    );
+    let topo = ClusterTopo::reconfigurable_4096(4);
+    for lull in [12_000.0, 6_000.0, 3_800.0, 2_000.0, 1_000.0] {
+        let mut rf_all = Vec::new();
+        let mut be_all = Vec::new();
+        for seed in 0..runs {
+            let t = generate(&TraceConfig {
+                num_jobs: jobs,
+                seed: seed as u64 + 1,
+                mean_lull: lull,
+                ..Default::default()
+            });
+            let rf = Simulation::new(SimConfig::new(topo, PolicyKind::RFold)).run(&t);
+            let be = Simulation::new(SimConfig::new(topo, PolicyKind::BestEffort)).run(&t);
+            rf_all.extend(rf.jcts(&t));
+            be_all.extend(be.jcts(&t));
+        }
+        let rf50 = stats::percentile_of(&rf_all, 50.0);
+        let be50 = stats::percentile_of(&be_all, 50.0);
+        println!(
+            "CROSSOVER {:>7.0} {:>13.0}s {:>13.0}s {:>9}",
+            lull,
+            rf50,
+            be50,
+            if be50 < rf50 { "besteff" } else { "rfold" }
+        );
+    }
+    println!("\n(best-effort wins when queueing delay under contiguous placement\n exceeds its contention slowdown — §5's stated condition)");
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate **Figure 3** (JCT p50/p90/p99 for Reconfig vs RFold
+//! at 4³ and 2³ cubes) plus the headline speedup ratios.
+
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let runs = env("RFOLD_BENCH_RUNS", 8);
+    let jobs = env("RFOLD_BENCH_JOBS", 512);
+    let seed = env("RFOLD_BENCH_SEED", 1) as u64;
+    rfold::util::bench::section(&format!(
+        "Figure 3 — JCT percentiles ({runs} runs x {jobs} jobs)"
+    ));
+    let sums: Vec<_> = exp::fig3_cells()
+        .into_iter()
+        .map(|c| exp::run_cell(c, runs, jobs, seed))
+        .collect();
+    report::print_fig3(&sums);
+    let find = |l: &str| sums.iter().find(|s| s.label == l).unwrap();
+    let (rc4, rf4) = (find("Reconfig (4^3)"), find("RFold (4^3)"));
+    let (rc2, rf2) = (find("Reconfig (2^3)"), find("RFold (2^3)"));
+    println!(
+        "FIG3-RATIO 4^3 p50={:.2}x p90={:.2}x p99={:.2}x   (paper: 11x / 6x / 2x)",
+        rc4.jct_p50 / rf4.jct_p50,
+        rc4.jct_p90 / rf4.jct_p90,
+        rc4.jct_p99 / rf4.jct_p99
+    );
+    println!(
+        "FIG3-RATIO 2^3 p50={:.2}x p90={:.2}x p99={:.2}x   (paper: up to 1.3x)",
+        rc2.jct_p50 / rf2.jct_p50,
+        rc2.jct_p90 / rf2.jct_p90,
+        rc2.jct_p99 / rf2.jct_p99
+    );
+}

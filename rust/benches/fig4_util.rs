@@ -1,0 +1,33 @@
+//! Bench: regenerate **Figure 4** (cluster-utilization CDF per policy)
+//! plus the paper's two headline deltas (+57% absolute over FirstFit,
+//! +20% over Reconfig).
+
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let runs = env("RFOLD_BENCH_RUNS", 8);
+    let jobs = env("RFOLD_BENCH_JOBS", 512);
+    let seed = env("RFOLD_BENCH_SEED", 1) as u64;
+    rfold::util::bench::section(&format!(
+        "Figure 4 — utilization CDFs ({runs} runs x {jobs} jobs)"
+    ));
+    let sums: Vec<_> = exp::table1_cells()
+        .into_iter()
+        .map(|c| exp::run_cell(c, runs, jobs, seed))
+        .collect();
+    report::print_fig4(&sums);
+    let util = |l: &str| sums.iter().find(|s| s.label == l).unwrap().avg_util;
+    println!(
+        "\nFIG4-DELTA RFold(4^3) - FirstFit = {:+.1} points (paper: +57 absolute)",
+        100.0 * (util("RFold (4^3)") - util("FirstFit (16^3)"))
+    );
+    println!(
+        "FIG4-DELTA RFold(4^3) - Reconfig(4^3) = {:+.1} points (paper: +20)",
+        100.0 * (util("RFold (4^3)") - util("Reconfig (4^3)"))
+    );
+}

@@ -1,0 +1,113 @@
+//! Microbenchmarks of the placement hot path (the §Perf targets in
+//! EXPERIMENTS.md): variant enumeration, box search, reconfig planning,
+//! plan scoring (native and, when artifacts exist, PJRT), and end-to-end
+//! simulator throughput.
+
+use std::rc::Rc;
+
+use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::score::{hypothetical_occupancy, rank_plans, NativeScorer, PlanScorer};
+use rfold::placement::{reconfig_place, static_place};
+use rfold::shape::fold::{enumerate_variants, Variant};
+use rfold::shape::JobShape;
+use rfold::sim::engine::{SimConfig, Simulation};
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+use rfold::topology::P3;
+use rfold::util::bench::{bench, section};
+use rfold::util::Pcg64;
+
+fn main() {
+    section("shape algebra");
+    bench("enumerate_variants 18x1x1", 10, 200, || {
+        enumerate_variants(JobShape::new(18, 1, 1), 256)
+    });
+    bench("enumerate_variants 4x8x2", 10, 200, || {
+        enumerate_variants(JobShape::new(4, 8, 2), 256)
+    });
+    bench("rings 4x4x4 fold", 10, 200, || {
+        let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
+        vs.iter().map(|v| v.rings().len()).sum::<usize>()
+    });
+
+    section("placement engines (empty cluster)");
+    let static_c = ClusterState::new(ClusterTopo::static_4096());
+    bench("static find_first_box 4x4x4", 10, 200, || {
+        static_place::find_first_box(&static_c, P3([4, 4, 4]))
+    });
+    let rc = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let v = Variant::identity(JobShape::new(4, 4, 32));
+    bench("reconfig place 4x4x32 (8 cubes)", 10, 200, || {
+        reconfig_place::place(&rc, &v, 1)
+    });
+
+    section("placement under load (50% busy cluster)");
+    let mut busy = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let mut policy = Policy::new(PolicyKind::RFold);
+    let mut rng = Pcg64::seeded(3);
+    let mut id = 0u64;
+    let mut attempts = 0;
+    while busy.utilization() < 0.5 && attempts < 2000 {
+        attempts += 1;
+        let size = rng.range(8, 256);
+        if let Some(shape) =
+            rfold::trace::gen::shape_for_size(&mut rng, size, &Default::default())
+        {
+            if let Some(plan) = policy.plan(&busy, id, shape) {
+                plan.commit(&mut busy).unwrap();
+                id += 1;
+            }
+        }
+    }
+    bench("RFold plan 4x8x2 @50% util", 5, 100, || {
+        policy.plan(&busy, 999_999, JobShape::new(4, 8, 2))
+    });
+    bench("RFold plan 18x1x1 @50% util", 5, 100, || {
+        policy.plan(&busy, 999_999, JobShape::new(18, 1, 1))
+    });
+
+    section("plan scoring");
+    let plans: Vec<_> = enumerate_variants(JobShape::new(4, 8, 2), 64)
+        .iter()
+        .filter_map(|v| reconfig_place::place(&busy, v, 999_999))
+        .collect();
+    eprintln!("  ({} candidate plans)", plans.len());
+    bench("native rank_plans", 5, 100, || {
+        rank_plans(&busy, &plans, &mut NativeScorer)
+    });
+    let (occ, cubes, n) = hypothetical_occupancy(&busy, &plans);
+    bench("native frag_stats batch", 5, 100, || {
+        NativeScorer.frag_stats(&occ, plans.len(), cubes, n)
+    });
+    let dir = rfold::runtime::Artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        let arts = Rc::new(rfold::runtime::Artifacts::load(&dir).unwrap());
+        let mut xla = rfold::runtime::XlaScorer::new(arts);
+        bench("xla frag_stats batch (PJRT)", 3, 30, || {
+            xla.frag_stats(&occ, plans.len(), cubes, n)
+        });
+    } else {
+        eprintln!("  (skipping PJRT scorer: run `make artifacts`)");
+    }
+
+    section("end-to-end simulation");
+    let trace = rfold::trace::gen::generate(&rfold::trace::gen::TraceConfig {
+        num_jobs: 256,
+        ..Default::default()
+    });
+    bench("sim 256 jobs RFold(4^3)", 1, 5, || {
+        Simulation::new(SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+        ))
+        .run(&trace)
+        .scheduled
+    });
+    bench("sim 256 jobs FirstFit(16^3)", 1, 5, || {
+        Simulation::new(SimConfig::new(
+            ClusterTopo::static_4096(),
+            PolicyKind::FirstFit,
+        ))
+        .run(&trace)
+        .scheduled
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate the **§3.1 motivation table** (contention slowdowns
+//! on a 2×2 TPU-v2-like mesh) against the paper's measured percentages.
+
+use rfold::sim::experiments as exp;
+
+fn main() {
+    rfold::util::bench::section("§3.1 motivation — placement-induced slowdowns");
+    let paper = [1.0, 1.17, 1.35, 1.95, 2.86];
+    println!("{:<46} {:>8} {:>8} {:>7}", "configuration", "model", "paper", "err%");
+    let mut worst: f64 = 0.0;
+    for (row, p) in exp::motivation_rows().iter().zip(paper) {
+        let err = 100.0 * (row.1 - p) / p;
+        worst = worst.max(err.abs());
+        println!("MOTIV {:<40} {:>7.2}x {:>7.2}x {:>+6.1}%", row.0, row.1, p, err);
+    }
+    println!("worst calibration error: {worst:.1}%");
+    assert!(worst < 10.0, "calibration drifted");
+}

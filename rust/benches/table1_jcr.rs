@@ -1,0 +1,35 @@
+//! Bench: regenerate **Table 1** (average JCR per policy/topology).
+//!
+//! Configure with env vars: `RFOLD_BENCH_RUNS` (default 20),
+//! `RFOLD_BENCH_JOBS` (default 512), `RFOLD_BENCH_SEED` (default 1).
+//! The paper uses 100 runs; `make bench-full` sets that.
+
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let runs = env("RFOLD_BENCH_RUNS", 8);
+    let jobs = env("RFOLD_BENCH_JOBS", 512);
+    let seed = env("RFOLD_BENCH_SEED", 1) as u64;
+    rfold::util::bench::section(&format!(
+        "Table 1 — average JCR ({runs} runs x {jobs} jobs, seed {seed})"
+    ));
+    let paper = [10.4, 44.11, 31.46, 73.35, 100.0, 100.0];
+    let mut sums = Vec::new();
+    for (cell, p) in exp::table1_cells().into_iter().zip(paper) {
+        let t0 = std::time::Instant::now();
+        let s = exp::run_cell(cell, runs, jobs, seed);
+        eprintln!(
+            "  {} done in {:.1}s (paper: {p}%)",
+            cell.label,
+            t0.elapsed().as_secs_f64()
+        );
+        sums.push(s);
+    }
+    report::print_table1(&sums);
+    println!("\npaper reference: FirstFit 10.4 / Folding 44.11 / Reconfig8 31.46 / RFold8 73.35 / Reconfig4 100 / RFold4 100");
+}

@@ -1,0 +1,304 @@
+//! The leader event loop.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::placement::policies::{Policy, PolicyKind};
+use crate::shape::JobShape;
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+
+/// A submission accepted by the leader.
+#[derive(Clone, Copy, Debug)]
+pub struct Submission {
+    pub shape: JobShape,
+    /// Requested run time in (unscaled) seconds.
+    pub duration: f64,
+}
+
+/// Leader → client job status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Finished,
+    Rejected,
+}
+
+/// Aggregate statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct LeaderStats {
+    pub submitted: usize,
+    pub running: usize,
+    pub queued: usize,
+    pub finished: usize,
+    pub rejected: usize,
+    pub busy_xpus: usize,
+    pub total_xpus: usize,
+    pub ocs_entries_reserved: usize,
+}
+
+enum Cmd {
+    Submit(Submission, Sender<(u64, JobState)>),
+    Query(u64, Sender<JobState>),
+    Stats(Sender<LeaderStats>),
+    Shutdown,
+}
+
+/// Handle for talking to a running leader thread.
+#[derive(Clone)]
+pub struct LeaderHandle {
+    tx: Sender<Cmd>,
+}
+
+impl LeaderHandle {
+    /// Submit a job; returns its id and initial state.
+    pub fn submit(&self, s: Submission) -> Option<(u64, JobState)> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Submit(s, tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    pub fn query(&self, id: u64) -> Option<JobState> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Query(id, tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    pub fn stats(&self) -> Option<LeaderStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Stats(tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+}
+
+/// The leader itself. Owns the cluster state and the policy; runs on its
+/// own thread via [`Leader::spawn`].
+pub struct Leader {
+    cluster: ClusterState,
+    policy_kind: PolicyKind,
+    /// Wall seconds per simulated second (e.g. 0.001 → 1000× speedup).
+    time_scale: f64,
+    queue: VecDeque<(u64, Submission)>,
+    running: Vec<(u64, Instant)>, // (job, deadline)
+    states: std::collections::HashMap<u64, JobState>,
+    next_id: u64,
+    stats: LeaderStats,
+    epoch: Instant,
+}
+
+impl Leader {
+    pub fn new(topo: ClusterTopo, policy: PolicyKind, time_scale: f64) -> Leader {
+        let cluster = ClusterState::new(topo);
+        let total = cluster.num_nodes();
+        Leader {
+            cluster,
+            policy_kind: policy,
+            time_scale,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            states: std::collections::HashMap::new(),
+            next_id: 0,
+            stats: LeaderStats {
+                total_xpus: total,
+                ..Default::default()
+            },
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Spawn the leader loop on a thread; returns the command handle and
+    /// the join handle.
+    pub fn spawn(mut self) -> (LeaderHandle, std::thread::JoinHandle<LeaderStats>) {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let handle = LeaderHandle { tx };
+        let join = std::thread::spawn(move || {
+            // The policy (and its scorer trait object) lives entirely on
+            // this thread — PJRT handles are not `Send`.
+            let mut policy = Policy::new(self.policy_kind);
+            loop {
+                // Wake for the next completion deadline or a command.
+                let timeout = self
+                    .running
+                    .iter()
+                    .map(|(_, d)| d.saturating_duration_since(Instant::now()))
+                    .min()
+                    .unwrap_or(Duration::from_millis(50));
+                match rx.recv_timeout(timeout.min(Duration::from_millis(50))) {
+                    Ok(Cmd::Submit(s, reply)) => {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        self.stats.submitted += 1;
+                        // Reject shapes that can never be placed (§4).
+                        if !policy.feasible_ever(self.cluster.topo(), s.shape) {
+                            self.states.insert(id, JobState::Rejected);
+                            self.stats.rejected += 1;
+                            let _ = reply.send((id, JobState::Rejected));
+                        } else {
+                            self.states.insert(id, JobState::Queued);
+                            self.queue.push_back((id, s));
+                            self.drain(&mut policy);
+                            let _ = reply.send((id, self.states[&id]));
+                        }
+                    }
+                    Ok(Cmd::Query(id, reply)) => {
+                        let _ = reply.send(
+                            self.states
+                                .get(&id)
+                                .copied()
+                                .unwrap_or(JobState::Rejected),
+                        );
+                    }
+                    Ok(Cmd::Stats(reply)) => {
+                        self.refresh_stats();
+                        let _ = reply.send(self.stats.clone());
+                    }
+                    Ok(Cmd::Shutdown) => break,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                self.reap();
+                self.drain(&mut policy);
+            }
+            self.refresh_stats();
+            self.stats
+        });
+        (handle, join)
+    }
+
+    fn refresh_stats(&mut self) {
+        self.stats.busy_xpus = self.cluster.busy_count();
+        self.stats.queued = self.queue.len();
+        self.stats.running = self.running.len();
+        self.stats.ocs_entries_reserved = self
+            .cluster
+            .ocs()
+            .map(|o| o.reserved_entries())
+            .unwrap_or(0);
+    }
+
+    /// Complete any job whose deadline passed.
+    fn reap(&mut self) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].1 <= now {
+                let (id, _) = self.running.swap_remove(i);
+                self.cluster.release(id);
+                self.states.insert(id, JobState::Finished);
+                self.stats.finished += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// FIFO drain (head-of-line blocking, like the simulator).
+    fn drain(&mut self, policy: &mut Policy) {
+        while let Some(&(id, s)) = self.queue.front() {
+            match policy.plan(&self.cluster, id, s.shape) {
+                Some(plan) => {
+                    plan.commit(&mut self.cluster).expect("commit");
+                    let dur = Duration::from_secs_f64(
+                        (s.duration * self.time_scale).max(0.000_001),
+                    );
+                    self.running.push((id, Instant::now() + dur));
+                    self.states.insert(id, JobState::Running);
+                    self.queue.pop_front();
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Time since the leader started (diagnostics).
+    pub fn uptime(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_leader() -> (LeaderHandle, std::thread::JoinHandle<LeaderStats>) {
+        Leader::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+            1e-5, // 100k× speedup: 1s job ≈ 10µs wall
+        )
+        .spawn()
+    }
+
+    #[test]
+    fn submit_run_finish() {
+        let (h, join) = spawn_leader();
+        let (id, st) = h
+            .submit(Submission {
+                shape: JobShape::new(4, 4, 4),
+                duration: 1.0,
+            })
+            .unwrap();
+        assert_eq!(st, JobState::Running);
+        // Wait for completion.
+        let mut tries = 0;
+        loop {
+            std::thread::sleep(Duration::from_millis(20));
+            if h.query(id) == Some(JobState::Finished) {
+                break;
+            }
+            tries += 1;
+            assert!(tries < 200, "job never finished");
+        }
+        h.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.finished, 1);
+        assert_eq!(stats.busy_xpus, 0);
+    }
+
+    #[test]
+    fn infeasible_rejected() {
+        let (h, join) = spawn_leader();
+        let (_, st) = h
+            .submit(Submission {
+                shape: JobShape::new(64, 64, 64), // 262k XPUs
+                duration: 1.0,
+            })
+            .unwrap();
+        assert_eq!(st, JobState::Rejected);
+        h.shutdown();
+        assert_eq!(join.join().unwrap().rejected, 1);
+    }
+
+    #[test]
+    fn fifo_queueing_under_load() {
+        let (h, join) = Leader::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+            1e-3, // long enough that job 1 is still running at submit 2
+        )
+        .spawn();
+        // Two full-cluster jobs: second must queue.
+        let big = Submission {
+            shape: JobShape::new(16, 16, 16),
+            duration: 200.0,
+        };
+        let (_, st1) = h.submit(big).unwrap();
+        assert_eq!(st1, JobState::Running);
+        let (id2, st2) = h.submit(big).unwrap();
+        assert_eq!(st2, JobState::Queued);
+        let mut tries = 0;
+        while h.query(id2) != Some(JobState::Finished) {
+            std::thread::sleep(Duration::from_millis(20));
+            tries += 1;
+            assert!(tries < 300, "queued job never ran");
+        }
+        h.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.finished, 2);
+    }
+}

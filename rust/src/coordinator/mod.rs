@@ -1,0 +1,16 @@
+//! The cluster leader: RFold as a long-running coordinator process rather
+//! than a batch simulator.
+//!
+//! * [`leader`] — the allocation event loop: FIFO admission queue,
+//!   placement via any [`crate::placement::PolicyKind`], wall-clock job
+//!   completions (with a time-scale knob so demos run fast), metrics.
+//! * [`server`] — a line-protocol TCP front end (`SUBMIT`, `STATS`,
+//!   `UTIL`, `QUIT`) for interactive use; std-thread based (tokio is not
+//!   available in this offline environment — see DESIGN.md §4).
+//! * [`replay`] — feeds a trace file to the leader in (scaled) real time.
+
+pub mod leader;
+pub mod replay;
+pub mod server;
+
+pub use leader::{Leader, LeaderHandle, LeaderStats};

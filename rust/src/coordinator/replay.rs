@@ -1,0 +1,105 @@
+//! Trace replay against a live leader: feeds a `trace::JobSpec` stream at
+//! (scaled) real-time pace and waits for the cluster to drain.
+
+use std::time::Duration;
+
+use super::leader::{JobState, LeaderHandle, Submission};
+use crate::trace::JobSpec;
+
+/// Replay summary.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    pub submitted: usize,
+    pub rejected: usize,
+    pub finished: usize,
+    pub wall_secs: f64,
+}
+
+/// Replay `trace` against `leader`, compressing simulated time by
+/// `time_scale` (wall = sim × scale; the leader must be built with the
+/// same scale for durations to line up).
+pub fn replay(
+    leader: &LeaderHandle,
+    trace: &[JobSpec],
+    time_scale: f64,
+    quiet: bool,
+) -> ReplayReport {
+    let t0 = std::time::Instant::now();
+    let mut report = ReplayReport::default();
+    let mut ids = Vec::new();
+    let mut prev_arrival = 0.0f64;
+    for j in trace {
+        let gap = (j.arrival - prev_arrival).max(0.0) * time_scale;
+        prev_arrival = j.arrival;
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+        match leader.submit(Submission {
+            shape: j.shape,
+            duration: j.duration,
+        }) {
+            Some((id, JobState::Rejected)) => {
+                report.rejected += 1;
+                ids.push(id);
+            }
+            Some((id, _)) => ids.push(id),
+            None => break,
+        }
+        report.submitted += 1;
+        if !quiet && report.submitted % 64 == 0 {
+            if let Some(s) = leader.stats() {
+                eprintln!(
+                    "replayed {}/{} running={} queued={} busy={}/{}",
+                    report.submitted,
+                    trace.len(),
+                    s.running,
+                    s.queued,
+                    s.busy_xpus,
+                    s.total_xpus
+                );
+            }
+        }
+    }
+    // Drain: poll until nothing is running or queued.
+    loop {
+        match leader.stats() {
+            Some(s) if s.running == 0 && s.queued == 0 => {
+                report.finished = s.finished;
+                break;
+            }
+            Some(_) => std::thread::sleep(Duration::from_millis(20)),
+            None => break,
+        }
+    }
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::leader::Leader;
+    use crate::placement::PolicyKind;
+    use crate::topology::cluster::ClusterTopo;
+    use crate::trace::gen::{generate, TraceConfig};
+
+    #[test]
+    fn replay_small_trace() {
+        let scale = 1e-6;
+        let (h, j) = Leader::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+            scale,
+        )
+        .spawn();
+        let trace = generate(&TraceConfig {
+            num_jobs: 25,
+            ..Default::default()
+        });
+        let rep = replay(&h, &trace, scale, true);
+        assert_eq!(rep.submitted, 25);
+        assert_eq!(rep.finished + rep.rejected, 25);
+        h.shutdown();
+        j.join().unwrap();
+    }
+}

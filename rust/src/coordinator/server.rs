@@ -1,0 +1,165 @@
+//! Line-protocol TCP front end for the leader.
+//!
+//! Protocol (one command per line):
+//! ```text
+//! SUBMIT <a> <b> <c> <duration_s>   → OK <id> <state> | ERR <msg>
+//! QUERY <id>                        → STATE <id> <state>
+//! STATS                             → STATS {json}
+//! QUIT                              → closes the connection
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use super::leader::{JobState, LeaderHandle, Submission};
+use crate::shape::JobShape;
+
+fn state_name(s: JobState) -> &'static str {
+    match s {
+        JobState::Queued => "QUEUED",
+        JobState::Running => "RUNNING",
+        JobState::Finished => "FINISHED",
+        JobState::Rejected => "REJECTED",
+    }
+}
+
+/// Handle one client connection (blocking).
+pub fn handle_conn(stream: TcpStream, leader: LeaderHandle) -> std::io::Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut out = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let reply = dispatch(line.trim(), &leader);
+        match reply {
+            Some(r) => writeln!(out, "{r}")?,
+            None => break, // QUIT
+        }
+    }
+    let _ = peer; // quiet unused in release logs
+    Ok(())
+}
+
+/// Parse and execute one command line; `None` means close.
+pub fn dispatch(line: &str, leader: &LeaderHandle) -> Option<String> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["SUBMIT", a, b, c, dur] => {
+            let parse = |s: &str| s.parse::<usize>().ok().filter(|&v| v >= 1);
+            match (parse(a), parse(b), parse(c), dur.parse::<f64>().ok()) {
+                (Some(a), Some(b), Some(c), Some(d)) if d > 0.0 => {
+                    match leader.submit(Submission {
+                        shape: JobShape::new(a, b, c),
+                        duration: d,
+                    }) {
+                        Some((id, st)) => Some(format!("OK {id} {}", state_name(st))),
+                        None => Some("ERR leader unavailable".into()),
+                    }
+                }
+                _ => Some("ERR usage: SUBMIT <a> <b> <c> <duration_s>".into()),
+            }
+        }
+        ["QUERY", id] => match id.parse::<u64>() {
+            Ok(id) => match leader.query(id) {
+                Some(st) => Some(format!("STATE {id} {}", state_name(st))),
+                None => Some("ERR leader unavailable".into()),
+            },
+            Err(_) => Some("ERR bad id".into()),
+        },
+        ["STATS"] => match leader.stats() {
+            Some(s) => Some(format!(
+                "STATS {{\"submitted\":{},\"running\":{},\"queued\":{},\"finished\":{},\
+                 \"rejected\":{},\"busy_xpus\":{},\"total_xpus\":{},\"ocs_reserved\":{}}}",
+                s.submitted,
+                s.running,
+                s.queued,
+                s.finished,
+                s.rejected,
+                s.busy_xpus,
+                s.total_xpus,
+                s.ocs_entries_reserved
+            )),
+            None => Some("ERR leader unavailable".into()),
+        },
+        ["QUIT"] => None,
+        [] => Some(String::new()),
+        _ => Some("ERR unknown command".into()),
+    }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7070").
+pub fn serve(addr: &str, leader: LeaderHandle) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("rfold leader listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let leader = leader.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, leader);
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::leader::Leader;
+    use crate::placement::PolicyKind;
+    use crate::topology::cluster::ClusterTopo;
+
+    fn leader() -> (LeaderHandle, std::thread::JoinHandle<super::super::LeaderStats>) {
+        Leader::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+            1e-6,
+        )
+        .spawn()
+    }
+
+    #[test]
+    fn dispatch_submit_and_query() {
+        let (h, j) = leader();
+        let r = dispatch("SUBMIT 4 4 4 10", &h).unwrap();
+        assert!(r.starts_with("OK 0"), "{r}");
+        let r = dispatch("QUERY 0", &h).unwrap();
+        assert!(r.starts_with("STATE 0"), "{r}");
+        let r = dispatch("STATS", &h).unwrap();
+        assert!(r.contains("\"submitted\":1"), "{r}");
+        assert!(dispatch("QUIT", &h).is_none());
+        h.shutdown();
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn dispatch_errors() {
+        let (h, j) = leader();
+        assert!(dispatch("SUBMIT 0 1 1 10", &h).unwrap().starts_with("ERR"));
+        assert!(dispatch("SUBMIT x", &h).unwrap().starts_with("ERR"));
+        assert!(dispatch("NOPE", &h).unwrap().starts_with("ERR"));
+        assert!(dispatch("QUERY abc", &h).unwrap().starts_with("ERR"));
+        h.shutdown();
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let (h, j) = leader();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h2 = h.clone();
+        std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            handle_conn(s, h2).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        writeln!(c, "SUBMIT 2 2 2 5").unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK 0"), "{line}");
+        writeln!(c, "QUIT").unwrap();
+        h.shutdown();
+        j.join().unwrap();
+    }
+}

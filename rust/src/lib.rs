@@ -1,0 +1,31 @@
+//! # RFold — co-adapting ML job shapes and cluster topology
+//!
+//! Reproduction of *"Toward Co-adapting Machine Learning Job Shape and
+//! Cluster Topology"* (CS.DC 2025): a resource-allocation scheme for
+//! multi-tenant 3D-torus ML clusters built from OCS-reconfigurable cubes.
+//!
+//! The crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * L1 — Pallas kernels (`python/compile/kernels/`) implement the batched
+//!   plan-scoring hot spot, AOT-lowered to HLO text.
+//! * L2 — the JAX plan-score graph (`python/compile/model.py`).
+//! * L3 — this crate: torus topology + OCS model, shape folding, placement
+//!   policies, the discrete-event cluster simulator, metrics, and the PJRT
+//!   runtime that executes the AOT artifacts (Python never runs on the
+//!   request path).
+//!
+//! Entry points: the [`coordinator`] leader loop, [`sim::Simulation`] for
+//! trace-driven experiments, and the `rfold` CLI (`rust/src/main.rs`).
+
+pub mod coordinator;
+pub mod metrics;
+pub mod placement;
+pub mod runtime;
+pub mod shape;
+pub mod sim;
+pub mod topology;
+pub mod trace;
+pub mod util;
+
+/// Total XPUs in the paper's evaluation cluster.
+pub const CLUSTER_XPUS: usize = 4096;

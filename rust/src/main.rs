@@ -1,0 +1,369 @@
+//! `rfold` — the leader binary: experiments, trace tools, and the live
+//! coordinator.
+//!
+//! ```text
+//! rfold table1   [--runs N] [--jobs J] [--seed S]      Table 1 (JCR)
+//! rfold fig3     [--runs N] [--jobs J] [--seed S]      Figure 3 (JCT)
+//! rfold fig4     [--runs N] [--jobs J] [--seed S]      Figure 4 (utilization)
+//! rfold motivation                                     §3.1 contention study
+//! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
+//! rfold besteffort [--runs N] [--jobs J]               §5 best-effort crossover
+//! rfold simulate --policy P [--cube N|--static] ...    one cell, detailed
+//! rfold trace-gen --out FILE [--jobs J] [--seed S]     write a CSV trace
+//! rfold serve [--addr A] [--policy P] [--cube N]       TCP leader
+//! rfold replay --trace FILE [--policy P] [--cube N]    replay CSV live
+//! rfold scorer-check [--plans K]                       XLA vs native scorer
+//! ```
+
+use rfold::metrics::report;
+use rfold::metrics::CellSummary;
+use rfold::placement::{score::NativeScorer, score::PlanScorer, PolicyKind};
+use rfold::sim::experiments as exp;
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace;
+use rfold::util::cli::Args;
+use rfold::util::Pcg64;
+
+fn main() {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    let args = Args::from_env(2, &["static", "folds", "quiet", "xla"]);
+    match cmd.as_str() {
+        "table1" => table1(&args),
+        "fig3" => fig3(&args),
+        "fig4" => fig4(&args),
+        "motivation" => motivation(),
+        "ablation" => ablation(&args),
+        "besteffort" => besteffort(&args),
+        "simulate" => simulate(&args),
+        "trace-gen" => trace_gen(&args),
+        "serve" => serve(&args),
+        "replay" => replay(&args),
+        "scorer-check" => scorer_check(&args),
+        "workload-stats" => workload_stats(&args),
+        "all" => {
+            table1(&args);
+            fig3(&args);
+            fig4(&args);
+            motivation();
+        }
+        _ => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: rfold <table1|fig3|fig4|motivation|ablation|besteffort|simulate|\
+     trace-gen|serve|replay|scorer-check|all> [options]\n\
+     common options: --runs N --jobs J --seed S --policy P --cube N|--static"
+}
+
+fn runs_jobs_seed(args: &Args) -> (usize, usize, u64) {
+    (
+        args.get_usize("runs", 100),
+        args.get_usize("jobs", 512),
+        args.get_u64("seed", 1),
+    )
+}
+
+fn run_cells(cells: &[exp::Cell], args: &Args) -> Vec<CellSummary> {
+    let (runs, jobs, seed) = runs_jobs_seed(args);
+    cells
+        .iter()
+        .map(|&c| {
+            eprintln!("running {} ({} runs x {} jobs)...", c.label, runs, jobs);
+            exp::run_cell(c, runs, jobs, seed)
+        })
+        .collect()
+}
+
+fn table1(args: &Args) {
+    let sums = run_cells(&exp::table1_cells(), args);
+    report::print_table1(&sums);
+}
+
+fn fig3(args: &Args) {
+    let sums = run_cells(&exp::fig3_cells(), args);
+    report::print_fig3(&sums);
+    // Headline ratios the paper quotes (11x/6x/2x at 4^3).
+    let find = |l: &str| sums.iter().find(|s| s.label == l);
+    if let (Some(rc), Some(rf)) = (find("Reconfig (4^3)"), find("RFold (4^3)")) {
+        println!(
+            "FIG3-RATIO 4^3 Reconfig/RFold p50={:.2}x p90={:.2}x p99={:.2}x",
+            rc.jct_p50 / rf.jct_p50,
+            rc.jct_p90 / rf.jct_p90,
+            rc.jct_p99 / rf.jct_p99
+        );
+    }
+    if let (Some(rc), Some(rf)) = (find("Reconfig (2^3)"), find("RFold (2^3)")) {
+        println!(
+            "FIG3-RATIO 2^3 Reconfig/RFold p50={:.2}x p90={:.2}x p99={:.2}x",
+            rc.jct_p50 / rf.jct_p50,
+            rc.jct_p90 / rf.jct_p90,
+            rc.jct_p99 / rf.jct_p99
+        );
+    }
+}
+
+fn fig4(args: &Args) {
+    let sums = run_cells(&exp::table1_cells(), args);
+    report::print_fig4(&sums);
+}
+
+fn motivation() {
+    println!("\n§3.1 motivation: contention slowdowns on a 2x2 mesh");
+    println!("{:<44} {:>10} {:>10}", "configuration", "model", "paper");
+    let paper = [1.0, 1.17, 1.35, 1.95, 2.86];
+    for (row, p) in exp::motivation_rows().iter().zip(paper) {
+        println!("MOTIV {:<44} {:>9.2}x {:>9.2}x", row.0, row.1, p);
+    }
+}
+
+fn ablation(args: &Args) {
+    if args.flag("folds") {
+        // A2: which folding dimensionalities matter for RFold(4^3)?
+        let (runs, jobs, seed) = runs_jobs_seed(args);
+        let cell = exp::Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        };
+        println!("\nAblation A2: folding dimensionality (RFold 4^3)");
+        let combos: [(&str, [bool; 3]); 5] = [
+            ("all folds", [true, true, true]),
+            ("no 1D folds", [false, true, true]),
+            ("no 2D folds", [true, false, true]),
+            ("no 3D folds", [true, true, false]),
+            ("rotations only", [false, false, false]),
+        ];
+        for (label, dims) in combos {
+            let s = exp::run_cell_with(cell, runs, jobs, seed, dims);
+            println!(
+                "ABLATION-FOLDS {:<16} jcr={:>6.2}% p50={} util={:.3}",
+                label,
+                s.avg_jcr_pct,
+                report::fmt_secs(s.jct_p50),
+                s.avg_util
+            );
+        }
+    } else {
+        // A1: cube-size sweep.
+        let sums = run_cells(&exp::ablation_cube_cells(), args);
+        println!("\nAblation A1: cube size sweep");
+        for s in &sums {
+            println!(
+                "ABLATION-CUBES {:<16} jcr={:>6.2}% p50={} p99={} util={:.3}",
+                s.label,
+                s.avg_jcr_pct,
+                report::fmt_secs(s.jct_p50),
+                report::fmt_secs(s.jct_p99),
+                s.avg_util
+            );
+        }
+    }
+}
+
+fn besteffort(args: &Args) {
+    let sums = run_cells(&exp::besteffort_cells(), args);
+    println!("\n§5 best-effort vs contiguous (queueing delay vs contention)");
+    for s in &sums {
+        println!(
+            "BESTEFFORT {:<18} jcr={:>6.2}% p50={} p99={} queue-delay={} util={:.3}",
+            s.label,
+            s.avg_jcr_pct,
+            report::fmt_secs(s.jct_p50),
+            report::fmt_secs(s.jct_p99),
+            report::fmt_secs(s.avg_queue_delay),
+            s.avg_util
+        );
+    }
+}
+
+fn parse_topo(args: &Args) -> ClusterTopo {
+    if args.flag("static") {
+        ClusterTopo::static_4096()
+    } else {
+        ClusterTopo::reconfigurable_4096(args.get_usize("cube", 4))
+    }
+}
+
+fn parse_policy(args: &Args, default: PolicyKind) -> PolicyKind {
+    args.get("policy")
+        .and_then(PolicyKind::parse)
+        .unwrap_or(default)
+}
+
+fn simulate(args: &Args) {
+    let policy = parse_policy(args, PolicyKind::RFold);
+    let topo = if policy.wants_reconfigurable() && !args.flag("static") {
+        parse_topo(args)
+    } else {
+        ClusterTopo::static_4096()
+    };
+    let (runs, jobs, seed) = runs_jobs_seed(args);
+    eprintln!(
+        "simulating {} on {:?}: {} runs x {} jobs",
+        policy.name(),
+        topo,
+        runs,
+        jobs
+    );
+    let cell = exp::Cell {
+        policy,
+        topo,
+        label: "custom",
+    };
+    let s = exp::run_cell(cell, runs, jobs, seed);
+    println!(
+        "SIMULATE policy={} jcr={:.2}% jct_p50={} jct_p90={} jct_p99={} util={:.3} queue-delay={}",
+        policy.name(),
+        s.avg_jcr_pct,
+        report::fmt_secs(s.jct_p50),
+        report::fmt_secs(s.jct_p90),
+        report::fmt_secs(s.jct_p99),
+        s.avg_util,
+        report::fmt_secs(s.avg_queue_delay),
+    );
+}
+
+fn trace_gen(args: &Args) {
+    let out = args.get_str("out", "trace.csv").to_string();
+    let cfg = trace::gen::TraceConfig {
+        num_jobs: args.get_usize("jobs", 512),
+        seed: args.get_u64("seed", 1),
+        ..Default::default()
+    };
+    let t = trace::gen::generate(&cfg);
+    trace::io::write_csv(std::path::Path::new(&out), &t).expect("write trace");
+    println!("wrote {} jobs to {out}", t.len());
+}
+
+fn serve(args: &Args) {
+    let addr = args.get_str("addr", "127.0.0.1:7070").to_string();
+    let policy = parse_policy(args, PolicyKind::RFold);
+    let topo = parse_topo(args);
+    let scale = args.get_f64("time-scale", 1.0);
+    let (handle, _join) = rfold::coordinator::leader::Leader::new(topo, policy, scale).spawn();
+    rfold::coordinator::server::serve(&addr, handle).expect("serve");
+}
+
+fn replay(args: &Args) {
+    let path = args.get_str("trace", "trace.csv").to_string();
+    let t = trace::io::read_csv(std::path::Path::new(&path)).expect("read trace");
+    let policy = parse_policy(args, PolicyKind::RFold);
+    let topo = parse_topo(args);
+    let scale = args.get_f64("time-scale", 1e-4);
+    let (handle, join) = rfold::coordinator::leader::Leader::new(topo, policy, scale).spawn();
+    let rep = rfold::coordinator::replay::replay(&handle, &t, scale, args.flag("quiet"));
+    handle.shutdown();
+    let stats = join.join().expect("leader thread");
+    println!(
+        "REPLAY jobs={} finished={} rejected={} wall={:.2}s busy_final={}",
+        rep.submitted, stats.finished, stats.rejected, rep.wall_secs, stats.busy_xpus
+    );
+}
+
+/// Analyze the synthetic workload: size/dimensionality distribution and
+/// per-policy feasibility-on-empty (the upper bound on Table 1's JCR).
+fn workload_stats(args: &Args) {
+    use rfold::placement::policies::Policy;
+    let (_, jobs, seed) = runs_jobs_seed(args);
+    let t = trace::gen::generate(&trace::gen::TraceConfig {
+        num_jobs: jobs,
+        seed,
+        ..Default::default()
+    });
+    let n = t.len() as f64;
+    let mean_size = t.iter().map(|j| j.size() as f64).sum::<f64>() / n;
+    let mean_dur = t.iter().map(|j| j.duration).sum::<f64>() / n;
+    let horizon = t.last().map(|j| j.arrival).unwrap_or(0.0);
+    let offered = t.iter().map(|j| j.size() as f64 * j.duration).sum::<f64>()
+        / (horizon * 4096.0);
+    let dims = |d: usize| t.iter().filter(|j| j.shape.dimensionality() == d).count();
+    let long = t
+        .iter()
+        .filter(|j| j.shape.dims().0.iter().any(|&x| x > 16))
+        .count();
+    let odd = t.iter().filter(|j| j.size() % 2 == 1).count();
+    println!(
+        "WORKLOAD jobs={} mean_size={mean_size:.0} mean_dur={mean_dur:.0}s \
+         offered_load={offered:.2} dims=[{} {} {} {}] long_dim={}% odd={}%",
+        t.len(),
+        dims(0),
+        dims(1),
+        dims(2),
+        dims(3),
+        100 * long / t.len(),
+        100 * odd / t.len()
+    );
+    let cells = [
+        ("FirstFit  (16^3)", PolicyKind::FirstFit, ClusterTopo::static_4096()),
+        ("Folding   (16^3)", PolicyKind::Folding, ClusterTopo::static_4096()),
+        ("Reconfig  (8^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(8)),
+        ("RFold     (8^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(8)),
+        ("Reconfig  (4^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(4)),
+        ("RFold     (4^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(4)),
+        ("Reconfig  (2^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(2)),
+        ("RFold     (2^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(2)),
+    ];
+    for (label, kind, topo) in cells {
+        let mut p = Policy::new(kind);
+        let feasible = t
+            .iter()
+            .filter(|j| p.feasible_ever(topo, j.shape))
+            .count();
+        println!(
+            "FEASIBLE {label} {:>6.2}%",
+            100.0 * feasible as f64 / n
+        );
+    }
+}
+
+/// Compare the PJRT (AOT Pallas) scorer against the native Rust scorer on
+/// random occupancy grids — the end-to-end L1↔L3 numerical check.
+fn scorer_check(args: &Args) {
+    let k = args.get_usize("plans", 64);
+    let dir = rfold::runtime::Artifacts::default_dir();
+    let arts = match rfold::runtime::Artifacts::load(&dir) {
+        Ok(a) => std::rc::Rc::new(a),
+        Err(e) => {
+            eprintln!("cannot load artifacts from {}: {e}", dir.display());
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", arts.platform());
+    let mut rng = Pcg64::seeded(args.get_u64("seed", 7));
+    let mut native = NativeScorer;
+    let mut xs = rfold::runtime::XlaScorer::new(arts.clone());
+    let mut worst: f64 = 0.0;
+    for &(cubes, n) in &[(64usize, 4usize), (8, 8), (512, 2)] {
+        if !arts.has_scorer(cubes, n) {
+            eprintln!("skipping {cubes}x{n}^3 (no artifact)");
+            continue;
+        }
+        let vol = cubes * n * n * n;
+        let occ: Vec<f32> = (0..k * vol)
+            .map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 })
+            .collect();
+        let a = native.frag_stats(&occ, k, cubes, n);
+        let b = xs.frag_stats(&occ, k, cubes, n);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            for (u, v) in [
+                (x.total_free, y.total_free),
+                (x.partial_cubes, y.partial_cubes),
+                (x.stranded, y.stranded),
+                (x.thru, y.thru),
+                (x.transitions, y.transitions),
+                (x.empty_cubes, y.empty_cubes),
+            ] {
+                let d = (u - v).abs();
+                worst = worst.max(d);
+                assert!(d < 1e-3, "plan {i} ({cubes}x{n}^3): native {u} vs xla {v}");
+            }
+        }
+        println!("SCORER-CHECK {cubes}x{n}^3: {k} plans agree (max |delta| {worst:.2e})");
+    }
+    println!("scorer-check OK");
+}

@@ -1,0 +1,115 @@
+//! Experiment metrics and multi-run aggregation: everything needed to
+//! regenerate Table 1 (JCR), Figure 3 (JCT percentiles) and Figure 4
+//! (utilization CDFs), each averaged across repeated seeded runs exactly
+//! like the paper ("averaged across 100 runs").
+
+pub mod report;
+
+use crate::sim::engine::RunResult;
+use crate::trace::JobSpec;
+use crate::util::stats;
+
+/// Summary of one (policy, topology) cell across many runs.
+#[derive(Clone, Debug)]
+pub struct CellSummary {
+    pub label: String,
+    pub runs: usize,
+    /// Average JCR in percent (Table 1).
+    pub avg_jcr_pct: f64,
+    /// Mean-of-runs JCT percentiles in seconds (Figure 3).
+    pub jct_p50: f64,
+    pub jct_p90: f64,
+    pub jct_p99: f64,
+    /// Utilization CDF averaged per quantile across runs (Figure 4);
+    /// `(quantile, utilization)` pairs.
+    pub util_cdf: Vec<(f64, f64)>,
+    /// Time-weighted mean utilization.
+    pub avg_util: f64,
+    /// Mean queueing delay (the §5 best-effort trade-off).
+    pub avg_queue_delay: f64,
+}
+
+/// Number of points on the reported utilization CDF curves.
+pub const CDF_POINTS: usize = 20;
+
+/// Aggregate per-run results (with their traces) into a cell summary.
+pub fn summarize(label: &str, runs: &[(RunResult, &[JobSpec])]) -> CellSummary {
+    assert!(!runs.is_empty());
+    let mut jcrs = Vec::new();
+    let mut p50s = Vec::new();
+    let mut p90s = Vec::new();
+    let mut p99s = Vec::new();
+    let mut utils = Vec::new();
+    let mut delays = Vec::new();
+    let mut curves: Vec<Vec<f64>> = vec![Vec::new(); CDF_POINTS + 1];
+    for (r, trace) in runs {
+        jcrs.push(r.jcr() * 100.0);
+        let jcts = r.jcts(trace);
+        if !jcts.is_empty() {
+            p50s.push(stats::percentile_of(&jcts, 50.0));
+            p90s.push(stats::percentile_of(&jcts, 90.0));
+            p99s.push(stats::percentile_of(&jcts, 99.0));
+        }
+        let qd = r.queueing_delays(trace);
+        if !qd.is_empty() {
+            delays.push(stats::mean(&qd));
+        }
+        utils.push(r.utilization.mean());
+        for (i, (_, v)) in r.utilization.curve(CDF_POINTS).into_iter().enumerate() {
+            curves[i].push(v);
+        }
+    }
+    CellSummary {
+        label: label.to_string(),
+        runs: runs.len(),
+        avg_jcr_pct: stats::mean(&jcrs),
+        jct_p50: stats::mean(&p50s),
+        jct_p90: stats::mean(&p90s),
+        jct_p99: stats::mean(&p99s),
+        util_cdf: (0..=CDF_POINTS)
+            .map(|i| (i as f64 / CDF_POINTS as f64, stats::mean(&curves[i])))
+            .collect(),
+        avg_util: stats::mean(&utils),
+        avg_queue_delay: if delays.is_empty() {
+            0.0
+        } else {
+            stats::mean(&delays)
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PolicyKind;
+    use crate::sim::{SimConfig, Simulation};
+    use crate::topology::cluster::ClusterTopo;
+    use crate::trace::gen::{generate, TraceConfig};
+
+    #[test]
+    fn summarize_two_runs() {
+        let mut pairs = Vec::new();
+        let mut traces = Vec::new();
+        for seed in 1..=2 {
+            let cfg = TraceConfig { num_jobs: 40, seed, ..Default::default() };
+            traces.push(generate(&cfg));
+        }
+        for t in &traces {
+            let r = Simulation::new(SimConfig::new(
+                ClusterTopo::reconfigurable_4096(4),
+                PolicyKind::RFold,
+            ))
+            .run(t);
+            pairs.push((r, t.as_slice()));
+        }
+        let s = summarize("RFold (4^3)", &pairs);
+        assert_eq!(s.runs, 2);
+        assert!(s.avg_jcr_pct > 0.0 && s.avg_jcr_pct <= 100.0);
+        assert!(s.jct_p50 <= s.jct_p90 && s.jct_p90 <= s.jct_p99);
+        assert_eq!(s.util_cdf.len(), CDF_POINTS + 1);
+        // CDF must be monotone.
+        for w in s.util_cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+    }
+}

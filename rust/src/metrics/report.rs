@@ -1,0 +1,80 @@
+//! Table/figure formatters: print the same rows and series the paper
+//! reports, in a stable machine-greppable layout consumed by
+//! EXPERIMENTS.md.
+
+use super::CellSummary;
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".into();
+    }
+    if s < 120.0 {
+        format!("{s:.0}s")
+    } else if s < 7200.0 {
+        format!("{:.1}m", s / 60.0)
+    } else if s < 172_800.0 {
+        format!("{:.1}h", s / 3600.0)
+    } else {
+        format!("{:.1}d", s / 86400.0)
+    }
+}
+
+/// Table 1: average JCR per policy/topology cell.
+pub fn print_table1(cells: &[CellSummary]) {
+    println!("\nTable 1: Average job completion rate (JCR)");
+    println!("{:<22} {:>12}", "Policy", "Avg JCR (%)");
+    println!("{}", "-".repeat(36));
+    for c in cells {
+        println!("TABLE1 {:<22} {:>11.2}", c.label, c.avg_jcr_pct);
+    }
+}
+
+/// Figure 3: JCT p50/p90/p99 per cell.
+pub fn print_fig3(cells: &[CellSummary]) {
+    println!("\nFigure 3: Job completion time (averaged across runs)");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "Policy", "p50", "p90", "p99"
+    );
+    println!("{}", "-".repeat(62));
+    for c in cells {
+        println!(
+            "FIG3 {:<22} {:>12} {:>12} {:>12}   (s: {:.0}/{:.0}/{:.0})",
+            c.label,
+            fmt_secs(c.jct_p50),
+            fmt_secs(c.jct_p90),
+            fmt_secs(c.jct_p99),
+            c.jct_p50,
+            c.jct_p90,
+            c.jct_p99,
+        );
+    }
+}
+
+/// Figure 4: utilization CDF series per cell.
+pub fn print_fig4(cells: &[CellSummary]) {
+    println!("\nFigure 4: Cluster utilization CDF (per-quantile average)");
+    for c in cells {
+        let series: Vec<String> = c
+            .util_cdf
+            .iter()
+            .map(|(q, u)| format!("{q:.2}:{u:.3}"))
+            .collect();
+        println!("FIG4 {:<22} mean={:.3} cdf=[{}]", c.label, c.avg_util, series.join(" "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(30.0), "30s");
+        assert!(fmt_secs(600.0).ends_with('m'));
+        assert!(fmt_secs(10_000.0).ends_with('h'));
+        assert!(fmt_secs(500_000.0).ends_with('d'));
+        assert_eq!(fmt_secs(f64::NAN), "n/a");
+    }
+}

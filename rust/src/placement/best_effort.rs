@@ -1,0 +1,192 @@
+//! Best-effort (non-contiguous) placement — the §5 "revisiting best-effort
+//! placement" discussion and the A3 crossover experiment.
+//!
+//! Takes the first `size` free XPUs in a boustrophedon (snake) scan of the
+//! physical machine — close to the space-filling-curve allocators the
+//! paper cites [22, 27] — and maps the job's logical shape onto them in
+//! scan order. Rings then traverse shared links; the resulting slowdown is
+//! computed by `sim::contention` from the cluster-wide link-load field.
+
+use super::plan::Plan;
+use crate::shape::fold::Variant;
+use crate::shape::JobShape;
+use crate::topology::cluster::ClusterState;
+use crate::topology::P3;
+
+/// Scan order: boustrophedon over (x, y, z) — adjacent scan positions are
+/// usually physically adjacent, giving the best-effort allocator the
+/// "close to each other on a best-effort basis" behaviour of [22, 27].
+pub fn snake_order(ext: P3) -> Vec<P3> {
+    let mut out = Vec::with_capacity(ext.volume());
+    for x in 0..ext.0[0] {
+        let ys: Vec<usize> = if x % 2 == 0 {
+            (0..ext.0[1]).collect()
+        } else {
+            (0..ext.0[1]).rev().collect()
+        };
+        for (yi, &y) in ys.iter().enumerate() {
+            let flip = (x + yi) % 2 == 1;
+            let zs: Vec<usize> = if flip {
+                (0..ext.0[2]).rev().collect()
+            } else {
+                (0..ext.0[2]).collect()
+            };
+            for &z in &zs {
+                out.push(P3([x, y, z]));
+            }
+        }
+    }
+    out
+}
+
+/// Place a job on any `size` free XPUs (snake order). Returns `None` only
+/// when fewer than `size` XPUs are free — best-effort never blocks on
+/// shape.
+pub fn place_scattered(cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
+    let size = shape.size();
+    if size > cluster.free_count() {
+        return None;
+    }
+    let ext = cluster.topo().phys_ext();
+    let mut nodes = Vec::with_capacity(size);
+    // Map physical coordinates back to node ids via the topology.
+    for p in snake_order(ext) {
+        let node = phys_to_node(cluster, p);
+        if cluster.is_free(node) {
+            nodes.push(node);
+            if nodes.len() == size {
+                break;
+            }
+        }
+    }
+    if nodes.len() < size {
+        return None;
+    }
+    Some(Plan {
+        job,
+        variant: Variant::identity(shape),
+        nodes,
+        cubes: vec![],
+        chains: vec![],
+        // Logical rings are routed (multi-hop), so they always "close";
+        // the cost shows up as contention, not as an open-ring penalty.
+        wrap: [true, true, true],
+    })
+}
+
+/// Inverse of `ClusterState::phys_coords`.
+pub fn phys_to_node(cluster: &ClusterState, p: P3) -> usize {
+    use crate::topology::cluster::ClusterTopo;
+    match cluster.topo() {
+        ClusterTopo::Static { ext } => p.index_in(ext),
+        ClusterTopo::Reconfigurable { grid } => {
+            let c = P3([p.0[0] / grid.n, p.0[1] / grid.n, p.0[2] / grid.n]);
+            let l = P3([p.0[0] % grid.n, p.0[1] % grid.n, p.0[2] % grid.n]);
+            grid.node_id(grid.cube_id(c), l)
+        }
+    }
+}
+
+/// The logical ring node sequences of a best-effort allocation, in
+/// *physical coordinates* (for link-load accounting): dimension-major
+/// chunking of the scan-ordered node list.
+pub fn ring_members(cluster: &ClusterState, plan: &Plan) -> Vec<Vec<P3>> {
+    let dims = plan.variant.orig.dims();
+    let mut rings = Vec::new();
+    for d in 0..3 {
+        if dims.0[d] < 2 {
+            continue;
+        }
+        let (e, f) = match d {
+            0 => (1, 2),
+            1 => (0, 2),
+            _ => (0, 1),
+        };
+        for ie in 0..dims.0[e] {
+            for jf in 0..dims.0[f] {
+                let mut members = Vec::with_capacity(dims.0[d]);
+                for k in 0..dims.0[d] {
+                    let mut l = [0usize; 3];
+                    l[d] = k;
+                    l[e] = ie;
+                    l[f] = jf;
+                    let node = plan.nodes[P3(l).index_in(dims)];
+                    members.push(cluster.phys_coords(node));
+                }
+                rings.push(members);
+            }
+        }
+    }
+    rings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ClusterState, ClusterTopo};
+
+    #[test]
+    fn snake_order_adjacent_steps() {
+        let ext = P3([4, 4, 4]);
+        let order = snake_order(ext);
+        assert_eq!(order.len(), 64);
+        let distinct: std::collections::HashSet<_> = order.iter().collect();
+        assert_eq!(distinct.len(), 64);
+        // Within an x-slab, consecutive positions are adjacent.
+        for w in order.windows(2) {
+            if w[0].0[0] == w[1].0[0] {
+                let d = w[0].torus_dist(w[1], P3([64, 64, 64])); // no wrap
+                assert_eq!(d, 1, "{} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn scatters_when_fragmented() {
+        let mut c = ClusterState::new(ClusterTopo::static_4096());
+        // Busy-out a checkerboard of half the nodes.
+        let ext = P3([16, 16, 16]);
+        let nodes: Vec<usize> = ext
+            .iter_box()
+            .filter(|p| (p.0[0] + p.0[1] + p.0[2]) % 2 == 0)
+            .map(|p| p.index_in(ext))
+            .collect();
+        c.commit(crate::topology::cluster::Allocation {
+            job: 1,
+            nodes,
+            cubes: vec![],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: ext,
+        });
+        // No contiguous 2×2×2 box exists, but best-effort still places it.
+        let p = place_scattered(&c, 2, JobShape::new(2, 2, 2)).unwrap();
+        assert_eq!(p.nodes.len(), 8);
+        assert!(p.nodes.iter().all(|&n| c.is_free(n)));
+    }
+
+    #[test]
+    fn fails_only_when_not_enough_xpus() {
+        let c = ClusterState::new(ClusterTopo::static_4096());
+        assert!(place_scattered(&c, 1, JobShape::new(16, 16, 16)).is_some());
+        assert!(place_scattered(&c, 1, JobShape::new(17, 16, 16)).is_none());
+    }
+
+    #[test]
+    fn ring_members_cover_all_nodes() {
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let p = place_scattered(&c, 1, JobShape::new(4, 4, 1)).unwrap();
+        let rings = ring_members(&c, &p);
+        // 4 rings along each of two dims.
+        assert_eq!(rings.len(), 8);
+        assert!(rings.iter().all(|r| r.len() == 4));
+    }
+
+    #[test]
+    fn phys_roundtrip() {
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        for node in [0usize, 100, 4095, 777] {
+            assert_eq!(phys_to_node(&c, c.phys_coords(node)), node);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! SLURM-style space-filling-curve placement (§2 background: "SLURM ...
+//! uses a Hilbert curve to map 3D nodes onto a 1D axis, so that XPUs with
+//! proximity can be found using line segment search algorithms" —
+//! Albing et al. [1], Kwon et al. [22]).
+//!
+//! The policy linearizes the machine with a 3D Hilbert curve and allocates
+//! the first free *contiguous segment* of the requested size (falling back
+//! to the first free nodes in curve order when no segment exists). The
+//! curve's locality keeps allocations compact, but — unlike RFold — the
+//! result is not a torus-shaped sub-block: rings are routed over shared
+//! links and pay the §3.1 contention cost. This is the classical HPC
+//! baseline the paper positions itself against.
+
+use super::plan::Plan;
+use crate::shape::fold::Variant;
+use crate::shape::JobShape;
+use crate::topology::cluster::ClusterState;
+use crate::topology::P3;
+
+/// Map a Hilbert index to 3D coordinates on a `2^order`-sided cube
+/// (Skilling's transform, inverse direction).
+pub fn hilbert_d2xyz(order: u32, index: u64) -> P3 {
+    let n = 3usize; // dimensions
+    let bits = order as usize;
+    // Split the index into the transposed Gray-code representation.
+    let mut x = [0u64; 3];
+    for b in 0..bits * n {
+        let bit = (index >> (bits * n - 1 - b)) & 1;
+        x[b % n] = (x[b % n] << 1) | bit;
+    }
+    // Gray decode.
+    let mut t = x[n - 1] >> 1;
+    for i in (1..n).rev() {
+        x[i] ^= x[i - 1];
+    }
+    x[0] ^= t;
+    // Undo excess work.
+    let mut q = 2u64;
+    while q != (1u64 << bits) {
+        let p = q - 1;
+        for i in (0..n).rev() {
+            if x[i] & q != 0 {
+                x[0] ^= p; // invert low bits of x[0]
+            } else {
+                t = (x[0] ^ x[i]) & p;
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        q <<= 1;
+    }
+    P3([x[0] as usize, x[1] as usize, x[2] as usize])
+}
+
+/// The full Hilbert traversal of a `2^order`-sided cube, cached per order.
+pub fn hilbert_order(order: u32) -> Vec<P3> {
+    let total = 1u64 << (3 * order);
+    (0..total).map(|i| hilbert_d2xyz(order, i)).collect()
+}
+
+/// Place `shape` for `job` on the first free Hilbert segment of length
+/// `size`; fall back to the first `size` free nodes in curve order.
+/// Returns `None` only when fewer than `size` XPUs are free.
+pub fn place_hilbert(cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
+    let size = shape.size();
+    if size > cluster.free_count() {
+        return None;
+    }
+    let ext = cluster.topo().phys_ext();
+    // The 4096-XPU machine is 16^3 = 2^4 per side; reject exotic extents.
+    let order = ext.0[0].trailing_zeros();
+    if ext.0 != [1 << order, 1 << order, 1 << order] {
+        return None;
+    }
+    let curve = hilbert_order(order);
+    let node_of = |p: P3| super::best_effort::phys_to_node(cluster, p);
+
+    // Line-segment search: first contiguous free run of length `size`.
+    let mut run_start = 0usize;
+    let mut run_len = 0usize;
+    for (i, &p) in curve.iter().enumerate() {
+        if cluster.is_free(node_of(p)) {
+            if run_len == 0 {
+                run_start = i;
+            }
+            run_len += 1;
+            if run_len == size {
+                let nodes = curve[run_start..=i].iter().map(|&p| node_of(p)).collect();
+                return Some(segment_plan(job, shape, nodes));
+            }
+        } else {
+            run_len = 0;
+        }
+    }
+    // Fallback: scattered, still in curve order (keeps locality).
+    let nodes: Vec<usize> = curve
+        .iter()
+        .map(|&p| node_of(p))
+        .filter(|&nd| cluster.is_free(nd))
+        .take(size)
+        .collect();
+    if nodes.len() < size {
+        return None;
+    }
+    Some(segment_plan(job, shape, nodes))
+}
+
+fn segment_plan(job: u64, shape: JobShape, nodes: Vec<usize>) -> Plan {
+    Plan {
+        job,
+        variant: Variant::identity(shape),
+        nodes,
+        cubes: vec![],
+        chains: vec![],
+        // Rings are routed (multi-hop); contention is charged by the
+        // simulator's link-load model, not an open-ring penalty.
+        wrap: [true, true, true],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::cluster::{Allocation, ClusterTopo};
+
+    #[test]
+    fn curve_is_bijective() {
+        for order in [1u32, 2, 3, 4] {
+            let pts = hilbert_order(order);
+            let side = 1usize << order;
+            assert_eq!(pts.len(), side * side * side);
+            let set: std::collections::HashSet<_> = pts.iter().collect();
+            assert_eq!(set.len(), pts.len(), "order {order}");
+            assert!(pts
+                .iter()
+                .all(|p| p.0.iter().all(|&c| c < side)));
+        }
+    }
+
+    #[test]
+    fn curve_steps_are_adjacent() {
+        for order in [1u32, 2, 3, 4] {
+            let pts = hilbert_order(order);
+            for w in pts.windows(2) {
+                let d: usize = (0..3).map(|a| w[0].0[a].abs_diff(w[1].0[a])).sum();
+                assert_eq!(d, 1, "order {order}: {} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn places_contiguous_segment_when_empty() {
+        let c = ClusterState::new(ClusterTopo::static_4096());
+        let p = place_hilbert(&c, 1, JobShape::new(4, 4, 2)).unwrap();
+        assert_eq!(p.nodes.len(), 32);
+        // Segment = first 32 curve points → physically compact: max
+        // pairwise phys distance stays small.
+        let coords: Vec<P3> = p.nodes.iter().map(|&n| c.phys_coords(n)).collect();
+        let spread = coords
+            .iter()
+            .flat_map(|a| coords.iter().map(move |b| a.torus_dist(*b, P3([16, 16, 16]))))
+            .max()
+            .unwrap();
+        assert!(spread <= 12, "Hilbert prefix should be compact: {spread}");
+    }
+
+    #[test]
+    fn survives_fragmentation_via_fallback() {
+        let mut c = ClusterState::new(ClusterTopo::static_4096());
+        // Block every 3rd curve point: no contiguous run of 8 exists.
+        let curve = hilbert_order(4);
+        let blocked: Vec<usize> = curve
+            .iter()
+            .step_by(3)
+            .map(|&p| p.index_in(P3([16, 16, 16])))
+            .collect();
+        c.commit(Allocation {
+            job: 9,
+            nodes: blocked,
+            cubes: vec![],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 1]),
+        });
+        let p = place_hilbert(&c, 1, JobShape::new(4, 2, 1)).unwrap();
+        assert_eq!(p.nodes.len(), 8);
+        assert!(p.nodes.iter().all(|&n| c.is_free(n)));
+    }
+
+    #[test]
+    fn rejects_only_on_capacity() {
+        let c = ClusterState::new(ClusterTopo::static_4096());
+        assert!(place_hilbert(&c, 1, JobShape::new(16, 16, 16)).is_some());
+        assert!(place_hilbert(&c, 1, JobShape::new(64, 65, 1)).is_none());
+    }
+
+    #[test]
+    fn works_on_reconfigurable_geometry_too() {
+        // The physical machine is 16^3 regardless of cube decomposition.
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let p = place_hilbert(&c, 1, JobShape::new(2, 3, 5)).unwrap();
+        assert_eq!(p.nodes.len(), 30);
+    }
+}

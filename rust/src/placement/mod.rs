@@ -1,0 +1,23 @@
+//! Placement policies (paper §3): FirstFit, Folding, Reconfig, RFold,
+//! plus the §5 best-effort alternative.
+//!
+//! All policies share two engines:
+//! * [`static_place`] — contiguous box search in a statically wired torus;
+//! * [`reconfig_place`] — cube decomposition + OCS chain planning in a
+//!   reconfigurable cluster.
+//!
+//! A policy turns a job into a set of candidate [`plan::Plan`]s, the
+//! [`score`] module ranks them (fewest cubes → fewest OCS links → least
+//! fragmentation — the paper's core heuristic), and the winning plan is
+//! committed atomically against the [`crate::topology::ClusterState`].
+
+pub mod best_effort;
+pub mod hilbert;
+pub mod plan;
+pub mod policies;
+pub mod reconfig_place;
+pub mod score;
+pub mod static_place;
+
+pub use plan::{OcsChainPlan, Plan};
+pub use policies::{Policy, PolicyKind};

@@ -1,0 +1,197 @@
+//! Candidate placement plans and atomic commit.
+
+use crate::shape::fold::Variant;
+use crate::shape::verify;
+use crate::topology::cluster::{Allocation, ClusterState};
+use crate::topology::P3;
+
+/// One OCS path to reserve at commit: the cubes chained at face position
+/// (i, j) of `axis`, cyclic when `closed`.
+#[derive(Clone, Debug)]
+pub struct OcsChainPlan {
+    pub axis: usize,
+    pub i: usize,
+    pub j: usize,
+    pub cubes: Vec<usize>,
+    pub closed: bool,
+}
+
+/// A fully worked-out candidate placement for one job.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub job: u64,
+    pub variant: Variant,
+    /// Global node ids, indexed by placed-box linear coordinate: node for
+    /// placed coord `p` is `nodes[p.index_in(variant.placed)]`.
+    pub nodes: Vec<usize>,
+    /// Distinct cubes touched (empty on static topologies).
+    pub cubes: Vec<usize>,
+    /// OCS paths to reserve (reconfigurable topologies only).
+    pub chains: Vec<OcsChainPlan>,
+    /// Wrap-around availability per placed axis this plan provides.
+    pub wrap: [bool; 3],
+}
+
+impl Plan {
+    /// Number of OCS entries the plan consumes ("fewest OCS links" is the
+    /// second key of the paper's ranking heuristic).
+    pub fn ocs_entries(&self) -> usize {
+        self.chains.iter().map(|c| c.cubes.len()).sum()
+    }
+
+    /// Commit this plan: reserve OCS paths, occupy nodes, and record the
+    /// allocation with its ring-closure profile for the JCT model.
+    ///
+    /// In debug builds the variant's homomorphism is re-verified against
+    /// the wrap vector actually provided.
+    pub fn commit(&self, cluster: &mut ClusterState) -> Result<(), String> {
+        debug_assert!(
+            verify::verify(&self.variant, self.wrap).is_ok(),
+            "plan commits an unverifiable variant: {:?}",
+            self.variant
+        );
+        for k in 0..3 {
+            if self.variant.requires_wrap[k] && !self.wrap[k] {
+                return Err(format!(
+                    "variant requires wrap on axis {k} but plan lacks it"
+                ));
+            }
+        }
+        if let Some(ocs) = cluster.ocs_mut() {
+            let mut done: Vec<&OcsChainPlan> = Vec::new();
+            for ch in &self.chains {
+                match ocs.reserve_path(ch.axis, ch.i, ch.j, &ch.cubes, ch.closed, self.job) {
+                    Ok(()) => done.push(ch),
+                    Err(e) => {
+                        // Roll back everything reserved so far.
+                        ocs.release_job(self.job);
+                        return Err(format!("OCS reservation failed: {e}"));
+                    }
+                }
+            }
+        } else if !self.chains.is_empty() {
+            return Err("OCS chains planned on a static topology".into());
+        }
+
+        let rings = verify::ring_closures(&self.variant, self.wrap);
+        cluster.commit(Allocation {
+            job: self.job,
+            nodes: self.nodes.clone(),
+            cubes: self.cubes.clone(),
+            ocs_entries: self.ocs_entries(),
+            rings,
+            placed_ext: self.variant.placed,
+        });
+        Ok(())
+    }
+
+    /// The placed coordinates → node id mapping as (coord, node) pairs.
+    pub fn placed_nodes(&self) -> impl Iterator<Item = (P3, usize)> + '_ {
+        let ext = self.variant.placed;
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(move |(i, &n)| (P3::from_index(i, ext), n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shape::fold::Variant;
+    use crate::shape::JobShape;
+    use crate::topology::{ClusterState, ClusterTopo};
+
+    fn box_plan(job: u64, cube: usize, ext: P3, cluster: &ClusterState) -> Plan {
+        // All nodes of `cube` covering `ext` starting at the origin.
+        let grid = match cluster.topo() {
+            ClusterTopo::Reconfigurable { grid } => grid,
+            _ => unreachable!(),
+        };
+        let variant = Variant::identity(JobShape::new(ext.0[0], ext.0[1], ext.0[2]));
+        let nodes = ext
+            .iter_box()
+            .map(|p| grid.node_id(cube, p))
+            .collect();
+        Plan {
+            job,
+            variant,
+            nodes,
+            cubes: vec![cube],
+            chains: vec![],
+            wrap: [false; 3],
+        }
+    }
+
+    #[test]
+    fn commit_occupies_nodes() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let p = box_plan(1, 2, P3([2, 2, 2]), &c);
+        p.commit(&mut c).unwrap();
+        assert_eq!(c.busy_count(), 8);
+        assert_eq!(c.cube_free_count(2), 56);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn commit_with_chain_reserves_ocs() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut p = box_plan(3, 0, P3([4, 1, 1]), &c);
+        p.wrap = [true, false, false];
+        p.chains = vec![OcsChainPlan {
+            axis: 0,
+            i: 0,
+            j: 0,
+            cubes: vec![0],
+            closed: true,
+        }];
+        p.commit(&mut c).unwrap();
+        assert_eq!(c.ocs().unwrap().reserved_entries(), 1);
+        c.release(3);
+        assert_eq!(c.ocs().unwrap().reserved_entries(), 0);
+    }
+
+    #[test]
+    fn conflicting_chain_rolls_back() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut p1 = box_plan(1, 0, P3([4, 1, 1]), &c);
+        p1.chains = vec![OcsChainPlan { axis: 0, i: 0, j: 0, cubes: vec![0], closed: true }];
+        p1.wrap = [true, false, false];
+        p1.commit(&mut c).unwrap();
+
+        // Same OCS entry again (different job, artificial overlap on the
+        // chain but disjoint nodes) must fail and roll back cleanly.
+        let grid = match c.topo() {
+            ClusterTopo::Reconfigurable { grid } => grid,
+            _ => unreachable!(),
+        };
+        let variant = Variant::identity(JobShape::new(4, 1, 1));
+        let nodes = (0..4).map(|x| grid.node_id(0, P3([x, 1, 0]))).collect();
+        let p2 = Plan {
+            job: 2,
+            variant,
+            nodes,
+            cubes: vec![0],
+            chains: vec![
+                OcsChainPlan { axis: 0, i: 1, j: 0, cubes: vec![0], closed: true },
+                OcsChainPlan { axis: 0, i: 0, j: 0, cubes: vec![0], closed: true },
+            ],
+            wrap: [true, false, false],
+        };
+        assert!(p2.commit(&mut c).is_err());
+        // Rollback: job 2 owns nothing, job 1 untouched.
+        assert_eq!(c.ocs().unwrap().reserved_entries(), 1);
+        assert_eq!(c.busy_count(), 4);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn required_wrap_enforced() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut p = box_plan(9, 1, P3([4, 4, 4]), &c);
+        p.variant.requires_wrap = [false, false, true];
+        p.wrap = [false; 3];
+        assert!(p.commit(&mut c).is_err());
+        assert_eq!(c.busy_count(), 0);
+    }
+}

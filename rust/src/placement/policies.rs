@@ -1,0 +1,311 @@
+//! The four placement policies of the paper's evaluation (§4) behind one
+//! trait: FirstFit and Folding drive the static-torus engine; Reconfig and
+//! RFold drive the reconfigurable engine. BestEffort (§5) lives in
+//! `best_effort.rs`.
+
+use std::collections::HashMap;
+
+use super::best_effort;
+use super::hilbert;
+use super::plan::Plan;
+use super::reconfig_place;
+use super::score::{rank_plans, NativeScorer, PlanScorer};
+use super::static_place;
+use crate::shape::fold::{enumerate_variants, rotations_only, Variant};
+use crate::shape::JobShape;
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+
+/// Policy selector (CLI names in parentheses).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum PolicyKind {
+    /// First-Fit with rotations in a static torus (`firstfit`).
+    FirstFit,
+    /// Folding + first-fit in a static torus (`folding`).
+    Folding,
+    /// Reconfiguration with rotations (`reconfig`).
+    Reconfig,
+    /// Folding + reconfiguration — the paper's contribution (`rfold`).
+    RFold,
+    /// Scattered best-effort placement (§5 discussion, `besteffort`).
+    BestEffort,
+    /// SLURM-style Hilbert-curve segment placement (§2 background,
+    /// `slurm`): compact but not torus-shaped — rings contend.
+    Hilbert,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "firstfit" | "first-fit" | "ff" => Some(PolicyKind::FirstFit),
+            "folding" | "fold" => Some(PolicyKind::Folding),
+            "reconfig" | "reconfiguration" => Some(PolicyKind::Reconfig),
+            "rfold" => Some(PolicyKind::RFold),
+            "besteffort" | "best-effort" | "be" => Some(PolicyKind::BestEffort),
+            "hilbert" | "slurm" | "sfc" => Some(PolicyKind::Hilbert),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::FirstFit => "FirstFit",
+            PolicyKind::Folding => "Folding",
+            PolicyKind::Reconfig => "Reconfig",
+            PolicyKind::RFold => "RFold",
+            PolicyKind::BestEffort => "BestEffort",
+            PolicyKind::Hilbert => "Hilbert",
+        }
+    }
+
+    /// The topology family the policy is designed for (paper Table 1 pairs
+    /// FirstFit/Folding with the static torus).
+    pub fn wants_reconfigurable(&self) -> bool {
+        matches!(self, PolicyKind::Reconfig | PolicyKind::RFold)
+    }
+
+    /// Does the policy fold shapes (vs rotations only)?
+    pub fn folds(&self) -> bool {
+        matches!(self, PolicyKind::Folding | PolicyKind::RFold)
+    }
+}
+
+/// A placement policy: produce a committed-ready plan for a job, or decide
+/// a job can never be placed on this topology.
+pub struct Policy {
+    kind: PolicyKind,
+    scorer: Box<dyn PlanScorer>,
+    /// Cache of "can this shape ever be placed on an empty cluster?".
+    feasibility: HashMap<JobShape, bool>,
+    /// Optional restriction of folding dimensionality (ablation A2):
+    /// folds are only applied to jobs whose dimensionality is enabled.
+    pub fold_dims_enabled: [bool; 3],
+    /// Ablation A4: search shared non-zero piece offsets inside cubes
+    /// (an extension over the paper's origin-anchored prototype).
+    pub offset_search: bool,
+}
+
+impl Policy {
+    pub fn new(kind: PolicyKind) -> Policy {
+        Policy {
+            kind,
+            scorer: Box::new(NativeScorer),
+            feasibility: HashMap::new(),
+            fold_dims_enabled: [true; 3],
+            // RFold is the fragmentation-aware contribution: it searches
+            // shared in-cube offsets. The Reconfig baseline mirrors the
+            // paper's origin-anchored prototype (ablation A4 flips this).
+            offset_search: kind == PolicyKind::RFold,
+        }
+    }
+
+    /// Swap in a different scorer (e.g. the PJRT-backed one).
+    pub fn with_scorer(mut self, scorer: Box<dyn PlanScorer>) -> Policy {
+        self.scorer = scorer;
+        self
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// Largest dimension a placed shape may have on this topology.
+    fn max_dim(topo: ClusterTopo) -> usize {
+        match topo {
+            ClusterTopo::Static { ext } => ext.0.iter().copied().max().unwrap(),
+            ClusterTopo::Reconfigurable { grid } => (grid.n * grid.num_cubes()).min(4096),
+        }
+    }
+
+    /// Shape variants this policy considers for a job.
+    fn variants(&self, topo: ClusterTopo, shape: JobShape) -> Vec<Variant> {
+        let max_dim = Self::max_dim(topo);
+        if self.kind.folds() && self.fold_dims_enabled[shape.dimensionality().clamp(1, 3) - 1] {
+            enumerate_variants(shape, max_dim)
+        } else {
+            rotations_only(shape, max_dim)
+        }
+    }
+
+    /// Try to place `shape` for `job` on the cluster *now*. The returned
+    /// plan has not been committed.
+    pub fn plan(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
+        match self.kind {
+            PolicyKind::FirstFit => self.plan_first_fit(cluster, job, shape),
+            PolicyKind::Folding => self.plan_static_ranked(cluster, job, shape),
+            PolicyKind::Reconfig | PolicyKind::RFold => {
+                self.plan_reconfig_ranked(cluster, job, shape)
+            }
+            PolicyKind::BestEffort => best_effort::place_scattered(cluster, job, shape),
+            PolicyKind::Hilbert => hilbert::place_hilbert(cluster, job, shape),
+        }
+    }
+
+    /// Can the job be placed on an *empty* cluster of this topology?
+    /// (FIFO admission drops shape-incompatible jobs, §4.)
+    pub fn feasible_ever(&mut self, topo: ClusterTopo, shape: JobShape) -> bool {
+        if let Some(&f) = self.feasibility.get(&shape) {
+            return f;
+        }
+        let empty = ClusterState::new(topo);
+        let f = self.plan(&empty, u64::MAX, shape).is_some();
+        self.feasibility.insert(shape, f);
+        f
+    }
+
+    fn plan_first_fit(
+        &mut self,
+        cluster: &ClusterState,
+        job: u64,
+        shape: JobShape,
+    ) -> Option<Plan> {
+        // True First-Fit: scan rotations in order, commit the first hit.
+        for v in self.variants(cluster.topo(), shape) {
+            if let Some(p) = static_plan_for_variant(cluster, &v, job) {
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    fn plan_static_ranked(
+        &mut self,
+        cluster: &ClusterState,
+        job: u64,
+        shape: JobShape,
+    ) -> Option<Plan> {
+        let plans: Vec<Plan> = self
+            .variants(cluster.topo(), shape)
+            .iter()
+            .filter_map(|v| static_plan_for_variant(cluster, v, job))
+            .collect();
+        let best = rank_plans(cluster, &plans, self.scorer.as_mut())?;
+        Some(plans.into_iter().nth(best).unwrap())
+    }
+
+    fn plan_reconfig_ranked(
+        &mut self,
+        cluster: &ClusterState,
+        job: u64,
+        shape: JobShape,
+    ) -> Option<Plan> {
+        let plans: Vec<Plan> = self
+            .variants(cluster.topo(), shape)
+            .iter()
+            .filter_map(|v| {
+                if self.offset_search {
+                    reconfig_place::place_with_offsets(cluster, v, job)
+                } else {
+                    reconfig_place::place(cluster, v, job)
+                }
+            })
+            .collect();
+        let best = rank_plans(cluster, &plans, self.scorer.as_mut())?;
+        Some(plans.into_iter().nth(best).unwrap())
+    }
+}
+
+/// Place one variant in a static torus (first-fit anchor), if possible.
+fn static_plan_for_variant(cluster: &ClusterState, v: &Variant, job: u64) -> Option<Plan> {
+    let wrap = static_place::box_wrap(cluster, v.placed);
+    for k in 0..3 {
+        if v.requires_wrap[k] && !wrap[k] {
+            return None;
+        }
+    }
+    let anchor = static_place::find_first_box(cluster, v.placed)?;
+    Some(Plan {
+        job,
+        variant: v.clone(),
+        nodes: static_place::box_nodes(cluster, anchor, v.placed),
+        cubes: vec![],
+        chains: vec![],
+        wrap,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ClusterState, ClusterTopo};
+
+    fn static_c() -> ClusterState {
+        ClusterState::new(ClusterTopo::static_4096())
+    }
+
+    fn reconfig_c(n: usize) -> ClusterState {
+        ClusterState::new(ClusterTopo::reconfigurable_4096(n))
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(PolicyKind::parse("rfold"), Some(PolicyKind::RFold));
+        assert_eq!(PolicyKind::parse("First-Fit"), Some(PolicyKind::FirstFit));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn firstfit_rejects_oversized_dim() {
+        // §3.2's example: 4×4×32 cannot fit a 16³ static torus in any
+        // rotation.
+        let c = static_c();
+        let mut p = Policy::new(PolicyKind::FirstFit);
+        assert!(p.plan(&c, 1, JobShape::new(4, 4, 32)).is_none());
+        assert!(!p.feasible_ever(c.topo(), JobShape::new(4, 4, 32)));
+    }
+
+    #[test]
+    fn folding_places_18x1x1_in_static() {
+        // 18 > 16, FirstFit fails even rotated; Folding reshapes to 2×9.
+        let c = static_c();
+        let mut ff = Policy::new(PolicyKind::FirstFit);
+        assert!(ff.plan(&c, 1, JobShape::new(18, 1, 1)).is_none());
+        let mut fo = Policy::new(PolicyKind::Folding);
+        let plan = fo.plan(&c, 1, JobShape::new(18, 1, 1)).expect("folds");
+        assert_eq!(plan.nodes.len(), 18);
+    }
+
+    #[test]
+    fn reconfig_places_4x4x32() {
+        let c = reconfig_c(4);
+        let mut p = Policy::new(PolicyKind::Reconfig);
+        let plan = p.plan(&c, 1, JobShape::new(4, 4, 32)).expect("8 cubes");
+        assert_eq!(plan.cubes.len(), 8);
+    }
+
+    #[test]
+    fn rfold_beats_reconfig_on_4x8x2() {
+        let c = reconfig_c(4);
+        let mut rf = Policy::new(PolicyKind::RFold);
+        let plan = rf.plan(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+        assert_eq!(plan.cubes.len(), 1, "RFold folds into one cube");
+        let mut rc = Policy::new(PolicyKind::Reconfig);
+        let plan = rc.plan(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+        assert_eq!(plan.cubes.len(), 2, "Reconfig needs two cubes");
+    }
+
+    #[test]
+    fn feasibility_cached() {
+        let c = static_c();
+        let mut p = Policy::new(PolicyKind::FirstFit);
+        let s = JobShape::new(8, 8, 8);
+        assert!(p.feasible_ever(c.topo(), s));
+        assert!(p.feasibility.contains_key(&s));
+    }
+
+    #[test]
+    fn fold_dims_ablation_disables_1d_folds() {
+        let c = static_c();
+        let mut p = Policy::new(PolicyKind::Folding);
+        p.fold_dims_enabled = [false, true, true];
+        // 18×1×1 is a 1D job; with 1D folding disabled it cannot fit.
+        assert!(p.plan(&c, 1, JobShape::new(18, 1, 1)).is_none());
+    }
+
+    #[test]
+    fn firstfit_commits_first_rotation() {
+        let c = static_c();
+        let mut p = Policy::new(PolicyKind::FirstFit);
+        let plan = p.plan(&c, 1, JobShape::new(2, 4, 8)).unwrap();
+        plan.commit(&mut { c }).unwrap();
+    }
+}

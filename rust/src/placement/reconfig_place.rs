@@ -1,0 +1,430 @@
+//! Reconfigurable placement engine (paper §3.2): decompose a placed box
+//! into cube-sized pieces, pick host cubes, and plan the OCS chains that
+//! stitch the pieces into a (virtual) contiguous torus.
+//!
+//! Faithfully modeled constraints:
+//! * pieces interior to a multi-cube dimension must span the full cube
+//!   side `N` (only face XPUs have OCS ports); only the *last* piece of an
+//!   axis may be partial, and it can then only attach backwards — so the
+//!   composed dimension has wrap-around iff `dims[k] % N == 0` (§3.2
+//!   inefficiency #3);
+//! * all pieces share one local offset vector, which keeps every
+//!   cube-to-cube face crossing position-aligned (§3.2 inefficiency #2);
+//! * stranded-core XPUs are naturally unusable for multi-cube jobs because
+//!   chains only touch face positions (§3.2 inefficiency #1).
+
+use super::plan::{OcsChainPlan, Plan};
+use crate::shape::fold::Variant;
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+use crate::topology::P3;
+
+/// Attempt to place `variant` for `job` on a reconfigurable cluster,
+/// pieces anchored at each cube's origin (the paper prototype's
+/// behaviour; see [`place_with_offsets`] for the extension).
+pub fn place(cluster: &ClusterState, variant: &Variant, job: u64) -> Option<Plan> {
+    place_opts(cluster, variant, job, false)
+}
+
+/// Like [`place`] but additionally searches shared non-zero offsets for
+/// axes that fit inside one cube — reuses shifted free regions of
+/// partially occupied cubes (ablation A4 quantifies the gain).
+pub fn place_with_offsets(cluster: &ClusterState, variant: &Variant, job: u64) -> Option<Plan> {
+    place_opts(cluster, variant, job, true)
+}
+
+fn place_opts(
+    cluster: &ClusterState,
+    variant: &Variant,
+    job: u64,
+    offset_search: bool,
+) -> Option<Plan> {
+    let grid = match cluster.topo() {
+        ClusterTopo::Reconfigurable { grid } => grid,
+        _ => panic!("reconfig_place requires a reconfigurable topology"),
+    };
+    let n = grid.n;
+    let dims = variant.placed;
+    if dims.volume() > cluster.free_count() {
+        return None;
+    }
+
+    // Piece grid and per-axis piece sizes.
+    let mut g = [0usize; 3];
+    let mut sizes: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for k in 0..3 {
+        if dims.0[k] == 0 {
+            return None;
+        }
+        g[k] = dims.0[k].div_ceil(n);
+        for u in 0..g[k] {
+            let s = if u + 1 < g[k] {
+                n
+            } else {
+                dims.0[k] - (g[k] - 1) * n
+            };
+            sizes[k].push(s);
+        }
+    }
+    let pieces = g[0] * g[1] * g[2];
+    if pieces > grid.num_cubes() {
+        return None;
+    }
+
+    // Wrap availability: a composed dimension closes iff it is a whole
+    // number of cubes (then the OCS chain is a cycle).
+    let wrap = [
+        dims.0[0] % n == 0,
+        dims.0[1] % n == 0,
+        dims.0[2] % n == 0,
+    ];
+    for k in 0..3 {
+        if variant.requires_wrap[k] && !wrap[k] {
+            return None;
+        }
+    }
+
+    // Offset freedom: only on axes fully inside one cube and not spanning
+    // it (multi-cube axes pin to 0: interior pieces are full-N and the
+    // partial tail must touch its -face to attach backwards).
+    let off_range = |k: usize| -> usize {
+        if offset_search && g[k] == 1 && dims.0[k] < n {
+            n - dims.0[k]
+        } else {
+            0
+        }
+    };
+    // Evaluate every shared offset and keep the tightest packing (the
+    // plan leaving the least free space in its touched cubes) — this is
+    // what lets a shifted free region in a partially used cube be reused.
+    let mut best: Option<(usize, Plan)> = None;
+    for ox in 0..=off_range(0) {
+        for oy in 0..=off_range(1) {
+            for oz in 0..=off_range(2) {
+                let off = P3([ox, oy, oz]);
+                if let Some(plan) = try_offset(cluster, variant, job, off, &g, &sizes) {
+                    let slack: usize = plan
+                        .cubes
+                        .iter()
+                        .map(|&c| cluster.cube_free_count(c))
+                        .sum::<usize>()
+                        - dims.volume();
+                    if best.as_ref().map(|(s, _)| slack < *s).unwrap_or(true) {
+                        let done = slack == 0;
+                        best = Some((slack, plan));
+                        if done {
+                            return best.map(|(_, p)| p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Try to assign cubes for every piece under a fixed shared offset.
+fn try_offset(
+    cluster: &ClusterState,
+    variant: &Variant,
+    job: u64,
+    off: P3,
+    g: &[usize; 3],
+    sizes: &[Vec<usize>; 3],
+) -> Option<Plan> {
+    let grid = match cluster.topo() {
+        ClusterTopo::Reconfigurable { grid } => grid,
+        _ => unreachable!(),
+    };
+    let n = grid.n;
+    let dims = variant.placed;
+    let gp = P3([g[0], g[1], g[2]]);
+    let pieces = gp.volume();
+
+    // Assign a host cube to every piece: iterate pieces grouped by extent
+    // class, choosiest (largest volume) first; within a class use best-fit
+    // (least free XPUs) so partial pieces pack into fragmented cubes and
+    // full pieces take exactly-empty cubes.
+    let mut piece_order: Vec<P3> = gp.iter_box().collect();
+    piece_order.sort_by_key(|p| {
+        std::cmp::Reverse(sizes[0][p.0[0]] * sizes[1][p.0[1]] * sizes[2][p.0[2]])
+    });
+
+    let mut cubes_by_fill: Vec<usize> = (0..grid.num_cubes())
+        .filter(|&c| cluster.cube_free_count(c) > 0)
+        .collect();
+    cubes_by_fill.sort_by_key(|&c| cluster.cube_free_count(c));
+
+    let mut assignment = vec![usize::MAX; pieces];
+    let mut used = vec![false; grid.num_cubes()];
+    for piece in piece_order {
+        let pe = P3([
+            sizes[0][piece.0[0]],
+            sizes[1][piece.0[1]],
+            sizes[2][piece.0[2]],
+        ]);
+        let mut found = None;
+        for &cube in &cubes_by_fill {
+            if used[cube] || cluster.cube_free_count(cube) < pe.volume() {
+                continue;
+            }
+            if cluster.is_cube_box_free(cube, off, pe) {
+                found = Some(cube);
+                break;
+            }
+        }
+        let cube = found?;
+        used[cube] = true;
+        assignment[piece.index_in(gp)] = cube;
+    }
+
+    // Node list in placed-box linear order.
+    let mut nodes = Vec::with_capacity(dims.volume());
+    for p in dims.iter_box() {
+        let piece = P3([p.0[0] / n, p.0[1] / n, p.0[2] / n]);
+        let local = P3([
+            p.0[0] % n + off.0[0],
+            p.0[1] % n + off.0[1],
+            p.0[2] % n + off.0[2],
+        ]);
+        nodes.push(grid.node_id(assignment[piece.index_in(gp)], local));
+    }
+
+    // OCS chains per axis and piece-column.
+    let wrap = [
+        dims.0[0] % n == 0,
+        dims.0[1] % n == 0,
+        dims.0[2] % n == 0,
+    ];
+    let mut chains = Vec::new();
+    for k in 0..3 {
+        let needs_chain = g[k] > 1 || (dims.0[k] == n); // composition or wrap
+        if !needs_chain {
+            continue;
+        }
+        let (e, f) = match k {
+            0 => (1, 2),
+            1 => (0, 2),
+            _ => (0, 1),
+        };
+        // Piece columns over the other two axes.
+        for v in 0..g[e] {
+            for w in 0..g[f] {
+                let mut col = Vec::with_capacity(g[k]);
+                for u in 0..g[k] {
+                    let mut pc = [0usize; 3];
+                    pc[k] = u;
+                    pc[e] = v;
+                    pc[f] = w;
+                    col.push(assignment[P3(pc).index_in(gp)]);
+                }
+                // Face positions covered by this column's cross-section.
+                // PortKey (i, j) uses ascending non-axis order, which is
+                // exactly (e, f).
+                for ie in 0..sizes[e][v] {
+                    for jf in 0..sizes[f][w] {
+                        chains.push(OcsChainPlan {
+                            axis: k,
+                            i: off.0[e] + ie,
+                            j: off.0[f] + jf,
+                            cubes: col.clone(),
+                            closed: wrap[k],
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // All chain entries must be reservable (another job may own a
+    // wrap-around circuit on a face cell we do not occupy... cannot
+    // happen for cells we occupy, but check defensively).
+    if let Some(ocs) = cluster.ocs() {
+        for ch in &chains {
+            if !ocs.can_reserve_path(ch.axis, ch.i, ch.j, &ch.cubes) {
+                return None;
+            }
+        }
+    }
+
+    let mut cubes: Vec<usize> = assignment.clone();
+    cubes.sort_unstable();
+    cubes.dedup();
+
+    Some(Plan {
+        job,
+        variant: variant.clone(),
+        nodes,
+        cubes,
+        chains,
+        wrap,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shape::fold::{enumerate_variants, Variant};
+    use crate::shape::JobShape;
+    use crate::topology::{ClusterState, ClusterTopo};
+
+    fn cluster(n: usize) -> ClusterState {
+        ClusterState::new(ClusterTopo::reconfigurable_4096(n))
+    }
+
+    #[test]
+    fn single_cube_job() {
+        let c = cluster(4);
+        let v = Variant::identity(JobShape::new(4, 4, 4));
+        let p = place(&c, &v, 1).expect("fits one cube");
+        assert_eq!(p.cubes.len(), 1);
+        assert_eq!(p.nodes.len(), 64);
+        assert_eq!(p.wrap, [true, true, true]);
+        // Wrap reservation on every face position of all three axes.
+        assert_eq!(p.chains.len(), 3 * 16);
+        assert!(p.chains.iter().all(|ch| ch.closed && ch.cubes.len() == 1));
+    }
+
+    #[test]
+    fn paper_4x4x32_needs_8_cubes() {
+        // §3.2: "to place the 4×4×32 job ... we only need eight 4×4×4
+        // cubes to be reconfigured side-by-side."
+        let c = cluster(4);
+        let v = Variant::identity(JobShape::new(4, 4, 32));
+        let p = place(&c, &v, 1).expect("8-cube chain");
+        assert_eq!(p.cubes.len(), 8);
+        assert_eq!(p.nodes.len(), 512);
+        assert_eq!(p.wrap, [true, true, true]);
+        // Z chains are cycles over 8 cubes at 16 positions.
+        let z_chains: Vec<_> = p.chains.iter().filter(|c| c.axis == 2).collect();
+        assert_eq!(z_chains.len(), 16);
+        assert!(z_chains.iter().all(|c| c.cubes.len() == 8 && c.closed));
+    }
+
+    #[test]
+    fn partial_tail_leaves_open_chain() {
+        // 4×4×34: one dimension is not a multiple of 4 → 9 cubes, open
+        // chain, no wrap on z (§3.2 "jobs only receive wrap-around links
+        // when their shapes are a multiple of the cube dimension size").
+        let c = cluster(4);
+        let v = Variant::identity(JobShape::new(4, 4, 34));
+        let p = place(&c, &v, 1).expect("9-cube open chain");
+        assert_eq!(p.cubes.len(), 9);
+        assert_eq!(p.wrap, [true, true, false]);
+        let z_chains: Vec<_> = p.chains.iter().filter(|c| c.axis == 2).collect();
+        assert!(z_chains.iter().all(|c| !c.closed && c.cubes.len() == 9));
+    }
+
+    #[test]
+    fn too_large_for_cluster() {
+        let c = cluster(4);
+        // 65 cubes needed > 64.
+        let v = Variant::identity(JobShape::new(4, 4, 260));
+        assert!(place(&c, &v, 1).is_none());
+    }
+
+    #[test]
+    fn sub_cube_job_no_chains() {
+        let c = cluster(4);
+        let v = Variant::identity(JobShape::new(2, 3, 2));
+        let p = place(&c, &v, 1).unwrap();
+        assert_eq!(p.cubes.len(), 1);
+        assert!(p.chains.is_empty());
+        assert_eq!(p.wrap, [false, false, false]);
+    }
+
+    #[test]
+    fn requires_wrap_rejected_without_multiple_of_n() {
+        let c = cluster(8);
+        // HalveDouble fold of 4×8×2 → 4×4×4 requires wrap on the doubled
+        // axis; with N=8 a 4-extent axis cannot wrap → reject.
+        let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
+        let v = vs
+            .iter()
+            .find(|v| v.placed == P3([4, 4, 4]) && v.requires_wrap.iter().any(|&w| w))
+            .unwrap();
+        assert!(place(&c, v, 1).is_none());
+        // With N=4 it works.
+        let c4 = cluster(4);
+        let p = place(&c4, v, 1).expect("4^3 cube gives wrap");
+        assert_eq!(p.cubes.len(), 1);
+    }
+
+    #[test]
+    fn commit_and_pack_two_jobs_one_cube() {
+        let mut c = cluster(4);
+        let v1 = Variant::identity(JobShape::new(2, 4, 4));
+        let p1 = place(&c, &v1, 1).unwrap();
+        p1.commit(&mut c).unwrap();
+        // Second job should pack into the same cube's remaining half —
+        // this requires the offset-search extension (the origin-anchored
+        // paper prototype would open a second cube).
+        let v2 = Variant::identity(JobShape::new(2, 4, 4));
+        let origin_only = place(&c, &v2, 2).unwrap();
+        assert_ne!(origin_only.cubes, p1.cubes, "origin-anchored opens a new cube");
+        let p2 = place_with_offsets(&c, &v2, 2).unwrap();
+        assert_eq!(p2.cubes, p1.cubes, "best-fit must reuse the cube");
+        p2.commit(&mut c).unwrap();
+        c.check_consistency().unwrap();
+        assert_eq!(c.cube_free_count(p1.cubes[0]), 0);
+    }
+
+    #[test]
+    fn offset_search_finds_shifted_slot() {
+        let mut c = cluster(4);
+        // Occupy the x=0 plane of cube 0.
+        let grid = match c.topo() {
+            ClusterTopo::Reconfigurable { grid } => grid,
+            _ => unreachable!(),
+        };
+        let nodes: Vec<usize> = P3([1, 4, 4])
+            .iter_box()
+            .map(|p| grid.node_id(0, p))
+            .collect();
+        c.commit(crate::topology::cluster::Allocation {
+            job: 9,
+            nodes,
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 4, 4]),
+        });
+        // A 3×4×4 job must sit at x-offset 1 in cube 0 (best-fit picks the
+        // fragmented cube first).
+        let v = Variant::identity(JobShape::new(3, 4, 4));
+        let p = place_with_offsets(&c, &v, 1).unwrap();
+        assert_eq!(p.cubes, vec![0]);
+        assert!(p.nodes.iter().all(|&nd| c.is_free(nd)));
+    }
+
+    #[test]
+    fn nodes_cover_box_bijectively() {
+        let c = cluster(4);
+        let v = Variant::identity(JobShape::new(6, 5, 4));
+        let p = place(&c, &v, 1).unwrap();
+        let set: std::collections::HashSet<_> = p.nodes.iter().collect();
+        assert_eq!(set.len(), 120);
+        assert_eq!(p.cubes.len(), 4); // 2×2×1 piece grid
+    }
+
+    #[test]
+    fn all_folded_variants_placeable_on_empty_4cube() {
+        for s in [
+            JobShape::new(18, 1, 1),
+            JobShape::new(1, 6, 4),
+            JobShape::new(4, 8, 2),
+        ] {
+            let c = cluster(4);
+            let vs = enumerate_variants(s, 64);
+            let mut placed_any = false;
+            for v in &vs {
+                if let Some(p) = place(&c, v, 1) {
+                    placed_any = true;
+                    // Verify the homomorphism under the plan's wrap vector.
+                    crate::shape::verify::verify(v, p.wrap)
+                        .unwrap_or_else(|e| panic!("{s} {v:?}: {e}"));
+                }
+            }
+            assert!(placed_any, "{s} must be placeable on an empty cluster");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Plan ranking: the paper's heuristic, "the optimal placement consumes
+//! the fewest reconfigurable cubes and OCS links" (§3.1), refined with a
+//! fragmentation composite that mirrors the AOT plan-scorer artifact
+//! (python/compile/model.py — keep the weights in sync).
+
+use super::plan::Plan;
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+
+/// Ranking weights — MUST match python/compile/model.py.
+pub const W_PARTIAL_CUBES: f64 = 64.0;
+pub const W_STRANDED: f64 = 8.0;
+pub const W_THRU_LOST: f64 = 1.0;
+pub const W_TRANSITIONS: f64 = 0.5;
+pub const W_MAX_LOAD: f64 = 32.0;
+
+/// Raw fragmentation statistics of a hypothetical occupancy (the Rust twin
+/// of `kernels/ref.py::frag_stats` for one plan).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FragStats {
+    pub total_free: f64,
+    pub partial_cubes: f64,
+    pub stranded: f64,
+    pub thru: f64,
+    pub transitions: f64,
+    pub empty_cubes: f64,
+}
+
+impl FragStats {
+    /// The composite used for ranking (lower = better). `max_load` is 0
+    /// for contention-free contiguous placements.
+    pub fn composite(&self, cubes: usize, n: usize, max_load: f64) -> f64 {
+        let max_thru = 3.0 * (n * n * cubes) as f64;
+        W_PARTIAL_CUBES * self.partial_cubes
+            + W_STRANDED * self.stranded
+            + W_THRU_LOST * (max_thru - self.thru)
+            + W_TRANSITIONS * self.transitions
+            + W_MAX_LOAD * max_load
+    }
+}
+
+/// Scorer abstraction: the native implementation below, or the PJRT-backed
+/// one in `runtime::scorer` that executes the AOT artifact.
+pub trait PlanScorer {
+    /// Fragmentation statistics of each occupancy grid. `occ` is
+    /// `[K][C][N][N][N]` flattened, values 0.0/1.0.
+    fn frag_stats(&mut self, occ: &[f32], k: usize, cubes: usize, n: usize) -> Vec<FragStats>;
+}
+
+/// Pure-Rust scorer (bit-identical statistics to the jnp oracle).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct NativeScorer;
+
+impl PlanScorer for NativeScorer {
+    fn frag_stats(&mut self, occ: &[f32], k: usize, cubes: usize, n: usize) -> Vec<FragStats> {
+        let vol = n * n * n;
+        assert_eq!(occ.len(), k * cubes * vol);
+        let mut out = Vec::with_capacity(k);
+        // Single pass per cube cell: every statistic accumulated in one
+        // sweep (perf pass, EXPERIMENTS.md §Perf — ~2× over the naive
+        // multi-loop version at n=4).
+        for plan in 0..k {
+            let base = plan * cubes * vol;
+            let mut st = FragStats::default();
+            for c in 0..cubes {
+                let cb = &occ[base + c * vol..base + (c + 1) * vol];
+                let at = |x: usize, y: usize, z: usize| cb[(x * n + y) * n + z];
+                let mut busy = 0.0f32;
+                for x in 0..n {
+                    for y in 0..n {
+                        for z in 0..n {
+                            let v = at(x, y, z);
+                            busy += v;
+                            if n >= 3
+                                && (1..n - 1).contains(&x)
+                                && (1..n - 1).contains(&y)
+                                && (1..n - 1).contains(&z)
+                            {
+                                st.stranded += (1.0 - v) as f64;
+                            }
+                            if x + 1 < n {
+                                st.transitions += (at(x + 1, y, z) - v).abs() as f64;
+                            }
+                            if y + 1 < n {
+                                st.transitions += (at(x, y + 1, z) - v).abs() as f64;
+                            }
+                            if z + 1 < n {
+                                st.transitions += (at(x, y, z + 1) - v).abs() as f64;
+                            }
+                            if x == 0 {
+                                st.thru += ((1.0 - v) * (1.0 - at(n - 1, y, z))) as f64;
+                            }
+                            if y == 0 {
+                                st.thru += ((1.0 - v) * (1.0 - at(x, n - 1, z))) as f64;
+                            }
+                            if z == 0 {
+                                st.thru += ((1.0 - v) * (1.0 - at(x, y, n - 1))) as f64;
+                            }
+                        }
+                    }
+                }
+                st.total_free += (vol as f32 - busy) as f64;
+                if busy > 0.0 && (busy as usize) < vol {
+                    st.partial_cubes += 1.0;
+                }
+                if busy == 0.0 {
+                    st.empty_cubes += 1.0;
+                }
+            }
+            out.push(st);
+        }
+        out
+    }
+}
+
+/// Build the hypothetical post-commit occupancy grid for each plan.
+/// Layout `[K][C][N][N][N]` (cube-major node ids are already in this
+/// order for reconfigurable clusters).
+pub fn hypothetical_occupancy(cluster: &ClusterState, plans: &[Plan]) -> (Vec<f32>, usize, usize) {
+    let (cubes, n) = match cluster.topo() {
+        ClusterTopo::Reconfigurable { grid } => (grid.num_cubes(), grid.n),
+        ClusterTopo::Static { ext } => (1, ext.0[0]),
+    };
+    let base = cluster.occupancy_f32();
+    let mut occ = Vec::with_capacity(plans.len() * base.len());
+    for p in plans {
+        let mut o = base.clone();
+        for &nd in &p.nodes {
+            o[nd] = 1.0;
+        }
+        occ.extend_from_slice(&o);
+    }
+    (occ, cubes, n)
+}
+
+/// Rank candidate plans with the paper's heuristic and return the index of
+/// the best one: fewest cubes, then fewest OCS entries, then lowest
+/// fragmentation composite.
+pub fn rank_plans(
+    cluster: &ClusterState,
+    plans: &[Plan],
+    scorer: &mut dyn PlanScorer,
+) -> Option<usize> {
+    if plans.is_empty() {
+        return None;
+    }
+    if plans.len() == 1 {
+        return Some(0);
+    }
+    let (occ, cubes, n) = hypothetical_occupancy(cluster, plans);
+    let stats = scorer.frag_stats(&occ, plans.len(), cubes, n);
+    let mut best = 0usize;
+    let mut best_key = (usize::MAX, usize::MAX, f64::INFINITY);
+    for (i, (p, st)) in plans.iter().zip(&stats).enumerate() {
+        let key = (
+            p.cubes.len().max(1),
+            p.ocs_entries(),
+            st.composite(cubes, n, 0.0),
+        );
+        if key.0 < best_key.0
+            || (key.0 == best_key.0 && key.1 < best_key.1)
+            || (key.0 == best_key.0 && key.1 == best_key.1 && key.2 < best_key.2)
+        {
+            best_key = key;
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::reconfig_place;
+    use crate::shape::fold::{enumerate_variants, Variant};
+    use crate::shape::JobShape;
+    use crate::topology::{ClusterState, ClusterTopo};
+
+    #[test]
+    fn native_scorer_all_free() {
+        let mut s = NativeScorer;
+        let occ = vec![0.0f32; 2 * 4 * 64];
+        let st = s.frag_stats(&occ, 2, 4, 4);
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[0].total_free, 256.0);
+        assert_eq!(st[0].partial_cubes, 0.0);
+        assert_eq!(st[0].stranded, 4.0 * 8.0);
+        assert_eq!(st[0].thru, 4.0 * 48.0);
+        assert_eq!(st[0].transitions, 0.0);
+        assert_eq!(st[0].empty_cubes, 4.0);
+    }
+
+    #[test]
+    fn native_scorer_corner_cell() {
+        let mut s = NativeScorer;
+        let mut occ = vec![0.0f32; 64];
+        occ[0] = 1.0;
+        let st = s.frag_stats(&occ, 1, 1, 4);
+        assert_eq!(st[0].total_free, 63.0);
+        assert_eq!(st[0].partial_cubes, 1.0);
+        assert_eq!(st[0].stranded, 8.0);
+        assert_eq!(st[0].thru, 48.0 - 3.0);
+        assert_eq!(st[0].transitions, 3.0);
+    }
+
+    #[test]
+    fn rank_prefers_fewer_cubes() {
+        // 4×8×2 on an empty 4³-cube cluster: the HalveDouble fold fits one
+        // cube, identity needs two — RFold must pick the fold.
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
+        let plans: Vec<_> = vs
+            .iter()
+            .filter_map(|v| reconfig_place::place(&c, v, 1))
+            .collect();
+        assert!(plans.len() >= 2);
+        let best = rank_plans(&c, &plans, &mut NativeScorer).unwrap();
+        assert_eq!(plans[best].cubes.len(), 1, "fold into a single cube");
+    }
+
+    #[test]
+    fn rank_single_plan_trivial() {
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let v = Variant::identity(JobShape::new(2, 2, 2));
+        let p = reconfig_place::place(&c, &v, 1).unwrap();
+        assert_eq!(rank_plans(&c, &[p], &mut NativeScorer), Some(0));
+        assert_eq!(rank_plans(&c, &[], &mut NativeScorer), None);
+    }
+
+    #[test]
+    fn composite_matches_weights() {
+        let st = FragStats {
+            total_free: 0.0,
+            partial_cubes: 2.0,
+            stranded: 1.0,
+            thru: 48.0,
+            transitions: 4.0,
+            empty_cubes: 0.0,
+        };
+        let comp = st.composite(1, 4, 0.0);
+        assert_eq!(comp, 64.0 * 2.0 + 8.0 + (48.0 - 48.0) + 0.5 * 4.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Contiguous box search in a statically wired torus (FirstFit's engine,
+//! and the Folding policy's per-variant engine).
+//!
+//! Boxes may wrap around any dimension (a static torus has hard wrap
+//! cables on every full dimension). Fullness checks use a 3D
+//! summed-occupancy table: O(1) per (anchor, sub-box) after an O(V) build,
+//! so a full FirstFit scan of a 16³ torus costs ~4096 × ≤8 lookups.
+
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+use crate::topology::P3;
+
+/// 3D inclusive prefix sums over the busy bitmap of a static torus.
+pub struct OccupancySums {
+    ext: P3,
+    /// `(ext+1)³` table; `s[x][y][z]` = busy count in `[0,x)×[0,y)×[0,z)`.
+    s: Vec<u32>,
+}
+
+impl OccupancySums {
+    pub fn build(cluster: &ClusterState) -> OccupancySums {
+        let ext = match cluster.topo() {
+            ClusterTopo::Static { ext } => ext,
+            _ => panic!("OccupancySums requires a static topology"),
+        };
+        let (nx, ny, nz) = (ext.0[0], ext.0[1], ext.0[2]);
+        let (sx, sy, sz) = (nx + 1, ny + 1, nz + 1);
+        let idx = |x: usize, y: usize, z: usize| (x * sy + y) * sz + z;
+        let mut s = vec![0u32; sx * sy * sz];
+        for x in 0..nx {
+            for y in 0..ny {
+                for z in 0..nz {
+                    let busy = !cluster.is_free(P3([x, y, z]).index_in(ext));
+                    s[idx(x + 1, y + 1, z + 1)] = busy as u32
+                        + s[idx(x, y + 1, z + 1)]
+                        + s[idx(x + 1, y, z + 1)]
+                        + s[idx(x + 1, y + 1, z)]
+                        - s[idx(x, y, z + 1)]
+                        - s[idx(x, y + 1, z)]
+                        - s[idx(x + 1, y, z)]
+                        + s[idx(x, y, z)];
+                }
+            }
+        }
+        OccupancySums { ext, s }
+    }
+
+    #[inline]
+    fn prefix(&self, x: usize, y: usize, z: usize) -> u32 {
+        let sy = self.ext.0[1] + 1;
+        let sz = self.ext.0[2] + 1;
+        self.s[(x * sy + y) * sz + z]
+    }
+
+    /// Busy count in the half-open box `[x0,x1)×[y0,y1)×[z0,z1)` (no wrap).
+    pub fn busy_in(&self, x0: usize, x1: usize, y0: usize, y1: usize, z0: usize, z1: usize) -> u32 {
+        self.prefix(x1, y1, z1)
+            .wrapping_sub(self.prefix(x0, y1, z1))
+            .wrapping_sub(self.prefix(x1, y0, z1))
+            .wrapping_sub(self.prefix(x1, y1, z0))
+            .wrapping_add(self.prefix(x0, y0, z1))
+            .wrapping_add(self.prefix(x0, y1, z0))
+            .wrapping_add(self.prefix(x1, y0, z0))
+            .wrapping_sub(self.prefix(x0, y0, z0))
+    }
+
+    /// Is the (possibly wrapping) box anchored at `anchor` of extent `e`
+    /// entirely free? Each wrapped axis splits into ≤ 2 intervals.
+    pub fn box_free(&self, anchor: P3, e: P3) -> bool {
+        let mut ivs: [[(usize, usize); 2]; 3] = [[(0, 0); 2]; 3];
+        let mut niv = [0usize; 3];
+        for a in 0..3 {
+            let n = self.ext.0[a];
+            let start = anchor.0[a];
+            let len = e.0[a];
+            debug_assert!(len <= n);
+            if start + len <= n {
+                ivs[a][0] = (start, start + len);
+                niv[a] = 1;
+            } else {
+                ivs[a][0] = (start, n);
+                ivs[a][1] = (0, start + len - n);
+                niv[a] = 2;
+            }
+        }
+        for ix in 0..niv[0] {
+            for iy in 0..niv[1] {
+                for iz in 0..niv[2] {
+                    let (x0, x1) = ivs[0][ix];
+                    let (y0, y1) = ivs[1][iy];
+                    let (z0, z1) = ivs[2][iz];
+                    if self.busy_in(x0, x1, y0, y1, z0, z1) != 0 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Find the first (lexicographic anchor order) free box of extent `e` in
+/// the static torus, or `None`. Extents exceeding the torus are rejected.
+pub fn find_first_box(cluster: &ClusterState, e: P3) -> Option<P3> {
+    let ext = match cluster.topo() {
+        ClusterTopo::Static { ext } => ext,
+        _ => panic!("find_first_box requires a static topology"),
+    };
+    if (0..3).any(|a| e.0[a] > ext.0[a] || e.0[a] == 0) {
+        return None;
+    }
+    if e.volume() > cluster.free_count() {
+        return None;
+    }
+    let sums = OccupancySums::build(cluster);
+    // Anchors only need to range over positions where wrapping matters:
+    // if e[a] == ext[a] the anchor on that axis is irrelevant — pin to 0.
+    let ax = if e.0[0] == ext.0[0] { 1 } else { ext.0[0] };
+    let ay = if e.0[1] == ext.0[1] { 1 } else { ext.0[1] };
+    let az = if e.0[2] == ext.0[2] { 1 } else { ext.0[2] };
+    for x in 0..ax {
+        for y in 0..ay {
+            for z in 0..az {
+                let anchor = P3([x, y, z]);
+                if sums.box_free(anchor, e) {
+                    return Some(anchor);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Node ids covered by the (possibly wrapping) box, in placed-box linear
+/// order (matching `Plan::nodes`).
+pub fn box_nodes(cluster: &ClusterState, anchor: P3, e: P3) -> Vec<usize> {
+    let ext = match cluster.topo() {
+        ClusterTopo::Static { ext } => ext,
+        _ => panic!("box_nodes requires a static topology"),
+    };
+    e.iter_box()
+        .map(|d| {
+            let p = P3([
+                (anchor.0[0] + d.0[0]) % ext.0[0],
+                (anchor.0[1] + d.0[1]) % ext.0[1],
+                (anchor.0[2] + d.0[2]) % ext.0[2],
+            ]);
+            p.index_in(ext)
+        })
+        .collect()
+}
+
+/// Wrap-around availability of a box in a static torus: an axis has a
+/// closed ring iff the box spans the full dimension.
+pub fn box_wrap(cluster: &ClusterState, e: P3) -> [bool; 3] {
+    let ext = match cluster.topo() {
+        ClusterTopo::Static { ext } => ext,
+        _ => panic!("box_wrap requires a static topology"),
+    };
+    [
+        e.0[0] == ext.0[0],
+        e.0[1] == ext.0[1],
+        e.0[2] == ext.0[2],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shape::fold::Variant;
+    use crate::shape::JobShape;
+    use crate::topology::cluster::Allocation;
+    use crate::topology::ClusterTopo;
+
+    fn static_cluster() -> ClusterState {
+        ClusterState::new(ClusterTopo::static_4096())
+    }
+
+    fn occupy(c: &mut ClusterState, job: u64, nodes: Vec<usize>) {
+        c.commit(Allocation {
+            job,
+            nodes,
+            cubes: vec![],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 1]),
+        });
+    }
+
+    #[test]
+    fn empty_cluster_places_at_origin() {
+        let c = static_cluster();
+        assert_eq!(find_first_box(&c, P3([4, 4, 4])), Some(P3([0, 0, 0])));
+        assert_eq!(find_first_box(&c, P3([16, 16, 16])), Some(P3([0, 0, 0])));
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let c = static_cluster();
+        assert_eq!(find_first_box(&c, P3([17, 1, 1])), None);
+        assert_eq!(find_first_box(&c, P3([0, 4, 4])), None);
+    }
+
+    #[test]
+    fn skips_occupied_anchor() {
+        let mut c = static_cluster();
+        occupy(&mut c, 1, vec![P3([0, 0, 0]).index_in(P3([16, 16, 16]))]);
+        let found = find_first_box(&c, P3([2, 2, 2])).unwrap();
+        assert_ne!(found, P3([0, 0, 0]));
+        let sums = OccupancySums::build(&c);
+        assert!(sums.box_free(found, P3([2, 2, 2])));
+    }
+
+    #[test]
+    fn wrapping_box_found() {
+        let mut c = static_cluster();
+        // Occupy the center slab x ∈ [1, 15): only a wrapped x-box fits.
+        let ext = P3([16, 16, 16]);
+        let mut nodes = Vec::new();
+        for x in 1..15 {
+            for y in 0..16 {
+                for z in 0..16 {
+                    nodes.push(P3([x, y, z]).index_in(ext));
+                }
+            }
+        }
+        occupy(&mut c, 1, nodes);
+        let found = find_first_box(&c, P3([2, 4, 4])).expect("wrapped box must fit");
+        assert_eq!(found.0[0], 15, "must anchor at x=15 wrapping to x=0");
+        let nodes = box_nodes(&c, found, P3([2, 4, 4]));
+        assert!(nodes.iter().all(|&n| c.is_free(n)));
+        assert_eq!(nodes.len(), 32);
+    }
+
+    #[test]
+    fn box_nodes_distinct_and_free_order() {
+        let c = static_cluster();
+        let nodes = box_nodes(&c, P3([14, 14, 14]), P3([4, 4, 4]));
+        let set: std::collections::HashSet<_> = nodes.iter().collect();
+        assert_eq!(set.len(), 64);
+    }
+
+    #[test]
+    fn wrap_flags() {
+        let c = static_cluster();
+        assert_eq!(box_wrap(&c, P3([16, 4, 2])), [true, false, false]);
+    }
+
+    #[test]
+    fn prefix_sums_match_bruteforce() {
+        let mut c = static_cluster();
+        let ext = P3([16, 16, 16]);
+        // Deterministic scatter.
+        let mut rng = crate::util::Pcg64::seeded(77);
+        let nodes: Vec<usize> = (0..600).map(|_| rng.below(4096)).collect();
+        let mut distinct: Vec<usize> = nodes.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        occupy(&mut c, 1, distinct);
+        let sums = OccupancySums::build(&c);
+        for _ in 0..200 {
+            let anchor = P3([rng.below(16), rng.below(16), rng.below(16)]);
+            let e = P3([rng.range(1, 5), rng.range(1, 5), rng.range(1, 5)]);
+            let brute = e.iter_box().all(|d| {
+                let p = P3([
+                    (anchor.0[0] + d.0[0]) % 16,
+                    (anchor.0[1] + d.0[1]) % 16,
+                    (anchor.0[2] + d.0[2]) % 16,
+                ]);
+                c.is_free(p.index_in(ext))
+            });
+            assert_eq!(sums.box_free(anchor, e), brute, "anchor={anchor} e={e}");
+        }
+    }
+
+    #[test]
+    fn full_box_placement_via_variant() {
+        // Place an identity 16×2×2 variant: wrap on x only.
+        let c = static_cluster();
+        let v = Variant::identity(JobShape::new(16, 2, 2));
+        let anchor = find_first_box(&c, v.placed).unwrap();
+        let wrap = box_wrap(&c, v.placed);
+        assert_eq!(wrap, [true, false, false]);
+        assert_eq!(box_nodes(&c, anchor, v.placed).len(), 64);
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact discovery + compilation: manifest.json → compiled PJRT
+//! executables, one per model variant (the scorer is AOT-lowered for each
+//! cube geometry; see `aot.py::SCORER_VARIANTS`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub plan_batch: usize,
+    pub comm_batch: usize,
+    pub torus: [usize; 3],
+    pub score_cols: usize,
+    pub comm_features: usize,
+    /// stem → (file, kind, cubes, cube_side); cubes/side zero for
+    /// non-scorer modules.
+    pub modules: HashMap<String, (String, String, usize, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let get = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let torus_arr = j
+            .get("torus")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing torus"))?;
+        if torus_arr.len() != 3 {
+            bail!("torus must have 3 dims");
+        }
+        let mut torus = [0usize; 3];
+        for (i, t) in torus_arr.iter().enumerate() {
+            torus[i] = t.as_usize().ok_or_else(|| anyhow!("bad torus dim"))?;
+        }
+        let mut modules = HashMap::new();
+        let mods = j
+            .get("modules")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing modules"))?;
+        for (stem, m) in mods {
+            let file = m
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("module {stem} missing file"))?
+                .to_string();
+            let kind = m
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let cubes = m.get("cubes").and_then(Json::as_usize).unwrap_or(0);
+            let side = m.get("cube_side").and_then(Json::as_usize).unwrap_or(0);
+            modules.insert(stem.clone(), (file, kind, cubes, side));
+        }
+        Ok(Manifest {
+            plan_batch: get("plan_batch")?,
+            comm_batch: get("comm_batch")?,
+            torus,
+            score_cols: get("score_cols")?,
+            comm_features: get("comm_features")?,
+            modules,
+        })
+    }
+}
+
+/// Compiled artifacts, ready to execute.
+pub struct Artifacts {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// (cubes, cube_side) → compiled plan-scorer executable.
+    scorers: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    comm_model: Option<xla::PjRtLoadedExecutable>,
+}
+
+impl Artifacts {
+    /// Default artifact directory: `$RFOLD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("RFOLD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every module listed in the manifest.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut scorers = HashMap::new();
+        let mut comm_model = None;
+        for (stem, (file, kind, cubes, side)) in &manifest.modules {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {stem}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {stem}: {e:?}"))?;
+            match kind.as_str() {
+                "plan_scorer" => {
+                    scorers.insert((*cubes, *side), exe);
+                }
+                "comm_model" => comm_model = Some(exe),
+                _ => {}
+            }
+        }
+        Ok(Artifacts {
+            manifest,
+            client,
+            scorers,
+            comm_model,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_scorer(&self, cubes: usize, side: usize) -> bool {
+        self.scorers.contains_key(&(cubes, side))
+    }
+
+    pub fn scorer_exe(&self, cubes: usize, side: usize) -> Option<&xla::PjRtLoadedExecutable> {
+        self.scorers.get(&(cubes, side))
+    }
+
+    pub fn comm_exe(&self) -> Option<&xla::PjRtLoadedExecutable> {
+        self.comm_model.as_ref()
+    }
+}

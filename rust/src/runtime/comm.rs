@@ -1,0 +1,108 @@
+//! The PJRT-backed ring-AllReduce time model (`comm_model.hlo.txt`): the
+//! same five-feature contract as `kernels/ref.py::comm_time`.
+//!
+//! The simulator's analytic fast path (`sim::contention`) covers the
+//! common case; this executable exists so the L1 kernel's numerics can be
+//! validated end-to-end from Rust and used by the serving loop in
+//! `coordinator` when estimating step times for incoming jobs.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::client::Artifacts;
+
+/// Feature row for one ring (see `kernels/ref.py::comm_time`).
+#[derive(Clone, Copy, Debug)]
+pub struct CommFeatures {
+    pub ring_len: f64,
+    pub bytes: f64,
+    pub bandwidth: f64,
+    pub has_ring: bool,
+    pub contention: f64,
+}
+
+/// PJRT-backed AllReduce step-time estimator.
+pub struct CommModel {
+    arts: Rc<Artifacts>,
+}
+
+impl CommModel {
+    pub fn new(arts: Rc<Artifacts>) -> CommModel {
+        CommModel { arts }
+    }
+
+    /// Estimated seconds per AllReduce for each feature row.
+    pub fn estimate(&self, feats: &[CommFeatures]) -> Result<Vec<f64>> {
+        let m = &self.arts.manifest;
+        let exe = self
+            .arts
+            .comm_exe()
+            .ok_or_else(|| anyhow!("comm_model artifact missing"))?;
+        let batch = m.comm_batch;
+        let nf = m.comm_features;
+        let mut out = Vec::with_capacity(feats.len());
+        let mut i = 0;
+        while i < feats.len() {
+            let kk = (feats.len() - i).min(batch);
+            let mut rows = vec![0.0f32; batch * nf];
+            for (r, f) in feats[i..i + kk].iter().enumerate() {
+                rows[r * nf] = f.ring_len as f32;
+                rows[r * nf + 1] = f.bytes as f32;
+                rows[r * nf + 2] = f.bandwidth as f32;
+                rows[r * nf + 3] = if f.has_ring { 1.0 } else { 0.0 };
+                rows[r * nf + 4] = f.contention as f32;
+            }
+            let lit = xla::Literal::vec1(&rows).reshape(&[batch as i64, nf as i64])?;
+            let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let t = result.to_tuple1()?;
+            let vals = t.to_vec::<f32>()?;
+            anyhow::ensure!(vals.len() == batch, "comm model output mismatch");
+            out.extend(vals[..kk].iter().map(|&v| v as f64));
+            i += kk;
+        }
+        Ok(out)
+    }
+
+    /// The analytic twin (must match the kernel bit-for-bit-ish; tested in
+    /// the integration suite).
+    pub fn analytic(f: &CommFeatures) -> f64 {
+        if f.ring_len <= 1.5 {
+            return 0.0;
+        }
+        let n = f.ring_len.max(2.0);
+        let base = 2.0 * (n - 1.0) / n * f.bytes / f.bandwidth.max(1e-9);
+        let line = if f.has_ring { 1.0 } else { 2.0 };
+        base * line * f.contention.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_ring_vs_line() {
+        let ring = CommFeatures {
+            ring_len: 8.0,
+            bytes: 1e9,
+            bandwidth: 25e9,
+            has_ring: true,
+            contention: 1.0,
+        };
+        let line = CommFeatures { has_ring: false, ..ring };
+        assert!((CommModel::analytic(&line) / CommModel::analytic(&ring) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_degenerate() {
+        let f = CommFeatures {
+            ring_len: 1.0,
+            bytes: 1e9,
+            bandwidth: 25e9,
+            has_ring: true,
+            contention: 1.0,
+        };
+        assert_eq!(CommModel::analytic(&f), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the placement hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module gives the
+//! self-contained Rust binary the compiled plan-scorer and comm-model
+//! graphs through the `xla` crate's PJRT CPU client.
+
+pub mod client;
+pub mod comm;
+pub mod scorer;
+
+pub use client::{Artifacts, Manifest};
+pub use scorer::XlaScorer;

@@ -1,0 +1,114 @@
+//! The PJRT-backed plan scorer: executes the AOT `plan_scorer_*` artifact
+//! (L1 Pallas fragmentation kernel + L2 composition) on candidate batches.
+//!
+//! Implements the same [`PlanScorer`] trait as the native Rust scorer, so
+//! policies can switch between them (`--scorer xla|native`); the
+//! integration suite asserts they agree on random occupancy grids.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::client::Artifacts;
+use crate::placement::score::{FragStats, PlanScorer};
+
+/// PJRT-backed scorer. Holds shared artifacts (one PJRT client process-
+/// wide); falls back to panicking on missing variants — callers check
+/// `Artifacts::has_scorer` first.
+pub struct XlaScorer {
+    arts: Rc<Artifacts>,
+}
+
+impl XlaScorer {
+    pub fn new(arts: Rc<Artifacts>) -> XlaScorer {
+        XlaScorer { arts }
+    }
+
+    /// Execute the scorer artifact for `k` plans (k ≤ plan_batch after
+    /// internal padding) and parse rows into [`FragStats`].
+    fn run_batch(
+        &self,
+        occ: &[f32],
+        k: usize,
+        cubes: usize,
+        n: usize,
+    ) -> Result<Vec<FragStats>> {
+        let m = &self.arts.manifest;
+        let batch = m.plan_batch;
+        assert!(k <= batch);
+        let vol = cubes * n * n * n;
+        let exe = self
+            .arts
+            .scorer_exe(cubes, n)
+            .ok_or_else(|| anyhow!("no scorer artifact for {cubes}x{n}^3"))?;
+
+        // Pad the occupancy to the fixed batch; loads/mask stay zero (the
+        // contention term is handled natively by the simulator for
+        // contiguous placements).
+        let mut occ_pad = vec![0.0f32; batch * vol];
+        occ_pad[..k * vol].copy_from_slice(&occ[..k * vol]);
+        let torus_vol: usize = m.torus.iter().product();
+        let loads = vec![0.0f32; 3 * torus_vol];
+        let mask = vec![0.0f32; batch * torus_vol];
+
+        let occ_lit = xla::Literal::vec1(&occ_pad).reshape(&[
+            batch as i64,
+            cubes as i64,
+            n as i64,
+            n as i64,
+            n as i64,
+        ])?;
+        let loads_lit = xla::Literal::vec1(&loads).reshape(&[
+            3,
+            m.torus[0] as i64,
+            m.torus[1] as i64,
+            m.torus[2] as i64,
+        ])?;
+        let mask_lit = xla::Literal::vec1(&mask).reshape(&[
+            batch as i64,
+            m.torus[0] as i64,
+            m.torus[1] as i64,
+            m.torus[2] as i64,
+        ])?;
+
+        let result = exe.execute::<xla::Literal>(&[occ_lit, loads_lit, mask_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let rows = out.to_vec::<f32>()?;
+        let cols = m.score_cols;
+        anyhow::ensure!(rows.len() == batch * cols, "scorer output shape mismatch");
+        Ok((0..k)
+            .map(|i| {
+                let r = &rows[i * cols..(i + 1) * cols];
+                FragStats {
+                    total_free: r[0] as f64,
+                    partial_cubes: r[1] as f64,
+                    stranded: r[2] as f64,
+                    thru: r[3] as f64,
+                    transitions: r[4] as f64,
+                    empty_cubes: r[5] as f64,
+                }
+            })
+            .collect())
+    }
+}
+
+impl PlanScorer for XlaScorer {
+    fn frag_stats(&mut self, occ: &[f32], k: usize, cubes: usize, n: usize) -> Vec<FragStats> {
+        let batch = self.arts.manifest.plan_batch;
+        let vol = cubes * n * n * n;
+        let mut out = Vec::with_capacity(k);
+        // Chunk to the artifact's fixed batch width.
+        let mut i = 0;
+        while i < k {
+            let kk = (k - i).min(batch);
+            let chunk = &occ[i * vol..(i + kk) * vol];
+            out.extend(
+                self.run_batch(chunk, kk, cubes, n)
+                    .expect("scorer execution failed"),
+            );
+            i += kk;
+        }
+        out
+    }
+}

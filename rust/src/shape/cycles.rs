@@ -1,0 +1,188 @@
+//! Constructive cycle/path embeddings used by folding (§3.3).
+//!
+//! Folding maps a communication ring of length `L` onto a grid region so
+//! the ring becomes a *cycle of adjacent nodes* — this is what lets a
+//! non-multiple-of-N dimension close its ring without wrap-around links.
+//!
+//! * [`serpentine_cycle`]: Hamiltonian cycle of the `p×q` grid (exists iff
+//!   `p*q` is even and `p, q ≥ 2`) — the "Y′ (circular)" construction in
+//!   the paper's Figure 2.
+//! * [`boustrophedon_path`]: Hamiltonian path of the `p×q` grid (always
+//!   exists) — used to flatten a plane into a line for 3D refactoring and
+//!   as the open-ring fallback.
+
+/// Hamiltonian cycle of the `p×q` grid graph, returned in cycle order.
+/// Returns `None` when no such cycle exists (`p*q` odd, or a dimension
+/// < 2). Consecutive entries (and last→first) differ by exactly one unit
+/// step; together they visit every cell exactly once.
+pub fn serpentine_cycle(p: usize, q: usize) -> Option<Vec<(usize, usize)>> {
+    if p < 2 || q < 2 || (p * q) % 2 != 0 {
+        return None;
+    }
+    // Ensure the serpentine direction has an even number of rows; the
+    // construction snakes through columns 1..q and returns via column 0.
+    if p % 2 != 0 {
+        // q must be even; build transposed and swap back.
+        return serpentine_cycle(q, p)
+            .map(|cy| cy.into_iter().map(|(r, c)| (c, r)).collect());
+    }
+    let mut cy = Vec::with_capacity(p * q);
+    for r in 0..p {
+        if r % 2 == 0 {
+            for c in 1..q {
+                cy.push((r, c));
+            }
+        } else {
+            for c in (1..q).rev() {
+                cy.push((r, c));
+            }
+        }
+    }
+    // p even ⇒ the snake ends at (p-1, 1); descend column 0 back to (0,0).
+    for r in (0..p).rev() {
+        cy.push((r, 0));
+    }
+    debug_assert_eq!(cy.len(), p * q);
+    Some(cy)
+}
+
+/// Hamiltonian path of the `p×q` grid in boustrophedon order: row 0 left to
+/// right, row 1 right to left, ... Consecutive entries are adjacent.
+pub fn boustrophedon_path(p: usize, q: usize) -> Vec<(usize, usize)> {
+    let mut path = Vec::with_capacity(p * q);
+    for r in 0..p {
+        if r % 2 == 0 {
+            for c in 0..q {
+                path.push((r, c));
+            }
+        } else {
+            for c in (0..q).rev() {
+                path.push((r, c));
+            }
+        }
+    }
+    path
+}
+
+/// Hamiltonian cycle of the `p×q×r` box: the 2D cycle over `(p, q*r)`
+/// composed with a boustrophedon flattening of the `(q, r)` plane. Exists
+/// iff the box has an even volume and supports the 2D construction.
+pub fn box_cycle(p: usize, q: usize, r: usize) -> Option<Vec<(usize, usize, usize)>> {
+    if p < 2 || q < 2 || r < 1 {
+        return None;
+    }
+    if r == 1 {
+        return serpentine_cycle(p, q).map(|cy| {
+            cy.into_iter().map(|(a, b)| (a, b, 0)).collect()
+        });
+    }
+    let plane = boustrophedon_path(q, r);
+    let cy2 = serpentine_cycle(p, q * r)?;
+    Some(
+        cy2.into_iter()
+            .map(|(a, t)| {
+                let (b, c) = plane[t];
+                (a, b, c)
+            })
+            .collect(),
+    )
+}
+
+/// Check that a sequence of 2D points forms a closed cycle of unit steps
+/// visiting distinct cells (test helper; the 3D variant lives in
+/// `shape::verify`).
+pub fn is_grid_cycle(cy: &[(usize, usize)]) -> bool {
+    if cy.len() < 4 {
+        return false;
+    }
+    let mut seen = std::collections::HashSet::new();
+    for w in 0..cy.len() {
+        let a = cy[w];
+        let b = cy[(w + 1) % cy.len()];
+        let d = a.0.abs_diff(b.0) + a.1.abs_diff(b.1);
+        if d != 1 || !seen.insert(a) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_2xm() {
+        for m in 2..20 {
+            let cy = serpentine_cycle(2, m).expect("2xm always has a cycle");
+            assert_eq!(cy.len(), 2 * m);
+            assert!(is_grid_cycle(&cy), "m={m} cy={cy:?}");
+        }
+    }
+
+    #[test]
+    fn cycle_even_odd_combinations() {
+        for p in 2..8 {
+            for q in 2..8 {
+                let cy = serpentine_cycle(p, q);
+                if (p * q) % 2 == 0 {
+                    let cy = cy.expect("even grid must have a cycle");
+                    assert_eq!(cy.len(), p * q);
+                    assert!(is_grid_cycle(&cy), "p={p} q={q}");
+                } else {
+                    assert!(cy.is_none(), "odd grid {p}x{q} cannot have a cycle");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_cycle_in_degenerate_grids() {
+        assert!(serpentine_cycle(1, 8).is_none());
+        assert!(serpentine_cycle(8, 1).is_none());
+        assert!(serpentine_cycle(3, 3).is_none());
+    }
+
+    #[test]
+    fn path_visits_all_adjacent() {
+        for (p, q) in [(1, 5), (3, 4), (4, 3), (2, 2), (5, 1)] {
+            let path = boustrophedon_path(p, q);
+            assert_eq!(path.len(), p * q);
+            let distinct: std::collections::HashSet<_> = path.iter().collect();
+            assert_eq!(distinct.len(), p * q);
+            for w in path.windows(2) {
+                let d = w[0].0.abs_diff(w[1].0) + w[0].1.abs_diff(w[1].1);
+                assert_eq!(d, 1, "{p}x{q}: {:?}->{:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn box_cycle_3d() {
+        for (p, q, r) in [(2, 2, 2), (2, 3, 2), (4, 2, 3), (2, 2, 3)] {
+            let cy = box_cycle(p, q, r).expect("even box must cycle");
+            assert_eq!(cy.len(), p * q * r);
+            let distinct: std::collections::HashSet<_> = cy.iter().collect();
+            assert_eq!(distinct.len(), p * q * r, "{p}x{q}x{r}");
+            for w in 0..cy.len() {
+                let a = cy[w];
+                let b = cy[(w + 1) % cy.len()];
+                let d = a.0.abs_diff(b.0) + a.1.abs_diff(b.1) + a.2.abs_diff(b.2);
+                assert_eq!(d, 1, "{p}x{q}x{r} step {w}: {a:?}->{b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn box_cycle_odd_volume_none() {
+        assert!(box_cycle(3, 3, 3).is_none());
+    }
+
+    #[test]
+    fn paper_example_18_as_2x9() {
+        // The green 18×1×1 job in Figure 2 folds to a 2×9 cycle.
+        let cy = serpentine_cycle(2, 9).unwrap();
+        assert_eq!(cy.len(), 18);
+        assert!(is_grid_cycle(&cy));
+    }
+}

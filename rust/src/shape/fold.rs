@@ -1,0 +1,465 @@
+//! Folding: homomorphic shape-variant generation (paper §3.3).
+//!
+//! A variant describes how a job's *logical* shape maps onto a *placed*
+//! box: which box to allocate, how each logical coordinate maps into it,
+//! and how each parallelism dimension's ring becomes a cycle of adjacent
+//! placed nodes. Constructions are explicit — `shape::verify` checks the
+//! homomorphism property instead of assuming it.
+
+use super::cycles::{box_cycle, serpentine_cycle};
+use super::job_shape::JobShape;
+use crate::topology::P3;
+
+/// How a variant was derived from the original shape.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum FoldKind {
+    /// Axis permutation only (rotation is default behaviour, §3.3).
+    Identity,
+    /// Logical axis `axis` re-factored into `p` (staying on `axis`) × `q`
+    /// (moving to `q_axis`) via a serpentine Hamiltonian cycle — 1D→2D and
+    /// 2D→3D folding.
+    Refactor2 {
+        axis: usize,
+        q_axis: usize,
+        p: usize,
+        q: usize,
+    },
+    /// A 1D job's single axis re-factored onto all three placed axes via a
+    /// 3D box Hamiltonian cycle (1D→3D folding).
+    Refactor3 { p: usize, q: usize, r: usize },
+    /// 3D→3D folding (Figure 2 right): `halved` axis loses half its length
+    /// to a doubling of the `doubled` axis (which must have size 2; the
+    /// 4×8×3 counterexample in the paper is excluded by construction).
+    /// The outer layer-pair ring closes over a wrap-around link on the
+    /// doubled axis, so this variant *requires* wrap there.
+    HalveDouble { halved: usize, doubled: usize },
+}
+
+/// A placeable shape variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// The job's original logical shape.
+    pub orig: JobShape,
+    /// Box extents to allocate, *after* folding and rotation.
+    pub placed: P3,
+    pub kind: FoldKind,
+    /// Axis permutation applied after folding: placed coordinate `k` takes
+    /// folded coordinate `perm[k]`.
+    pub perm: [usize; 3],
+    /// Axes (of the placed box) on which the ring mappings only close if a
+    /// wrap-around link exists. Placement must either provide wrap there
+    /// or reject the variant.
+    pub requires_wrap: [bool; 3],
+}
+
+/// One communication ring: the original parallelism dimension it belongs
+/// to and its node sequence in placed-box coordinates (cycle order).
+#[derive(Clone, Debug)]
+pub struct Ring {
+    pub dim: usize,
+    pub nodes: Vec<P3>,
+}
+
+impl Variant {
+    /// The trivial variant (no fold, no rotation).
+    pub fn identity(shape: JobShape) -> Variant {
+        Variant {
+            orig: shape,
+            placed: shape.dims(),
+            kind: FoldKind::Identity,
+            perm: [0, 1, 2],
+            requires_wrap: [false; 3],
+        }
+    }
+
+    /// Map a folded-space coordinate through the rotation.
+    #[inline]
+    fn rotate(&self, c: [usize; 3]) -> P3 {
+        P3([c[self.perm[0]], c[self.perm[1]], c[self.perm[2]]])
+    }
+
+    /// Map a logical job coordinate to a placed-box coordinate.
+    /// Panics (debug) if `l` is outside the original shape.
+    pub fn map_logical(&self, l: P3) -> P3 {
+        let o = self.orig.dims();
+        debug_assert!((0..3).all(|a| l.0[a] < o.0[a]));
+        let c = match &self.kind {
+            FoldKind::Identity => l.0,
+            FoldKind::Refactor2 { axis, q_axis, p, q } => {
+                let cy = serpentine_cycle(*p, *q).expect("validated at build");
+                let (u, v) = cy[l.0[*axis]];
+                let mut c = l.0;
+                c[*axis] = u;
+                c[*q_axis] = v;
+                c
+            }
+            FoldKind::Refactor3 { p, q, r } => {
+                let axis = (0..3).find(|&a| o.0[a] > 1).expect("1D job");
+                let cy = box_cycle(*p, *q, *r).expect("validated at build");
+                let (u, v, w) = cy[l.0[axis]];
+                [u, v, w]
+            }
+            FoldKind::HalveDouble { halved, doubled } => {
+                let h = o.0[*halved];
+                debug_assert_eq!(o.0[*doubled], 2);
+                let mut c = l.0;
+                if l.0[*halved] < h / 2 {
+                    // First half: keeps its coordinates; doubled layers
+                    // occupy z' ∈ {0, 1}.
+                    c[*halved] = l.0[*halved];
+                    c[*doubled] = l.0[*doubled];
+                } else {
+                    // Second half: reversed along the halved axis, mapped
+                    // to the mirrored layers z' ∈ {3, 2}.
+                    c[*halved] = h - 1 - l.0[*halved];
+                    c[*doubled] = 3 - l.0[*doubled];
+                }
+                c
+            }
+        };
+        self.rotate(c)
+    }
+
+    /// Generate every communication ring of the job, in placed coordinates.
+    /// Dimension-`d` rings exist for every fiber of the other two logical
+    /// dimensions when `orig[d] >= 2`.
+    pub fn rings(&self) -> Vec<Ring> {
+        let o = self.orig.dims();
+        let mut out = Vec::new();
+        for d in 0..3 {
+            if o.0[d] < 2 {
+                continue;
+            }
+            let (e, f) = match d {
+                0 => (1, 2),
+                1 => (0, 2),
+                _ => (0, 1),
+            };
+            for ie in 0..o.0[e] {
+                for jf in 0..o.0[f] {
+                    let mut nodes = Vec::with_capacity(o.0[d]);
+                    for k in 0..o.0[d] {
+                        let mut l = [0usize; 3];
+                        l[d] = k;
+                        l[e] = ie;
+                        l[f] = jf;
+                        nodes.push(self.map_logical(P3(l)));
+                    }
+                    out.push(Ring { dim: d, nodes });
+                }
+            }
+        }
+        out
+    }
+
+    /// Ring lengths per communicating logical dimension: `(len, count)`.
+    pub fn ring_profile(&self) -> Vec<(usize, usize)> {
+        let o = self.orig.dims();
+        (0..3)
+            .filter(|&d| o.0[d] >= 2)
+            .map(|d| (o.0[d], self.orig.size() / o.0[d]))
+            .collect()
+    }
+}
+
+const PERMS: [[usize; 3]; 6] = [
+    [0, 1, 2],
+    [0, 2, 1],
+    [1, 0, 2],
+    [1, 2, 0],
+    [2, 0, 1],
+    [2, 1, 0],
+];
+
+/// Generate all shape variants for a job, including rotations.
+///
+/// `max_dim` bounds placed dimensions (no point generating variants that
+/// exceed the largest composable torus dimension).
+pub fn enumerate_variants(shape: JobShape, max_dim: usize) -> Vec<Variant> {
+    let mut base: Vec<Variant> = vec![Variant::identity(shape)];
+    let o = shape.dims();
+    let dimy = shape.dimensionality();
+
+    match dimy {
+        1 => {
+            let axis = (0..3).find(|&a| o.0[a] > 1).unwrap();
+            let q_axis = (0..3).find(|&a| a != axis).unwrap();
+            let l = o.0[axis];
+            if l % 2 == 0 {
+                // 1D→2D: every 2-factorization (even product guaranteed).
+                let mut p = 2;
+                while p * p <= l {
+                    if l % p == 0 {
+                        let q = l / p;
+                        if q >= 2 {
+                            for (pp, qq) in [(p, q), (q, p)] {
+                                let mut d = [1usize; 3];
+                                d[axis] = pp;
+                                d[q_axis] = qq;
+                                base.push(Variant {
+                                    orig: shape,
+                                    placed: P3(d),
+                                    kind: FoldKind::Refactor2 {
+                                        axis,
+                                        q_axis,
+                                        p: pp,
+                                        q: qq,
+                                    },
+                                    perm: [0, 1, 2],
+                                    requires_wrap: [false; 3],
+                                });
+                                if p == q {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    p += 1;
+                }
+                // 1D→3D: even 3-factorizations with a box cycle.
+                for f in JobShape::factorizations(l, max_dim) {
+                    let d = f.dims().0;
+                    if d[0] >= 2 && box_cycle(d[0], d[1], d[2]).is_some() {
+                        base.push(Variant {
+                            orig: shape,
+                            placed: P3(d),
+                            kind: FoldKind::Refactor3 {
+                                p: d[0],
+                                q: d[1],
+                                r: d[2],
+                            },
+                            perm: [0, 1, 2],
+                            requires_wrap: [false; 3],
+                        });
+                    }
+                }
+            }
+        }
+        2 => {
+            // Fold either communicating axis onto the free axis.
+            let free = (0..3).find(|&a| o.0[a] == 1).unwrap();
+            for axis in 0..3 {
+                let l = o.0[axis];
+                if axis == free || l < 4 || l % 2 != 0 {
+                    continue;
+                }
+                for p in 2..=l / 2 {
+                    if l % p != 0 {
+                        continue;
+                    }
+                    let q = l / p;
+                    if q < 2 {
+                        continue;
+                    }
+                    let mut d = o.0;
+                    d[axis] = p;
+                    d[free] = q;
+                    base.push(Variant {
+                        orig: shape,
+                        placed: P3(d),
+                        kind: FoldKind::Refactor2 {
+                            axis,
+                            q_axis: free,
+                            p,
+                            q,
+                        },
+                        perm: [0, 1, 2],
+                        requires_wrap: [false; 3],
+                    });
+                }
+            }
+        }
+        3 => {
+            // 3D→3D halve/double (Figure 2 right): needs an axis of size
+            // exactly 2 to double and an even axis ≥ 4 to halve.
+            for doubled in 0..3 {
+                if o.0[doubled] != 2 {
+                    continue;
+                }
+                for halved in 0..3 {
+                    if halved == doubled || o.0[halved] < 4 || o.0[halved] % 2 != 0 {
+                        continue;
+                    }
+                    let mut d = o.0;
+                    d[halved] /= 2;
+                    d[doubled] = 4;
+                    let mut requires_wrap = [false; 3];
+                    requires_wrap[doubled] = true;
+                    base.push(Variant {
+                        orig: shape,
+                        placed: P3(d),
+                        kind: FoldKind::HalveDouble { halved, doubled },
+                        perm: [0, 1, 2],
+                        requires_wrap,
+                    });
+                }
+            }
+        }
+        _ => {}
+    }
+
+    // Expand rotations, drop over-large variants, dedup by placed+kind.
+    let mut out: Vec<Variant> = Vec::new();
+    let mut seen: Vec<(P3, FoldKind)> = Vec::new();
+    for v in base {
+        for perm in PERMS {
+            let folded = v.placed; // base variants carry identity perm
+            let placed = P3([folded.0[perm[0]], folded.0[perm[1]], folded.0[perm[2]]]);
+            if placed.0.iter().any(|&d| d > max_dim) {
+                continue;
+            }
+            let mut requires_wrap = [false; 3];
+            for k in 0..3 {
+                requires_wrap[k] = v.requires_wrap[perm[k]];
+            }
+            let key = (placed, v.kind.clone());
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            out.push(Variant {
+                orig: v.orig,
+                placed,
+                kind: v.kind.clone(),
+                perm,
+                requires_wrap,
+            });
+        }
+    }
+    out
+}
+
+/// Rotation-only variants (for policies without folding).
+pub fn rotations_only(shape: JobShape, max_dim: usize) -> Vec<Variant> {
+    enumerate_variants(shape, max_dim)
+        .into_iter()
+        .filter(|v| v.kind == FoldKind::Identity)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_maps_identically() {
+        let v = Variant::identity(JobShape::new(4, 8, 2));
+        assert_eq!(v.map_logical(P3([1, 2, 1])), P3([1, 2, 1]));
+        assert_eq!(v.placed, P3([4, 8, 2]));
+    }
+
+    #[test]
+    fn one_d_variants_include_2x9() {
+        let vs = enumerate_variants(JobShape::new(18, 1, 1), 64);
+        assert!(vs.iter().any(|v| {
+            let mut d = v.placed.0;
+            d.sort_unstable();
+            d == [1, 2, 9] && v.kind != FoldKind::Identity
+        }));
+    }
+
+    #[test]
+    fn one_d_odd_has_no_cycle_folds() {
+        let vs = enumerate_variants(JobShape::new(15, 1, 1), 64);
+        // 15 odd → no grid cycle of odd length exists.
+        assert!(vs.iter().all(|v| v.kind == FoldKind::Identity));
+    }
+
+    #[test]
+    fn two_d_fold_paper_example() {
+        // 1×6×4 folds to {4,2,3} (paper Figure 2 middle).
+        let vs = enumerate_variants(JobShape::new(1, 6, 4), 64);
+        assert!(
+            vs.iter().any(|v| {
+                let mut d = v.placed.0;
+                d.sort_unstable();
+                d == [2, 3, 4] && v.kind != FoldKind::Identity
+            }),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn three_d_fold_paper_example() {
+        // 4×8×2 folds to 4×4×4 (Figure 2 right).
+        let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
+        let v = vs
+            .iter()
+            .find(|v| v.placed == P3([4, 4, 4]) && v.kind != FoldKind::Identity)
+            .expect("HalveDouble fold must exist");
+        // wrap needed on the doubled axis.
+        assert!(v.requires_wrap.iter().any(|&w| w));
+    }
+
+    #[test]
+    fn three_d_counterexample_not_generated() {
+        // 4×8×3 must NOT fold (paper's counterexample: the middle layer of
+        // the odd dimension cannot map to any cycle).
+        let vs = enumerate_variants(JobShape::new(4, 8, 3), 64);
+        assert!(
+            vs.iter().all(|v| v.kind == FoldKind::Identity),
+            "no 3D fold may exist for 4x8x3"
+        );
+    }
+
+    #[test]
+    fn variants_preserve_volume() {
+        for s in [
+            JobShape::new(18, 1, 1),
+            JobShape::new(1, 6, 4),
+            JobShape::new(4, 8, 2),
+            JobShape::new(12, 2, 1),
+            JobShape::new(1, 1, 24),
+        ] {
+            for v in enumerate_variants(s, 64) {
+                assert_eq!(v.placed.volume(), s.size(), "{v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_logical_is_bijective() {
+        for s in [
+            JobShape::new(18, 1, 1),
+            JobShape::new(1, 6, 4),
+            JobShape::new(4, 8, 2),
+            JobShape::new(2, 12, 1),
+            JobShape::new(1, 1, 16),
+        ] {
+            for v in enumerate_variants(s, 64) {
+                let mut seen = std::collections::HashSet::new();
+                for l in s.dims().iter_box() {
+                    let p = v.map_logical(l);
+                    assert!(
+                        (0..3).all(|a| p.0[a] < v.placed.0[a]),
+                        "{v:?} {l} -> {p}"
+                    );
+                    assert!(seen.insert(p), "collision in {v:?} at {l}");
+                }
+                assert_eq!(seen.len(), s.size());
+            }
+        }
+    }
+
+    #[test]
+    fn rotations_only_filters() {
+        let vs = rotations_only(JobShape::new(4, 8, 2), 64);
+        assert!(vs.iter().all(|v| v.kind == FoldKind::Identity));
+        assert_eq!(vs.len(), 6); // all dims distinct → 6 rotations
+    }
+
+    #[test]
+    fn max_dim_filters_placed() {
+        let vs = enumerate_variants(JobShape::new(32, 1, 1), 16);
+        assert!(vs.iter().all(|v| v.placed.0.iter().all(|&d| d <= 16)));
+        // 32 = 2×16 or 4×8 still available.
+        assert!(vs.iter().any(|v| v.kind != FoldKind::Identity));
+    }
+
+    #[test]
+    fn ring_profile_counts() {
+        let v = Variant::identity(JobShape::new(4, 6, 1));
+        let prof = v.ring_profile();
+        assert_eq!(prof, vec![(4, 6), (6, 4)]);
+    }
+}

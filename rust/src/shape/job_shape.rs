@@ -1,0 +1,150 @@
+//! The job shape type: parallelism dimensions mapped to torus dimensions.
+
+use crate::topology::P3;
+
+/// A job's requested shape, e.g. `4×6×1` = four-way DP × six-way TP (§2).
+/// Dimensions of size 1 carry no communication. Every dimension of size
+/// ≥ 2 runs ring AllReduce collectives along its fibers.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct JobShape(pub P3);
+
+impl JobShape {
+    pub fn new(a: usize, b: usize, c: usize) -> JobShape {
+        assert!(a >= 1 && b >= 1 && c >= 1, "shape dims must be >= 1");
+        JobShape(P3([a, b, c]))
+    }
+
+    pub fn dims(&self) -> P3 {
+        self.0
+    }
+
+    /// Total XPUs requested.
+    pub fn size(&self) -> usize {
+        self.0.volume()
+    }
+
+    /// Number of communicating dimensions (the paper's 1D/2D/3D job
+    /// classification, §3.3).
+    pub fn dimensionality(&self) -> usize {
+        (0..3).filter(|&a| self.0 .0[a] > 1).count()
+    }
+
+    /// Canonical form: dimensions sorted descending. Two shapes with the
+    /// same canonical form are rotations of each other.
+    pub fn canonical(&self) -> JobShape {
+        let mut d = self.0 .0;
+        d.sort_unstable_by(|a, b| b.cmp(a));
+        JobShape(P3(d))
+    }
+
+    /// All distinct axis permutations (≤ 6; fewer when dims repeat).
+    pub fn rotations(&self) -> Vec<JobShape> {
+        const PERMS: [[usize; 3]; 6] = [
+            [0, 1, 2],
+            [0, 2, 1],
+            [1, 0, 2],
+            [1, 2, 0],
+            [2, 0, 1],
+            [2, 1, 0],
+        ];
+        let mut out: Vec<JobShape> = Vec::with_capacity(6);
+        for p in PERMS {
+            let s = JobShape(P3([self.0 .0[p[0]], self.0 .0[p[1]], self.0 .0[p[2]]]));
+            if !out.contains(&s) {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// All shapes (a, b, c) with `a*b*c == size`, unordered duplicates
+    /// removed (a ≤ b ≤ c), each dimension capped at `max_dim`.
+    pub fn factorizations(size: usize, max_dim: usize) -> Vec<JobShape> {
+        let mut out = Vec::new();
+        let mut a = 1;
+        while a * a * a <= size {
+            if size % a == 0 {
+                let rest = size / a;
+                let mut b = a;
+                while b * b <= rest {
+                    if rest % b == 0 {
+                        let c = rest / b;
+                        if c <= max_dim && b <= max_dim && a <= max_dim {
+                            out.push(JobShape::new(a, b, c));
+                        }
+                    }
+                    b += 1;
+                }
+            }
+            a += 1;
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for JobShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensionality_classes() {
+        assert_eq!(JobShape::new(18, 1, 1).dimensionality(), 1);
+        assert_eq!(JobShape::new(1, 6, 4).dimensionality(), 2);
+        assert_eq!(JobShape::new(4, 8, 2).dimensionality(), 3);
+        assert_eq!(JobShape::new(1, 1, 1).dimensionality(), 0);
+    }
+
+    #[test]
+    fn rotations_dedup() {
+        assert_eq!(JobShape::new(4, 4, 4).rotations().len(), 1);
+        assert_eq!(JobShape::new(4, 4, 2).rotations().len(), 3);
+        assert_eq!(JobShape::new(2, 3, 4).rotations().len(), 6);
+    }
+
+    #[test]
+    fn rotations_preserve_size() {
+        let s = JobShape::new(2, 3, 4);
+        for r in s.rotations() {
+            assert_eq!(r.size(), 24);
+        }
+    }
+
+    #[test]
+    fn canonical_sorts_descending() {
+        assert_eq!(
+            JobShape::new(2, 8, 4).canonical(),
+            JobShape::new(8, 4, 2)
+        );
+    }
+
+    #[test]
+    fn factorizations_of_12() {
+        let f = JobShape::factorizations(12, 64);
+        // (1,1,12) (1,2,6) (1,3,4) (2,2,3)
+        assert_eq!(f.len(), 4);
+        assert!(f.contains(&JobShape::new(1, 1, 12)));
+        assert!(f.contains(&JobShape::new(2, 2, 3)));
+    }
+
+    #[test]
+    fn factorizations_respect_cap() {
+        let f = JobShape::factorizations(128, 16);
+        assert!(f.iter().all(|s| s.dims().0.iter().all(|&d| d <= 16)));
+        assert!(!f.is_empty());
+        // 128 = 16*8 → (1,8,16) present, (1,1,128) filtered.
+        assert!(f.contains(&JobShape::new(1, 8, 16)));
+    }
+
+    #[test]
+    fn factorizations_of_prime() {
+        let f = JobShape::factorizations(13, 64);
+        assert_eq!(f, vec![JobShape::new(1, 1, 13)]);
+        assert!(JobShape::factorizations(67, 64).is_empty());
+    }
+}

@@ -1,0 +1,12 @@
+//! Job-shape algebra: factorization, rotation, and the paper's *folding*
+//! technique (§3.3) — generating shape variants homomorphic to a job's
+//! requested shape, with explicit communication-ring mappings that a
+//! verifier checks rather than assumes.
+
+pub mod cycles;
+pub mod fold;
+pub mod job_shape;
+pub mod verify;
+
+pub use fold::{FoldKind, Variant};
+pub use job_shape::JobShape;

@@ -1,0 +1,300 @@
+//! Homomorphism verifier: checks that a variant's ring mappings are
+//! faithful (paper §3.3 requires "the communication pattern can be
+//! faithfully mapped onto the new shape").
+//!
+//! The folding constructions in `fold.rs` are believed-correct by
+//! derivation; this module *checks* them — at commit time in debug builds
+//! and exhaustively in the property-test suite. A variant is a valid
+//! homomorphism of its job shape iff:
+//!
+//! 1. the logical→placed map is a bijection onto the placed box;
+//! 2. every ring maps to a sequence whose consecutive nodes are adjacent
+//!    in the placed box (unit step, or a wrap step on an axis with a
+//!    wrap-around link); the *closing* step may be missing only for
+//!    dimensions the fold made no cycle promise about (an open identity
+//!    ring costs performance, not correctness);
+//! 3. rings of the same parallelism dimension are vertex-disjoint (they
+//!    run concurrently, §2).
+
+use super::fold::{FoldKind, Variant};
+use crate::topology::P3;
+
+/// Verification failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    NotBijective {
+        at: P3,
+    },
+    /// Two consecutive ring nodes are not adjacent under available links.
+    BrokenRing {
+        dim: usize,
+        from: P3,
+        to: P3,
+    },
+    /// Rings of one dimension overlap (would serialize collectives).
+    OverlappingRings {
+        dim: usize,
+        node: P3,
+    },
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::NotBijective { at } => write!(f, "mapping not bijective at {at}"),
+            VerifyError::BrokenRing { dim, from, to } => {
+                write!(f, "dim-{dim} ring broken between {from} and {to}")
+            }
+            VerifyError::OverlappingRings { dim, node } => {
+                write!(f, "dim-{dim} rings overlap at {node}")
+            }
+        }
+    }
+}
+
+/// Logical dimensions for which the fold construction *promises* a closed
+/// cycle (and the verifier must therefore enforce closure).
+pub fn promised_dims(variant: &Variant) -> [bool; 3] {
+    let mut p = [false; 3];
+    match &variant.kind {
+        FoldKind::Identity => {}
+        FoldKind::Refactor2 { axis, .. } => p[*axis] = true,
+        FoldKind::Refactor3 { .. } => {
+            let o = variant.orig.dims();
+            for d in 0..3 {
+                p[d] = o.0[d] > 1;
+            }
+        }
+        FoldKind::HalveDouble { halved, doubled } => {
+            p[*halved] = true;
+            p[*doubled] = true;
+        }
+    }
+    p
+}
+
+/// Step classification between two placed nodes: `(axis, is_wrap_step)`.
+fn step_kind(a: P3, b: P3, ext: P3) -> Option<(usize, bool)> {
+    let mut axis = None;
+    for k in 0..3 {
+        if a.0[k] != b.0[k] {
+            if axis.is_some() {
+                return None; // differs on two axes
+            }
+            axis = Some(k);
+        }
+    }
+    let k = axis?; // identical points are not a step
+    let d = a.0[k].abs_diff(b.0[k]);
+    if d == 1 {
+        Some((k, false))
+    } else if d == ext.0[k] - 1 && ext.0[k] > 2 {
+        Some((k, true)) // wrap step between the two extreme layers
+    } else {
+        None
+    }
+}
+
+/// Verify a variant given which placed axes have wrap-around links
+/// (`wrap[k]` true when the placed extent spans a full composed torus
+/// dimension on axis `k`).
+pub fn verify(variant: &Variant, wrap: [bool; 3]) -> Result<(), VerifyError> {
+    let ext = variant.placed;
+    // 1. bijectivity
+    let mut hit = vec![false; ext.volume()];
+    for l in variant.orig.dims().iter_box() {
+        let p = variant.map_logical(l);
+        let idx = p.index_in(ext);
+        if hit[idx] {
+            return Err(VerifyError::NotBijective { at: p });
+        }
+        hit[idx] = true;
+    }
+    if let Some(idx) = hit.iter().position(|&h| !h) {
+        return Err(VerifyError::NotBijective {
+            at: P3::from_index(idx, ext),
+        });
+    }
+
+    // 2. ring adjacency + 3. per-dimension disjointness
+    let promised = promised_dims(variant);
+    let rings = variant.rings();
+    for d in 0..3 {
+        let mut used = vec![false; ext.volume()];
+        for ring in rings.iter().filter(|r| r.dim == d) {
+            for &n in &ring.nodes {
+                let idx = n.index_in(ext);
+                if used[idx] {
+                    return Err(VerifyError::OverlappingRings { dim: d, node: n });
+                }
+                used[idx] = true;
+            }
+            let m = ring.nodes.len();
+            if m < 2 {
+                continue;
+            }
+            for w in 0..m {
+                let a = ring.nodes[w];
+                let b = ring.nodes[(w + 1) % m];
+                let closing = w == m - 1;
+                let ok = match step_kind(a, b, ext) {
+                    Some((_, false)) => true,
+                    Some((axis, true)) => wrap[axis],
+                    None => false,
+                };
+                if !ok && !(closing && !promised[d]) {
+                    return Err(VerifyError::BrokenRing { dim: d, from: a, to: b });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Compute, per communicating logical dimension, `(ring length, closed?)`
+/// under the given wrap availability — drives the JCT line-penalty.
+pub fn ring_closures(variant: &Variant, wrap: [bool; 3]) -> Vec<(usize, bool)> {
+    let ext = variant.placed;
+    let mut out: Vec<(usize, bool)> = Vec::new();
+    let rings = variant.rings();
+    for d in 0..3 {
+        let mut any = false;
+        let mut closed = true;
+        for ring in rings.iter().filter(|r| r.dim == d) {
+            any = true;
+            let m = ring.nodes.len();
+            if m < 2 {
+                continue;
+            }
+            for w in 0..m {
+                let a = ring.nodes[w];
+                let b = ring.nodes[(w + 1) % m];
+                match step_kind(a, b, ext) {
+                    Some((axis, true)) if wrap[axis] => {}
+                    Some((_, false)) => {}
+                    // A 2-ring over a single link closes trivially (the
+                    // pair exchanges over the same cable both ways).
+                    _ if m == 2 && a.torus_dist(b, ext) <= 1 => {}
+                    _ => closed = false,
+                }
+            }
+        }
+        if any {
+            out.push((variant.orig.dims().0[d], closed));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shape::fold::{enumerate_variants, FoldKind, Variant};
+    use crate::shape::JobShape;
+
+    #[test]
+    fn identity_verifies_with_and_without_wrap() {
+        let v = Variant::identity(JobShape::new(4, 4, 1));
+        // Identity makes no cycle promise: open rings tolerated.
+        verify(&v, [true, true, true]).unwrap();
+        verify(&v, [false, false, false]).unwrap();
+        // ...but the closure status is visible to the JCT model:
+        let rc = ring_closures(&v, [false, false, false]);
+        assert!(rc.iter().all(|&(_, closed)| !closed));
+    }
+
+    #[test]
+    fn all_generated_variants_verify() {
+        for s in [
+            JobShape::new(18, 1, 1),
+            JobShape::new(1, 6, 4),
+            JobShape::new(4, 8, 2),
+            JobShape::new(16, 1, 1),
+            JobShape::new(2, 12, 1),
+            JobShape::new(4, 4, 4),
+            JobShape::new(6, 2, 2),
+        ] {
+            for v in enumerate_variants(s, 64) {
+                verify(&v, v.requires_wrap)
+                    .unwrap_or_else(|e| panic!("{s}: {v:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn halve_double_requires_wrap() {
+        let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
+        let v = vs
+            .iter()
+            .find(|v| matches!(v.kind, FoldKind::HalveDouble { .. }))
+            .unwrap();
+        // Without wrap on the doubled axis the outer-pair ring breaks on an
+        // *interior* step — a hard error, not a performance penalty.
+        assert!(matches!(
+            verify(v, [false, false, false]),
+            Err(VerifyError::BrokenRing { .. })
+        ));
+        verify(v, v.requires_wrap).unwrap();
+    }
+
+    #[test]
+    fn fold_cycles_close_without_wrap() {
+        // Serpentine folds must close inside the box (no wrap needed).
+        let vs = enumerate_variants(JobShape::new(18, 1, 1), 64);
+        for v in vs.iter().filter(|v| v.kind != FoldKind::Identity) {
+            verify(v, [false, false, false]).unwrap_or_else(|e| panic!("{v:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn ring_closures_reflect_wrap() {
+        let v = Variant::identity(JobShape::new(6, 1, 1));
+        let rc = ring_closures(&v, [false, false, false]);
+        assert_eq!(rc, vec![(6, false)]);
+        let rc = ring_closures(&v, [true, false, false]);
+        assert_eq!(rc, vec![(6, true)]);
+    }
+
+    #[test]
+    fn two_rings_close_trivially() {
+        let v = Variant::identity(JobShape::new(2, 1, 1));
+        let rc = ring_closures(&v, [false, false, false]);
+        assert_eq!(rc, vec![(2, true)]);
+    }
+
+    #[test]
+    fn folded_rings_close_without_wrap() {
+        let vs = enumerate_variants(JobShape::new(12, 1, 1), 64);
+        let v = vs
+            .iter()
+            .find(|v| matches!(v.kind, FoldKind::Refactor2 { .. }))
+            .unwrap();
+        let rc = ring_closures(v, [false, false, false]);
+        assert_eq!(rc, vec![(12, true)]);
+    }
+
+    #[test]
+    fn promised_dims_by_kind() {
+        let id = Variant::identity(JobShape::new(4, 4, 4));
+        assert_eq!(promised_dims(&id), [false; 3]);
+        let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
+        let hd = vs
+            .iter()
+            .find(|v| matches!(v.kind, FoldKind::HalveDouble { .. }))
+            .unwrap();
+        let p = promised_dims(hd);
+        assert_eq!(p.iter().filter(|&&x| x).count(), 2);
+    }
+
+    #[test]
+    fn corrupted_mapping_detected() {
+        // A hand-made "variant" whose placed box is too big for the job
+        // must fail bijectivity.
+        let mut v = Variant::identity(JobShape::new(2, 2, 1));
+        v.placed = P3([2, 2, 2]);
+        assert!(matches!(
+            verify(&v, [false; 3]),
+            Err(VerifyError::NotBijective { .. })
+        ));
+    }
+}

@@ -1,0 +1,262 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! `rfold` CLI and the `cargo bench` harnesses so both always produce the
+//! same rows (see DESIGN.md §3 experiment index).
+
+use crate::metrics::{summarize, CellSummary};
+use crate::placement::PolicyKind;
+use crate::sim::contention;
+use crate::sim::engine::{RunResult, SimConfig, Simulation};
+use crate::topology::cluster::ClusterTopo;
+use crate::topology::routing::LinkLoads;
+use crate::topology::P3;
+use crate::trace::gen::{generate, TraceConfig};
+use crate::trace::JobSpec;
+
+/// One (policy, topology) experiment cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub policy: PolicyKind,
+    pub topo: ClusterTopo,
+    pub label: &'static str,
+}
+
+/// The six Table-1 cells (policy ↔ topology pairings of §4).
+pub fn table1_cells() -> Vec<Cell> {
+    vec![
+        Cell {
+            policy: PolicyKind::FirstFit,
+            topo: ClusterTopo::static_4096(),
+            label: "FirstFit (16^3)",
+        },
+        Cell {
+            policy: PolicyKind::Folding,
+            topo: ClusterTopo::static_4096(),
+            label: "Folding (16^3)",
+        },
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(8),
+            label: "Reconfig (8^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(8),
+            label: "RFold (8^3)",
+        },
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "Reconfig (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        },
+    ]
+}
+
+/// Figure 3 compares the policies that reach 100% JCR: Reconfig and RFold
+/// at 4³ and 2³ cubes.
+pub fn fig3_cells() -> Vec<Cell> {
+    vec![
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "Reconfig (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(2),
+            label: "Reconfig (2^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(2),
+            label: "RFold (2^3)",
+        },
+    ]
+}
+
+/// Run one cell over `runs` seeded traces. Seeds are `base_seed..+runs`,
+/// shared across cells so every policy sees identical workloads.
+pub fn run_cell(cell: Cell, runs: usize, jobs_per_run: usize, base_seed: u64) -> CellSummary {
+    run_cell_with(cell, runs, jobs_per_run, base_seed, [true; 3])
+}
+
+/// `run_cell` with the folding-dimensionality ablation knob (A2).
+pub fn run_cell_with(
+    cell: Cell,
+    runs: usize,
+    jobs_per_run: usize,
+    base_seed: u64,
+    fold_dims_enabled: [bool; 3],
+) -> CellSummary {
+    let mut results: Vec<(RunResult, Vec<JobSpec>)> = Vec::with_capacity(runs);
+    for r in 0..runs {
+        let trace = generate(&TraceConfig {
+            num_jobs: jobs_per_run,
+            seed: base_seed + r as u64,
+            ..Default::default()
+        });
+        let mut cfg = SimConfig::new(cell.topo, cell.policy);
+        cfg.fold_dims_enabled = fold_dims_enabled;
+        let res = Simulation::new(cfg).run(&trace);
+        results.push((res, trace));
+    }
+    let pairs: Vec<(RunResult, &[JobSpec])> = results
+        .iter()
+        .map(|(r, t)| (r.clone(), t.as_slice()))
+        .collect();
+    summarize(cell.label, &pairs)
+}
+
+/// §3.1 motivation experiment on a 2×2 mesh: returns
+/// `(label, modeled slowdown vs baseline)` rows matching the paper's
+/// measured percentages.
+pub fn motivation_rows() -> Vec<(String, f64)> {
+    let ext = P3([2, 2, 1]);
+    let row = [P3([0, 0, 0]), P3([1, 0, 0])];
+    let diag = [P3([0, 0, 0]), P3([1, 1, 0])];
+    let diag2 = [P3([1, 0, 0]), P3([0, 1, 0])];
+
+    // Helper: mean dilation + max load for a 2-node ring on a mesh with
+    // optional competing rings at a traffic multiplier.
+    let measure = |members: &[P3], others: &[(&[P3], f64)]| -> f64 {
+        let mut loads = LinkLoads::new_mesh(ext);
+        for (ring, mult) in others {
+            for (axis, p) in loads.ring_cables(ring) {
+                loads.add(axis, p, contention::RING_UNIT * mult);
+            }
+        }
+        let mut hops = 0usize;
+        for w in 0..members.len() {
+            let a = members[w];
+            let b = members[(w + 1) % members.len()];
+            hops += loads.path_cables(a, b).len();
+        }
+        let cables = loads.ring_cables(members);
+        for &(axis, p) in &cables {
+            loads.add(axis, p, contention::RING_UNIT);
+        }
+        let max_load = cables
+            .iter()
+            .map(|&(axis, p)| loads.get(axis, p))
+            .fold(0.0f64, f64::max);
+        let dilation = hops as f64 / members.len() as f64;
+        contention::slowdown(dilation, max_load)
+    };
+
+    let base_row = measure(&row, &[]);
+    let single_diag = measure(&diag, &[]);
+    let shared = measure(&diag, &[(&diag2, 1.0)]);
+    let shared_2x = measure(&diag, &[(&diag2, 2.0)]);
+    let shared_3x = measure(&diag, &[(&diag2, 3.0)]);
+
+    vec![
+        ("row placement (baseline)".into(), base_row / base_row),
+        ("diagonal vs row".into(), single_diag / base_row),
+        ("two diagonal jobs (vs single diagonal)".into(), shared / single_diag),
+        ("competing load 2x (vs single diagonal)".into(), shared_2x / single_diag),
+        ("competing load 3x (vs single diagonal)".into(), shared_3x / single_diag),
+    ]
+}
+
+/// Ablation A1: Reconfig/RFold across cube sizes.
+pub fn ablation_cube_cells() -> Vec<Cell> {
+    vec![
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(8),
+            label: "Reconfig (8^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(8),
+            label: "RFold (8^3)",
+        },
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "Reconfig (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::Reconfig,
+            topo: ClusterTopo::reconfigurable_4096(2),
+            label: "Reconfig (2^3)",
+        },
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(2),
+            label: "RFold (2^3)",
+        },
+    ]
+}
+
+/// A3: best-effort vs RFold — queueing delay vs contention slowdown.
+pub fn besteffort_cells() -> Vec<Cell> {
+    vec![
+        Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::BestEffort,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "BestEffort (4^3)",
+        },
+        Cell {
+            policy: PolicyKind::Hilbert,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "Hilbert/SLURM (4^3)",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn motivation_matches_paper_ratios() {
+        let rows = motivation_rows();
+        let val = |i: usize| rows[i].1;
+        assert!((val(1) - 1.17).abs() < 0.02, "diag vs row: {}", val(1));
+        assert!((val(2) - 1.35).abs() < 0.05, "shared: {}", val(2));
+        assert!((val(3) - 1.95).abs() < 0.15, "2x: {}", val(3));
+        assert!((val(4) - 2.86).abs() < 0.25, "3x: {}", val(4));
+    }
+
+    #[test]
+    fn small_table1_ordering() {
+        // A miniature Table 1 (few runs, few jobs) must already show the
+        // qualitative ordering: RFold(4³) ≥ Reconfig(4³) ≥ ... ≥ FirstFit.
+        let cells = table1_cells();
+        let sums: Vec<CellSummary> = cells
+            .iter()
+            .map(|&c| run_cell(c, 2, 60, 10))
+            .collect();
+        let jcr = |label: &str| {
+            sums.iter()
+                .find(|s| s.label == label)
+                .map(|s| s.avg_jcr_pct)
+                .unwrap()
+        };
+        assert!(jcr("RFold (4^3)") >= 99.9, "{}", jcr("RFold (4^3)"));
+        assert!(jcr("Reconfig (4^3)") >= 99.9);
+        assert!(jcr("FirstFit (16^3)") < jcr("Folding (16^3)"));
+        assert!(jcr("Folding (16^3)") <= jcr("RFold (8^3)") + 15.0);
+        assert!(jcr("Reconfig (8^3)") < jcr("RFold (8^3)"));
+    }
+}

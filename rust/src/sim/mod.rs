@@ -1,0 +1,10 @@
+//! Job-level discrete-event simulator (paper §4): FIFO admission with
+//! head-of-line blocking, shape-incompatible job removal, utilization
+//! sampling, and the calibrated contention model of §3.1.
+
+pub mod contention;
+pub mod engine;
+pub mod experiments;
+
+pub use contention::ContentionModel;
+pub use engine::{RunResult, SimConfig, Simulation};

@@ -1,0 +1,373 @@
+//! Cluster occupancy state: nodes, allocations, and the OCS plant.
+
+use std::collections::HashMap;
+
+use super::coords::{CubeGrid, P3};
+use super::ocs::OcsState;
+
+/// Cluster topology flavor (paper §4 builds both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterTopo {
+    /// Statically wired torus of the given extent (e.g. 16×16×16).
+    /// Wrap-around links exist only on full dimensions.
+    Static { ext: P3 },
+    /// OCS-reconfigurable cluster of `grid.num_cubes()` cubes of side
+    /// `grid.n` (e.g. 64 cubes of 4³).
+    Reconfigurable { grid: CubeGrid },
+}
+
+impl ClusterTopo {
+    /// The paper's static 16³ baseline.
+    pub fn static_4096() -> ClusterTopo {
+        ClusterTopo::Static {
+            ext: P3([16, 16, 16]),
+        }
+    }
+
+    /// The paper's reconfigurable 4096-XPU cluster with cubes of side `n`.
+    pub fn reconfigurable_4096(n: usize) -> ClusterTopo {
+        ClusterTopo::Reconfigurable {
+            grid: CubeGrid::for_cluster(4096, n),
+        }
+    }
+
+    pub fn num_xpus(&self) -> usize {
+        match self {
+            ClusterTopo::Static { ext } => ext.volume(),
+            ClusterTopo::Reconfigurable { grid } => grid.num_xpus(),
+        }
+    }
+
+    /// Cube side for reconfigurable topologies; the full extent for static
+    /// ones (a static torus is one big "cube" with hard wrap-around).
+    pub fn cube_side(&self) -> usize {
+        match self {
+            ClusterTopo::Static { ext } => ext.0[0],
+            ClusterTopo::Reconfigurable { grid } => grid.n,
+        }
+    }
+
+    /// Physical coordinate extent of the whole machine.
+    pub fn phys_ext(&self) -> P3 {
+        match self {
+            ClusterTopo::Static { ext } => *ext,
+            ClusterTopo::Reconfigurable { grid } => P3([
+                grid.dims.0[0] * grid.n,
+                grid.dims.0[1] * grid.n,
+                grid.dims.0[2] * grid.n,
+            ]),
+        }
+    }
+}
+
+/// A committed allocation: the nodes a job occupies plus communication
+/// metadata the simulator needs for the JCT model.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub job: u64,
+    /// Global node ids (topology-specific numbering).
+    pub nodes: Vec<usize>,
+    /// Cubes touched (empty for static topologies).
+    pub cubes: Vec<usize>,
+    /// Number of OCS entries this job reserved (rewired or wraparound).
+    pub ocs_entries: usize,
+    /// Per parallelism dimension: (ring length, ring closed?).
+    pub rings: Vec<(usize, bool)>,
+    /// Placed bounding-box extent (virtual, after reconfiguration).
+    pub placed_ext: P3,
+}
+
+/// Mutable cluster state: occupancy, live allocations, OCS plant.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    topo: ClusterTopo,
+    busy: Vec<bool>,
+    /// Free-XPU count per cube (single entry for static topologies).
+    cube_free: Vec<usize>,
+    ocs: Option<OcsState>,
+    allocs: HashMap<u64, Allocation>,
+    busy_count: usize,
+}
+
+impl ClusterState {
+    pub fn new(topo: ClusterTopo) -> ClusterState {
+        let n_nodes = topo.num_xpus();
+        let (cube_free, ocs) = match topo {
+            ClusterTopo::Static { .. } => (vec![n_nodes], None),
+            ClusterTopo::Reconfigurable { grid } => (
+                vec![grid.n * grid.n * grid.n; grid.num_cubes()],
+                Some(OcsState::new(grid)),
+            ),
+        };
+        ClusterState {
+            topo,
+            busy: vec![false; n_nodes],
+            cube_free,
+            ocs,
+            allocs: HashMap::new(),
+            busy_count: 0,
+        }
+    }
+
+    pub fn topo(&self) -> ClusterTopo {
+        self.topo
+    }
+
+    pub fn ocs(&self) -> Option<&OcsState> {
+        self.ocs.as_ref()
+    }
+
+    pub fn ocs_mut(&mut self) -> Option<&mut OcsState> {
+        self.ocs.as_mut()
+    }
+
+    #[inline]
+    pub fn is_free(&self, node: usize) -> bool {
+        !self.busy[node]
+    }
+
+    pub fn busy_count(&self) -> usize {
+        self.busy_count
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.busy.len() - self.busy_count
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.busy_count as f64 / self.busy.len() as f64
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// Free XPUs in a cube (reconfigurable topologies).
+    pub fn cube_free_count(&self, cube: usize) -> usize {
+        self.cube_free[cube]
+    }
+
+    pub fn live_allocations(&self) -> impl Iterator<Item = &Allocation> {
+        self.allocs.values()
+    }
+
+    pub fn allocation(&self, job: u64) -> Option<&Allocation> {
+        self.allocs.get(&job)
+    }
+
+    /// Check a local box `[off, off+ext)` is entirely free inside `cube`.
+    pub fn is_cube_box_free(&self, cube: usize, off: P3, ext: P3) -> bool {
+        let grid = match self.topo {
+            ClusterTopo::Reconfigurable { grid } => grid,
+            _ => panic!("is_cube_box_free on static topology"),
+        };
+        if (0..3).any(|a| off.0[a] + ext.0[a] > grid.n) {
+            return false;
+        }
+        ext.iter_box()
+            .all(|d| self.is_free(grid.node_id(cube, off.add(d))))
+    }
+
+    /// Commit an allocation. Panics in debug builds if any node is busy
+    /// (placement policies must never double-book).
+    pub fn commit(&mut self, alloc: Allocation) {
+        debug_assert!(!self.allocs.contains_key(&alloc.job), "job already placed");
+        for &n in &alloc.nodes {
+            debug_assert!(!self.busy[n], "node {n} double-booked");
+            self.busy[n] = true;
+            if let ClusterTopo::Reconfigurable { grid } = self.topo {
+                self.cube_free[n / (grid.n * grid.n * grid.n)] -= 1;
+            } else {
+                self.cube_free[0] -= 1;
+            }
+        }
+        self.busy_count += alloc.nodes.len();
+        self.allocs.insert(alloc.job, alloc);
+    }
+
+    /// Release a job's nodes and OCS reservations. Returns the allocation
+    /// if it existed.
+    pub fn release(&mut self, job: u64) -> Option<Allocation> {
+        let alloc = self.allocs.remove(&job)?;
+        for &n in &alloc.nodes {
+            debug_assert!(self.busy[n]);
+            self.busy[n] = false;
+            if let ClusterTopo::Reconfigurable { grid } = self.topo {
+                self.cube_free[n / (grid.n * grid.n * grid.n)] += 1;
+            } else {
+                self.cube_free[0] += 1;
+            }
+        }
+        self.busy_count -= alloc.nodes.len();
+        if let Some(ocs) = self.ocs.as_mut() {
+            ocs.release_job(job);
+        }
+        Some(alloc)
+    }
+
+    /// Snapshot the occupancy as `f32` grids per cube — the layout the
+    /// plan-scorer artifact consumes: `[C][N][N][N]` flattened.
+    pub fn occupancy_f32(&self) -> Vec<f32> {
+        self.busy.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Physical coordinates of a node in the machine-room frame.
+    pub fn phys_coords(&self, node: usize) -> P3 {
+        match self.topo {
+            ClusterTopo::Static { ext } => P3::from_index(node, ext),
+            ClusterTopo::Reconfigurable { grid } => {
+                let (cube, local) = grid.split_node(node);
+                let c = grid.cube_coords(cube);
+                P3([
+                    c.0[0] * grid.n + local.0[0],
+                    c.0[1] * grid.n + local.0[1],
+                    c.0[2] * grid.n + local.0[2],
+                ])
+            }
+        }
+    }
+
+    /// Invariant check used by property tests: busy counter, per-cube free
+    /// counters and allocation node sets are mutually consistent, and no
+    /// two allocations overlap.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.busy.len()];
+        let mut total = 0usize;
+        for a in self.allocs.values() {
+            for &n in &a.nodes {
+                if seen[n] {
+                    return Err(format!("node {n} in two allocations"));
+                }
+                if !self.busy[n] {
+                    return Err(format!("allocated node {n} not marked busy"));
+                }
+                seen[n] = true;
+                total += 1;
+            }
+        }
+        if total != self.busy_count {
+            return Err(format!(
+                "busy_count {} != allocated total {total}",
+                self.busy_count
+            ));
+        }
+        if self.busy.iter().filter(|&&b| b).count() != total {
+            return Err("busy bitmap disagrees with allocations".into());
+        }
+        if let ClusterTopo::Reconfigurable { grid } = self.topo {
+            let vol = grid.n * grid.n * grid.n;
+            for cube in 0..grid.num_cubes() {
+                let free = (0..vol)
+                    .filter(|&i| !self.busy[cube * vol + i])
+                    .count();
+                if free != self.cube_free[cube] {
+                    return Err(format!("cube {cube} free counter drift"));
+                }
+            }
+            if let Some(ocs) = &self.ocs {
+                if !ocs.check_invariants() {
+                    return Err("OCS crossbar invariant violated".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconfig() -> ClusterState {
+        ClusterState::new(ClusterTopo::reconfigurable_4096(4))
+    }
+
+    #[test]
+    fn fresh_cluster_all_free() {
+        let c = reconfig();
+        assert_eq!(c.free_count(), 4096);
+        assert_eq!(c.busy_count(), 0);
+        assert_eq!(c.utilization(), 0.0);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn commit_release_roundtrip() {
+        let mut c = reconfig();
+        let nodes: Vec<usize> = (0..64).collect(); // cube 0 entirely
+        c.commit(Allocation {
+            job: 1,
+            nodes: nodes.clone(),
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![(4, true)],
+            placed_ext: P3([4, 4, 4]),
+        });
+        assert_eq!(c.busy_count(), 64);
+        assert_eq!(c.cube_free_count(0), 0);
+        assert_eq!(c.cube_free_count(1), 64);
+        c.check_consistency().unwrap();
+
+        let a = c.release(1).unwrap();
+        assert_eq!(a.nodes, nodes);
+        assert_eq!(c.busy_count(), 0);
+        assert_eq!(c.cube_free_count(0), 64);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn release_unknown_job_is_none() {
+        let mut c = reconfig();
+        assert!(c.release(99).is_none());
+    }
+
+    #[test]
+    fn cube_box_free_checks_bounds() {
+        let mut c = reconfig();
+        assert!(c.is_cube_box_free(0, P3([0, 0, 0]), P3([4, 4, 4])));
+        assert!(!c.is_cube_box_free(0, P3([1, 0, 0]), P3([4, 4, 4])));
+        c.commit(Allocation {
+            job: 1,
+            nodes: vec![0],
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 1]),
+        });
+        assert!(!c.is_cube_box_free(0, P3([0, 0, 0]), P3([1, 1, 1])));
+        assert!(c.is_cube_box_free(0, P3([0, 0, 1]), P3([1, 1, 3])));
+    }
+
+    #[test]
+    fn phys_coords_reconfigurable() {
+        let c = reconfig();
+        // node 0 of cube 0 is the origin
+        assert_eq!(c.phys_coords(0), P3([0, 0, 0]));
+        // first node of cube 1: grid coords (0,0,1) → physical (0,0,4)
+        assert_eq!(c.phys_coords(64), P3([0, 0, 4]));
+    }
+
+    #[test]
+    fn phys_coords_static() {
+        let c = ClusterState::new(ClusterTopo::static_4096());
+        assert_eq!(c.phys_coords(0), P3([0, 0, 0]));
+        assert_eq!(c.phys_coords(16 * 16), P3([1, 0, 0]));
+    }
+
+    #[test]
+    fn occupancy_snapshot() {
+        let mut c = reconfig();
+        c.commit(Allocation {
+            job: 1,
+            nodes: vec![5],
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 1]),
+        });
+        let occ = c.occupancy_f32();
+        assert_eq!(occ[5], 1.0);
+        assert_eq!(occ[4], 0.0);
+        assert_eq!(occ.iter().sum::<f32>(), 1.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Integer 3-vectors and the cube-grid coordinate system.
+
+/// Axis indices.
+pub const AXES: [usize; 3] = [0, 1, 2];
+
+/// A point or extent in 3-space (node coordinates, cube coordinates,
+/// shapes...). Components are small, `usize` keeps indexing ergonomic.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug, Default)]
+pub struct P3(pub [usize; 3]);
+
+impl P3 {
+    pub fn new(x: usize, y: usize, z: usize) -> Self {
+        P3([x, y, z])
+    }
+
+    #[inline]
+    pub fn x(&self) -> usize {
+        self.0[0]
+    }
+
+    #[inline]
+    pub fn y(&self) -> usize {
+        self.0[1]
+    }
+
+    #[inline]
+    pub fn z(&self) -> usize {
+        self.0[2]
+    }
+
+    /// Product of components (volume / number of XPUs).
+    pub fn volume(&self) -> usize {
+        self.0[0] * self.0[1] * self.0[2]
+    }
+
+    /// Component-wise addition.
+    pub fn add(&self, o: P3) -> P3 {
+        P3([self.0[0] + o.0[0], self.0[1] + o.0[1], self.0[2] + o.0[2]])
+    }
+
+    /// Linearize within an extent box (row-major x-major order).
+    #[inline]
+    pub fn index_in(&self, ext: P3) -> usize {
+        debug_assert!(self.0[0] < ext.0[0] && self.0[1] < ext.0[1] && self.0[2] < ext.0[2]);
+        (self.0[0] * ext.0[1] + self.0[1]) * ext.0[2] + self.0[2]
+    }
+
+    /// Inverse of [`P3::index_in`].
+    #[inline]
+    pub fn from_index(i: usize, ext: P3) -> P3 {
+        let z = i % ext.0[2];
+        let y = (i / ext.0[2]) % ext.0[1];
+        let x = i / (ext.0[1] * ext.0[2]);
+        P3([x, y, z])
+    }
+
+    /// All points in the box `[0, self)` in linear order.
+    pub fn iter_box(&self) -> impl Iterator<Item = P3> + '_ {
+        let ext = *self;
+        (0..ext.volume()).map(move |i| P3::from_index(i, ext))
+    }
+
+    /// Torus neighbour in `+axis` direction under extent `ext`.
+    #[inline]
+    pub fn torus_next(&self, axis: usize, ext: P3) -> P3 {
+        let mut p = *self;
+        p.0[axis] = (p.0[axis] + 1) % ext.0[axis];
+        p
+    }
+
+    /// Torus neighbour in `-axis` direction under extent `ext`.
+    #[inline]
+    pub fn torus_prev(&self, axis: usize, ext: P3) -> P3 {
+        let mut p = *self;
+        p.0[axis] = (p.0[axis] + ext.0[axis] - 1) % ext.0[axis];
+        p
+    }
+
+    /// Manhattan distance on a torus of extent `ext`.
+    pub fn torus_dist(&self, o: P3, ext: P3) -> usize {
+        (0..3)
+            .map(|a| {
+                let d = self.0[a].abs_diff(o.0[a]);
+                d.min(ext.0[a] - d)
+            })
+            .sum()
+    }
+
+    /// Are the two points adjacent (unit step with torus wrap) on some axis?
+    pub fn torus_adjacent(&self, o: P3, ext: P3) -> bool {
+        self.torus_dist(o, ext) == 1
+    }
+}
+
+impl std::fmt::Display for P3 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.0[0], self.0[1], self.0[2])
+    }
+}
+
+/// The arrangement of cubes in the machine room: `dims` cubes per axis,
+/// each of side `n`. A 4096-XPU cluster with 4³ cubes has
+/// `dims = (4,4,4)`, `n = 4`; with 8³ cubes `dims = (2,2,2)`, `n = 8`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CubeGrid {
+    pub dims: P3,
+    pub n: usize,
+}
+
+impl CubeGrid {
+    /// Build the grid housing `total` XPUs in cubes of side `n`, arranged
+    /// as close to a cube as possible. Panics if `total` is not expressible.
+    pub fn for_cluster(total: usize, n: usize) -> CubeGrid {
+        let cubes = total / (n * n * n);
+        assert_eq!(cubes * n * n * n, total, "total not a multiple of n^3");
+        // Factor the cube count into the most balanced (a, b, c).
+        let mut best = (1, 1, cubes);
+        let mut best_spread = usize::MAX;
+        for a in 1..=cubes {
+            if cubes % a != 0 {
+                continue;
+            }
+            let rest = cubes / a;
+            for b in 1..=rest {
+                if rest % b != 0 {
+                    continue;
+                }
+                let c = rest / b;
+                let spread = a.max(b).max(c) - a.min(b).min(c);
+                if spread < best_spread {
+                    best_spread = spread;
+                    best = (a, b, c);
+                }
+            }
+        }
+        CubeGrid {
+            dims: P3([best.0, best.1, best.2]),
+            n,
+        }
+    }
+
+    /// Number of cubes.
+    pub fn num_cubes(&self) -> usize {
+        self.dims.volume()
+    }
+
+    /// Total XPUs.
+    pub fn num_xpus(&self) -> usize {
+        self.num_cubes() * self.n * self.n * self.n
+    }
+
+    /// Extent of one cube.
+    pub fn cube_ext(&self) -> P3 {
+        P3([self.n, self.n, self.n])
+    }
+
+    /// Cube id from grid coordinates.
+    pub fn cube_id(&self, c: P3) -> usize {
+        c.index_in(self.dims)
+    }
+
+    /// Grid coordinates from cube id.
+    pub fn cube_coords(&self, id: usize) -> P3 {
+        P3::from_index(id, self.dims)
+    }
+
+    /// Global node id from (cube id, local coordinates).
+    pub fn node_id(&self, cube: usize, local: P3) -> usize {
+        cube * self.n * self.n * self.n + local.index_in(self.cube_ext())
+    }
+
+    /// (cube id, local coordinates) from global node id.
+    pub fn split_node(&self, node: usize) -> (usize, P3) {
+        let vol = self.n * self.n * self.n;
+        (node / vol, P3::from_index(node % vol, self.cube_ext()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let ext = P3([3, 4, 5]);
+        for p in ext.iter_box() {
+            assert_eq!(P3::from_index(p.index_in(ext), ext), p);
+        }
+    }
+
+    #[test]
+    fn torus_neighbours_wrap() {
+        let ext = P3([4, 4, 4]);
+        let p = P3([3, 0, 2]);
+        assert_eq!(p.torus_next(0, ext), P3([0, 0, 2]));
+        assert_eq!(p.torus_prev(1, ext), P3([3, 3, 2]));
+    }
+
+    #[test]
+    fn torus_distance_uses_wrap() {
+        let ext = P3([16, 16, 16]);
+        assert_eq!(P3([0, 0, 0]).torus_dist(P3([15, 0, 0]), ext), 1);
+        assert_eq!(P3([2, 2, 2]).torus_dist(P3([2, 2, 2]), ext), 0);
+        assert_eq!(P3([0, 0, 0]).torus_dist(P3([8, 8, 8]), ext), 24);
+    }
+
+    #[test]
+    fn adjacency() {
+        let ext = P3([4, 4, 4]);
+        assert!(P3([0, 0, 0]).torus_adjacent(P3([3, 0, 0]), ext));
+        assert!(!P3([0, 0, 0]).torus_adjacent(P3([1, 1, 0]), ext));
+    }
+
+    #[test]
+    fn grid_for_4096_n4() {
+        let g = CubeGrid::for_cluster(4096, 4);
+        assert_eq!(g.num_cubes(), 64);
+        assert_eq!(g.dims, P3([4, 4, 4]));
+        assert_eq!(g.num_xpus(), 4096);
+    }
+
+    #[test]
+    fn grid_for_4096_n8_and_n2() {
+        assert_eq!(CubeGrid::for_cluster(4096, 8).num_cubes(), 8);
+        assert_eq!(CubeGrid::for_cluster(4096, 2).num_cubes(), 512);
+        assert_eq!(CubeGrid::for_cluster(4096, 16).num_cubes(), 1);
+    }
+
+    #[test]
+    fn node_id_roundtrip() {
+        let g = CubeGrid::for_cluster(4096, 4);
+        for node in [0usize, 1, 63, 64, 4095, 2048] {
+            let (c, l) = g.split_node(node);
+            assert_eq!(g.node_id(c, l), node);
+        }
+    }
+
+    #[test]
+    fn volume_display() {
+        assert_eq!(P3([4, 8, 2]).volume(), 64);
+        assert_eq!(P3([4, 8, 2]).to_string(), "4x8x2");
+    }
+}

@@ -1,0 +1,25 @@
+//! Torus-cluster substrate: geometry, cubes, OCS reconfiguration, routing.
+//!
+//! Models the paper's §2 hardware: a 4096-XPU cluster built either as a
+//! static 16×16×16 torus or from `C` hardwired `N×N×N` cubes whose face
+//! ports attach to optical circuit switches (one OCS per axis × face
+//! position; the two opposing ports of a cube at the same position land on
+//! the same OCS). An OCS realizes an arbitrary permutation among the cubes'
+//! port pairs at its position: `+face(cube A) → -face(cube π(A))`, with the
+//! identity permutation meaning every cube keeps its own wrap-around link.
+//!
+//! Placement-relevant constraints modeled faithfully (paper §3.2):
+//! * only face XPUs reach an OCS — stranded core XPUs cannot be stitched;
+//! * a face port connects only to the *same position* port of another cube
+//!   (misaligned free regions cannot be joined);
+//! * wrap-around links exist only where a job spans a full composed
+//!   dimension (multiples of the cube side N).
+
+pub mod cluster;
+pub mod coords;
+pub mod ocs;
+pub mod routing;
+
+pub use cluster::{Allocation, ClusterState, ClusterTopo};
+pub use coords::{CubeGrid, P3, AXES};
+pub use ocs::{OcsState, PortKey};

@@ -1,0 +1,285 @@
+//! Optical-circuit-switch state: per-(axis, face-position) circuits.
+//!
+//! One OCS serves one `(axis, i, j)` face position across *all* cubes
+//! (paper §2: "two opposing ports at the same position are connected to the
+//! same OCS"). Its configuration maps each cube's `+axis` port to at most
+//! one cube's `-axis` port: `next[cube] = Some(cube')` (the identity
+//! `Some(cube)` is the wrap-around default; `None` is a dark port, needed
+//! when a chain ends on a partially-filled cube). The map must stay
+//! *injective* — an OCS is a crossbar, two inputs cannot drive one output.
+//!
+//! Jobs *reserve* the entries they rewire (or rely on for wrap-around
+//! rings) so concurrent jobs can never steal each other's circuits.
+
+use super::coords::CubeGrid;
+
+/// Identifies one OCS entry: the `+axis` port of `cube` at face position
+/// `(i, j)` (coordinates over the two non-axis dimensions, ascending).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct PortKey {
+    pub axis: usize,
+    pub i: usize,
+    pub j: usize,
+    pub cube: usize,
+}
+
+/// Sentinel for unreserved OCS entries.
+pub const NO_OWNER: u64 = u64::MAX;
+
+/// Full OCS plant state for a reconfigurable cluster.
+#[derive(Clone, Debug)]
+pub struct OcsState {
+    grid: CubeGrid,
+    /// `next[axis][pos][cube]`: destination of `cube`'s +axis port.
+    next: Vec<Vec<Vec<Option<usize>>>>,
+    /// Reservation owner per entry (`NO_OWNER` = free).
+    owner: Vec<Vec<Vec<u64>>>,
+}
+
+impl OcsState {
+    pub fn new(grid: CubeGrid) -> OcsState {
+        let positions = grid.n * grid.n;
+        let cubes = grid.num_cubes();
+        let ident: Vec<Option<usize>> = (0..cubes).map(Some).collect();
+        OcsState {
+            grid,
+            next: vec![vec![ident.clone(); positions]; 3],
+            owner: vec![vec![vec![NO_OWNER; cubes]; positions]; 3],
+        }
+    }
+
+    pub fn grid(&self) -> CubeGrid {
+        self.grid
+    }
+
+    #[inline]
+    fn pos_index(&self, i: usize, j: usize) -> usize {
+        i * self.grid.n + j
+    }
+
+    /// Destination cube of `cube`'s +axis port at face position (i, j).
+    pub fn next_cube(&self, key: PortKey) -> Option<usize> {
+        self.next[key.axis][self.pos_index(key.i, key.j)][key.cube]
+    }
+
+    /// Is this entry currently in its wrap-around (identity) state?
+    pub fn is_wrap(&self, key: PortKey) -> bool {
+        self.next_cube(key) == Some(key.cube)
+    }
+
+    /// Reservation owner of an entry (NO_OWNER if free).
+    pub fn owner(&self, key: PortKey) -> u64 {
+        self.owner[key.axis][self.pos_index(key.i, key.j)][key.cube]
+    }
+
+    pub fn is_free(&self, key: PortKey) -> bool {
+        self.owner(key) == NO_OWNER
+    }
+
+    /// Would connecting `cubes[k] → cubes[k+1]` (cyclically when `closed`)
+    /// at this (axis, i, j) be legal? Every touched entry must be
+    /// unreserved and still in wrap state (so the rewire cannot disturb a
+    /// third party's circuit).
+    pub fn can_reserve_path(
+        &self,
+        axis: usize,
+        i: usize,
+        j: usize,
+        cubes: &[usize],
+    ) -> bool {
+        cubes.iter().all(|&c| {
+            let k = PortKey { axis, i, j, cube: c };
+            self.is_free(k) && self.is_wrap(k)
+        })
+    }
+
+    /// Rewire `cubes[0] → cubes[1] → ...` at (axis, i, j), closing the
+    /// cycle back to `cubes[0]` when `closed`, and reserve every touched
+    /// entry for `job`.
+    ///
+    /// An open path leaves the last cube's +port dark (it ends on a
+    /// partial piece whose far face is interior). A single-cube closed
+    /// path reserves the cube's wrap-around circuit without rewiring.
+    pub fn reserve_path(
+        &mut self,
+        axis: usize,
+        i: usize,
+        j: usize,
+        cubes: &[usize],
+        closed: bool,
+        job: u64,
+    ) -> Result<(), OcsError> {
+        if !self.can_reserve_path(axis, i, j, cubes) {
+            return Err(OcsError::Conflict { axis, i, j });
+        }
+        let pos = self.pos_index(i, j);
+        let k = cubes.len();
+        for idx in 0..k {
+            let from = cubes[idx];
+            self.owner[axis][pos][from] = job;
+            if idx + 1 < k {
+                self.next[axis][pos][from] = Some(cubes[idx + 1]);
+            } else if closed {
+                self.next[axis][pos][from] = Some(cubes[0]);
+            } else {
+                self.next[axis][pos][from] = None; // dark
+            }
+        }
+        Ok(())
+    }
+
+    /// Release every entry owned by `job`, restoring wrap-around state.
+    pub fn release_job(&mut self, job: u64) {
+        for axis in 0..3 {
+            for pos in 0..self.grid.n * self.grid.n {
+                for cube in 0..self.grid.num_cubes() {
+                    if self.owner[axis][pos][cube] == job {
+                        self.owner[axis][pos][cube] = NO_OWNER;
+                        self.next[axis][pos][cube] = Some(cube);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of entries currently rewired away from wrap-around.
+    pub fn rewired_entries(&self) -> usize {
+        let mut n = 0;
+        for axis in 0..3 {
+            for pos in 0..self.grid.n * self.grid.n {
+                for cube in 0..self.grid.num_cubes() {
+                    if self.next[axis][pos][cube] != Some(cube) {
+                        n += 1;
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// Number of entries reserved by any job.
+    pub fn reserved_entries(&self) -> usize {
+        self.owner
+            .iter()
+            .flat_map(|a| a.iter())
+            .flat_map(|p| p.iter())
+            .filter(|&&o| o != NO_OWNER)
+            .count()
+    }
+
+    /// Crossbar invariant: destinations are injective per OCS, and every
+    /// unreserved entry sits in wrap state. Used by property tests.
+    pub fn check_invariants(&self) -> bool {
+        let cubes = self.grid.num_cubes();
+        for axis in 0..3 {
+            for pos in 0..self.grid.n * self.grid.n {
+                let mut seen = vec![false; cubes];
+                for cube in 0..cubes {
+                    if self.owner[axis][pos][cube] == NO_OWNER
+                        && self.next[axis][pos][cube] != Some(cube)
+                    {
+                        return false;
+                    }
+                    if let Some(d) = self.next[axis][pos][cube] {
+                        if d >= cubes || seen[d] {
+                            return false;
+                        }
+                        seen[d] = true;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// OCS reservation failures.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum OcsError {
+    #[error("OCS conflict at axis {axis} position ({i},{j})")]
+    Conflict { axis: usize, i: usize, j: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::coords::CubeGrid;
+
+    fn ocs() -> OcsState {
+        OcsState::new(CubeGrid::for_cluster(512, 4)) // 8 cubes of 4^3
+    }
+
+    #[test]
+    fn starts_all_wrap_and_free() {
+        let o = ocs();
+        assert_eq!(o.rewired_entries(), 0);
+        assert_eq!(o.reserved_entries(), 0);
+        assert!(o.check_invariants());
+    }
+
+    #[test]
+    fn closed_path_forms_cycle() {
+        let mut o = ocs();
+        o.reserve_path(2, 1, 1, &[0, 3, 5], true, 7).unwrap();
+        let k = |c| PortKey { axis: 2, i: 1, j: 1, cube: c };
+        assert_eq!(o.next_cube(k(0)), Some(3));
+        assert_eq!(o.next_cube(k(3)), Some(5));
+        assert_eq!(o.next_cube(k(5)), Some(0));
+        assert!(o.check_invariants());
+        assert_eq!(o.reserved_entries(), 3);
+    }
+
+    #[test]
+    fn open_path_leaves_dark_port() {
+        let mut o = ocs();
+        o.reserve_path(0, 2, 2, &[1, 4, 6], false, 9).unwrap();
+        let k = |c| PortKey { axis: 0, i: 2, j: 2, cube: c };
+        assert_eq!(o.next_cube(k(1)), Some(4));
+        assert_eq!(o.next_cube(k(4)), Some(6));
+        assert_eq!(o.next_cube(k(6)), None);
+        assert!(o.check_invariants());
+    }
+
+    #[test]
+    fn conflicting_reservation_rejected() {
+        let mut o = ocs();
+        o.reserve_path(0, 0, 0, &[1, 2], true, 7).unwrap();
+        let err = o.reserve_path(0, 0, 0, &[2, 4], true, 9).unwrap_err();
+        assert_eq!(err, OcsError::Conflict { axis: 0, i: 0, j: 0 });
+        // Different position is fine.
+        o.reserve_path(0, 0, 1, &[2, 4], true, 9).unwrap();
+        assert!(o.check_invariants());
+    }
+
+    #[test]
+    fn single_cube_reserves_wraparound() {
+        let mut o = ocs();
+        o.reserve_path(1, 2, 3, &[6], true, 42).unwrap();
+        let k = PortKey { axis: 1, i: 2, j: 3, cube: 6 };
+        assert!(o.is_wrap(k));
+        assert!(!o.is_free(k));
+        assert!(o.reserve_path(1, 2, 3, &[6, 7], true, 43).is_err());
+    }
+
+    #[test]
+    fn release_restores_wrap() {
+        let mut o = ocs();
+        o.reserve_path(0, 0, 0, &[0, 1, 2, 3], true, 5).unwrap();
+        o.reserve_path(1, 0, 0, &[4, 5], false, 5).unwrap();
+        assert!(o.rewired_entries() > 0);
+        o.release_job(5);
+        assert_eq!(o.rewired_entries(), 0);
+        assert_eq!(o.reserved_entries(), 0);
+        assert!(o.check_invariants());
+    }
+
+    #[test]
+    fn release_is_job_scoped() {
+        let mut o = ocs();
+        o.reserve_path(0, 0, 0, &[0, 1], true, 5).unwrap();
+        o.reserve_path(0, 1, 1, &[2, 3], true, 6).unwrap();
+        o.release_job(5);
+        assert_eq!(o.reserved_entries(), 2);
+        assert!(!o.is_free(PortKey { axis: 0, i: 1, j: 1, cube: 2 }));
+    }
+}

@@ -1,0 +1,244 @@
+//! Dimension-order routing (DOR) and per-link load accounting.
+//!
+//! Torus clusters route X-then-Y-then-Z with shortest wrap direction
+//! (paper §2 cites balanced DOR). Link loads drive the contention model:
+//! the best-effort policy's scattered rings traverse links adjacent to
+//! other jobs' nodes, and the §3.1 motivation experiment reproduces the
+//! measured slowdowns from exactly this accounting.
+
+use super::coords::P3;
+
+/// Per-link load field over a torus of extent `ext`: `load[axis][node]` is
+/// the traffic (arbitrary units) on the link from `node` towards its +axis
+/// neighbour. Both directions of a physical cable share one entry — ring
+/// collectives load both directions symmetrically.
+#[derive(Clone, Debug)]
+pub struct LinkLoads {
+    pub ext: P3,
+    /// Wrap-around cables exist per axis (torus) or not (mesh slice, like
+    /// the §3.1 2×2 TPU v2 grid).
+    pub wrap: [bool; 3],
+    load: Vec<f64>, // [3 * ext.volume()], axis-major
+}
+
+impl LinkLoads {
+    pub fn new(ext: P3) -> LinkLoads {
+        LinkLoads {
+            ext,
+            wrap: [true; 3],
+            load: vec![0.0; 3 * ext.volume()],
+        }
+    }
+
+    /// Mesh (no wrap-around cables): routes take the in-grid direction.
+    pub fn new_mesh(ext: P3) -> LinkLoads {
+        LinkLoads {
+            ext,
+            wrap: [false; 3],
+            load: vec![0.0; 3 * ext.volume()],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, axis: usize, p: P3) -> usize {
+        axis * self.ext.volume() + p.index_in(self.ext)
+    }
+
+    pub fn get(&self, axis: usize, p: P3) -> f64 {
+        self.load[self.idx(axis, p)]
+    }
+
+    pub fn add(&mut self, axis: usize, p: P3, amount: f64) {
+        let i = self.idx(axis, p);
+        self.load[i] += amount;
+    }
+
+    /// Maximum load on any link of the whole fabric.
+    pub fn max_load(&self) -> f64 {
+        self.load.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Flatten to f32 in the `[3][X][Y][Z]` layout the contention-scorer
+    /// artifact expects.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.load.iter().map(|&l| l as f32).collect()
+    }
+
+    /// Apply `f` to every link on the DOR path from `a` to `b`, stepping
+    /// the shorter wrap direction per axis, X then Y then Z.
+    pub fn for_path<F: FnMut(&mut LinkLoads, usize, P3)>(
+        &mut self,
+        a: P3,
+        b: P3,
+        mut f: F,
+    ) {
+        let mut cur = a;
+        for axis in 0..3 {
+            while cur.0[axis] != b.0[axis] {
+                let size = self.ext.0[axis];
+                let fwd = (b.0[axis] + size - cur.0[axis]) % size;
+                let bwd = size - fwd;
+                let go_fwd = if !self.wrap[axis] {
+                    b.0[axis] > cur.0[axis] // mesh: monotone in-grid walk
+                } else {
+                    fwd <= bwd
+                };
+                if go_fwd {
+                    // +axis step: link belongs to `cur`.
+                    f(self, axis, cur);
+                    cur = cur.torus_next(axis, self.ext);
+                } else {
+                    // -axis step: link belongs to the predecessor.
+                    let prev = cur.torus_prev(axis, self.ext);
+                    f(self, axis, prev);
+                    cur = prev;
+                }
+            }
+        }
+    }
+
+    /// Add `amount` of traffic along the DOR path a→b. Returns hop count.
+    pub fn add_path(&mut self, a: P3, b: P3, amount: f64) -> usize {
+        let mut hops = 0;
+        self.for_path(a, b, |s, axis, p| {
+            s.add(axis, p, amount);
+            hops += 1;
+        });
+        hops
+    }
+
+    /// Maximum load over the links of the DOR path a→b (0 if a == b).
+    pub fn path_max(&mut self, a: P3, b: P3) -> f64 {
+        let mut mx: f64 = 0.0;
+        self.for_path(a, b, |s, axis, p| {
+            mx = mx.max(s.get(axis, p));
+        });
+        mx
+    }
+
+    /// The distinct cables (axis, owning node) a DOR path traverses.
+    pub fn path_cables(&mut self, a: P3, b: P3) -> Vec<(usize, P3)> {
+        let mut out = Vec::new();
+        self.for_path(a, b, |_, axis, p| out.push((axis, p)));
+        out
+    }
+
+    /// The distinct cables of a whole ring (deduplicated — a 2-ring's two
+    /// edges traverse the same cable once for load purposes: ring
+    /// collectives stream each cable bidirectionally as one unit).
+    pub fn ring_cables(&mut self, members: &[P3]) -> Vec<(usize, P3)> {
+        let mut set = std::collections::BTreeSet::new();
+        if members.len() >= 2 {
+            for w in 0..members.len() {
+                let a = members[w];
+                let b = members[(w + 1) % members.len()];
+                for c in self.path_cables(a, b) {
+                    set.insert(c);
+                }
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Load a logical ring over `members`: every *distinct* cable on its
+    /// DOR paths carries `unit` traffic.
+    pub fn add_ring(&mut self, members: &[P3], unit: f64) {
+        for (axis, p) in self.ring_cables(members) {
+            self.add(axis, p, unit);
+        }
+    }
+}
+
+/// Hop count of the DOR path (shortest-wrap Manhattan distance).
+pub fn dor_hops(a: P3, b: P3, ext: P3) -> usize {
+    a.torus_dist(b, ext)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straight_path_loads_each_link_once() {
+        let ext = P3([8, 8, 8]);
+        let mut l = LinkLoads::new(ext);
+        let hops = l.add_path(P3([0, 0, 0]), P3([3, 0, 0]), 1.0);
+        assert_eq!(hops, 3);
+        assert_eq!(l.get(0, P3([0, 0, 0])), 1.0);
+        assert_eq!(l.get(0, P3([1, 0, 0])), 1.0);
+        assert_eq!(l.get(0, P3([2, 0, 0])), 1.0);
+        assert_eq!(l.get(0, P3([3, 0, 0])), 0.0);
+    }
+
+    #[test]
+    fn wrap_direction_is_shorter() {
+        let ext = P3([8, 1, 1]);
+        let mut l = LinkLoads::new(ext);
+        // 0 → 6 should go backwards over the wrap link (2 hops, via 7).
+        let hops = l.add_path(P3([0, 0, 0]), P3([6, 0, 0]), 1.0);
+        assert_eq!(hops, 2);
+        assert_eq!(l.get(0, P3([7, 0, 0])), 1.0); // link 7→0 (wrap)
+        assert_eq!(l.get(0, P3([6, 0, 0])), 1.0); // link 6→7
+    }
+
+    #[test]
+    fn dor_goes_x_then_y() {
+        let ext = P3([4, 4, 1]);
+        let mut l = LinkLoads::new(ext);
+        l.add_path(P3([0, 0, 0]), P3([1, 1, 0]), 1.0);
+        // X first: link at (0,0) axis 0; then Y at (1,0) axis 1.
+        assert_eq!(l.get(0, P3([0, 0, 0])), 1.0);
+        assert_eq!(l.get(1, P3([1, 0, 0])), 1.0);
+        assert_eq!(l.get(1, P3([0, 0, 0])), 0.0);
+    }
+
+    #[test]
+    fn hops_match_torus_distance() {
+        let ext = P3([16, 16, 16]);
+        let mut l = LinkLoads::new(ext);
+        let cases = [
+            (P3([0, 0, 0]), P3([15, 15, 15])),
+            (P3([1, 2, 3]), P3([9, 4, 12])),
+            (P3([5, 5, 5]), P3([5, 5, 5])),
+        ];
+        for (a, b) in cases {
+            assert_eq!(l.add_path(a, b, 0.0), dor_hops(a, b, ext));
+        }
+    }
+
+    #[test]
+    fn ring_on_a_row_loads_row_links() {
+        let ext = P3([4, 4, 4]);
+        let mut l = LinkLoads::new(ext);
+        let members: Vec<P3> = (0..4).map(|x| P3([x, 0, 0])).collect();
+        l.add_ring(&members, 1.0);
+        // Closed ring over a full dimension: every row link carries exactly
+        // one unit (3 forward hops + 1 wrap hop).
+        for x in 0..4 {
+            assert_eq!(l.get(0, P3([x, 0, 0])), 1.0);
+        }
+        assert_eq!(l.max_load(), 1.0);
+    }
+
+    #[test]
+    fn diagonal_jobs_share_a_link() {
+        // The §3.1 motivation setup: two 2-XPU jobs on the two diagonals of
+        // a 2×2 grid (mesh — a TPU v2 slice has no wrap cables) must share
+        // links.
+        let ext = P3([2, 2, 1]);
+        let mut l = LinkLoads::new_mesh(ext);
+        l.add_ring(&[P3([0, 0, 0]), P3([1, 1, 0])], 1.0);
+        l.add_ring(&[P3([1, 0, 0]), P3([0, 1, 0])], 1.0);
+        assert!(l.max_load() >= 2.0, "diagonals must contend");
+    }
+
+    #[test]
+    fn path_max_reads_without_adding() {
+        let ext = P3([4, 1, 1]);
+        let mut l = LinkLoads::new(ext);
+        l.add(0, P3([1, 0, 0]), 3.0);
+        assert_eq!(l.path_max(P3([0, 0, 0]), P3([2, 0, 0])), 3.0);
+        // unchanged
+        assert_eq!(l.get(0, P3([0, 0, 0])), 0.0);
+    }
+}

@@ -1,0 +1,355 @@
+//! The synthetic trace generator (paper §4).
+
+use super::JobSpec;
+use crate::shape::JobShape;
+use crate::util::Pcg64;
+
+/// Shape-generation rule of thumb (§4): "small jobs (≤256 XPUs) are more
+/// likely to have a shape of 1D or 2D, while large jobs (>256) are usually
+/// 2D or 3D in shape".
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeRule {
+    /// Size boundary between "small" and "large".
+    pub small_cutoff: usize,
+    /// P(1D), P(2D) for small jobs (3D gets the rest).
+    pub small_p1: f64,
+    pub small_p2: f64,
+    /// P(1D), P(2D) for large jobs.
+    pub large_p1: f64,
+    pub large_p2: f64,
+    /// 2D factorization class weights:
+    /// [blocky (all dims ≤ 16), one-long (one dim 17..=64),
+    ///  one-xlong (one dim ≥ 65), two-long (two dims ≥ 17)].
+    /// Production jobs are mostly elongated (a large DP or TP degree on a
+    /// narrow second dimension) — which is what makes the static 16³
+    /// torus hard (FirstFit ≈ 10%) and what separates the policies: the
+    /// xlong class exceeds the longest 8-cube chain (64) so only folding
+    /// or finer cubes can host it.
+    pub w2d: [f64; 4],
+    /// 3D class weights: [blocky, long (max dim 17..=64), xlong (≥ 65)].
+    pub w3d: [f64; 3],
+    /// Relative weight of shapes whose communicating dimensions are all
+    /// even vs. shapes with an odd dimension. Real DP/TP/PP degrees are
+    /// overwhelmingly even (powers of two dominate ML parallelism plans,
+    /// §2), and evenness is exactly what makes a dimension foldable.
+    pub even_weight: f64,
+    /// Cap on any shape dimension. The paper's generator must bound this
+    /// for Reconfig(4³) to reach 100% JCR (Table 1); 64 is the largest
+    /// dimension composable from 16 chained 4³ cubes that still leaves
+    /// cubes for the other axes (see DESIGN.md §4).
+    pub max_dim: usize,
+    /// Reject shapes needing more than this many 4³ cubes (∏⌈dᵢ/4⌉).
+    /// 64 = the whole 4096-XPU cluster; keeps every generated job
+    /// placeable-on-empty for Reconfig(4³), matching Table 1's 100% row.
+    pub max_cubes4: usize,
+}
+
+impl Default for ShapeRule {
+    fn default() -> Self {
+        ShapeRule {
+            small_cutoff: 256,
+            small_p1: 0.35,
+            small_p2: 0.60,
+            large_p1: 0.02,
+            large_p2: 0.55,
+            w2d: [0.04, 0.07, 0.65, 0.24],
+            w3d: [0.13, 0.60, 0.27],
+            even_weight: 3.5,
+            max_dim: 256,
+            max_cubes4: 64,
+        }
+    }
+}
+
+/// Full trace-generation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub num_jobs: usize,
+    /// Mean inter-arrival time (s) during bursts. Philly arrivals are
+    /// strongly bursty (Jeon et al., ATC'19): trains of quick submissions
+    /// separated by long lulls.
+    pub mean_interarrival: f64,
+    /// Probability an arrival continues the current burst; otherwise the
+    /// gap is drawn from the lull distribution.
+    pub burst_prob: f64,
+    /// Mean lull gap (s) between bursts.
+    pub mean_lull: f64,
+    /// Log-normal duration parameters (Philly: median ≈ 13 min, heavy
+    /// tail up to weeks — Jeon et al., ATC'19).
+    pub dur_mu: f64,
+    pub dur_sigma: f64,
+    pub dur_min: f64,
+    pub dur_max: f64,
+    /// Truncated-exponential size scale on [1, 4096] (§4).
+    pub size_scale: f64,
+    /// Probability that a sampled size is rounded to a multiple of 8 —
+    /// real accelerator allocations cluster on multiples of the host size
+    /// (Philly/PAI both show strong 8/16-GPU modes), and round sizes are
+    /// what make shapes foldable.
+    pub round8_prob: f64,
+    pub shape_rule: ShapeRule,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            num_jobs: 512,
+            mean_interarrival: 500.0,
+            burst_prob: 0.25,
+            mean_lull: 3800.0,
+            dur_mu: (800.0f64).ln(),
+            dur_sigma: 2.0,
+            dur_min: 60.0,
+            dur_max: 30.0 * 86_400.0,
+            size_scale: 400.0,
+            round8_prob: 0.75,
+            shape_rule: ShapeRule::default(),
+            seed: 1,
+        }
+    }
+}
+
+/// Cost of a shape in 4³ cubes (the Reconfig(4³) feasibility measure).
+fn cubes4(s: JobShape) -> usize {
+    s.dims().0.iter().map(|&d| d.div_ceil(4)).product()
+}
+
+/// Classify a factorization by dimensionality.
+fn dimensionality(s: JobShape) -> usize {
+    s.dimensionality().max(1)
+}
+
+/// Generate the job shape for a given size following the §4 rule of thumb.
+/// Returns `None` when the size admits no acceptable factorization (the
+/// caller then adjusts the size).
+pub fn shape_for_size(rng: &mut Pcg64, size: usize, rule: &ShapeRule) -> Option<JobShape> {
+    let all = JobShape::factorizations(size, rule.max_dim);
+    let ok: Vec<JobShape> = all
+        .into_iter()
+        .filter(|s| cubes4(*s) <= rule.max_cubes4)
+        .collect();
+    if ok.is_empty() {
+        return None;
+    }
+    let (p1, p2) = if size <= rule.small_cutoff {
+        (rule.small_p1, rule.small_p2)
+    } else {
+        (rule.large_p1, rule.large_p2)
+    };
+    let u = rng.f64();
+    let want = if u < p1 {
+        1
+    } else if u < p1 + p2 {
+        2
+    } else {
+        3
+    };
+    // Prefer the requested dimensionality; fall back to the nearest one
+    // that exists for this size ("if a job size can be factorized into
+    // multiple shapes, we select one uniformly at random" — within the
+    // elongation class sampled from the rule's weights).
+    let long_dims = |s: &JobShape| s.dims().0.iter().filter(|&&d| d > 16).count();
+    for d in [want, want.max(2).min(3), 2, 1, 3] {
+        let of_d: Vec<JobShape> =
+            ok.iter().copied().filter(|s| dimensionality(*s) == d).collect();
+        if of_d.is_empty() {
+            continue;
+        }
+        // Sample an elongation class, renormalized over non-empty ones.
+        let max_dim = |s: &JobShape| *s.dims().0.iter().max().unwrap();
+        let classes: Vec<Vec<JobShape>> = match d {
+            2 => vec![
+                of_d.iter().copied().filter(|s| long_dims(s) == 0).collect(),
+                of_d
+                    .iter()
+                    .copied()
+                    .filter(|s| long_dims(s) == 1 && max_dim(s) <= 64)
+                    .collect(),
+                of_d
+                    .iter()
+                    .copied()
+                    .filter(|s| long_dims(s) == 1 && max_dim(s) > 64)
+                    .collect(),
+                of_d.iter().copied().filter(|s| long_dims(s) >= 2).collect(),
+            ],
+            3 => vec![
+                of_d.iter().copied().filter(|s| long_dims(s) == 0).collect(),
+                of_d
+                    .iter()
+                    .copied()
+                    .filter(|s| long_dims(s) >= 1 && max_dim(s) <= 64)
+                    .collect(),
+                of_d
+                    .iter()
+                    .copied()
+                    .filter(|s| max_dim(s) > 64)
+                    .collect(),
+            ],
+            _ => vec![of_d.clone()],
+        };
+        let weights: Vec<f64> = match d {
+            2 => rule.w2d.to_vec(),
+            3 => rule.w3d.to_vec(),
+            _ => vec![1.0],
+        };
+        let total: f64 = classes
+            .iter()
+            .zip(&weights)
+            .filter(|(c, _)| !c.is_empty())
+            .map(|(_, w)| w)
+            .sum();
+        if total > 0.0 {
+            let mut u = rng.f64() * total;
+            for (c, w) in classes.iter().zip(&weights) {
+                if c.is_empty() {
+                    continue;
+                }
+                if u < *w {
+                    return Some(weighted_even_choice(rng, c, rule.even_weight));
+                }
+                u -= w;
+            }
+        }
+        return Some(weighted_even_choice(rng, &of_d, rule.even_weight));
+    }
+    Some(weighted_even_choice(rng, &ok, rule.even_weight))
+}
+
+/// Choose a shape, weighting all-even-dimension shapes by `even_weight`
+/// (communicating dims only; size-1 dims are ignored).
+fn weighted_even_choice(rng: &mut Pcg64, shapes: &[JobShape], even_weight: f64) -> JobShape {
+    debug_assert!(!shapes.is_empty());
+    let w = |s: &JobShape| {
+        if s.dims().0.iter().all(|&d| d == 1 || d % 2 == 0) {
+            even_weight
+        } else {
+            1.0
+        }
+    };
+    let total: f64 = shapes.iter().map(w).sum();
+    let mut u = rng.f64() * total;
+    for s in shapes {
+        let ws = w(s);
+        if u < ws {
+            return *s;
+        }
+        u -= ws;
+    }
+    *shapes.last().unwrap()
+}
+
+/// Generate a full trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
+    let mut rng = Pcg64::new(cfg.seed, 0x7ace);
+    let mut out = Vec::with_capacity(cfg.num_jobs);
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    while out.len() < cfg.num_jobs {
+        t += if rng.chance(cfg.burst_prob) {
+            rng.exponential(cfg.mean_interarrival)
+        } else {
+            rng.exponential(cfg.mean_lull)
+        };
+        let duration = rng
+            .lognormal(cfg.dur_mu, cfg.dur_sigma)
+            .clamp(cfg.dur_min, cfg.dur_max);
+        // Sample size; walk down until a shapeable size is found (primes
+        // above the dim cap, for example, are unshapeable).
+        let mut size = rng.trunc_exponential(cfg.size_scale, 1.0, 4096.0).round() as usize;
+        size = size.clamp(1, 4096);
+        if size >= 8 && rng.chance(cfg.round8_prob) {
+            size = (size + 4) / 8 * 8; // nearest multiple of 8
+        }
+        let shape = loop {
+            match shape_for_size(&mut rng, size, &cfg.shape_rule) {
+                Some(s) => break s,
+                None => size -= 1, // size 1 always factorizes: terminates
+            }
+        };
+        let comm_frac = 0.1 + 0.4 * rng.f64();
+        out.push(JobSpec {
+            id,
+            arrival: t,
+            duration,
+            shape,
+            comm_frac,
+        });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig { num_jobs: 50, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b);
+        let c = generate(&TraceConfig { seed: 2, ..cfg });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let t = generate(&TraceConfig { num_jobs: 100, ..Default::default() });
+        for w in t.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn sizes_and_durations_in_range() {
+        let cfg = TraceConfig { num_jobs: 300, ..Default::default() };
+        for j in generate(&cfg) {
+            assert!((1..=4096).contains(&j.size()));
+            assert!(j.duration >= cfg.dur_min && j.duration <= cfg.dur_max);
+            assert!((0.1..=0.5).contains(&j.comm_frac));
+        }
+    }
+
+    #[test]
+    fn all_jobs_fit_reconfig4_on_empty() {
+        // The Table 1 invariant: every generated job needs ≤ 64 4³ cubes.
+        let t = generate(&TraceConfig { num_jobs: 400, ..Default::default() });
+        for j in t {
+            assert!(cubes4(j.shape) <= 64, "{} needs {} cubes", j.shape, cubes4(j.shape));
+        }
+    }
+
+    #[test]
+    fn small_jobs_skew_low_dimensional() {
+        let t = generate(&TraceConfig { num_jobs: 2000, seed: 9, ..Default::default() });
+        let small: Vec<_> = t.iter().filter(|j| j.size() <= 256 && j.size() > 1).collect();
+        let large: Vec<_> = t.iter().filter(|j| j.size() > 256).collect();
+        assert!(!small.is_empty() && !large.is_empty());
+        let frac_3d = |v: &[&JobSpec]| {
+            v.iter().filter(|j| j.shape.dimensionality() == 3).count() as f64 / v.len() as f64
+        };
+        assert!(
+            frac_3d(&large) > frac_3d(&small),
+            "large jobs must be more often 3D: {} vs {}",
+            frac_3d(&large),
+            frac_3d(&small)
+        );
+    }
+
+    #[test]
+    fn shape_for_size_respects_caps() {
+        let mut rng = Pcg64::seeded(3);
+        let rule = ShapeRule::default();
+        for size in [1usize, 7, 64, 100, 512, 4096, 4093] {
+            if let Some(s) = shape_for_size(&mut rng, size, &rule) {
+                assert_eq!(s.size(), size);
+                assert!(s.dims().0.iter().all(|&d| d <= rule.max_dim));
+                assert!(cubes4(s) <= rule.max_cubes4);
+            }
+        }
+        // A large prime can't be shaped under the cap.
+        assert!(shape_for_size(&mut rng, 4093, &rule).is_none());
+    }
+}

@@ -1,0 +1,90 @@
+//! Trace CSV I/O: `id,arrival,duration,a,b,c,comm_frac` — a drop-in slot
+//! for real (e.g. Philly-derived) traces.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use super::JobSpec;
+use crate::shape::JobShape;
+
+/// Serialize a trace to CSV (with header).
+pub fn write_csv(path: &Path, trace: &[JobSpec]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "id,arrival,duration,a,b,c,comm_frac")?;
+    for j in trace {
+        let d = j.shape.dims();
+        writeln!(
+            f,
+            "{},{:.3},{:.3},{},{},{},{:.4}",
+            j.id, j.arrival, j.duration, d.0[0], d.0[1], d.0[2], j.comm_frac
+        )?;
+    }
+    Ok(())
+}
+
+/// Parse a trace from CSV (header required).
+pub fn read_csv(path: &Path) -> std::io::Result<Vec<JobSpec>> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    for (lineno, line) in f.lines().enumerate() {
+        let line = line?;
+        if lineno == 0 || line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.trim().split(',').collect();
+        if cols.len() != 7 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: expected 7 columns, got {}", lineno + 1, cols.len()),
+            ));
+        }
+        let parse_err = |what: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: bad {what}", lineno + 1),
+            )
+        };
+        out.push(JobSpec {
+            id: cols[0].parse().map_err(|_| parse_err("id"))?,
+            arrival: cols[1].parse().map_err(|_| parse_err("arrival"))?,
+            duration: cols[2].parse().map_err(|_| parse_err("duration"))?,
+            shape: JobShape::new(
+                cols[3].parse().map_err(|_| parse_err("a"))?,
+                cols[4].parse().map_err(|_| parse_err("b"))?,
+                cols[5].parse().map_err(|_| parse_err("c"))?,
+            ),
+            comm_frac: cols[6].parse().map_err(|_| parse_err("comm_frac"))?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{generate, TraceConfig};
+
+    #[test]
+    fn roundtrip() {
+        let trace = generate(&TraceConfig { num_jobs: 40, ..Default::default() });
+        let tmp = std::env::temp_dir().join("rfold_trace_test.csv");
+        write_csv(&tmp, &trace).unwrap();
+        let back = read_csv(&tmp).unwrap();
+        assert_eq!(trace.len(), back.len());
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.shape, b.shape);
+            assert!((a.arrival - b.arrival).abs() < 1e-3);
+            assert!((a.duration - b.duration).abs() < 1e-3);
+        }
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let tmp = std::env::temp_dir().join("rfold_trace_bad.csv");
+        std::fs::write(&tmp, "id,arrival\n1,2\n").unwrap();
+        assert!(read_csv(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

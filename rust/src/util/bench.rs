@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs binaries with `harness = false`; they use this module
+//! to time closures with warmup, report mean/p50/p99 per iteration, and
+//! print machine-greppable `BENCH` lines consumed by EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "BENCH {:<48} iters={:<6} mean={:>12} p50={:>12} p99={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+/// A black-box sink prevents the optimizer from deleting the work: have `f`
+/// return something and it is consumed via `std::hint::black_box`.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile(&samples, 50.0),
+        p99_ns: crate::util::stats::percentile(&samples, 99.0),
+    };
+    r.print();
+    r
+}
+
+/// Print a section header so bench output reads like the paper's tables.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 10, || {
+            (0..100u64).sum::<u64>()
+        });
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5_000_000_000.0).ends_with('s'));
+    }
+}

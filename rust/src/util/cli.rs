@@ -1,0 +1,131 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclude argv[0]).
+    /// `flag_names` lists option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.opts.insert(body.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments after the subcommand position.
+    pub fn from_env(skip: usize, flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(skip), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = args(&["--seed", "42", "--policy=rfold", "tracefile"]);
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get("policy"), Some("rfold"));
+        assert_eq!(a.positional(0), Some("tracefile"));
+    }
+
+    #[test]
+    fn flags() {
+        let a = args(&["--verbose", "--runs", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("runs", 1), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args(&["--runs", "3", "--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn adjacent_flags() {
+        let a = args(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.get_usize("runs", 7), 7);
+        assert_eq!(a.get_f64("scale", 1.5), 1.5);
+        assert_eq!(a.get_str("name", "dflt"), "dflt");
+    }
+}

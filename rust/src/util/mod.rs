@@ -1,0 +1,11 @@
+//! In-tree replacements for crates unavailable in this offline environment
+//! (rand, serde, clap, criterion, proptest) plus shared numeric helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;

@@ -1,0 +1,70 @@
+//! Lightweight property-based testing (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` seeded random inputs; on failure it
+//! reports the failing seed so the case replays deterministically:
+//!
+//! ```
+//! use rfold::util::prop;
+//! prop::check("sum is commutative", 100, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     prop::expect(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use crate::util::Pcg64;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper returning a `PropResult`.
+pub fn expect(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` for `cases` deterministic cases. Panics (with the replay
+/// seed) on the first failure. Base seed can be overridden with the
+/// `RFOLD_PROP_SEED` environment variable to replay a specific failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> PropResult,
+{
+    let base: u64 = std::env::var("RFOLD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Pcg64::new(seed, 0xA5A5u64 + case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with RFOLD_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("below stays below", 50, |rng| {
+            let n = rng.range(1, 100);
+            let x = rng.below(n);
+            expect(x < n, format!("x={x} n={n}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,179 @@
+//! Small statistics helpers shared by metrics, benches and tests.
+
+/// Linear-interpolation percentile (same convention as numpy's default).
+/// `p` in [0, 100]. Returns NaN for an empty slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Sort a copy and take a percentile.
+pub fn percentile_of(values: &[f64], p: f64) -> f64 {
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&v, p)
+}
+
+/// Arithmetic mean; NaN for empty input.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    (values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / values.len() as f64).sqrt()
+}
+
+/// An empirical CDF over weighted samples (used for the utilization
+/// time-series, where the weight of a sample is the wall-clock time the
+/// cluster spent at that utilization level).
+#[derive(Clone, Debug, Default)]
+pub struct WeightedCdf {
+    /// (value, weight) pairs, unsorted until query time.
+    samples: Vec<(f64, f64)>,
+}
+
+impl WeightedCdf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, value: f64, weight: f64) {
+        if weight > 0.0 {
+            self.samples.push((value, weight));
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.samples.iter().map(|s| s.1).sum()
+    }
+
+    /// Value at the given cumulative fraction `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total: f64 = s.iter().map(|x| x.1).sum();
+        let target = q.clamp(0.0, 1.0) * total;
+        let mut acc = 0.0;
+        for (v, w) in &s {
+            acc += w;
+            if acc >= target {
+                return *v;
+            }
+        }
+        s.last().unwrap().0
+    }
+
+    /// Weighted mean of the sample values.
+    pub fn mean(&self) -> f64 {
+        let total = self.total_weight();
+        if total == 0.0 {
+            return f64::NAN;
+        }
+        self.samples.iter().map(|(v, w)| v * w).sum::<f64>() / total
+    }
+
+    /// Evaluate the CDF at a grid of `n+1` evenly spaced quantiles
+    /// (q=0/n .. n/n) — the series plotted in Figure 4.
+    pub fn curve(&self, n: usize) -> Vec<(f64, f64)> {
+        (0..=n)
+            .map(|i| {
+                let q = i as f64 / n as f64;
+                (q, self.quantile(q))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&v, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_of_unsorted() {
+        assert_eq!(percentile_of(&[5.0, 1.0, 3.0], 50.0), 3.0);
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&v) - 5.0).abs() < 1e-12);
+        assert!((stddev(&v) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_cdf_quantiles() {
+        let mut cdf = WeightedCdf::new();
+        cdf.push(0.0, 1.0);
+        cdf.push(1.0, 1.0);
+        cdf.push(2.0, 2.0);
+        assert_eq!(cdf.quantile(0.0), 0.0);
+        assert_eq!(cdf.quantile(0.25), 0.0);
+        assert_eq!(cdf.quantile(0.5), 1.0);
+        assert_eq!(cdf.quantile(1.0), 2.0);
+        assert!((cdf.mean() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_cdf_ignores_zero_weight() {
+        let mut cdf = WeightedCdf::new();
+        cdf.push(5.0, 0.0);
+        assert!(cdf.is_empty());
+    }
+
+    #[test]
+    fn curve_is_monotone() {
+        let mut cdf = WeightedCdf::new();
+        let mut r = crate::util::Pcg64::seeded(5);
+        for _ in 0..100 {
+            cdf.push(r.f64(), r.f64() + 0.01);
+        }
+        let c = cdf.curve(20);
+        for w in c.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! End-to-end L1↔L3 integration: load the AOT artifacts through PJRT and
+//! verify the compiled Pallas plan-scorer agrees with the native Rust
+//! scorer, and the comm-model with its analytic twin.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo
+//! test` works on a fresh checkout).
+
+use std::rc::Rc;
+
+use rfold::placement::score::{NativeScorer, PlanScorer};
+use rfold::runtime::comm::{CommFeatures, CommModel};
+use rfold::runtime::{Artifacts, XlaScorer};
+use rfold::util::Pcg64;
+
+fn artifacts() -> Option<Rc<Artifacts>> {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Rc::new(Artifacts::load(&dir).expect("artifacts must load")))
+}
+
+#[test]
+fn manifest_describes_all_variants() {
+    let Some(arts) = artifacts() else { return };
+    assert_eq!(arts.manifest.torus, [16, 16, 16]);
+    assert!(arts.manifest.plan_batch >= 1);
+    assert!(arts.has_scorer(64, 4), "4^3 scorer required");
+    assert!(arts.has_scorer(8, 8), "8^3 scorer required");
+    assert!(arts.has_scorer(512, 2), "2^3 scorer required");
+    assert!(arts.comm_exe().is_some(), "comm model required");
+}
+
+#[test]
+fn xla_scorer_matches_native_on_random_grids() {
+    let Some(arts) = artifacts() else { return };
+    let mut rng = Pcg64::seeded(42);
+    let mut native = NativeScorer;
+    let mut xla = XlaScorer::new(arts);
+    for (cubes, n) in [(64usize, 4usize), (8, 8), (512, 2)] {
+        let k = 9; // deliberately not a multiple of the batch
+        let vol = cubes * n * n * n;
+        for density in [0.0, 0.2, 0.7, 1.0] {
+            let occ: Vec<f32> = (0..k * vol)
+                .map(|_| if rng.chance(density) { 1.0 } else { 0.0 })
+                .collect();
+            let a = native.frag_stats(&occ, k, cubes, n);
+            let b = xla.frag_stats(&occ, k, cubes, n);
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert!(
+                    (x.total_free - y.total_free).abs() < 1e-3
+                        && (x.partial_cubes - y.partial_cubes).abs() < 1e-3
+                        && (x.stranded - y.stranded).abs() < 1e-3
+                        && (x.thru - y.thru).abs() < 1e-3
+                        && (x.transitions - y.transitions).abs() < 1e-3
+                        && (x.empty_cubes - y.empty_cubes).abs() < 1e-3,
+                    "{cubes}x{n}^3 density {density} plan {i}: {x:?} vs {y:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn comm_model_matches_analytic() {
+    let Some(arts) = artifacts() else { return };
+    let model = CommModel::new(arts);
+    let mut rng = Pcg64::seeded(7);
+    let feats: Vec<CommFeatures> = (0..300)
+        .map(|_| CommFeatures {
+            ring_len: rng.range(1, 64) as f64,
+            bytes: rng.f64() * 1e9,
+            bandwidth: 25e9,
+            has_ring: rng.chance(0.5),
+            contention: 1.0 + rng.f64() * 3.0,
+        })
+        .collect();
+    let got = model.estimate(&feats).expect("execute comm model");
+    assert_eq!(got.len(), feats.len());
+    for (f, g) in feats.iter().zip(&got) {
+        let want = CommModel::analytic(f);
+        let tol = want.abs() * 1e-4 + 1e-9;
+        assert!((g - want).abs() < tol, "{f:?}: {g} vs {want}");
+    }
+}
+
+#[test]
+fn xla_scorer_ranks_like_native_in_policy() {
+    // The PJRT scorer must produce the same plan choice as the native one
+    // when wired into a real policy decision.
+    let Some(arts) = artifacts() else { return };
+    use rfold::placement::policies::{Policy, PolicyKind};
+    use rfold::shape::JobShape;
+    use rfold::topology::cluster::{ClusterState, ClusterTopo};
+
+    let cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let mut native_policy = Policy::new(PolicyKind::RFold);
+    let mut xla_policy =
+        Policy::new(PolicyKind::RFold).with_scorer(Box::new(XlaScorer::new(arts)));
+    for shape in [
+        JobShape::new(4, 8, 2),
+        JobShape::new(18, 1, 1),
+        JobShape::new(1, 6, 4),
+        JobShape::new(4, 4, 32),
+    ] {
+        let a = native_policy.plan(&cluster, 1, shape).expect("native plan");
+        let b = xla_policy.plan(&cluster, 1, shape).expect("xla plan");
+        assert_eq!(a.nodes, b.nodes, "{shape}: scorers disagree on the plan");
+        assert_eq!(a.cubes, b.cubes);
+    }
+}

@@ -1,0 +1,142 @@
+//! Cross-module integration: trace generator → policies → simulator →
+//! metrics, asserting the paper's qualitative results hold end-to-end.
+
+use rfold::metrics::summarize;
+use rfold::placement::PolicyKind;
+use rfold::sim::engine::{RunResult, SimConfig, Simulation};
+use rfold::sim::experiments;
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace::gen::{generate, TraceConfig};
+use rfold::trace::JobSpec;
+
+fn run(policy: PolicyKind, topo: ClusterTopo, trace: &[JobSpec]) -> RunResult {
+    Simulation::new(SimConfig::new(topo, policy)).run(trace)
+}
+
+fn trace(seed: u64, jobs: usize) -> Vec<JobSpec> {
+    generate(&TraceConfig {
+        num_jobs: jobs,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn table1_ordering_holds() {
+    // FirstFit < Folding, Reconfig(8³) < RFold(8³), 4³ cells at 100%.
+    let mut jcr = std::collections::HashMap::new();
+    for seed in [3u64, 4] {
+        let t = trace(seed, 160);
+        for (name, policy, topo) in [
+            ("ff", PolicyKind::FirstFit, ClusterTopo::static_4096()),
+            ("fold", PolicyKind::Folding, ClusterTopo::static_4096()),
+            ("rc8", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(8)),
+            ("rf8", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(8)),
+            ("rc4", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(4)),
+            ("rf4", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(4)),
+        ] {
+            let r = run(policy, topo, &t);
+            *jcr.entry(name).or_insert(0.0) += r.jcr() / 2.0;
+        }
+    }
+    assert!(jcr["ff"] < jcr["fold"], "{jcr:?}");
+    assert!(jcr["rc8"] < jcr["rf8"], "{jcr:?}");
+    assert!(jcr["fold"] < jcr["rf8"], "{jcr:?}");
+    assert!(jcr["rc4"] > 0.999 && jcr["rf4"] > 0.999, "{jcr:?}");
+}
+
+#[test]
+fn rfold_jct_never_worse_at_4cubes() {
+    let t = trace(11, 140);
+    let topo = ClusterTopo::reconfigurable_4096(4);
+    let rc = run(PolicyKind::Reconfig, topo, &t);
+    let rf = run(PolicyKind::RFold, topo, &t);
+    let p = |r: &RunResult, q| rfold::util::stats::percentile_of(&r.jcts(&t), q);
+    assert!(p(&rf, 50.0) <= p(&rc, 50.0) * 1.05, "p50 regressed");
+    assert!(p(&rf, 90.0) <= p(&rc, 90.0) * 1.05, "p90 regressed");
+}
+
+#[test]
+fn utilization_cdf_sane_and_summary_consistent() {
+    let t = trace(5, 120);
+    let r = run(
+        PolicyKind::RFold,
+        ClusterTopo::reconfigurable_4096(4),
+        &t,
+    );
+    let pairs = vec![(r, t.as_slice())];
+    let s = summarize("cell", &pairs);
+    assert!(s.avg_util > 0.0 && s.avg_util <= 1.0);
+    for w in s.util_cdf.windows(2) {
+        assert!(w[1].1 >= w[0].1 - 1e-12, "CDF must be monotone");
+    }
+    assert!(s.jct_p50 <= s.jct_p99);
+}
+
+#[test]
+fn motivation_rows_are_ordered() {
+    let rows = experiments::motivation_rows();
+    assert_eq!(rows.len(), 5);
+    // Baseline first, then strictly increasing contention.
+    assert!((rows[0].1 - 1.0).abs() < 1e-9);
+    assert!(rows[2].1 < rows[3].1 && rows[3].1 < rows[4].1);
+}
+
+#[test]
+fn besteffort_trades_queueing_for_contention() {
+    let t = trace(21, 120);
+    let topo = ClusterTopo::reconfigurable_4096(4);
+    let rf = run(PolicyKind::RFold, topo, &t);
+    let be = run(PolicyKind::BestEffort, topo, &t);
+    // Best-effort schedules everything it has XPUs for.
+    assert!(be.jcr() >= rf.jcr() - 1e-9);
+    // ...but pays for it in contention: its service times (finish − start)
+    // are stretched relative to RFold's contention-free placements. (At
+    // this load the stretched services also back the queue up — §5's
+    // point that best-effort is *not* uniformly better.)
+    let service = |r: &rfold::sim::engine::RunResult| {
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for (_, o) in &r.outcomes {
+            if let rfold::sim::engine::JobOutcome::Completed { start, finish } = o {
+                total += finish - start;
+                n += 1;
+            }
+        }
+        total / n as f64
+    };
+    assert!(
+        service(&be) > service(&rf),
+        "contention must stretch best-effort services: {} vs {}",
+        service(&be),
+        service(&rf)
+    );
+}
+
+#[test]
+fn cube_size_sweep_improves_reconfig() {
+    // Paper §4: "Reconfig performs more efficiently with these smaller
+    // cubes" — JCR(2³) ≥ JCR(4³) ≥ JCR(8³).
+    let t = trace(31, 140);
+    let jcr = |n| {
+        run(
+            PolicyKind::Reconfig,
+            ClusterTopo::reconfigurable_4096(n),
+            &t,
+        )
+        .jcr()
+    };
+    let (j8, j4, j2) = (jcr(8), jcr(4), jcr(2));
+    assert!(j4 >= j8, "4^3 {j4} vs 8^3 {j8}");
+    assert!(j2 >= j4 - 1e-9, "2^3 {j2} vs 4^3 {j4}");
+}
+
+#[test]
+fn fold_dim_ablation_degrades_gracefully() {
+    let t = trace(41, 120);
+    let mut cfg = SimConfig::new(ClusterTopo::reconfigurable_4096(8), PolicyKind::RFold);
+    let full = Simulation::new(cfg).run(&t).jcr();
+    cfg.fold_dims_enabled = [false, false, false];
+    let none = Simulation::new(cfg).run(&t).jcr();
+    assert!(full >= none, "disabling folds cannot help: {full} vs {none}");
+}

@@ -1,0 +1,146 @@
+//! Every concrete example the paper walks through, as executable checks.
+
+use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::reconfig_place;
+use rfold::shape::fold::{enumerate_variants, FoldKind, Variant};
+use rfold::shape::JobShape;
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+use rfold::topology::P3;
+
+#[test]
+fn s2_shape_semantics() {
+    // "a job with a 4×6×1 shape signifies ... six-way TP ... four-way DP"
+    let s = JobShape::new(4, 6, 1);
+    assert_eq!(s.size(), 24);
+    assert_eq!(s.dimensionality(), 2);
+    // "a 18×1×1 shape indicates DP-only, and 4×4×4 denotes DP+TP+PP"
+    assert_eq!(JobShape::new(18, 1, 1).dimensionality(), 1);
+    assert_eq!(JobShape::new(4, 4, 4).dimensionality(), 3);
+}
+
+#[test]
+fn s3_2_static_torus_cannot_host_4x4x32() {
+    // "Consider a job that requires 4×4×32 XPUs ... this job can never be
+    // placed because one of its dimensions exceeds the maximum dimension
+    // size of the torus (32>16)."
+    let c = ClusterState::new(ClusterTopo::static_4096());
+    let mut ff = Policy::new(PolicyKind::FirstFit);
+    assert!(!ff.feasible_ever(c.topo(), JobShape::new(4, 4, 32)));
+}
+
+#[test]
+fn s3_2_reconfigurable_hosts_4x4x32_with_8_cubes() {
+    // "we only need eight 4×4×4 cubes to be reconfigured side-by-side"
+    let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let v = Variant::identity(JobShape::new(4, 4, 32));
+    let p = reconfig_place::place(&c, &v, 1).unwrap();
+    assert_eq!(p.cubes.len(), 8);
+    assert_eq!(p.wrap, [true, true, true]);
+}
+
+#[test]
+fn s3_2_4x4x34_strands_a_partial_cube() {
+    // "When job shapes are not a multiple of four—for example, 4×4×34—it
+    // results in at least one partially used cube" and loses wrap-around.
+    let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let v = Variant::identity(JobShape::new(4, 4, 34));
+    let p = reconfig_place::place(&c, &v, 1).unwrap();
+    assert_eq!(p.cubes.len(), 9);
+    assert!(!p.wrap[2], "no wrap-around on the 34 dimension");
+    p.commit(&mut c).unwrap();
+    let partial = p
+        .cubes
+        .iter()
+        .filter(|&&cu| {
+            let f = c.cube_free_count(cu);
+            f > 0 && f < 64
+        })
+        .count();
+    assert_eq!(partial, 1, "exactly one partially used cube");
+}
+
+#[test]
+fn fig2_left_green_18x1x1_folds_into_two_cubes() {
+    // "the green job ... is a 1D job of shape 18×1×1. There are only two
+    // available 4×4×4 cubes ... With folding, we are able to find 18
+    // scattered XPUs forming a cycle."
+    let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let mut rfold = Policy::new(PolicyKind::RFold);
+    let plan = rfold.plan(&c, 1, JobShape::new(18, 1, 1)).unwrap();
+    assert!(plan.cubes.len() <= 2, "18 XPUs fit two cubes: {plan:?}");
+    // Reconfig-only needs a straight 18-line = 5 chained cubes.
+    let mut rc = Policy::new(PolicyKind::Reconfig);
+    let plan_rc = rc.plan(&c, 2, JobShape::new(18, 1, 1)).unwrap();
+    assert!(plan_rc.cubes.len() >= 5);
+}
+
+#[test]
+fn fig2_middle_1x6x4_folds_to_4x2x3() {
+    // "we can fold the original 2D job to a 3D job of shape 4×2×3 ...
+    // shape 1×6×4 is graph-homomorphic to shape 4×2×3"
+    let vs = enumerate_variants(JobShape::new(1, 6, 4), 64);
+    let v = vs
+        .iter()
+        .find(|v| {
+            let mut d = v.placed.0;
+            d.sort_unstable();
+            d == [2, 3, 4] && v.kind != FoldKind::Identity
+        })
+        .expect("the 4×2×3 fold must be generated");
+    rfold::shape::verify::verify(v, v.requires_wrap).unwrap();
+    // All rings close inside the box (the Y′ circular mapping).
+    let rc = rfold::shape::verify::ring_closures(v, [false; 3]);
+    for (len, closed) in rc {
+        if len == 6 {
+            assert!(closed, "the 6-ring must close via the fold");
+        }
+    }
+}
+
+#[test]
+fn fig2_right_4x8x2_folds_into_one_cube() {
+    // "Through folding, it is possible to place the entire job in one
+    // single 4×4×4 cube."
+    let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let mut rfold = Policy::new(PolicyKind::RFold);
+    let plan = rfold.plan(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+    assert_eq!(plan.cubes.len(), 1);
+    assert_eq!(plan.variant.placed, P3([4, 4, 4]));
+}
+
+#[test]
+fn s3_3_4x8x3_cannot_fold_to_4x4x6() {
+    // "a job of shape 4×8×3 cannot be folded to 4×4×6 ... the middle
+    // layer cannot be mapped to any cycle"
+    let vs = enumerate_variants(JobShape::new(4, 8, 3), 256);
+    assert!(vs.iter().all(|v| v.kind == FoldKind::Identity));
+}
+
+#[test]
+fn s3_3_foldability_ordering() {
+    // "jobs can be ranked by their foldability ... 1D > 2D > 3D": count
+    // non-identity variants for same-size jobs of each dimensionality.
+    let count = |s: JobShape| {
+        enumerate_variants(s, 256)
+            .iter()
+            .filter(|v| v.kind != FoldKind::Identity)
+            .count()
+    };
+    let c1 = count(JobShape::new(24, 1, 1));
+    let c2 = count(JobShape::new(6, 4, 1));
+    let c3 = count(JobShape::new(2, 3, 4));
+    assert!(c1 >= c2, "1D ({c1}) >= 2D ({c2})");
+    assert!(c2 >= c3, "2D ({c2}) >= 3D ({c3})");
+}
+
+#[test]
+fn s2_wraparound_only_at_multiples_of_n() {
+    // "jobs in a reconfigurable torus only receive wrap-around links when
+    // their shapes are a multiple of the cube dimension size N"
+    let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    for (len, wrap) in [(4usize, true), (8, true), (6, false), (7, false), (12, true)] {
+        let v = Variant::identity(JobShape::new(len, 2, 2));
+        let p = reconfig_place::place(&c, &v, 1).unwrap();
+        assert_eq!(p.wrap[0], wrap, "len={len}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Property-based invariants (in-tree `util::prop` harness; see DESIGN.md
+//! §7): randomized workloads must never violate the core safety and
+//! algebraic properties of the system.
+
+use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::shape::fold::{enumerate_variants, FoldKind};
+use rfold::shape::{verify, JobShape};
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+use rfold::topology::routing::LinkLoads;
+use rfold::topology::P3;
+use rfold::util::prop::{check, expect};
+use rfold::util::Pcg64;
+
+fn random_shape(rng: &mut Pcg64) -> JobShape {
+    let size = rng.range(1, 512);
+    rfold::trace::gen::shape_for_size(rng, size, &Default::default())
+        .unwrap_or(JobShape::new(1, 1, 1))
+}
+
+#[test]
+fn prop_no_double_booking_across_random_schedules() {
+    check("no double booking", 30, |rng| {
+        let n = *rng.choose(&[2usize, 4, 8]);
+        let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
+        let mut policy = Policy::new(*rng.choose(&[PolicyKind::Reconfig, PolicyKind::RFold]));
+        let mut live: Vec<u64> = Vec::new();
+        for job in 0..40u64 {
+            if !live.is_empty() && rng.chance(0.35) {
+                let idx = rng.below(live.len());
+                let id = live.swap_remove(idx);
+                cluster.release(id);
+            }
+            let shape = random_shape(rng);
+            if let Some(plan) = policy.plan(&cluster, job, shape) {
+                plan.commit(&mut cluster).map_err(|e| e.to_string())?;
+                live.push(job);
+            }
+            cluster.check_consistency()?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_commit_release_restores_everything() {
+    check("commit/release roundtrip", 40, |rng| {
+        let n = *rng.choose(&[2usize, 4, 8]);
+        let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
+        let mut policy = Policy::new(PolicyKind::RFold);
+        let shape = random_shape(rng);
+        let free0 = cluster.free_count();
+        let rewired0 = cluster.ocs().unwrap().rewired_entries();
+        if let Some(plan) = policy.plan(&cluster, 7, shape) {
+            plan.commit(&mut cluster).map_err(|e| e.to_string())?;
+            cluster.release(7);
+        }
+        expect(cluster.free_count() == free0, "free count restored")?;
+        expect(
+            cluster.ocs().unwrap().rewired_entries() == rewired0,
+            "OCS restored",
+        )?;
+        cluster.check_consistency()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_generated_variant_is_homomorphic() {
+    check("fold homomorphism", 60, |rng| {
+        let shape = random_shape(rng);
+        for v in enumerate_variants(shape, 256) {
+            expect(v.placed.volume() == shape.size(), format!("volume {v:?}"))?;
+            verify::verify(&v, v.requires_wrap).map_err(|e| format!("{shape} {v:?}: {e}"))?;
+            // Fold-promised rings must close even with wrap only where
+            // declared; identity needs full wrap to close everything.
+            if v.kind != FoldKind::Identity {
+                let closures = verify::ring_closures(&v, v.requires_wrap);
+                for (dim, closed) in closures {
+                    let promised = verify::promised_dims(&v);
+                    let logical_dims: Vec<usize> = (0..3)
+                        .filter(|&d| v.orig.dims().0[d] >= 2)
+                        .map(|d| v.orig.dims().0[d])
+                        .collect();
+                    let _ = (dim, closed, promised, logical_dims);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_placed_plans_respect_wrap_requirements() {
+    check("plans satisfy requires_wrap", 30, |rng| {
+        let n = *rng.choose(&[4usize, 8]);
+        let cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
+        let mut policy = Policy::new(PolicyKind::RFold);
+        let shape = random_shape(rng);
+        if let Some(plan) = policy.plan(&cluster, 1, shape) {
+            for k in 0..3 {
+                expect(
+                    !plan.variant.requires_wrap[k] || plan.wrap[k],
+                    format!("axis {k} wrap missing: {:?}", plan.variant),
+                )?;
+            }
+            // Node list is duplicate-free and matches the variant volume.
+            let mut nodes = plan.nodes.clone();
+            nodes.sort_unstable();
+            nodes.dedup();
+            expect(nodes.len() == plan.variant.placed.volume(), "node count")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dor_routes_match_torus_distance() {
+    check("DOR hop count = torus distance", 100, |rng| {
+        let ext = P3([
+            *rng.choose(&[2usize, 4, 8, 16]),
+            *rng.choose(&[2usize, 4, 8, 16]),
+            *rng.choose(&[2usize, 4, 8, 16]),
+        ]);
+        let mut loads = LinkLoads::new(ext);
+        let a = P3([rng.below(ext.0[0]), rng.below(ext.0[1]), rng.below(ext.0[2])]);
+        let b = P3([rng.below(ext.0[0]), rng.below(ext.0[1]), rng.below(ext.0[2])]);
+        let hops = loads.add_path(a, b, 1.0);
+        expect(
+            hops == a.torus_dist(b, ext),
+            format!("{a}->{b} in {ext}: {hops}"),
+        )
+    });
+}
+
+#[test]
+fn prop_link_loads_add_remove_cancel() {
+    check("ring load cancellation", 60, |rng| {
+        let ext = P3([8, 8, 8]);
+        let mut loads = LinkLoads::new(ext);
+        let members: Vec<P3> = (0..rng.range(2, 9))
+            .map(|_| P3([rng.below(8), rng.below(8), rng.below(8)]))
+            .collect();
+        loads.add_ring(&members, 1.5);
+        loads.add_ring(&members, -1.5);
+        expect(loads.max_load().abs() < 1e-12, "loads must cancel")
+    });
+}
+
+#[test]
+fn prop_rfold_jcr_dominates_reconfig() {
+    // On any trace, RFold schedules at least as many jobs as Reconfig
+    // (folding only adds options) — the paper's core claim.
+    check("JCR(RFold) >= JCR(Reconfig)", 6, |rng| {
+        let seed = rng.next_u64() % 10_000;
+        let t = rfold::trace::gen::generate(&rfold::trace::gen::TraceConfig {
+            num_jobs: 80,
+            seed,
+            ..Default::default()
+        });
+        for n in [4usize, 8] {
+            let topo = ClusterTopo::reconfigurable_4096(n);
+            let rc = rfold::sim::Simulation::new(rfold::sim::SimConfig::new(
+                topo,
+                PolicyKind::Reconfig,
+            ))
+            .run(&t);
+            let rf = rfold::sim::Simulation::new(rfold::sim::SimConfig::new(
+                topo,
+                PolicyKind::RFold,
+            ))
+            .run(&t);
+            expect(
+                rf.jcr() >= rc.jcr() - 1e-9,
+                format!("n={n} seed={seed}: {} < {}", rf.jcr(), rc.jcr()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ocs_crossbar_invariant_under_churn() {
+    check("OCS invariants under churn", 20, |rng| {
+        let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut policy = Policy::new(PolicyKind::Reconfig);
+        let mut live = Vec::new();
+        for job in 0..30u64 {
+            if !live.is_empty() && rng.chance(0.4) {
+                let id = live.swap_remove(rng.below(live.len()));
+                cluster.release(id);
+            }
+            let shape = random_shape(rng);
+            if let Some(plan) = policy.plan(&cluster, job, shape) {
+                plan.commit(&mut cluster).map_err(|e| e.to_string())?;
+                live.push(job);
+            }
+            expect(
+                cluster.ocs().unwrap().check_invariants(),
+                "crossbar invariant",
+            )?;
+        }
+        Ok(())
+    });
+}
