@@ -79,7 +79,9 @@ fn main() {
         NativeScorer.frag_stats(&occ, plans.len(), cubes, n)
     });
     let dir = rfold::runtime::Artifacts::default_dir();
-    if dir.join("manifest.json").exists() {
+    if !rfold::runtime::Artifacts::runtime_available() {
+        eprintln!("  (skipping PJRT scorer: built without the `xla` feature)");
+    } else if dir.join("manifest.json").exists() {
         let arts = Rc::new(rfold::runtime::Artifacts::load(&dir).unwrap());
         let mut xla = rfold::runtime::XlaScorer::new(arts);
         bench("xla frag_stats batch (PJRT)", 3, 30, || {

@@ -1,0 +1,52 @@
+//! Bench: the full policy × topology × scenario grid on the sharded sweep
+//! runner, plus the serial-vs-sharded wall-clock comparison for the
+//! Table-1 cells (the headline speedup of the sweep subsystem).
+//!
+//! Configure with `RFOLD_BENCH_RUNS` (default 8), `RFOLD_BENCH_JOBS`
+//! (default 192), `RFOLD_BENCH_SEED` (default 1), `RFOLD_BENCH_THREADS`
+//! (default 0 = auto).
+
+use std::time::Instant;
+
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+use rfold::sim::sweep;
+use rfold::trace::scenarios::Scenario;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let runs = env("RFOLD_BENCH_RUNS", 8);
+    let jobs = env("RFOLD_BENCH_JOBS", 192);
+    let seed = env("RFOLD_BENCH_SEED", 1) as u64;
+    let threads = env("RFOLD_BENCH_THREADS", 0);
+    let cells = exp::table1_cells();
+
+    rfold::util::bench::section(&format!(
+        "sweep grid — {} cells x {} scenarios ({runs} runs x {jobs} jobs)",
+        cells.len(),
+        Scenario::ALL.len()
+    ));
+    let rows = sweep::run_grid(&cells, &Scenario::ALL, runs, jobs, seed, threads);
+    report::print_sweep(&rows);
+
+    rfold::util::bench::section("sharded-runner speedup (Table-1 cells, paper-default)");
+    let t0 = Instant::now();
+    let serial = sweep::run_grid(&cells, &[Scenario::PaperDefault], runs, jobs, seed, 1);
+    let t_serial = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let sharded = sweep::run_grid(&cells, &[Scenario::PaperDefault], runs, jobs, seed, threads);
+    let t_sharded = t1.elapsed().as_secs_f64();
+    // Sharding must never change results — only wall-clock.
+    let json = |rows: &[sweep::SweepRow]| -> Vec<String> {
+        rows.iter().map(report::sweep_row_json).collect()
+    };
+    assert_eq!(json(&serial), json(&sharded), "sharding changed sweep rows");
+    println!(
+        "SWEEP-SPEEDUP threads={} serial={t_serial:.1}s sharded={t_sharded:.1}s speedup={:.2}x",
+        if threads == 0 { sweep::auto_threads() } else { threads },
+        t_serial / t_sharded.max(1e-9)
+    );
+}

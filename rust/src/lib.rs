@@ -15,7 +15,9 @@
 //!   request path).
 //!
 //! Entry points: the [`coordinator`] leader loop, [`sim::Simulation`] for
-//! trace-driven experiments, and the `rfold` CLI (`rust/src/main.rs`).
+//! trace-driven experiments, [`sim::sweep`] for sharded multi-threaded
+//! experiment grids over the [`trace::scenarios`] workload matrix, and the
+//! `rfold` CLI (`rust/src/main.rs`).
 
 pub mod coordinator;
 pub mod metrics;

@@ -5,6 +5,9 @@
 //! rfold table1   [--runs N] [--jobs J] [--seed S]      Table 1 (JCR)
 //! rfold fig3     [--runs N] [--jobs J] [--seed S]      Figure 3 (JCT)
 //! rfold fig4     [--runs N] [--jobs J] [--seed S]      Figure 4 (utilization)
+//! rfold sweep    [--runs N] [--jobs J] [--seed S]      policy x topology x scenario
+//!                [--threads T] [--scenarios a,b|all]   grid, JSON rows on stdout
+//!                [--policies p,q] [--out FILE]
 //! rfold motivation                                     §3.1 contention study
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
 //! rfold besteffort [--runs N] [--jobs J]               §5 best-effort crossover
@@ -14,13 +17,18 @@
 //! rfold replay --trace FILE [--policy P] [--cube N]    replay CSV live
 //! rfold scorer-check [--plans K]                       XLA vs native scorer
 //! ```
+//!
+//! Every multi-run driver shards its seeded trials across OS threads via
+//! `sim::sweep`; output is bit-identical for any thread count.
 
 use rfold::metrics::report;
 use rfold::metrics::CellSummary;
 use rfold::placement::{score::NativeScorer, score::PlanScorer, PolicyKind};
 use rfold::sim::experiments as exp;
+use rfold::sim::sweep;
 use rfold::topology::cluster::ClusterTopo;
 use rfold::trace;
+use rfold::trace::scenarios::Scenario;
 use rfold::util::cli::Args;
 use rfold::util::Pcg64;
 
@@ -31,6 +39,7 @@ fn main() {
         "table1" => table1(&args),
         "fig3" => fig3(&args),
         "fig4" => fig4(&args),
+        "sweep" => sweep_cmd(&args),
         "motivation" => motivation(),
         "ablation" => ablation(&args),
         "besteffort" => besteffort(&args),
@@ -54,9 +63,10 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: rfold <table1|fig3|fig4|motivation|ablation|besteffort|simulate|\
+    "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
      trace-gen|serve|replay|scorer-check|all> [options]\n\
-     common options: --runs N --jobs J --seed S --policy P --cube N|--static"
+     common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
+     sweep options:  --threads T (0=auto) --scenarios a,b|all --policies p,q --out FILE"
 }
 
 fn runs_jobs_seed(args: &Args) -> (usize, usize, u64) {
@@ -109,6 +119,84 @@ fn fig3(args: &Args) {
 fn fig4(args: &Args) {
     let sums = run_cells(&exp::table1_cells(), args);
     report::print_fig4(&sums);
+}
+
+/// The full policy × topology × scenario grid on the sharded sweep runner.
+/// One `SWEEP {json}` row per cell on stdout; progress/timing on stderr,
+/// so stdout is byte-identical for any `--threads` value.
+fn sweep_cmd(args: &Args) {
+    let runs = args.get_usize("runs", 8);
+    let jobs = args.get_usize("jobs", 256);
+    let seed = args.get_u64("seed", 1);
+    let threads = args.get_usize("threads", 0);
+    if runs == 0 || jobs == 0 {
+        eprintln!("--runs and --jobs must be >= 1");
+        std::process::exit(2);
+    }
+    let scenarios = match args.get("scenarios") {
+        Some(spec) => match Scenario::parse_list(spec) {
+            Some(v) => v,
+            None => {
+                let known: Vec<&str> = Scenario::ALL.iter().map(|s| s.name()).collect();
+                eprintln!(
+                    "unknown scenario in --scenarios '{spec}'; known: all, {}",
+                    known.join(", ")
+                );
+                std::process::exit(2);
+            }
+        },
+        None => Scenario::ALL.to_vec(),
+    };
+    let cells: Vec<exp::Cell> = match args.get("policies") {
+        Some(spec) => {
+            let mut kinds = Vec::new();
+            for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                match PolicyKind::parse(part) {
+                    Some(k) => kinds.push(k),
+                    None => {
+                        eprintln!("unknown policy '{part}' in --policies");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            exp::table1_cells()
+                .into_iter()
+                .filter(|c| kinds.contains(&c.policy))
+                .collect()
+        }
+        None => exp::table1_cells(),
+    };
+    if cells.is_empty() {
+        eprintln!("--policies selected no Table-1 cells");
+        std::process::exit(2);
+    }
+    eprintln!(
+        "sweep: {} cells x {} scenarios x {runs} runs x {jobs} jobs ({} threads)",
+        cells.len(),
+        scenarios.len(),
+        if threads == 0 {
+            format!("auto={}", sweep::auto_threads())
+        } else {
+            threads.to_string()
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let rows = sweep::run_grid(&cells, &scenarios, runs, jobs, seed, threads);
+    report::print_sweep(&rows);
+    if let Some(out) = args.get("out") {
+        let mut text = String::with_capacity(rows.len() * 256);
+        for r in &rows {
+            text.push_str(&report::sweep_row_json(r));
+            text.push('\n');
+        }
+        std::fs::write(out, text).expect("write sweep rows");
+        eprintln!("sweep: wrote {} rows to {out}", rows.len());
+    }
+    eprintln!(
+        "sweep: {} rows in {:.1}s",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
 }
 
 fn motivation() {

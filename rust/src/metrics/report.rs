@@ -1,8 +1,12 @@
 //! Table/figure formatters: print the same rows and series the paper
 //! reports, in a stable machine-greppable layout consumed by
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md — plus the JSON row serializer behind `rfold sweep`.
+
+use std::collections::BTreeMap;
 
 use super::CellSummary;
+use crate::sim::sweep::SweepRow;
+use crate::util::json::Json;
 
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
@@ -65,6 +69,62 @@ pub fn print_fig4(cells: &[CellSummary]) {
     }
 }
 
+/// JSON-safe number: non-finite values (empty-percentile NaNs) map to
+/// `null` so every row stays valid, parseable JSON.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Serialize one sweep row as a single-line JSON object.
+///
+/// Every field is derived only from (scenario, cell, seeds, trial
+/// results) — never from wall-clock time or thread count — so `rfold
+/// sweep` output is byte-identical for any `--threads` value.
+pub fn sweep_row_json(row: &SweepRow) -> String {
+    let s = &row.summary;
+    let mut m = BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        m.insert(k.to_string(), v);
+    };
+    put("scenario", Json::Str(row.scenario.to_string()));
+    put("cell", Json::Str(row.cell.to_string()));
+    put("policy", Json::Str(row.policy.to_string()));
+    put("topo", Json::Str(row.topo.clone()));
+    put("runs", Json::Num(row.runs as f64));
+    put("jobs_per_run", Json::Num(row.jobs_per_run as f64));
+    // Decimal string, not Json::Num: a u64 seed above 2^53 would be
+    // silently corrupted by the f64 round-trip, and these rows are the
+    // record needed to reproduce the cell.
+    put("base_seed", Json::Str(row.base_seed.to_string()));
+    put("jcr_pct", num(s.avg_jcr_pct));
+    put("jct_p50_s", num(s.jct_p50));
+    put("jct_p90_s", num(s.jct_p90));
+    put("jct_p99_s", num(s.jct_p99));
+    put("util_mean", num(s.avg_util));
+    put("queue_delay_s", num(s.avg_queue_delay));
+    put(
+        "util_cdf",
+        Json::Arr(
+            s.util_cdf
+                .iter()
+                .map(|&(q, u)| Json::Arr(vec![num(q), num(u)]))
+                .collect(),
+        ),
+    );
+    Json::Obj(m).to_string()
+}
+
+/// Print the sweep grid as stable, machine-greppable `SWEEP {json}` lines.
+pub fn print_sweep(rows: &[SweepRow]) {
+    for r in rows {
+        println!("SWEEP {}", sweep_row_json(r));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +136,43 @@ mod tests {
         assert!(fmt_secs(10_000.0).ends_with('h'));
         assert!(fmt_secs(500_000.0).ends_with('d'));
         assert_eq!(fmt_secs(f64::NAN), "n/a");
+    }
+
+    #[test]
+    fn sweep_row_json_is_valid_and_thread_free() {
+        let row = SweepRow {
+            scenario: "paper-default",
+            cell: "RFold (4^3)",
+            policy: "RFold",
+            topo: "ocs-64cubes-4^3".to_string(),
+            runs: 2,
+            jobs_per_run: 10,
+            base_seed: 7,
+            summary: CellSummary {
+                label: "RFold (4^3)".to_string(),
+                runs: 2,
+                avg_jcr_pct: 100.0,
+                jct_p50: 12.5,
+                jct_p90: 20.0,
+                jct_p99: f64::NAN, // empty percentile → null, still valid
+                util_cdf: vec![(0.0, 0.1), (1.0, 0.9)],
+                avg_util: 0.5,
+                avg_queue_delay: 3.0,
+            },
+        };
+        let line = sweep_row_json(&row);
+        let parsed = Json::parse(&line).expect("row must be valid JSON");
+        assert_eq!(
+            parsed.get("scenario").unwrap().as_str(),
+            Some("paper-default")
+        );
+        // Seed travels as a decimal string (u64 > 2^53 survives).
+        assert_eq!(parsed.get("base_seed").unwrap().as_str(), Some("7"));
+        assert_eq!(parsed.get("jcr_pct").unwrap().as_f64(), Some(100.0));
+        assert_eq!(parsed.get("jct_p99_s"), Some(&Json::Null));
+        assert_eq!(parsed.get("util_cdf").unwrap().as_arr().unwrap().len(), 2);
+        // The determinism contract: no timing or thread info in rows.
+        assert!(!line.contains("thread"));
+        assert!(!line.contains("wall"));
     }
 }

@@ -1,13 +1,19 @@
 //! Artifact discovery + compilation: manifest.json → compiled PJRT
 //! executables, one per model variant (the scorer is AOT-lowered for each
 //! cube geometry; see `aot.py::SCORER_VARIANTS`).
+//!
+//! The PJRT pieces need the external `xla` crate, which the offline build
+//! environment cannot fetch; they are gated behind the `xla` cargo
+//! feature. Without it, [`Artifacts`] compiles as a stub whose `load`
+//! always fails, and `Artifacts::runtime_available()` reports `false` so
+//! callers (tests, benches, `rfold scorer-check`) can skip gracefully.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{anyhow, bail};
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
@@ -74,7 +80,15 @@ impl Manifest {
     }
 }
 
+/// Default artifact directory: `$RFOLD_ARTIFACTS` or `./artifacts`.
+fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("RFOLD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
 /// Compiled artifacts, ready to execute.
+#[cfg(feature = "xla")]
 pub struct Artifacts {
     pub manifest: Manifest,
     client: xla::PjRtClient,
@@ -83,12 +97,16 @@ pub struct Artifacts {
     comm_model: Option<xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl Artifacts {
     /// Default artifact directory: `$RFOLD_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
-        std::env::var_os("RFOLD_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+        default_artifact_dir()
+    }
+
+    /// Whether this build can execute PJRT artifacts at all.
+    pub fn runtime_available() -> bool {
+        true
     }
 
     /// Load and compile every module listed in the manifest.
@@ -127,6 +145,10 @@ impl Artifacts {
         self.client.platform_name()
     }
 
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
     pub fn has_scorer(&self, cubes: usize, side: usize) -> bool {
         self.scorers.contains_key(&(cubes, side))
     }
@@ -137,5 +159,59 @@ impl Artifacts {
 
     pub fn comm_exe(&self) -> Option<&xla::PjRtLoadedExecutable> {
         self.comm_model.as_ref()
+    }
+}
+
+/// Stub artifacts for builds without the `xla` feature: loading always
+/// fails with a clear message, and no scorer is ever reported available.
+/// The field is private on purpose — with `load` the only constructor and
+/// always bailing, a stub `Artifacts` can never exist, which is what makes
+/// the `unreachable!` in the stub `XlaScorer::frag_stats` sound.
+#[cfg(not(feature = "xla"))]
+pub struct Artifacts {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Artifacts {
+    /// Default artifact directory: `$RFOLD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        default_artifact_dir()
+    }
+
+    /// Whether this build can execute PJRT artifacts at all.
+    pub fn runtime_available() -> bool {
+        false
+    }
+
+    /// Always fails: this build cannot compile or execute PJRT artifacts.
+    /// The manifest is still parsed first so configuration errors surface
+    /// with the same messages as a full build.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let _manifest = Manifest::load(dir)?;
+        bail!(
+            "rfold was built without the `xla` feature; cannot execute PJRT \
+             artifacts from {} (the native Rust scorer is always available)",
+            dir.display()
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `xla`)".into()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has_scorer(&self, _cubes: usize, _side: usize) -> bool {
+        false
+    }
+
+    /// No executables exist in a stub build. The placeholder item type
+    /// keeps callers' `is_some()` checks compiling without naming any
+    /// `xla` type.
+    pub fn comm_exe(&self) -> Option<&std::convert::Infallible> {
+        None
     }
 }

@@ -5,12 +5,15 @@
 //! common case; this executable exists so the L1 kernel's numerics can be
 //! validated end-to-end from Rust and used by the serving loop in
 //! `coordinator` when estimating step times for incoming jobs.
+//!
+//! Executing the artifact needs the `xla` cargo feature; the analytic twin
+//! below is always available.
 
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
-
 use super::client::Artifacts;
+use crate::anyhow;
+use crate::util::error::Result;
 
 /// Feature row for one ring (see `kernels/ref.py::comm_time`).
 #[derive(Clone, Copy, Debug)]
@@ -33,8 +36,9 @@ impl CommModel {
     }
 
     /// Estimated seconds per AllReduce for each feature row.
+    #[cfg(feature = "xla")]
     pub fn estimate(&self, feats: &[CommFeatures]) -> Result<Vec<f64>> {
-        let m = &self.arts.manifest;
+        let m = self.arts.manifest();
         let exe = self
             .arts
             .comm_exe()
@@ -57,11 +61,20 @@ impl CommModel {
             let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
             let t = result.to_tuple1()?;
             let vals = t.to_vec::<f32>()?;
-            anyhow::ensure!(vals.len() == batch, "comm model output mismatch");
+            crate::ensure!(vals.len() == batch, "comm model output mismatch");
             out.extend(vals[..kk].iter().map(|&v| v as f64));
             i += kk;
         }
         Ok(out)
+    }
+
+    /// Stub for builds without the `xla` feature: always errors.
+    #[cfg(not(feature = "xla"))]
+    pub fn estimate(&self, _feats: &[CommFeatures]) -> Result<Vec<f64>> {
+        let _ = &self.arts;
+        Err(anyhow!(
+            "comm model requires the `xla` build feature; use CommModel::analytic"
+        ))
     }
 
     /// The analytic twin (must match the kernel bit-for-bit-ish; tested in

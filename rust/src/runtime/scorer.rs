@@ -4,13 +4,18 @@
 //! Implements the same [`PlanScorer`] trait as the native Rust scorer, so
 //! policies can switch between them (`--scorer xla|native`); the
 //! integration suite asserts they agree on random occupancy grids.
+//!
+//! Execution needs the external `xla` crate (the `xla` cargo feature).
+//! Without it this type still compiles — it is constructible but its
+//! `frag_stats` is unreachable in practice because `Artifacts::load`
+//! refuses to produce artifacts in a stub build.
 
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
-
 use super::client::Artifacts;
 use crate::placement::score::{FragStats, PlanScorer};
+#[cfg(feature = "xla")]
+use crate::util::error::Result;
 
 /// PJRT-backed scorer. Holds shared artifacts (one PJRT client process-
 /// wide); falls back to panicking on missing variants — callers check
@@ -23,7 +28,10 @@ impl XlaScorer {
     pub fn new(arts: Rc<Artifacts>) -> XlaScorer {
         XlaScorer { arts }
     }
+}
 
+#[cfg(feature = "xla")]
+impl XlaScorer {
     /// Execute the scorer artifact for `k` plans (k ≤ plan_batch after
     /// internal padding) and parse rows into [`FragStats`].
     fn run_batch(
@@ -33,14 +41,14 @@ impl XlaScorer {
         cubes: usize,
         n: usize,
     ) -> Result<Vec<FragStats>> {
-        let m = &self.arts.manifest;
+        let m = self.arts.manifest();
         let batch = m.plan_batch;
         assert!(k <= batch);
         let vol = cubes * n * n * n;
         let exe = self
             .arts
             .scorer_exe(cubes, n)
-            .ok_or_else(|| anyhow!("no scorer artifact for {cubes}x{n}^3"))?;
+            .ok_or_else(|| crate::anyhow!("no scorer artifact for {cubes}x{n}^3"))?;
 
         // Pad the occupancy to the fixed batch; loads/mask stay zero (the
         // contention term is handled natively by the simulator for
@@ -76,7 +84,7 @@ impl XlaScorer {
         let out = result.to_tuple1()?;
         let rows = out.to_vec::<f32>()?;
         let cols = m.score_cols;
-        anyhow::ensure!(rows.len() == batch * cols, "scorer output shape mismatch");
+        crate::ensure!(rows.len() == batch * cols, "scorer output shape mismatch");
         Ok((0..k)
             .map(|i| {
                 let r = &rows[i * cols..(i + 1) * cols];
@@ -94,8 +102,9 @@ impl XlaScorer {
 }
 
 impl PlanScorer for XlaScorer {
+    #[cfg(feature = "xla")]
     fn frag_stats(&mut self, occ: &[f32], k: usize, cubes: usize, n: usize) -> Vec<FragStats> {
-        let batch = self.arts.manifest.plan_batch;
+        let batch = self.arts.manifest().plan_batch;
         let vol = cubes * n * n * n;
         let mut out = Vec::with_capacity(k);
         // Chunk to the artifact's fixed batch width.
@@ -110,5 +119,14 @@ impl PlanScorer for XlaScorer {
             i += kk;
         }
         out
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn frag_stats(&mut self, _occ: &[f32], _k: usize, _cubes: usize, _n: usize) -> Vec<FragStats> {
+        let _ = &self.arts;
+        unreachable!(
+            "XlaScorer requires the `xla` build feature; \
+             Artifacts::load refuses to construct artifacts without it"
+        )
     }
 }

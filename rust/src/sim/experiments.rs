@@ -2,15 +2,13 @@
 //! `rfold` CLI and the `cargo bench` harnesses so both always produce the
 //! same rows (see DESIGN.md §3 experiment index).
 
-use crate::metrics::{summarize, CellSummary};
+use crate::metrics::CellSummary;
 use crate::placement::PolicyKind;
 use crate::sim::contention;
-use crate::sim::engine::{RunResult, SimConfig, Simulation};
+use crate::sim::sweep::{self, SweepConfig};
 use crate::topology::cluster::ClusterTopo;
 use crate::topology::routing::LinkLoads;
 use crate::topology::P3;
-use crate::trace::gen::{generate, TraceConfig};
-use crate::trace::JobSpec;
 
 /// One (policy, topology) experiment cell.
 #[derive(Clone, Copy, Debug)]
@@ -85,6 +83,10 @@ pub fn fig3_cells() -> Vec<Cell> {
 
 /// Run one cell over `runs` seeded traces. Seeds are `base_seed..+runs`,
 /// shared across cells so every policy sees identical workloads.
+///
+/// Trials shard across OS threads via [`sweep::run_cell_sharded`]; the
+/// summary is bit-identical to the old serial loop (the sweep runner keeps
+/// the same per-trial seed derivation and aggregates in trial order).
 pub fn run_cell(cell: Cell, runs: usize, jobs_per_run: usize, base_seed: u64) -> CellSummary {
     run_cell_with(cell, runs, jobs_per_run, base_seed, [true; 3])
 }
@@ -97,23 +99,9 @@ pub fn run_cell_with(
     base_seed: u64,
     fold_dims_enabled: [bool; 3],
 ) -> CellSummary {
-    let mut results: Vec<(RunResult, Vec<JobSpec>)> = Vec::with_capacity(runs);
-    for r in 0..runs {
-        let trace = generate(&TraceConfig {
-            num_jobs: jobs_per_run,
-            seed: base_seed + r as u64,
-            ..Default::default()
-        });
-        let mut cfg = SimConfig::new(cell.topo, cell.policy);
-        cfg.fold_dims_enabled = fold_dims_enabled;
-        let res = Simulation::new(cfg).run(&trace);
-        results.push((res, trace));
-    }
-    let pairs: Vec<(RunResult, &[JobSpec])> = results
-        .iter()
-        .map(|(r, t)| (r.clone(), t.as_slice()))
-        .collect();
-    summarize(cell.label, &pairs)
+    let mut cfg = SweepConfig::new(runs, jobs_per_run, base_seed);
+    cfg.fold_dims_enabled = fold_dims_enabled;
+    sweep::run_cell_sharded(cell, &cfg)
 }
 
 /// §3.1 motivation experiment on a 2×2 mesh: returns

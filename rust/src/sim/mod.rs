@@ -5,6 +5,8 @@
 pub mod contention;
 pub mod engine;
 pub mod experiments;
+pub mod sweep;
 
 pub use contention::ContentionModel;
 pub use engine::{RunResult, SimConfig, Simulation};
+pub use sweep::{SweepConfig, SweepRow};

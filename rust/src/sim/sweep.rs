@@ -1,0 +1,262 @@
+//! Sharded multi-threaded experiment sweeps over the workload-scenario
+//! matrix.
+//!
+//! Every paper table/figure is a grid of (policy × topology × scenario)
+//! cells, each averaged over `runs` seeded trials. Trials are mutually
+//! independent — they share nothing but their configuration — so this
+//! module shards them across OS threads with `std::thread::scope` (no
+//! external dependencies).
+//!
+//! ## Determinism contract
+//!
+//! Results are **bit-identical for any thread count**, including 1:
+//!
+//! * trial `r` always uses seed [`trial_seed`]`(base_seed, r)` — the same
+//!   derivation the old serial loop in `experiments::run_cell` used;
+//! * trial `r`'s result always lands in slot `r` of the output vector, so
+//!   aggregation order never depends on scheduling;
+//! * per-trial simulation is single-threaded and deterministic, and no
+//!   wall-clock or thread-count value flows into any reported row
+//!   (progress/timing goes to stderr only).
+//!
+//! `tests/sweep_determinism.rs` locks this contract down.
+
+use std::time::Instant;
+
+use crate::metrics::{summarize, CellSummary};
+use crate::sim::engine::{RunResult, SimConfig, Simulation};
+use crate::sim::experiments::Cell;
+use crate::topology::cluster::ClusterTopo;
+use crate::trace::gen::generate;
+use crate::trace::scenarios::Scenario;
+use crate::trace::JobSpec;
+
+/// Knobs of one sharded cell run.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepConfig {
+    pub runs: usize,
+    pub jobs_per_run: usize,
+    pub base_seed: u64,
+    /// OS threads to shard trials across; 0 = one per available core.
+    pub threads: usize,
+    /// Ablation A2 knob, forwarded to [`SimConfig`].
+    pub fold_dims_enabled: [bool; 3],
+    pub scenario: Scenario,
+}
+
+impl SweepConfig {
+    pub fn new(runs: usize, jobs_per_run: usize, base_seed: u64) -> SweepConfig {
+        SweepConfig {
+            runs,
+            jobs_per_run,
+            base_seed,
+            threads: 0,
+            fold_dims_enabled: [true; 3],
+            scenario: Scenario::PaperDefault,
+        }
+    }
+}
+
+/// Thread count used when `SweepConfig::threads` is 0.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Seed of trial `r`: `base_seed + r`, the derivation the serial driver
+/// always used, independent of sharding. Seeds are shared across cells and
+/// scenarios so every policy sees identical per-trial randomness streams.
+pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
+    base_seed.wrapping_add(trial as u64)
+}
+
+/// One trial: generate the scenario trace for this trial's seed, simulate.
+fn run_trial(cell: Cell, cfg: &SweepConfig, trial: usize) -> (RunResult, Vec<JobSpec>) {
+    let tc = cfg
+        .scenario
+        .trace_config(cfg.jobs_per_run, trial_seed(cfg.base_seed, trial));
+    let trace = generate(&tc);
+    let mut sim_cfg = SimConfig::new(cell.topo, cell.policy);
+    sim_cfg.fold_dims_enabled = cfg.fold_dims_enabled;
+    let result = Simulation::new(sim_cfg).run(&trace);
+    (result, trace)
+}
+
+/// Run every trial of one cell, sharded across OS threads. Slot `r` of the
+/// returned vector always holds trial `r`.
+pub fn run_trials(cell: Cell, cfg: &SweepConfig) -> Vec<(RunResult, Vec<JobSpec>)> {
+    if cfg.runs == 0 {
+        return Vec::new();
+    }
+    let requested = if cfg.threads == 0 {
+        auto_threads()
+    } else {
+        cfg.threads
+    };
+    let threads = requested.clamp(1, cfg.runs);
+    let mut slots: Vec<Option<(RunResult, Vec<JobSpec>)>> = Vec::new();
+    slots.resize_with(cfg.runs, || None);
+    if threads == 1 {
+        for (trial, slot) in slots.iter_mut().enumerate() {
+            *slot = Some(run_trial(cell, cfg, trial));
+        }
+    } else {
+        // Contiguous shards: thread `t` owns trials [t*chunk, (t+1)*chunk).
+        // Each shard gets a disjoint &mut slice of the slot vector, so no
+        // locks and no result reordering are possible.
+        let chunk = cfg.runs.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (shard, shard_slots) in slots.chunks_mut(chunk).enumerate() {
+                let first = shard * chunk;
+                scope.spawn(move || {
+                    for (offset, slot) in shard_slots.iter_mut().enumerate() {
+                        *slot = Some(run_trial(cell, cfg, first + offset));
+                    }
+                });
+            }
+        });
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every shard fills its slots"))
+        .collect()
+}
+
+/// Sharded replacement for the serial per-cell experiment loop: identical
+/// summary, wall-clock divided by the effective thread count.
+pub fn run_cell_sharded(cell: Cell, cfg: &SweepConfig) -> CellSummary {
+    let trials = run_trials(cell, cfg);
+    let pairs: Vec<(RunResult, &[JobSpec])> = trials
+        .iter()
+        .map(|(r, t)| (r.clone(), t.as_slice()))
+        .collect();
+    summarize(cell.label, &pairs)
+}
+
+/// One row of the sweep grid: a (scenario, policy, topology) cell summary
+/// plus the knobs that produced it. Serialized to machine-readable JSON by
+/// `metrics::report::sweep_row_json`.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scenario: &'static str,
+    pub cell: &'static str,
+    pub policy: &'static str,
+    pub topo: String,
+    pub runs: usize,
+    pub jobs_per_run: usize,
+    pub base_seed: u64,
+    pub summary: CellSummary,
+}
+
+/// Short stable topology tag for machine-readable rows.
+pub fn topo_tag(topo: ClusterTopo) -> String {
+    match topo {
+        ClusterTopo::Static { ext } => {
+            format!("static-{}x{}x{}", ext.0[0], ext.0[1], ext.0[2])
+        }
+        ClusterTopo::Reconfigurable { grid } => {
+            format!("ocs-{}cubes-{}^3", grid.num_cubes(), grid.n)
+        }
+    }
+}
+
+/// Run the full policy × topology × scenario grid. Cells run in order;
+/// each cell's trials shard across `threads` OS threads (0 = auto).
+/// Progress and timing go to stderr so the returned rows (and anything
+/// printed from them) stay byte-identical across thread counts.
+pub fn run_grid(
+    cells: &[Cell],
+    scenarios: &[Scenario],
+    runs: usize,
+    jobs_per_run: usize,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<SweepRow> {
+    let mut rows = Vec::with_capacity(cells.len() * scenarios.len());
+    for &scenario in scenarios {
+        for &cell in cells {
+            let mut cfg = SweepConfig::new(runs, jobs_per_run, base_seed);
+            cfg.threads = threads;
+            cfg.scenario = scenario;
+            let t0 = Instant::now();
+            let summary = run_cell_sharded(cell, &cfg);
+            eprintln!(
+                "sweep: {:<22} {:<20} {:>6.1}s",
+                scenario.name(),
+                cell.label,
+                t0.elapsed().as_secs_f64()
+            );
+            rows.push(SweepRow {
+                scenario: scenario.name(),
+                cell: cell.label,
+                policy: cell.policy.name(),
+                topo: topo_tag(cell.topo),
+                runs,
+                jobs_per_run,
+                base_seed,
+                summary,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PolicyKind;
+
+    fn tiny_cell() -> Cell {
+        Cell {
+            policy: PolicyKind::Folding,
+            topo: ClusterTopo::static_4096(),
+            label: "Folding (16^3)",
+        }
+    }
+
+    #[test]
+    fn trial_seeds_match_serial_derivation() {
+        assert_eq!(trial_seed(10, 0), 10);
+        assert_eq!(trial_seed(10, 3), 13);
+        assert_eq!(trial_seed(u64::MAX, 1), 0); // wraps, never panics
+    }
+
+    #[test]
+    fn sharded_equals_serial() {
+        let mut cfg = SweepConfig::new(5, 30, 3);
+        cfg.threads = 1;
+        let serial = run_trials(tiny_cell(), &cfg);
+        cfg.threads = 3;
+        let sharded = run_trials(tiny_cell(), &cfg);
+        assert_eq!(serial.len(), sharded.len());
+        for ((ra, ta), (rb, tb)) in serial.iter().zip(&sharded) {
+            assert_eq!(ta, tb, "traces must match per trial slot");
+            assert_eq!(ra.scheduled, rb.scheduled);
+            assert_eq!(ra.dropped, rb.dropped);
+            assert_eq!(ra.jcts(ta), rb.jcts(tb));
+        }
+    }
+
+    #[test]
+    fn more_threads_than_trials_is_fine() {
+        let mut cfg = SweepConfig::new(2, 20, 1);
+        cfg.threads = 16;
+        assert_eq!(run_trials(tiny_cell(), &cfg).len(), 2);
+    }
+
+    #[test]
+    fn zero_runs_yields_no_trials() {
+        let cfg = SweepConfig::new(0, 10, 1);
+        assert!(run_trials(tiny_cell(), &cfg).is_empty());
+    }
+
+    #[test]
+    fn topo_tags_stable() {
+        assert_eq!(topo_tag(ClusterTopo::static_4096()), "static-16x16x16");
+        assert_eq!(
+            topo_tag(ClusterTopo::reconfigurable_4096(4)),
+            "ocs-64cubes-4^3"
+        );
+    }
+}

@@ -194,11 +194,22 @@ impl OcsState {
 }
 
 /// OCS reservation failures.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum OcsError {
-    #[error("OCS conflict at axis {axis} position ({i},{j})")]
     Conflict { axis: usize, i: usize, j: usize },
 }
+
+impl std::fmt::Display for OcsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OcsError::Conflict { axis, i, j } => {
+                write!(f, "OCS conflict at axis {axis} position ({i},{j})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OcsError {}
 
 #[cfg(test)]
 mod tests {

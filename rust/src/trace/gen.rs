@@ -87,6 +87,10 @@ pub struct TraceConfig {
     /// (Philly/PAI both show strong 8/16-GPU modes), and round sizes are
     /// what make shapes foldable.
     pub round8_prob: f64,
+    /// Per-job communication fraction, sampled uniformly from
+    /// `[comm_lo, comm_hi)` — the knob behind the `comm-heavy` scenario.
+    pub comm_lo: f64,
+    pub comm_hi: f64,
     pub shape_rule: ShapeRule,
     pub seed: u64,
 }
@@ -104,6 +108,8 @@ impl Default for TraceConfig {
             dur_max: 30.0 * 86_400.0,
             size_scale: 400.0,
             round8_prob: 0.75,
+            comm_lo: 0.1,
+            comm_hi: 0.5,
             shape_rule: ShapeRule::default(),
             seed: 1,
         }
@@ -267,7 +273,7 @@ pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
                 None => size -= 1, // size 1 always factorizes: terminates
             }
         };
-        let comm_frac = 0.1 + 0.4 * rng.f64();
+        let comm_frac = cfg.comm_lo + (cfg.comm_hi - cfg.comm_lo) * rng.f64();
         out.push(JobSpec {
             id,
             arrival: t,

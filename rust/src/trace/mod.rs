@@ -11,8 +11,10 @@
 
 pub mod gen;
 pub mod io;
+pub mod scenarios;
 
 pub use gen::{ShapeRule, TraceConfig};
+pub use scenarios::Scenario;
 
 use crate::shape::JobShape;
 

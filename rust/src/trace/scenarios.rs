@@ -1,0 +1,216 @@
+//! Named workload scenarios: the third axis of the sweep grid.
+//!
+//! The paper evaluates one synthetic workload (§4). Scheduler conclusions
+//! are workload-sensitive — CASSINI (arXiv:2308.00852) and the
+//! ring-all-reduce contention study (arXiv:2207.07817) both stress
+//! evaluating under diverse arrival burstiness and shape mixes — so the
+//! registry parameterizes [`TraceConfig`]/[`ShapeRule`] into six named
+//! workloads that `rfold sweep` crosses with every (policy, topology)
+//! cell.
+//!
+//! Invariant shared by every scenario: `ShapeRule::max_dim` and
+//! `max_cubes4` stay at the paper's caps, so each generated job remains
+//! placeable on an empty Reconfig(4³) cluster — the property-test suite
+//! (`tests/prop_trace.rs`) locks this down.
+
+use super::gen::{ShapeRule, TraceConfig};
+
+/// A named workload scenario.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Scenario {
+    /// The paper's §4 synthetic workload, unchanged.
+    PaperDefault,
+    /// Strongly bursty Philly-style arrivals: fast trains of submissions
+    /// separated by long lulls (Jeon et al., ATC'19, figure 4 regime).
+    BurstyPhilly,
+    /// Heavier log-normal duration tail: a few multi-week jobs pin
+    /// resources while medians stay short.
+    HeavyTailDurations,
+    /// Adversarially elongated shape mix: most jobs carry one very long
+    /// communicating dimension, the regime that separates folding policies
+    /// from rotation-only ones.
+    ElongatedAdversarial,
+    /// Many small round-sized jobs arriving quickly — a high-churn
+    /// fragmentation stressor.
+    UniformSmall,
+    /// Communication-dominated jobs: comm_frac drawn from [0.45, 0.80),
+    /// amplifying placement sensitivity of JCT.
+    CommHeavy,
+}
+
+impl Scenario {
+    /// Every registered scenario, in stable reporting order.
+    pub const ALL: [Scenario; 6] = [
+        Scenario::PaperDefault,
+        Scenario::BurstyPhilly,
+        Scenario::HeavyTailDurations,
+        Scenario::ElongatedAdversarial,
+        Scenario::UniformSmall,
+        Scenario::CommHeavy,
+    ];
+
+    /// Stable CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::PaperDefault => "paper-default",
+            Scenario::BurstyPhilly => "bursty-philly",
+            Scenario::HeavyTailDurations => "heavy-tail-durations",
+            Scenario::ElongatedAdversarial => "elongated-adversarial",
+            Scenario::UniformSmall => "uniform-small",
+            Scenario::CommHeavy => "comm-heavy",
+        }
+    }
+
+    /// One-line description for `rfold sweep` help output.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Scenario::PaperDefault => "the paper's §4 synthetic workload",
+            Scenario::BurstyPhilly => "bursty Philly-style arrival trains",
+            Scenario::HeavyTailDurations => "heavier log-normal duration tail",
+            Scenario::ElongatedAdversarial => "mostly-elongated adversarial shapes",
+            Scenario::UniformSmall => "many small round jobs, high churn",
+            Scenario::CommHeavy => "communication-dominated jobs",
+        }
+    }
+
+    /// Parse a scenario name as printed by [`Scenario::name`].
+    pub fn parse(s: &str) -> Option<Scenario> {
+        let want = s.trim().to_ascii_lowercase();
+        Scenario::ALL.into_iter().find(|sc| sc.name() == want)
+    }
+
+    /// Parse a comma-separated scenario list; `"all"` selects every
+    /// scenario. Returns `None` if any entry is unknown.
+    pub fn parse_list(spec: &str) -> Option<Vec<Scenario>> {
+        if spec.trim().eq_ignore_ascii_case("all") {
+            return Some(Scenario::ALL.to_vec());
+        }
+        let mut out = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            out.push(Scenario::parse(part)?);
+        }
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// The trace-generator configuration of this scenario for a given job
+    /// count and seed. Seeds are shared across scenarios and cells so a
+    /// sweep compares policies on identical per-trial randomness streams.
+    pub fn trace_config(&self, num_jobs: usize, seed: u64) -> TraceConfig {
+        let base = TraceConfig {
+            num_jobs,
+            seed,
+            ..Default::default()
+        };
+        match self {
+            Scenario::PaperDefault => base,
+            Scenario::BurstyPhilly => TraceConfig {
+                mean_interarrival: 90.0,
+                burst_prob: 0.65,
+                mean_lull: 9_000.0,
+                ..base
+            },
+            Scenario::HeavyTailDurations => TraceConfig {
+                dur_mu: (500.0f64).ln(),
+                dur_sigma: 2.9,
+                dur_max: 60.0 * 86_400.0,
+                ..base
+            },
+            Scenario::ElongatedAdversarial => TraceConfig {
+                size_scale: 700.0,
+                shape_rule: ShapeRule {
+                    small_p1: 0.10,
+                    small_p2: 0.55,
+                    large_p1: 0.0,
+                    large_p2: 0.45,
+                    w2d: [0.01, 0.04, 0.75, 0.20],
+                    w3d: [0.04, 0.36, 0.60],
+                    even_weight: 5.0,
+                    ..ShapeRule::default()
+                },
+                ..base
+            },
+            Scenario::UniformSmall => TraceConfig {
+                size_scale: 48.0,
+                round8_prob: 0.9,
+                mean_interarrival: 250.0,
+                shape_rule: ShapeRule {
+                    small_p1: 0.50,
+                    small_p2: 0.45,
+                    ..ShapeRule::default()
+                },
+                ..base
+            },
+            Scenario::CommHeavy => TraceConfig {
+                comm_lo: 0.45,
+                comm_hi: 0.80,
+                size_scale: 500.0,
+                ..base
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::generate;
+
+    #[test]
+    fn names_roundtrip_and_are_distinct() {
+        let mut seen = std::collections::BTreeSet::new();
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.name()), Some(sc));
+            assert!(seen.insert(sc.name()), "duplicate name {}", sc.name());
+            assert!(!sc.describe().is_empty());
+        }
+        assert_eq!(Scenario::parse("no-such-scenario"), None);
+    }
+
+    #[test]
+    fn parse_list_handles_all_and_commas() {
+        assert_eq!(Scenario::parse_list("all").unwrap(), Scenario::ALL.to_vec());
+        assert_eq!(
+            Scenario::parse_list("paper-default, comm-heavy").unwrap(),
+            vec![Scenario::PaperDefault, Scenario::CommHeavy]
+        );
+        assert_eq!(Scenario::parse_list("paper-default,bogus"), None);
+        assert_eq!(Scenario::parse_list(""), None);
+    }
+
+    #[test]
+    fn paper_default_matches_default_config() {
+        let a = Scenario::PaperDefault.trace_config(64, 9);
+        let b = TraceConfig {
+            num_jobs: 64,
+            seed: 9,
+            ..Default::default()
+        };
+        // Same generator inputs → byte-identical traces.
+        assert_eq!(generate(&a), generate(&b));
+    }
+
+    #[test]
+    fn every_scenario_keeps_placement_caps() {
+        for sc in Scenario::ALL {
+            let cfg = sc.trace_config(16, 1);
+            assert_eq!(cfg.shape_rule.max_dim, ShapeRule::default().max_dim, "{sc:?}");
+            assert_eq!(
+                cfg.shape_rule.max_cubes4,
+                ShapeRule::default().max_cubes4,
+                "{sc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn comm_heavy_raises_comm_fraction() {
+        let t = generate(&Scenario::CommHeavy.trace_config(80, 3));
+        assert!(t.iter().all(|j| (0.45..0.80).contains(&j.comm_frac)));
+        let d = generate(&Scenario::PaperDefault.trace_config(80, 3));
+        assert!(d.iter().all(|j| (0.1..0.5).contains(&j.comm_frac)));
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal `anyhow`-style error handling (anyhow is unavailable offline).
+//!
+//! Provides the subset the runtime layer uses: a string-backed [`Error`],
+//! a defaulted [`Result`] alias, the [`Context`] extension trait, and the
+//! crate-root `anyhow!` / `bail!` / `ensure!` macros.
+
+use std::fmt;
+
+/// An opaque error carrying a human-readable message chain.
+///
+/// Like `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error` so the blanket `From<E: std::error::Error>` impl
+/// below stays coherent with `core`'s reflexive `From`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Build an error from preformatted arguments (used by `anyhow!`).
+    pub fn from_fmt(args: fmt::Arguments<'_>) -> Error {
+        Error {
+            msg: args.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format_args!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format_args!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::from_fmt(::core::format_args!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::from_fmt(::core::format_args!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tok:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($tok)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tok:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tok)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = crate::anyhow!("bad thing: {}", 7);
+        assert_eq!(e.to_string(), "bad thing: 7");
+        let plain = crate::anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn context_wraps_errors_and_options() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing report").unwrap_err();
+        assert!(e.to_string().starts_with("writing report: "));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn from_std_error() {
+        fn f() -> Result<String> {
+            let bytes = vec![0xff, 0xfe];
+            Ok(String::from_utf8(bytes)?)
+        }
+        assert!(f().unwrap_err().to_string().contains("utf-8"));
+    }
+}

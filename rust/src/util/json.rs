@@ -71,19 +71,28 @@ impl Json {
 }
 
 /// Parse error with byte offset context.
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum JsonError {
-    #[error("unexpected end of input")]
     Eof,
-    #[error("unexpected byte at offset {0}")]
     Unexpected(usize),
-    #[error("trailing garbage at offset {0}")]
     Trailing(usize),
-    #[error("bad number at offset {0}")]
     BadNumber(usize),
-    #[error("bad escape at offset {0}")]
     BadEscape(usize),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof => write!(f, "unexpected end of input"),
+            JsonError::Unexpected(o) => write!(f, "unexpected byte at offset {o}"),
+            JsonError::Trailing(o) => write!(f, "trailing garbage at offset {o}"),
+            JsonError::BadNumber(o) => write!(f, "bad number at offset {o}"),
+            JsonError::BadEscape(o) => write!(f, "bad escape at offset {o}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -1,8 +1,10 @@
 //! In-tree replacements for crates unavailable in this offline environment
-//! (rand, serde, clap, criterion, proptest) plus shared numeric helpers.
+//! (rand, serde, clap, criterion, proptest, anyhow) plus shared numeric
+//! helpers.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,101 @@
+//! Golden regression lock on the Table-1 cells: for a fixed seed and a
+//! small job count, the exact `scheduled`/`dropped` counts and JCR of
+//! every cell must not drift. Scheduler refactors that silently shift
+//! paper results fail here first.
+//!
+//! Snapshot workflow (insta-style): the fingerprint is compared against
+//! `tests/golden/table1.txt`. If the file is missing, or `UPDATE_GOLDEN`
+//! is set in the environment, the snapshot is (re)blessed and written —
+//! commit the result. See `tests/golden/README.md`.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use rfold::sim::experiments as exp;
+use rfold::sim::sweep::{self, SweepConfig};
+
+const GOLDEN_RUNS: usize = 2;
+const GOLDEN_JOBS: usize = 48;
+const GOLDEN_SEED: u64 = 77;
+
+/// One line per Table-1 cell: label + exact counts + JCR to 4 decimals.
+fn table1_fingerprint(threads: usize) -> String {
+    let mut out = String::new();
+    for cell in exp::table1_cells() {
+        let mut cfg = SweepConfig::new(GOLDEN_RUNS, GOLDEN_JOBS, GOLDEN_SEED);
+        cfg.threads = threads;
+        let trials = sweep::run_trials(cell, &cfg);
+        let scheduled: usize = trials.iter().map(|(r, _)| r.scheduled).sum();
+        let dropped: usize = trials.iter().map(|(r, _)| r.dropped).sum();
+        let total: usize = trials.iter().map(|(r, _)| r.outcomes.len()).sum();
+        let jcr = 100.0 * scheduled as f64 / total as f64;
+        writeln!(
+            out,
+            "{} scheduled={scheduled} dropped={dropped} total={total} jcr={jcr:.4}",
+            cell.label
+        )
+        .unwrap();
+    }
+    out
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/table1.txt")
+}
+
+#[test]
+fn table1_fingerprint_is_deterministic_and_thread_invariant() {
+    let serial = table1_fingerprint(1);
+    assert_eq!(serial, table1_fingerprint(1), "same-config reruns must match");
+    assert_eq!(serial, table1_fingerprint(4), "thread count must not matter");
+}
+
+#[test]
+fn table1_matches_golden_snapshot() {
+    let got = table1_fingerprint(0);
+    let path = golden_path();
+    if !path.exists() && std::env::var_os("UPDATE_GOLDEN").is_none() {
+        // Self-bless only in interactive/local runs. In CI a missing
+        // snapshot must fail loudly — otherwise a fresh checkout would
+        // re-bless every run and the regression lock would be inert.
+        assert!(
+            std::env::var_os("CI").is_none(),
+            "tests/golden/table1.txt is missing in CI; generate it locally \
+             with `cargo test -q`, inspect it, and commit it"
+        );
+    }
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        eprintln!("golden_table1: blessed snapshot at {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got, want,
+        "Table-1 fingerprint drifted from tests/golden/table1.txt; if the \
+         change is intentional, re-bless with `UPDATE_GOLDEN=1 cargo test`"
+    );
+}
+
+#[test]
+fn table1_qualitative_ordering_holds_at_golden_scale() {
+    // Even at the golden suite's tiny scale, the paper's headline ordering
+    // must hold: both 4^3 cells complete everything, FirstFit is worst.
+    let got = table1_fingerprint(0);
+    let jcr_of = |label: &str| -> f64 {
+        let line = got
+            .lines()
+            .find(|l| l.starts_with(label))
+            .unwrap_or_else(|| panic!("missing cell {label}"));
+        line.rsplit("jcr=")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("jcr parses")
+    };
+    assert!(jcr_of("RFold (4^3)") >= 99.9);
+    assert!(jcr_of("Reconfig (4^3)") >= 99.9);
+    assert!(jcr_of("FirstFit (16^3)") < jcr_of("Folding (16^3)"));
+}

@@ -1,0 +1,126 @@
+//! Property tests for the trace generator and the scenario registry:
+//! every generated shape respects the rule caps, arrivals are
+//! non-decreasing, and each named scenario yields a non-empty trace whose
+//! every job is placeable on an empty Reconfig(4³) cluster — the Table-1
+//! invariant that keeps 100% JCR reachable.
+
+use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::shape::JobShape;
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace::gen::{generate, shape_for_size, ShapeRule};
+use rfold::trace::scenarios::Scenario;
+use rfold::util::prop::{check, expect};
+
+/// Cost of a shape in 4³ cubes (the Reconfig(4³) feasibility measure).
+fn cubes4(s: JobShape) -> usize {
+    s.dims().0.iter().map(|&d| d.div_ceil(4)).product()
+}
+
+#[test]
+fn generated_shapes_respect_rule_caps_across_scenarios() {
+    check("shape caps", 30, |rng| {
+        let sc = Scenario::ALL[rng.below(Scenario::ALL.len())];
+        let cfg = sc.trace_config(rng.range(1, 120), rng.next_u64());
+        let rule = cfg.shape_rule;
+        let t = generate(&cfg);
+        expect(t.len() == cfg.num_jobs, format!("{sc:?}: wrong job count"))?;
+        for j in &t {
+            let dims = j.shape.dims().0;
+            expect(
+                dims.iter().all(|d| (1..=rule.max_dim).contains(d)),
+                format!("{sc:?}: {} exceeds max_dim {}", j.shape, rule.max_dim),
+            )?;
+            expect(
+                cubes4(j.shape) <= rule.max_cubes4,
+                format!(
+                    "{sc:?}: {} needs {} cubes > {}",
+                    j.shape,
+                    cubes4(j.shape),
+                    rule.max_cubes4
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arrivals_non_decreasing_across_scenarios() {
+    check("arrivals monotone", 30, |rng| {
+        let sc = Scenario::ALL[rng.below(Scenario::ALL.len())];
+        let cfg = sc.trace_config(rng.range(2, 150), rng.next_u64());
+        let t = generate(&cfg);
+        for w in t.windows(2) {
+            expect(
+                w[1].arrival >= w[0].arrival,
+                format!("{sc:?}: arrival went backwards at job {}", w[1].id),
+            )?;
+        }
+        expect(t[0].arrival >= 0.0, "negative first arrival")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn durations_and_comm_fraction_within_configured_bounds() {
+    check("duration/comm bounds", 30, |rng| {
+        let sc = Scenario::ALL[rng.below(Scenario::ALL.len())];
+        let cfg = sc.trace_config(rng.range(1, 100), rng.next_u64());
+        for j in generate(&cfg) {
+            expect(
+                (cfg.dur_min..=cfg.dur_max).contains(&j.duration),
+                format!("{sc:?}: duration {} out of bounds", j.duration),
+            )?;
+            expect(
+                (cfg.comm_lo..cfg.comm_hi).contains(&j.comm_frac),
+                format!(
+                    "{sc:?}: comm_frac {} outside [{}, {})",
+                    j.comm_frac, cfg.comm_lo, cfg.comm_hi
+                ),
+            )?;
+            expect(
+                (1..=4096).contains(&j.size()),
+                format!("{sc:?}: size {} out of cluster range", j.size()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_scenario_is_nonempty_and_placeable_on_empty_reconfig4() {
+    let topo = ClusterTopo::reconfigurable_4096(4);
+    for sc in Scenario::ALL {
+        let t = generate(&sc.trace_config(80, 7));
+        assert!(!t.is_empty(), "{sc:?}: empty trace");
+        let mut policy = Policy::new(PolicyKind::Reconfig);
+        for j in &t {
+            assert!(
+                policy.feasible_ever(topo, j.shape),
+                "{sc:?}: job {} shape {} not placeable on empty Reconfig(4^3)",
+                j.id,
+                j.shape
+            );
+        }
+    }
+}
+
+#[test]
+fn shape_for_size_respects_caps_under_scenario_rules() {
+    // The per-scenario ShapeRule variants must uphold the same caps the
+    // default rule guarantees.
+    check("shape_for_size caps", 40, |rng| {
+        let sc = Scenario::ALL[rng.below(Scenario::ALL.len())];
+        let rule: ShapeRule = sc.trace_config(1, 1).shape_rule;
+        let size = rng.range(1, 4096);
+        if let Some(s) = shape_for_size(rng, size, &rule) {
+            expect(s.size() == size, format!("size mismatch for {size}"))?;
+            expect(
+                s.dims().0.iter().all(|&d| d <= rule.max_dim),
+                format!("{s} exceeds max_dim"),
+            )?;
+            expect(cubes4(s) <= rule.max_cubes4, format!("{s} exceeds cube cap"))?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,118 @@
+//! The sweep runner's determinism contract: a sweep run with 1 thread and
+//! with many threads must produce byte-identical JSON rows. This is what
+//! catches seed-derivation and result-ordering races in the sharded
+//! runner.
+
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+use rfold::sim::sweep::{self, SweepConfig};
+use rfold::trace::scenarios::Scenario;
+
+/// Cheap sub-grid: two static cells plus one reconfigurable cell, two
+/// scenarios — enough to cross every code path without long runtimes.
+fn small_cells() -> Vec<exp::Cell> {
+    let all = exp::table1_cells();
+    all.into_iter()
+        .filter(|c| {
+            matches!(
+                c.label,
+                "FirstFit (16^3)" | "Folding (16^3)" | "Reconfig (4^3)"
+            )
+        })
+        .collect()
+}
+
+fn rows_json(threads: usize) -> Vec<String> {
+    let scenarios = [Scenario::PaperDefault, Scenario::UniformSmall];
+    let rows = sweep::run_grid(&small_cells(), &scenarios, 4, 40, 5, threads);
+    rows.iter().map(report::sweep_row_json).collect()
+}
+
+#[test]
+fn grid_rows_byte_identical_across_thread_counts() {
+    let one = rows_json(1);
+    let eight = rows_json(8);
+    assert_eq!(one.len(), eight.len());
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(a, b, "sweep row differs between --threads 1 and --threads 8");
+    }
+}
+
+#[test]
+fn auto_threads_matches_explicit_one() {
+    // threads=0 (auto) must also land on the same bytes.
+    assert_eq!(rows_json(1), rows_json(0));
+}
+
+#[test]
+fn trials_land_in_seed_order_regardless_of_sharding() {
+    let cell = small_cells()[0];
+    let per_trial = |threads: usize| -> Vec<(usize, usize, usize)> {
+        let mut cfg = SweepConfig::new(6, 30, 11);
+        cfg.threads = threads;
+        sweep::run_trials(cell, &cfg)
+            .iter()
+            .map(|(r, t)| (r.scheduled, r.dropped, t.len()))
+            .collect()
+    };
+    let serial = per_trial(1);
+    for threads in [2, 3, 6, 16] {
+        assert_eq!(serial, per_trial(threads), "threads={threads}");
+    }
+}
+
+#[test]
+fn sharded_run_cell_matches_manual_serial_aggregation() {
+    // experiments::run_cell (now sharded) must equal a hand-rolled serial
+    // loop using the same seed derivation — exact float equality, since
+    // the aggregation consumes identical values in identical order.
+    use rfold::metrics::summarize;
+    use rfold::sim::engine::{RunResult, SimConfig, Simulation};
+    use rfold::trace::gen::{generate, TraceConfig};
+    use rfold::trace::JobSpec;
+
+    let cell = small_cells()[1];
+    let (runs, jobs, seed) = (3usize, 35usize, 9u64);
+    let mut results: Vec<(RunResult, Vec<JobSpec>)> = Vec::new();
+    for r in 0..runs {
+        let trace = generate(&TraceConfig {
+            num_jobs: jobs,
+            seed: seed + r as u64,
+            ..Default::default()
+        });
+        let res = Simulation::new(SimConfig::new(cell.topo, cell.policy)).run(&trace);
+        results.push((res, trace));
+    }
+    let pairs: Vec<(RunResult, &[JobSpec])> = results
+        .iter()
+        .map(|(r, t)| (r.clone(), t.as_slice()))
+        .collect();
+    let serial = summarize(cell.label, &pairs);
+    let sharded = exp::run_cell(cell, runs, jobs, seed);
+    assert_eq!(serial.avg_jcr_pct, sharded.avg_jcr_pct);
+    assert_eq!(serial.jct_p50, sharded.jct_p50);
+    assert_eq!(serial.jct_p90, sharded.jct_p90);
+    assert_eq!(serial.jct_p99, sharded.jct_p99);
+    assert_eq!(serial.avg_util, sharded.avg_util);
+    assert_eq!(serial.avg_queue_delay, sharded.avg_queue_delay);
+    assert_eq!(serial.util_cdf, sharded.util_cdf);
+}
+
+#[test]
+fn all_scenarios_flow_through_the_grid() {
+    // Every named scenario must survive the full pipeline and emit a row
+    // whose JSON carries its name (acceptance criterion of the sweep PR).
+    let cells = [exp::table1_cells()[1]]; // Folding (16^3): cheap, drops some jobs
+    let rows = sweep::run_grid(&cells, &Scenario::ALL, 2, 30, 3, 0);
+    assert_eq!(rows.len(), Scenario::ALL.len());
+    for (row, sc) in rows.iter().zip(Scenario::ALL) {
+        let json = report::sweep_row_json(row);
+        assert!(
+            json.contains(&format!("\"scenario\":\"{}\"", sc.name())),
+            "row missing scenario {}: {json}",
+            sc.name()
+        );
+        assert_eq!(row.runs, 2);
+        assert!(row.summary.avg_jcr_pct > 0.0, "{}: no jobs completed", sc.name());
+    }
+}
