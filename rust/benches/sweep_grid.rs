@@ -1,16 +1,17 @@
-//! Bench: the full policy × topology × scenario grid on the sharded sweep
-//! runner, plus the serial-vs-sharded wall-clock comparison for the
-//! Table-1 cells (the headline speedup of the sweep subsystem).
+//! Bench: the full policy × topology × scenario grid on the global
+//! work-queue runner, the serial-vs-parallel wall-clock comparison for the
+//! Table-1 cells, and the warm-cache replay (the two headline speedups of
+//! the sweep subsystem).
 //!
 //! Configure with `RFOLD_BENCH_RUNS` (default 8), `RFOLD_BENCH_JOBS`
-//! (default 192), `RFOLD_BENCH_SEED` (default 1), `RFOLD_BENCH_THREADS`
-//! (default 0 = auto).
+//! (default 192), `RFOLD_BENCH_SEED` (default 1), `RFOLD_BENCH_WORKERS`
+//! (default 0 = auto; `RFOLD_BENCH_THREADS` kept as an alias).
 
 use std::time::Instant;
 
 use rfold::metrics::report;
 use rfold::sim::experiments as exp;
-use rfold::sim::sweep;
+use rfold::sim::sweep::{self, ResultCache};
 use rfold::trace::scenarios::Scenario;
 
 fn env(name: &str, default: usize) -> usize {
@@ -21,7 +22,7 @@ fn main() {
     let runs = env("RFOLD_BENCH_RUNS", 8);
     let jobs = env("RFOLD_BENCH_JOBS", 192);
     let seed = env("RFOLD_BENCH_SEED", 1) as u64;
-    let threads = env("RFOLD_BENCH_THREADS", 0);
+    let workers = env("RFOLD_BENCH_WORKERS", env("RFOLD_BENCH_THREADS", 0));
     let cells = exp::table1_cells();
 
     rfold::util::bench::section(&format!(
@@ -29,24 +30,72 @@ fn main() {
         cells.len(),
         Scenario::ALL.len()
     ));
-    let rows = sweep::run_grid(&cells, &Scenario::ALL, runs, jobs, seed, threads);
+    let grid_cache = ResultCache::new();
+    let rows = sweep::run_grid(
+        &cells,
+        &Scenario::ALL,
+        runs,
+        jobs,
+        seed,
+        workers,
+        &grid_cache,
+    );
     report::print_sweep(&rows);
 
-    rfold::util::bench::section("sharded-runner speedup (Table-1 cells, paper-default)");
+    // Fresh caches per timed run: the comparison measures the queue, not
+    // cache replay.
+    rfold::util::bench::section("work-queue speedup (Table-1 cells, paper-default)");
     let t0 = Instant::now();
-    let serial = sweep::run_grid(&cells, &[Scenario::PaperDefault], runs, jobs, seed, 1);
+    let serial = sweep::run_grid(
+        &cells,
+        &[Scenario::PaperDefault],
+        runs,
+        jobs,
+        seed,
+        1,
+        &ResultCache::new(),
+    );
     let t_serial = t0.elapsed().as_secs_f64();
+    let warm = ResultCache::new();
     let t1 = Instant::now();
-    let sharded = sweep::run_grid(&cells, &[Scenario::PaperDefault], runs, jobs, seed, threads);
-    let t_sharded = t1.elapsed().as_secs_f64();
-    // Sharding must never change results — only wall-clock.
+    let parallel = sweep::run_grid(
+        &cells,
+        &[Scenario::PaperDefault],
+        runs,
+        jobs,
+        seed,
+        workers,
+        &warm,
+    );
+    let t_parallel = t1.elapsed().as_secs_f64();
+    // Worker count must never change results — only wall-clock.
     let json = |rows: &[sweep::SweepRow]| -> Vec<String> {
         rows.iter().map(report::sweep_row_json).collect()
     };
-    assert_eq!(json(&serial), json(&sharded), "sharding changed sweep rows");
+    assert_eq!(json(&serial), json(&parallel), "worker count changed sweep rows");
     println!(
-        "SWEEP-SPEEDUP threads={} serial={t_serial:.1}s sharded={t_sharded:.1}s speedup={:.2}x",
-        if threads == 0 { sweep::auto_threads() } else { threads },
-        t_serial / t_sharded.max(1e-9)
+        "SWEEP-SPEEDUP workers={} serial={t_serial:.1}s parallel={t_parallel:.1}s speedup={:.2}x",
+        if workers == 0 { sweep::auto_workers() } else { workers },
+        t_serial / t_parallel.max(1e-9)
+    );
+
+    rfold::util::bench::section("result-cache replay (same grid, warm cache)");
+    let hits0 = warm.hits();
+    let t2 = Instant::now();
+    let replay = sweep::run_grid(
+        &cells,
+        &[Scenario::PaperDefault],
+        runs,
+        jobs,
+        seed,
+        workers,
+        &warm,
+    );
+    let t_replay = t2.elapsed().as_secs_f64();
+    assert_eq!(json(&parallel), json(&replay), "cache replay changed sweep rows");
+    println!(
+        "SWEEP-CACHE warm replay={t_replay:.3}s ({} hits) cold={t_parallel:.1}s speedup={:.0}x",
+        warm.hits() - hits0,
+        t_parallel / t_replay.max(1e-9)
     );
 }

@@ -1,5 +1,11 @@
 //! Bench: regenerate **Table 1** (average JCR per policy/topology).
 //!
+//! Each `exp::run_cell` call rides the work-queue runner with the
+//! process-wide result cache (`sim::sweep`): a cell's trials parallelize
+//! across workers (cells themselves run sequentially here, one
+//! `run_cell` at a time), and any cell already simulated this process is
+//! served from the cache.
+//!
 //! Configure with env vars: `RFOLD_BENCH_RUNS` (default 20),
 //! `RFOLD_BENCH_JOBS` (default 512), `RFOLD_BENCH_SEED` (default 1).
 //! The paper uses 100 runs; `make bench-full` sets that.

@@ -15,7 +15,7 @@
 //!   request path).
 //!
 //! Entry points: the [`coordinator`] leader loop, [`sim::Simulation`] for
-//! trace-driven experiments, [`sim::sweep`] for sharded multi-threaded
+//! trace-driven experiments, [`sim::sweep`] for result-cached work-queue
 //! experiment grids over the [`trace::scenarios`] workload matrix, and the
 //! `rfold` CLI (`rust/src/main.rs`).
 

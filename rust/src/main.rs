@@ -6,7 +6,7 @@
 //! rfold fig3     [--runs N] [--jobs J] [--seed S]      Figure 3 (JCT)
 //! rfold fig4     [--runs N] [--jobs J] [--seed S]      Figure 4 (utilization)
 //! rfold sweep    [--runs N] [--jobs J] [--seed S]      policy x topology x scenario
-//!                [--threads T] [--scenarios a,b|all]   grid, JSON rows on stdout
+//!                [--workers W] [--scenarios a,b|all]   grid, JSON rows on stdout
 //!                [--policies p,q] [--out FILE]
 //! rfold motivation                                     §3.1 contention study
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
@@ -18,8 +18,10 @@
 //! rfold scorer-check [--plans K]                       XLA vs native scorer
 //! ```
 //!
-//! Every multi-run driver shards its seeded trials across OS threads via
-//! `sim::sweep`; output is bit-identical for any thread count.
+//! Every multi-run driver runs its seeded trials on the global work-queue
+//! runner in `sim::sweep` (result-cached, worker threads pulling
+//! (scenario, cell, trial) items); output is bit-identical for any worker
+//! count and cache state.
 
 use rfold::metrics::report;
 use rfold::metrics::CellSummary;
@@ -66,7 +68,8 @@ fn usage() -> &'static str {
     "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
      trace-gen|serve|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
-     sweep options:  --threads T (0=auto) --scenarios a,b|all --policies p,q --out FILE"
+     sweep options:  --workers W (0=auto; --threads is an alias) \
+     --scenarios a,b|all --policies p,q --out FILE"
 }
 
 fn runs_jobs_seed(args: &Args) -> (usize, usize, u64) {
@@ -121,14 +124,16 @@ fn fig4(args: &Args) {
     report::print_fig4(&sums);
 }
 
-/// The full policy × topology × scenario grid on the sharded sweep runner.
-/// One `SWEEP {json}` row per cell on stdout; progress/timing on stderr,
-/// so stdout is byte-identical for any `--threads` value.
+/// The full policy × topology × scenario grid on the global work-queue
+/// runner. One `SWEEP {json}` row per cell on stdout; progress/timing and
+/// cache hit/miss statistics on stderr, so stdout is byte-identical for
+/// any `--workers` value.
 fn sweep_cmd(args: &Args) {
     let runs = args.get_usize("runs", 8);
     let jobs = args.get_usize("jobs", 256);
     let seed = args.get_u64("seed", 1);
-    let threads = args.get_usize("threads", 0);
+    // `--threads` kept as an alias from the per-cell sharding era.
+    let workers = args.get_usize("workers", args.get_usize("threads", 0));
     if runs == 0 || jobs == 0 {
         eprintln!("--runs and --jobs must be >= 1");
         std::process::exit(2);
@@ -171,17 +176,25 @@ fn sweep_cmd(args: &Args) {
         std::process::exit(2);
     }
     eprintln!(
-        "sweep: {} cells x {} scenarios x {runs} runs x {jobs} jobs ({} threads)",
+        "sweep: {} cells x {} scenarios x {runs} runs x {jobs} jobs ({} workers)",
         cells.len(),
         scenarios.len(),
-        if threads == 0 {
-            format!("auto={}", sweep::auto_threads())
+        if workers == 0 {
+            format!("auto={}", sweep::auto_workers())
         } else {
-            threads.to_string()
+            workers.to_string()
         }
     );
     let t0 = std::time::Instant::now();
-    let rows = sweep::run_grid(&cells, &scenarios, runs, jobs, seed, threads);
+    let rows = sweep::run_grid(
+        &cells,
+        &scenarios,
+        runs,
+        jobs,
+        seed,
+        workers,
+        sweep::ResultCache::global(),
+    );
     report::print_sweep(&rows);
     if let Some(out) = args.get("out") {
         let mut text = String::with_capacity(rows.len() * 256);

@@ -33,7 +33,11 @@ pub struct CellSummary {
 pub const CDF_POINTS: usize = 20;
 
 /// Aggregate per-run results (with their traces) into a cell summary.
-pub fn summarize(label: &str, runs: &[(RunResult, &[JobSpec])]) -> CellSummary {
+///
+/// Takes borrowed results: trial outputs are shared (`Arc`ed by the sweep
+/// result cache, possibly across several cells), so aggregation must not
+/// deep-clone outcome vectors and utilization sample sets per cell.
+pub fn summarize(label: &str, runs: &[(&RunResult, &[JobSpec])]) -> CellSummary {
     assert!(!runs.is_empty());
     let mut jcrs = Vec::new();
     let mut p50s = Vec::new();
@@ -42,7 +46,7 @@ pub fn summarize(label: &str, runs: &[(RunResult, &[JobSpec])]) -> CellSummary {
     let mut utils = Vec::new();
     let mut delays = Vec::new();
     let mut curves: Vec<Vec<f64>> = vec![Vec::new(); CDF_POINTS + 1];
-    for (r, trace) in runs {
+    for &(r, trace) in runs {
         jcrs.push(r.jcr() * 100.0);
         let jcts = r.jcts(trace);
         if !jcts.is_empty() {
@@ -88,7 +92,7 @@ mod tests {
 
     #[test]
     fn summarize_two_runs() {
-        let mut pairs = Vec::new();
+        let mut results = Vec::new();
         let mut traces = Vec::new();
         for seed in 1..=2 {
             let cfg = TraceConfig { num_jobs: 40, seed, ..Default::default() };
@@ -100,8 +104,13 @@ mod tests {
                 PolicyKind::RFold,
             ))
             .run(t);
-            pairs.push((r, t.as_slice()));
+            results.push(r);
         }
+        let pairs: Vec<(&RunResult, &[JobSpec])> = results
+            .iter()
+            .zip(&traces)
+            .map(|(r, t)| (r, t.as_slice()))
+            .collect();
         let s = summarize("RFold (4^3)", &pairs);
         assert_eq!(s.runs, 2);
         assert!(s.avg_jcr_pct > 0.0 && s.avg_jcr_pct <= 100.0);

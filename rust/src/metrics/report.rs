@@ -82,8 +82,8 @@ fn num(v: f64) -> Json {
 /// Serialize one sweep row as a single-line JSON object.
 ///
 /// Every field is derived only from (scenario, cell, seeds, trial
-/// results) — never from wall-clock time or thread count — so `rfold
-/// sweep` output is byte-identical for any `--threads` value.
+/// results) — never from wall-clock time, worker count, or cache state —
+/// so `rfold sweep` output is byte-identical for any `--workers` value.
 pub fn sweep_row_json(row: &SweepRow) -> String {
     let s = &row.summary;
     let mut m = BTreeMap::new();

@@ -58,15 +58,13 @@ impl Plan {
             }
         }
         if let Some(ocs) = cluster.ocs_mut() {
-            let mut done: Vec<&OcsChainPlan> = Vec::new();
             for ch in &self.chains {
-                match ocs.reserve_path(ch.axis, ch.i, ch.j, &ch.cubes, ch.closed, self.job) {
-                    Ok(()) => done.push(ch),
-                    Err(e) => {
-                        // Roll back everything reserved so far.
-                        ocs.release_job(self.job);
-                        return Err(format!("OCS reservation failed: {e}"));
-                    }
+                if let Err(e) =
+                    ocs.reserve_path(ch.axis, ch.i, ch.j, &ch.cubes, ch.closed, self.job)
+                {
+                    // Roll back everything reserved so far.
+                    ocs.release_job(self.job);
+                    return Err(format!("OCS reservation failed: {e}"));
                 }
             }
         } else if !self.chains.is_empty() {

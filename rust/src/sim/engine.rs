@@ -76,15 +76,23 @@ impl RunResult {
         self.scheduled as f64 / self.outcomes.len() as f64
     }
 
-    /// Completion times (finish − arrival) of scheduled jobs in job-id
-    /// order, given the original trace for arrival lookup.
-    pub fn jcts(&self, trace: &[JobSpec]) -> Vec<f64> {
+    /// Per-completed-job metric rows in job-id order. Jobs absent from
+    /// `trace` (a caller handed the wrong trace for this run) are skipped
+    /// rather than panicking on a missing arrival; debug builds still
+    /// assert so the mismatch is caught in tests.
+    fn completed_rows(&self, trace: &[JobSpec], f: impl Fn(f64, f64, f64) -> f64) -> Vec<f64> {
         let arrivals: HashMap<u64, f64> = trace.iter().map(|j| (j.id, j.arrival)).collect();
         let mut rows: Vec<(u64, f64)> = self
             .outcomes
             .iter()
             .filter_map(|(id, o)| match o {
-                JobOutcome::Completed { finish, .. } => Some((*id, finish - arrivals[id])),
+                JobOutcome::Completed { start, finish } => {
+                    let Some(&arrival) = arrivals.get(id) else {
+                        debug_assert!(false, "job {id} is not in the provided trace");
+                        return None;
+                    };
+                    Some((*id, f(*start, *finish, arrival)))
+                }
                 _ => None,
             })
             .collect();
@@ -92,19 +100,15 @@ impl RunResult {
         rows.into_iter().map(|r| r.1).collect()
     }
 
+    /// Completion times (finish − arrival) of scheduled jobs in job-id
+    /// order, given the original trace for arrival lookup.
+    pub fn jcts(&self, trace: &[JobSpec]) -> Vec<f64> {
+        self.completed_rows(trace, |_start, finish, arrival| finish - arrival)
+    }
+
     /// Queueing delays (start − arrival) of scheduled jobs in job-id order.
     pub fn queueing_delays(&self, trace: &[JobSpec]) -> Vec<f64> {
-        let arrivals: HashMap<u64, f64> = trace.iter().map(|j| (j.id, j.arrival)).collect();
-        let mut rows: Vec<(u64, f64)> = self
-            .outcomes
-            .iter()
-            .filter_map(|(id, o)| match o {
-                JobOutcome::Completed { start, .. } => Some((*id, start - arrivals[id])),
-                _ => None,
-            })
-            .collect();
-        rows.sort_by_key(|r| r.0);
-        rows.into_iter().map(|r| r.1).collect()
+        self.completed_rows(trace, |start, _finish, arrival| start - arrival)
     }
 }
 
@@ -270,11 +274,20 @@ impl Simulation {
         for (idx, j) in trace.iter().enumerate() {
             self.push_event(j.arrival, EventSlot::Arrival(idx));
         }
+        // Utilization is measured over the workload window [0, last
+        // arrival] — the drain tail after submissions stop would otherwise
+        // dilute every policy's numbers (Figure 4 semantics). A degenerate
+        // trace whose arrivals all land at t=0 has a zero-width window, so
+        // the window extends to the *first completion*: between t=0 and
+        // that event the occupancy is constant, making the integral the
+        // point-in-time utilization of the loaded cluster instead of an
+        // empty measurement — and never the diluted full-drain integral.
+        let mut util_end = if horizon > 0.0 { horizon } else { f64::INFINITY };
         while let Some(Reverse((OrdF64(t), _, slot))) = self.events.pop() {
-            // Utilization is measured over the workload window [0, last
-            // arrival] — the drain tail after submissions stop would
-            // otherwise dilute every policy's numbers (Figure 4 semantics).
-            self.sample_util(if horizon > 0.0 { t.min(horizon) } else { t });
+            if util_end.is_infinite() && matches!(slot, EventSlot::Completion(_)) {
+                util_end = t;
+            }
+            self.sample_util(t.min(util_end));
             self.now = t;
             match slot {
                 EventSlot::Arrival(idx) => {
@@ -420,6 +433,71 @@ mod tests {
         );
         // Busy the whole makespan at 100%.
         assert!((r.utilization.mean() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_horizon_trace_excludes_drain_tail_from_utilization() {
+        // Both jobs arrive at t=0 (horizon 0) and fill the cluster; the
+        // short one finishes at t=10, after which the cluster drains at
+        // 50% for 90 more seconds. The utilization window must stop at
+        // the first completion (point-in-time utilization of the loaded
+        // cluster = 100%), not integrate the drain tail (≈55%).
+        let trace = vec![
+            job(0, 0.0, 100.0, JobShape::new(16, 16, 8)),
+            job(1, 0.0, 10.0, JobShape::new(16, 16, 8)),
+        ];
+        let r = run(
+            PolicyKind::Reconfig,
+            ClusterTopo::reconfigurable_4096(4),
+            &trace,
+        );
+        assert_eq!(r.scheduled, 2);
+        assert!(
+            (r.utilization.mean() - 1.0).abs() < 1e-9,
+            "drain tail diluted utilization: {}",
+            r.utilization.mean()
+        );
+    }
+
+    #[test]
+    fn mismatched_trace_does_not_panic_in_release() {
+        // jcts/queueing_delays against a trace missing some run jobs:
+        // debug builds assert (the mismatch is a caller bug), release
+        // builds skip the unknown jobs instead of panicking on indexing.
+        let trace = vec![
+            job(0, 0.0, 10.0, JobShape::new(2, 2, 2)),
+            job(1, 1.0, 10.0, JobShape::new(2, 2, 2)),
+        ];
+        let r = run(
+            PolicyKind::Reconfig,
+            ClusterTopo::reconfigurable_4096(4),
+            &trace,
+        );
+        assert_eq!(r.scheduled, 2);
+        let partial = &trace[..1]; // job 1 missing
+        if cfg!(debug_assertions) {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                r.jcts(partial)
+            }));
+            let payload = res.expect_err("debug build must assert on the mismatch");
+            // Assert on the debug_assert's own message: the pre-fix code
+            // also panicked here (HashMap indexing, "no entry found for
+            // key"), so a bare is_err() could not catch a regression.
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(
+                msg.contains("not in the provided trace"),
+                "expected the skip-path debug_assert, got: {msg:?}"
+            );
+        } else {
+            assert_eq!(r.jcts(partial), vec![10.0]);
+            assert_eq!(r.queueing_delays(partial), vec![0.0]);
+        }
+        // A matching trace keeps working either way.
+        assert_eq!(r.jcts(&trace).len(), 2);
     }
 
     #[test]

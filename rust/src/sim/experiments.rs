@@ -84,9 +84,12 @@ pub fn fig3_cells() -> Vec<Cell> {
 /// Run one cell over `runs` seeded traces. Seeds are `base_seed..+runs`,
 /// shared across cells so every policy sees identical workloads.
 ///
-/// Trials shard across OS threads via [`sweep::run_cell_sharded`]; the
-/// summary is bit-identical to the old serial loop (the sweep runner keeps
-/// the same per-trial seed derivation and aggregates in trial order).
+/// Trials run on the global work-queue runner via
+/// [`sweep::run_cell_sharded`], with the process-wide result cache in
+/// front: a cell repeated across drivers (Table 1 → Figure 4, grids in
+/// `rfold all`) simulates once. The summary is bit-identical to the old
+/// serial loop (the runner keeps the same per-trial seed derivation and
+/// aggregates in trial order).
 pub fn run_cell(cell: Cell, runs: usize, jobs_per_run: usize, base_seed: u64) -> CellSummary {
     run_cell_with(cell, runs, jobs_per_run, base_seed, [true; 3])
 }

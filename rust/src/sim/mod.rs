@@ -9,4 +9,4 @@ pub mod sweep;
 
 pub use contention::ContentionModel;
 pub use engine::{RunResult, SimConfig, Simulation};
-pub use sweep::{SweepConfig, SweepRow};
+pub use sweep::{ResultCache, SweepConfig, SweepRow, TrialOutput};

@@ -1,29 +1,47 @@
-//! Sharded multi-threaded experiment sweeps over the workload-scenario
-//! matrix.
+//! Global work-queue experiment runner over the workload-scenario matrix,
+//! with a process-wide trial-result cache.
 //!
 //! Every paper table/figure is a grid of (policy × topology × scenario)
 //! cells, each averaged over `runs` seeded trials. Trials are mutually
-//! independent — they share nothing but their configuration — so this
-//! module shards them across OS threads with `std::thread::scope` (no
-//! external dependencies).
+//! independent — they share nothing but their configuration — so the
+//! whole grid flattens into (scenario, cell, trial) work items that N
+//! worker threads pull off a shared atomic cursor. Sharding at work-item
+//! granularity (not per-cell) keeps every core busy even when `runs` is
+//! tiny: a `runs=2` grid of 12 cells is 24 items, not 2-at-a-time.
 //!
 //! ## Determinism contract
 //!
-//! Results are **bit-identical for any thread count**, including 1:
+//! Results are **bit-identical for any worker count**, including 1:
 //!
 //! * trial `r` always uses seed [`trial_seed`]`(base_seed, r)` — the same
 //!   derivation the old serial loop in `experiments::run_cell` used;
-//! * trial `r`'s result always lands in slot `r` of the output vector, so
-//!   aggregation order never depends on scheduling;
+//! * every work item writes into its pre-indexed slot, so aggregation
+//!   order never depends on scheduling;
 //! * per-trial simulation is single-threaded and deterministic, and no
-//!   wall-clock or thread-count value flows into any reported row
-//!   (progress/timing goes to stderr only).
+//!   wall-clock or worker-count value flows into any reported row
+//!   (progress/timing and cache statistics go to stderr only).
 //!
-//! `tests/sweep_determinism.rs` locks this contract down.
+//! ## Result cache
+//!
+//! A trial is fully determined by
+//! `(policy, topology, scenario, trial seed, jobs_per_run, fold_dims)` —
+//! notably *not* by the cell label — so cells sharing that tuple (Table 1
+//! vs Figure 3 vs the ablation grids reuse many (policy, topology) pairs)
+//! simulate once. [`ResultCache::global`] persists across grids within a
+//! process: `rfold all` pays for Figure 4's cells only once because Table
+//! 1 already ran them. Duplicates inside one grid are deduplicated before
+//! the queue is built, so they never occupy a worker. Hit/miss counts are
+//! reported on stderr only.
+//!
+//! `tests/sweep_determinism.rs` locks both contracts down.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::metrics::{summarize, CellSummary};
+use crate::placement::PolicyKind;
 use crate::sim::engine::{RunResult, SimConfig, Simulation};
 use crate::sim::experiments::Cell;
 use crate::topology::cluster::ClusterTopo;
@@ -31,14 +49,14 @@ use crate::trace::gen::generate;
 use crate::trace::scenarios::Scenario;
 use crate::trace::JobSpec;
 
-/// Knobs of one sharded cell run.
+/// Knobs of one swept cell.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepConfig {
     pub runs: usize,
     pub jobs_per_run: usize,
     pub base_seed: u64,
-    /// OS threads to shard trials across; 0 = one per available core.
-    pub threads: usize,
+    /// Worker threads pulling from the work queue; 0 = one per core.
+    pub workers: usize,
     /// Ablation A2 knob, forwarded to [`SimConfig`].
     pub fold_dims_enabled: [bool; 3],
     pub scenario: Scenario,
@@ -50,29 +68,193 @@ impl SweepConfig {
             runs,
             jobs_per_run,
             base_seed,
-            threads: 0,
+            workers: 0,
             fold_dims_enabled: [true; 3],
             scenario: Scenario::PaperDefault,
         }
     }
 }
 
-/// Thread count used when `SweepConfig::threads` is 0.
-pub fn auto_threads() -> usize {
+/// Worker count used when `SweepConfig::workers` is 0.
+pub fn auto_workers() -> usize {
     std::thread::available_parallelism()
         .map(std::num::NonZeroUsize::get)
         .unwrap_or(1)
 }
 
 /// Seed of trial `r`: `base_seed + r`, the derivation the serial driver
-/// always used, independent of sharding. Seeds are shared across cells and
-/// scenarios so every policy sees identical per-trial randomness streams.
+/// always used, independent of scheduling. Seeds are shared across cells
+/// and scenarios so every policy sees identical per-trial randomness
+/// streams.
 pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
     base_seed.wrapping_add(trial as u64)
 }
 
+/// One simulated trial: the run result plus the trace it consumed (needed
+/// for arrival lookups during aggregation). Shared via `Arc` — the cache
+/// hands the same output to every cell that maps to the same key.
+#[derive(Debug)]
+pub struct TrialOutput {
+    pub result: RunResult,
+    pub trace: Vec<JobSpec>,
+}
+
+impl TrialOutput {
+    /// Approximate heap footprint, for the cache's byte bound.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.trace.capacity() * std::mem::size_of::<JobSpec>()
+            + self.result.outcomes.capacity()
+                * std::mem::size_of::<(u64, crate::sim::engine::JobOutcome)>()
+            + self.result.utilization.approx_bytes()
+    }
+}
+
+/// Everything that determines a trial's bytes. The cell *label* is
+/// deliberately absent: it names the row, it does not influence the
+/// simulation.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct TrialKey {
+    policy: PolicyKind,
+    topo: ClusterTopo,
+    scenario: &'static str,
+    seed: u64,
+    jobs_per_run: usize,
+    fold_dims: [bool; 3],
+}
+
+/// One (scenario, cell, trial) work item of a flattened grid.
+#[derive(Clone, Copy, Debug)]
+struct WorkItem {
+    cell: Cell,
+    cfg: SweepConfig,
+    trial: usize,
+}
+
+impl WorkItem {
+    fn key(&self) -> TrialKey {
+        TrialKey {
+            policy: self.cell.policy,
+            topo: self.cell.topo,
+            scenario: self.cfg.scenario.name(),
+            seed: trial_seed(self.cfg.base_seed, self.trial),
+            jobs_per_run: self.cfg.jobs_per_run,
+            fold_dims: self.cfg.fold_dims_enabled,
+        }
+    }
+}
+
+/// Upper bound on the approximate bytes a cache keeps resident (256 MiB).
+/// A `TrialOutput` holds the full trace plus per-job outcomes and
+/// utilization samples (~100 KB at paper scale), so an unbounded
+/// process-global cache would grow monotonically across `rfold all` /
+/// `make bench-full`. When an insert would exceed the bound the cache
+/// flushes wholesale (stderr note) — crude, but memory stays bounded,
+/// determinism is unaffected (a flushed trial re-simulates to identical
+/// bytes), and the reuse patterns that matter (Table 1 ↔ Figure 3/4
+/// overlap, repeated grids) fit comfortably under it.
+pub const MAX_RESIDENT_BYTES: usize = 256 << 20;
+
+/// Resident entries plus their bookkept approximate footprint — one
+/// struct behind one mutex so the two can never drift.
+struct CacheInner {
+    map: HashMap<TrialKey, Arc<TrialOutput>>,
+    bytes: usize,
+}
+
+/// Memoized trial results keyed by [`TrialKey`], plus hit/miss counters.
+/// Thread-safe; the process-global instance ([`ResultCache::global`])
+/// makes repeated grids (Table 1 → Figure 4, repeated CLI subcommands in
+/// `rfold all`, overlapping bench sections) reuse each other's trials.
+/// Bounded by [`MAX_RESIDENT_BYTES`].
+pub struct ResultCache {
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new() -> ResultCache {
+        ResultCache {
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                bytes: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache used by [`run_trials`] / `run_cell_sharded`.
+    pub fn global() -> &'static ResultCache {
+        static GLOBAL: OnceLock<ResultCache> = OnceLock::new();
+        GLOBAL.get_or_init(ResultCache::new)
+    }
+
+    fn get(&self, key: &TrialKey) -> Option<Arc<TrialOutput>> {
+        self.inner.lock().unwrap().map.get(key).cloned()
+    }
+
+    fn insert(&self, key: TrialKey, out: Arc<TrialOutput>) {
+        let add = out.approx_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        if inner.bytes + add > MAX_RESIDENT_BYTES && !inner.map.is_empty() {
+            eprintln!(
+                "sweep: result cache flushed at {} trials / ~{} MiB (bound {} MiB)",
+                inner.map.len(),
+                inner.bytes >> 20,
+                MAX_RESIDENT_BYTES >> 20
+            );
+            inner.map.clear();
+            inner.bytes = 0;
+        }
+        if let Some(old) = inner.map.insert(key, out) {
+            inner.bytes = inner.bytes.saturating_sub(old.approx_bytes());
+        }
+        inner.bytes += add;
+    }
+
+    /// Cached trial count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate bytes the cached trials keep resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Work items served without simulating (cache or in-grid dedup).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Work items actually simulated.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached trial (counters are kept; callers wanting a
+    /// pristine cache build a fresh one).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+}
+
+impl Default for ResultCache {
+    fn default() -> Self {
+        ResultCache::new()
+    }
+}
+
 /// One trial: generate the scenario trace for this trial's seed, simulate.
-fn run_trial(cell: Cell, cfg: &SweepConfig, trial: usize) -> (RunResult, Vec<JobSpec>) {
+fn run_trial(cell: Cell, cfg: &SweepConfig, trial: usize) -> TrialOutput {
     let tc = cfg
         .scenario
         .trace_config(cfg.jobs_per_run, trial_seed(cfg.base_seed, trial));
@@ -80,56 +262,149 @@ fn run_trial(cell: Cell, cfg: &SweepConfig, trial: usize) -> (RunResult, Vec<Job
     let mut sim_cfg = SimConfig::new(cell.topo, cell.policy);
     sim_cfg.fold_dims_enabled = cfg.fold_dims_enabled;
     let result = Simulation::new(sim_cfg).run(&trace);
-    (result, trace)
+    TrialOutput { result, trace }
 }
 
-/// Run every trial of one cell, sharded across OS threads. Slot `r` of the
-/// returned vector always holds trial `r`.
-pub fn run_trials(cell: Cell, cfg: &SweepConfig) -> Vec<(RunResult, Vec<JobSpec>)> {
-    if cfg.runs == 0 {
-        return Vec::new();
-    }
-    let requested = if cfg.threads == 0 {
-        auto_threads()
-    } else {
-        cfg.threads
-    };
-    let threads = requested.clamp(1, cfg.runs);
-    let mut slots: Vec<Option<(RunResult, Vec<JobSpec>)>> = Vec::new();
-    slots.resize_with(cfg.runs, || None);
-    if threads == 1 {
-        for (trial, slot) in slots.iter_mut().enumerate() {
-            *slot = Some(run_trial(cell, cfg, trial));
+/// Where slot `i` of a queue run gets its output from.
+enum Source {
+    /// Served by the cache (or an identical item earlier in this grid).
+    Cached(Arc<TrialOutput>),
+    /// Computed by the queue; index into the fresh-output table.
+    Fresh(usize),
+}
+
+/// Run a flattened item list through the shared work queue. Slot `i` of
+/// the returned vector always holds item `i`'s output, so results are
+/// position-stable for any worker count; items whose [`TrialKey`] repeats
+/// (within the list or in the cache) simulate exactly once.
+fn run_queue(items: &[WorkItem], workers: usize, cache: &ResultCache) -> Vec<Arc<TrialOutput>> {
+    let keys: Vec<TrialKey> = items.iter().map(WorkItem::key).collect();
+
+    // Resolve each slot: cache hit, duplicate of an earlier slot, or a
+    // fresh item for the queue. `fresh[f]` is the item index computed by
+    // queue position `f`.
+    let mut sources: Vec<Source> = Vec::with_capacity(items.len());
+    let mut fresh: Vec<usize> = Vec::new();
+    let mut fresh_of: HashMap<&TrialKey, usize> = HashMap::new();
+    let mut hits = 0u64;
+    for (i, key) in keys.iter().enumerate() {
+        if let Some(out) = cache.get(key) {
+            sources.push(Source::Cached(out));
+            hits += 1;
+        } else if let Some(&f) = fresh_of.get(key) {
+            sources.push(Source::Fresh(f));
+            hits += 1;
+        } else {
+            fresh_of.insert(key, fresh.len());
+            sources.push(Source::Fresh(fresh.len()));
+            fresh.push(i);
         }
-    } else {
-        // Contiguous shards: thread `t` owns trials [t*chunk, (t+1)*chunk).
-        // Each shard gets a disjoint &mut slice of the slot vector, so no
-        // locks and no result reordering are possible.
-        let chunk = cfg.runs.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (shard, shard_slots) in slots.chunks_mut(chunk).enumerate() {
-                let first = shard * chunk;
-                scope.spawn(move || {
-                    for (offset, slot) in shard_slots.iter_mut().enumerate() {
-                        *slot = Some(run_trial(cell, cfg, first + offset));
-                    }
-                });
-            }
-        });
     }
-    slots
+    cache.hits.fetch_add(hits, Ordering::Relaxed);
+    cache.misses.fetch_add(fresh.len() as u64, Ordering::Relaxed);
+
+    // Drain the queue: workers race on one atomic cursor over the fresh
+    // list — item granularity, so small-`runs` grids still saturate every
+    // worker. Outputs come back tagged with their queue position; no
+    // ordering or result content ever depends on scheduling.
+    //
+    // Liveness goes to stderr only: roughly every tenth completed trial a
+    // worker reports the running count (a paper-scale grid takes hours —
+    // silence would be indistinguishable from a hang).
+    let total = fresh.len();
+    let done = AtomicUsize::new(0);
+    let progress = |it: &WorkItem| {
+        let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+        let step = (total / 10).max(1);
+        if d % step == 0 || d == total {
+            eprintln!(
+                "sweep: {d}/{total} trials done ({} {})",
+                it.cfg.scenario.name(),
+                it.cell.label
+            );
+        }
+    };
+    let mut computed: Vec<Option<Arc<TrialOutput>>> = Vec::new();
+    computed.resize_with(fresh.len(), || None);
+    if !fresh.is_empty() {
+        let requested = if workers == 0 { auto_workers() } else { workers };
+        let w = requested.clamp(1, fresh.len());
+        if w == 1 {
+            for (slot, &i) in computed.iter_mut().zip(&fresh) {
+                let it = &items[i];
+                *slot = Some(Arc::new(run_trial(it.cell, &it.cfg, it.trial)));
+                progress(it);
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..w)
+                    .map(|_| {
+                        scope.spawn(|| {
+                            let mut local = Vec::new();
+                            loop {
+                                let f = cursor.fetch_add(1, Ordering::Relaxed);
+                                let Some(&i) = fresh.get(f) else { break };
+                                let it = &items[i];
+                                local.push((
+                                    f,
+                                    Arc::new(run_trial(it.cell, &it.cfg, it.trial)),
+                                ));
+                                progress(it);
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (f, out) in h.join().expect("sweep worker panicked") {
+                        computed[f] = Some(out);
+                    }
+                }
+            });
+        }
+        for (f, &i) in fresh.iter().enumerate() {
+            let out = computed[f].clone().expect("queue fills every fresh slot");
+            cache.insert(keys[i].clone(), out);
+        }
+    }
+
+    sources
         .into_iter()
-        .map(|s| s.expect("every shard fills its slots"))
+        .map(|s| match s {
+            Source::Cached(out) => out,
+            Source::Fresh(f) => computed[f].clone().expect("queue fills every fresh slot"),
+        })
         .collect()
 }
 
-/// Sharded replacement for the serial per-cell experiment loop: identical
-/// summary, wall-clock divided by the effective thread count.
+/// Run every trial of one cell through the work queue against an explicit
+/// cache. Slot `r` of the returned vector always holds trial `r`.
+pub fn run_trials_with(
+    cell: Cell,
+    cfg: &SweepConfig,
+    cache: &ResultCache,
+) -> Vec<Arc<TrialOutput>> {
+    let items: Vec<WorkItem> = (0..cfg.runs)
+        .map(|trial| WorkItem { cell, cfg: *cfg, trial })
+        .collect();
+    run_queue(&items, cfg.workers, cache)
+}
+
+/// [`run_trials_with`] against the process-global cache.
+pub fn run_trials(cell: Cell, cfg: &SweepConfig) -> Vec<Arc<TrialOutput>> {
+    run_trials_with(cell, cfg, ResultCache::global())
+}
+
+/// Thin shim kept for the serial per-cell drivers (`experiments::run_cell`
+/// and the golden Table-1 snapshot): one cell on the work-queue runner,
+/// summarized identically to the old serial loop — borrowed trial
+/// outputs, no per-cell deep clones.
 pub fn run_cell_sharded(cell: Cell, cfg: &SweepConfig) -> CellSummary {
     let trials = run_trials(cell, cfg);
-    let pairs: Vec<(RunResult, &[JobSpec])> = trials
+    let pairs: Vec<(&RunResult, &[JobSpec])> = trials
         .iter()
-        .map(|(r, t)| (r.clone(), t.as_slice()))
+        .map(|t| (&t.result, t.trace.as_slice()))
         .collect();
     summarize(cell.label, &pairs)
 }
@@ -161,32 +436,50 @@ pub fn topo_tag(topo: ClusterTopo) -> String {
     }
 }
 
-/// Run the full policy × topology × scenario grid. Cells run in order;
-/// each cell's trials shard across `threads` OS threads (0 = auto).
-/// Progress and timing go to stderr so the returned rows (and anything
-/// printed from them) stay byte-identical across thread counts.
+/// Run the full policy × topology × scenario grid on the global work
+/// queue: every (scenario, cell, trial) item is pulled by `workers` OS
+/// threads (0 = auto) from one shared cursor, deduplicated through
+/// `cache`. Progress, timing and cache statistics go to stderr so the
+/// returned rows (and anything printed from them) stay byte-identical
+/// across worker counts and cache states.
 pub fn run_grid(
     cells: &[Cell],
     scenarios: &[Scenario],
     runs: usize,
     jobs_per_run: usize,
     base_seed: u64,
-    threads: usize,
+    workers: usize,
+    cache: &ResultCache,
 ) -> Vec<SweepRow> {
-    let mut rows = Vec::with_capacity(cells.len() * scenarios.len());
+    if runs == 0 {
+        return Vec::new();
+    }
+    let mut items = Vec::with_capacity(cells.len() * scenarios.len() * runs);
     for &scenario in scenarios {
         for &cell in cells {
             let mut cfg = SweepConfig::new(runs, jobs_per_run, base_seed);
-            cfg.threads = threads;
+            cfg.workers = workers;
             cfg.scenario = scenario;
-            let t0 = Instant::now();
-            let summary = run_cell_sharded(cell, &cfg);
-            eprintln!(
-                "sweep: {:<22} {:<20} {:>6.1}s",
-                scenario.name(),
-                cell.label,
-                t0.elapsed().as_secs_f64()
-            );
+            for trial in 0..runs {
+                items.push(WorkItem { cell, cfg, trial });
+            }
+        }
+    }
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    let t0 = Instant::now();
+    let slots = run_queue(&items, workers, cache);
+
+    // Aggregate per cell: slots are grid-ordered (scenario-major, then
+    // cell, then trial), so each cell owns one contiguous `runs` chunk.
+    let mut rows = Vec::with_capacity(cells.len() * scenarios.len());
+    let mut chunks = slots.chunks(runs);
+    for &scenario in scenarios {
+        for &cell in cells {
+            let trials = chunks.next().expect("one slot chunk per cell");
+            let pairs: Vec<(&RunResult, &[JobSpec])> = trials
+                .iter()
+                .map(|t| (&t.result, t.trace.as_slice()))
+                .collect();
             rows.push(SweepRow {
                 scenario: scenario.name(),
                 cell: cell.label,
@@ -195,10 +488,20 @@ pub fn run_grid(
                 runs,
                 jobs_per_run,
                 base_seed,
-                summary,
+                summary: summarize(cell.label, &pairs),
             });
         }
     }
+    eprintln!(
+        "sweep: {} rows ({} work items) in {:>6.1}s — cache: {} hits / {} misses \
+         this grid, {} trials resident",
+        rows.len(),
+        items.len(),
+        t0.elapsed().as_secs_f64(),
+        cache.hits() - hits0,
+        cache.misses() - misses0,
+        cache.len(),
+    );
     rows
 }
 
@@ -223,32 +526,107 @@ mod tests {
     }
 
     #[test]
-    fn sharded_equals_serial() {
+    fn queued_equals_serial() {
         let mut cfg = SweepConfig::new(5, 30, 3);
-        cfg.threads = 1;
-        let serial = run_trials(tiny_cell(), &cfg);
-        cfg.threads = 3;
-        let sharded = run_trials(tiny_cell(), &cfg);
-        assert_eq!(serial.len(), sharded.len());
-        for ((ra, ta), (rb, tb)) in serial.iter().zip(&sharded) {
-            assert_eq!(ta, tb, "traces must match per trial slot");
-            assert_eq!(ra.scheduled, rb.scheduled);
-            assert_eq!(ra.dropped, rb.dropped);
-            assert_eq!(ra.jcts(ta), rb.jcts(tb));
+        cfg.workers = 1;
+        let serial = run_trials_with(tiny_cell(), &cfg, &ResultCache::new());
+        cfg.workers = 3;
+        let queued = run_trials_with(tiny_cell(), &cfg, &ResultCache::new());
+        assert_eq!(serial.len(), queued.len());
+        for (a, b) in serial.iter().zip(&queued) {
+            assert_eq!(a.trace, b.trace, "traces must match per trial slot");
+            assert_eq!(a.result.scheduled, b.result.scheduled);
+            assert_eq!(a.result.dropped, b.result.dropped);
+            assert_eq!(a.result.jcts(&a.trace), b.result.jcts(&b.trace));
         }
     }
 
     #[test]
-    fn more_threads_than_trials_is_fine() {
+    fn more_workers_than_items_is_fine() {
         let mut cfg = SweepConfig::new(2, 20, 1);
-        cfg.threads = 16;
-        assert_eq!(run_trials(tiny_cell(), &cfg).len(), 2);
+        cfg.workers = 16;
+        assert_eq!(
+            run_trials_with(tiny_cell(), &cfg, &ResultCache::new()).len(),
+            2
+        );
     }
 
     #[test]
     fn zero_runs_yields_no_trials() {
         let cfg = SweepConfig::new(0, 10, 1);
-        assert!(run_trials(tiny_cell(), &cfg).is_empty());
+        assert!(run_trials_with(tiny_cell(), &cfg, &ResultCache::new()).is_empty());
+        let rows = run_grid(
+            &[tiny_cell()],
+            &[Scenario::PaperDefault],
+            0,
+            10,
+            1,
+            1,
+            &ResultCache::new(),
+        );
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn duplicate_items_simulate_once() {
+        // The same cell listed twice in one grid: every duplicated slot
+        // must be served by the first computation (hit), and the two rows
+        // must be identical.
+        let cache = ResultCache::new();
+        let cells = [tiny_cell(), tiny_cell()];
+        let rows = run_grid(&cells, &[Scenario::PaperDefault], 3, 25, 7, 2, &cache);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(cache.misses(), 3, "3 unique trials simulate");
+        assert_eq!(cache.hits(), 3, "the duplicate cell's 3 slots are hits");
+        assert_eq!(cache.len(), 3);
+        assert_eq!(rows[0].summary.avg_jcr_pct, rows[1].summary.avg_jcr_pct);
+        assert_eq!(rows[0].summary.util_cdf, rows[1].summary.util_cdf);
+    }
+
+    #[test]
+    fn cache_survives_across_grids() {
+        let cache = ResultCache::new();
+        let cells = [tiny_cell()];
+        let first = run_grid(&cells, &[Scenario::PaperDefault], 2, 25, 7, 2, &cache);
+        assert_eq!(cache.misses(), 2);
+        assert!(cache.resident_bytes() > 0, "byte accounting must track inserts");
+        let again = run_grid(&cells, &[Scenario::PaperDefault], 2, 25, 7, 8, &cache);
+        assert_eq!(cache.misses(), 2, "second grid is all hits");
+        // Cold grid: 0 hits / 2 misses; warm grid: 2 hits / 0 misses.
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(first[0].summary.avg_jcr_pct, again[0].summary.avg_jcr_pct);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn label_is_not_part_of_the_cache_key() {
+        // Two cells differing only in label share trials; summaries carry
+        // their own labels.
+        let cache = ResultCache::new();
+        let a = tiny_cell();
+        let b = Cell { label: "same cell, other name", ..a };
+        let rows = run_grid(&[a, b], &[Scenario::PaperDefault], 2, 20, 5, 0, &cache);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(rows[0].summary.avg_jcr_pct, rows[1].summary.avg_jcr_pct);
+        assert_eq!(rows[0].cell, "Folding (16^3)");
+        assert_eq!(rows[1].cell, "same cell, other name");
+    }
+
+    #[test]
+    fn fold_dims_are_part_of_the_cache_key() {
+        let cache = ResultCache::new();
+        let cell = Cell {
+            policy: PolicyKind::RFold,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        };
+        let mut cfg = SweepConfig::new(2, 20, 5);
+        let _ = run_trials_with(cell, &cfg, &cache);
+        cfg.fold_dims_enabled = [false, false, false];
+        let _ = run_trials_with(cell, &cfg, &cache);
+        assert_eq!(cache.misses(), 4, "ablation knobs must not collide");
     }
 
     #[test]

@@ -5,8 +5,9 @@ use std::collections::HashMap;
 use super::coords::{CubeGrid, P3};
 use super::ocs::OcsState;
 
-/// Cluster topology flavor (paper §4 builds both).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Cluster topology flavor (paper §4 builds both). `Hash` so the sweep
+/// result cache can key trial results on the topology identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ClusterTopo {
     /// Statically wired torus of the given extent (e.g. 16×16×16).
     /// Wrap-around links exist only on full dimensions.

@@ -101,7 +101,7 @@ impl std::fmt::Display for P3 {
 /// The arrangement of cubes in the machine room: `dims` cubes per axis,
 /// each of side `n`. A 4096-XPU cluster with 4³ cubes has
 /// `dims = (4,4,4)`, `n = 4`; with 8³ cubes `dims = (2,2,2)`, `n = 8`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CubeGrid {
     pub dims: P3,
     pub n: usize,

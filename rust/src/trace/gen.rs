@@ -156,7 +156,7 @@ pub fn shape_for_size(rng: &mut Pcg64, size: usize, rule: &ShapeRule) -> Option<
     // multiple shapes, we select one uniformly at random" — within the
     // elongation class sampled from the rule's weights).
     let long_dims = |s: &JobShape| s.dims().0.iter().filter(|&&d| d > 16).count();
-    for d in [want, want.max(2).min(3), 2, 1, 3] {
+    for d in [want, want.clamp(2, 3), 2, 1, 3] {
         let of_d: Vec<JobShape> =
             ok.iter().copied().filter(|s| dimensionality(*s) == d).collect();
         if of_d.is_empty() {

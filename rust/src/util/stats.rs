@@ -43,10 +43,28 @@ pub fn stddev(values: &[f64]) -> f64 {
 /// An empirical CDF over weighted samples (used for the utilization
 /// time-series, where the weight of a sample is the wall-clock time the
 /// cluster spent at that utilization level).
+///
+/// Quantile queries go through a lazily built sorted/prefix-sum index,
+/// computed once per sample set and invalidated on [`WeightedCdf::push`]
+/// — so `curve(20)` costs one sort, not 21 (this sits on the utilization
+/// summary hot path of every sweep trial).
 #[derive(Clone, Debug, Default)]
 pub struct WeightedCdf {
-    /// (value, weight) pairs, unsorted until query time.
+    /// (value, weight) pairs, in insertion order.
     samples: Vec<(f64, f64)>,
+    /// Lazy quantile index; `OnceLock` keeps queries `&self` while the
+    /// value stays `Sync` for cross-thread result collection.
+    index: std::sync::OnceLock<CdfIndex>,
+}
+
+/// Sorted samples plus running weight sums, accumulated in sorted order —
+/// the exact fold order the pre-index implementation used per query, so
+/// quantile output stays byte-identical.
+#[derive(Clone, Debug)]
+struct CdfIndex {
+    sorted: Vec<(f64, f64)>,
+    /// `prefix[i]` = sum of `sorted[..=i]` weights.
+    prefix: Vec<f64>,
 }
 
 impl WeightedCdf {
@@ -57,6 +75,7 @@ impl WeightedCdf {
     pub fn push(&mut self, value: f64, weight: f64) {
         if weight > 0.0 {
             self.samples.push((value, weight));
+            self.index.take(); // sample set changed: rebuild on next query
         }
     }
 
@@ -68,23 +87,47 @@ impl WeightedCdf {
         self.samples.iter().map(|s| s.1).sum()
     }
 
+    /// Approximate heap footprint of the sample set — lets the sweep
+    /// result cache bound itself by bytes. Always charges for the lazy
+    /// quantile index (sorted pairs + prefix sums) whether or not it is
+    /// built yet: cached entries get their index built *after* insertion
+    /// (during summarization), so a state-dependent measure would both
+    /// undercount resident memory and drift on re-insertion.
+    pub fn approx_bytes(&self) -> usize {
+        let pair = std::mem::size_of::<(f64, f64)>();
+        self.samples.capacity() * pair
+            + self.samples.len() * (pair + std::mem::size_of::<f64>())
+    }
+
+    fn index(&self) -> &CdfIndex {
+        self.index.get_or_init(|| {
+            let mut sorted = self.samples.clone();
+            sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut prefix = Vec::with_capacity(sorted.len());
+            let mut acc = 0.0f64;
+            for &(_, w) in &sorted {
+                acc += w;
+                prefix.push(acc);
+            }
+            CdfIndex { sorted, prefix }
+        })
+    }
+
     /// Value at the given cumulative fraction `q` in [0, 1].
     pub fn quantile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let total: f64 = s.iter().map(|x| x.1).sum();
+        let idx = self.index();
+        let total = *idx.prefix.last().unwrap();
         let target = q.clamp(0.0, 1.0) * total;
-        let mut acc = 0.0;
-        for (v, w) in &s {
-            acc += w;
-            if acc >= target {
-                return *v;
-            }
+        // First sample whose running weight reaches the target (weights
+        // are strictly positive, so `prefix` is strictly increasing).
+        let i = idx.prefix.partition_point(|&acc| acc < target);
+        match idx.sorted.get(i) {
+            Some(&(v, _)) => v,
+            None => idx.sorted.last().unwrap().0,
         }
-        s.last().unwrap().0
     }
 
     /// Weighted mean of the sample values.
@@ -162,6 +205,58 @@ mod tests {
         let mut cdf = WeightedCdf::new();
         cdf.push(5.0, 0.0);
         assert!(cdf.is_empty());
+    }
+
+    /// The pre-index implementation, kept as a test oracle: sort + linear
+    /// accumulate per query.
+    fn quantile_reference(samples: &[(f64, f64)], q: f64) -> f64 {
+        if samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total: f64 = s.iter().map(|x| x.1).sum();
+        let target = q.clamp(0.0, 1.0) * total;
+        let mut acc = 0.0;
+        for (v, w) in &s {
+            acc += w;
+            if acc >= target {
+                return *v;
+            }
+        }
+        s.last().unwrap().0
+    }
+
+    #[test]
+    fn indexed_quantiles_match_reference_exactly() {
+        let mut cdf = WeightedCdf::new();
+        let mut samples = Vec::new();
+        let mut r = crate::util::Pcg64::seeded(11);
+        for _ in 0..500 {
+            let (v, w) = (r.f64(), r.f64() + 1e-3);
+            cdf.push(v, w);
+            samples.push((v, w));
+        }
+        for i in 0..=100 {
+            let q = i as f64 / 100.0;
+            // Bit-identical, not approximately equal: summaries feed the
+            // byte-compared SWEEP rows.
+            assert_eq!(
+                cdf.quantile(q).to_bits(),
+                quantile_reference(&samples, q).to_bits(),
+                "q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn push_invalidates_quantile_index() {
+        let mut cdf = WeightedCdf::new();
+        cdf.push(1.0, 1.0);
+        assert_eq!(cdf.quantile(1.0), 1.0); // builds the index
+        cdf.push(5.0, 10.0); // must invalidate it
+        assert_eq!(cdf.quantile(1.0), 5.0);
+        assert_eq!(cdf.quantile(0.0), 1.0);
     }
 
     #[test]

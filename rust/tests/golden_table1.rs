@@ -12,22 +12,25 @@ use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use rfold::sim::experiments as exp;
-use rfold::sim::sweep::{self, SweepConfig};
+use rfold::sim::sweep::{self, ResultCache, SweepConfig};
 
 const GOLDEN_RUNS: usize = 2;
 const GOLDEN_JOBS: usize = 48;
 const GOLDEN_SEED: u64 = 77;
 
 /// One line per Table-1 cell: label + exact counts + JCR to 4 decimals.
-fn table1_fingerprint(threads: usize) -> String {
+/// Each fingerprint gets a fresh result cache so worker-count invariance
+/// is exercised on real computation, not cache replay.
+fn table1_fingerprint(workers: usize) -> String {
+    let cache = ResultCache::new();
     let mut out = String::new();
     for cell in exp::table1_cells() {
         let mut cfg = SweepConfig::new(GOLDEN_RUNS, GOLDEN_JOBS, GOLDEN_SEED);
-        cfg.threads = threads;
-        let trials = sweep::run_trials(cell, &cfg);
-        let scheduled: usize = trials.iter().map(|(r, _)| r.scheduled).sum();
-        let dropped: usize = trials.iter().map(|(r, _)| r.dropped).sum();
-        let total: usize = trials.iter().map(|(r, _)| r.outcomes.len()).sum();
+        cfg.workers = workers;
+        let trials = sweep::run_trials_with(cell, &cfg, &cache);
+        let scheduled: usize = trials.iter().map(|t| t.result.scheduled).sum();
+        let dropped: usize = trials.iter().map(|t| t.result.dropped).sum();
+        let total: usize = trials.iter().map(|t| t.result.outcomes.len()).sum();
         let jcr = 100.0 * scheduled as f64 / total as f64;
         writeln!(
             out,
@@ -44,10 +47,10 @@ fn golden_path() -> PathBuf {
 }
 
 #[test]
-fn table1_fingerprint_is_deterministic_and_thread_invariant() {
+fn table1_fingerprint_is_deterministic_and_worker_invariant() {
     let serial = table1_fingerprint(1);
     assert_eq!(serial, table1_fingerprint(1), "same-config reruns must match");
-    assert_eq!(serial, table1_fingerprint(4), "thread count must not matter");
+    assert_eq!(serial, table1_fingerprint(4), "worker count must not matter");
 }
 
 #[test]

@@ -64,7 +64,7 @@ fn utilization_cdf_sane_and_summary_consistent() {
         ClusterTopo::reconfigurable_4096(4),
         &t,
     );
-    let pairs = vec![(r, t.as_slice())];
+    let pairs = vec![(&r, t.as_slice())];
     let s = summarize("cell", &pairs);
     assert!(s.avg_util > 0.0 && s.avg_util <= 1.0);
     for w in s.util_cdf.windows(2) {

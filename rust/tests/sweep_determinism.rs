@@ -1,15 +1,22 @@
-//! The sweep runner's determinism contract: a sweep run with 1 thread and
-//! with many threads must produce byte-identical JSON rows. This is what
-//! catches seed-derivation and result-ordering races in the sharded
-//! runner.
+//! The work-queue runner's determinism and caching contracts:
+//!
+//! * a sweep run with 1 worker and with many workers must produce
+//!   byte-identical JSON rows — this catches seed-derivation and
+//!   result-ordering races in the global (scenario, cell, trial) queue,
+//!   including the small-`runs` grids (runs=2) where the old per-cell
+//!   sharding left cores idle;
+//! * a grid containing duplicated (policy, topology, scenario) cells must
+//!   simulate each unique trial exactly once and still emit identical
+//!   summaries for the duplicates;
+//! * the cached replay of a grid must be byte-identical to the cold run.
 
 use rfold::metrics::report;
 use rfold::sim::experiments as exp;
-use rfold::sim::sweep::{self, SweepConfig};
+use rfold::sim::sweep::{self, ResultCache, SweepConfig};
 use rfold::trace::scenarios::Scenario;
 
-/// Cheap sub-grid: two static cells plus one reconfigurable cell, two
-/// scenarios — enough to cross every code path without long runtimes.
+/// Cheap sub-grid: two static cells plus one reconfigurable cell — enough
+/// to cross every code path without long runtimes.
 fn small_cells() -> Vec<exp::Cell> {
     let all = exp::table1_cells();
     all.into_iter()
@@ -22,50 +29,54 @@ fn small_cells() -> Vec<exp::Cell> {
         .collect()
 }
 
-fn rows_json(threads: usize) -> Vec<String> {
+/// A multi-scenario grid at `runs=2` — the regime where per-cell trial
+/// sharding degenerates (at most 2 busy threads per cell) and only the
+/// global work queue keeps every worker fed.
+fn rows_json(workers: usize) -> Vec<String> {
     let scenarios = [Scenario::PaperDefault, Scenario::UniformSmall];
-    let rows = sweep::run_grid(&small_cells(), &scenarios, 4, 40, 5, threads);
+    let cache = ResultCache::new(); // fresh: determinism, not cache replay
+    let rows = sweep::run_grid(&small_cells(), &scenarios, 2, 40, 5, workers, &cache);
     rows.iter().map(report::sweep_row_json).collect()
 }
 
 #[test]
-fn grid_rows_byte_identical_across_thread_counts() {
+fn grid_rows_byte_identical_across_worker_counts() {
     let one = rows_json(1);
     let eight = rows_json(8);
     assert_eq!(one.len(), eight.len());
     for (a, b) in one.iter().zip(&eight) {
-        assert_eq!(a, b, "sweep row differs between --threads 1 and --threads 8");
+        assert_eq!(a, b, "sweep row differs between --workers 1 and --workers 8");
     }
 }
 
 #[test]
-fn auto_threads_matches_explicit_one() {
-    // threads=0 (auto) must also land on the same bytes.
+fn auto_workers_matches_explicit_one() {
+    // workers=0 (auto) must also land on the same bytes.
     assert_eq!(rows_json(1), rows_json(0));
 }
 
 #[test]
-fn trials_land_in_seed_order_regardless_of_sharding() {
+fn trials_land_in_seed_order_regardless_of_scheduling() {
     let cell = small_cells()[0];
-    let per_trial = |threads: usize| -> Vec<(usize, usize, usize)> {
+    let per_trial = |workers: usize| -> Vec<(usize, usize, usize)> {
         let mut cfg = SweepConfig::new(6, 30, 11);
-        cfg.threads = threads;
-        sweep::run_trials(cell, &cfg)
+        cfg.workers = workers;
+        sweep::run_trials_with(cell, &cfg, &ResultCache::new())
             .iter()
-            .map(|(r, t)| (r.scheduled, r.dropped, t.len()))
+            .map(|t| (t.result.scheduled, t.result.dropped, t.trace.len()))
             .collect()
     };
     let serial = per_trial(1);
-    for threads in [2, 3, 6, 16] {
-        assert_eq!(serial, per_trial(threads), "threads={threads}");
+    for workers in [2, 3, 6, 16] {
+        assert_eq!(serial, per_trial(workers), "workers={workers}");
     }
 }
 
 #[test]
-fn sharded_run_cell_matches_manual_serial_aggregation() {
-    // experiments::run_cell (now sharded) must equal a hand-rolled serial
-    // loop using the same seed derivation — exact float equality, since
-    // the aggregation consumes identical values in identical order.
+fn queued_run_cell_matches_manual_serial_aggregation() {
+    // experiments::run_cell (work-queue backed) must equal a hand-rolled
+    // serial loop using the same seed derivation — exact float equality,
+    // since the aggregation consumes identical values in identical order.
     use rfold::metrics::summarize;
     use rfold::sim::engine::{RunResult, SimConfig, Simulation};
     use rfold::trace::gen::{generate, TraceConfig};
@@ -83,19 +94,54 @@ fn sharded_run_cell_matches_manual_serial_aggregation() {
         let res = Simulation::new(SimConfig::new(cell.topo, cell.policy)).run(&trace);
         results.push((res, trace));
     }
-    let pairs: Vec<(RunResult, &[JobSpec])> = results
+    let pairs: Vec<(&RunResult, &[JobSpec])> = results
         .iter()
-        .map(|(r, t)| (r.clone(), t.as_slice()))
+        .map(|(r, t)| (r, t.as_slice()))
         .collect();
     let serial = summarize(cell.label, &pairs);
-    let sharded = exp::run_cell(cell, runs, jobs, seed);
-    assert_eq!(serial.avg_jcr_pct, sharded.avg_jcr_pct);
-    assert_eq!(serial.jct_p50, sharded.jct_p50);
-    assert_eq!(serial.jct_p90, sharded.jct_p90);
-    assert_eq!(serial.jct_p99, sharded.jct_p99);
-    assert_eq!(serial.avg_util, sharded.avg_util);
-    assert_eq!(serial.avg_queue_delay, sharded.avg_queue_delay);
-    assert_eq!(serial.util_cdf, sharded.util_cdf);
+    let queued = exp::run_cell(cell, runs, jobs, seed);
+    assert_eq!(serial.avg_jcr_pct, queued.avg_jcr_pct);
+    assert_eq!(serial.jct_p50, queued.jct_p50);
+    assert_eq!(serial.jct_p90, queued.jct_p90);
+    assert_eq!(serial.jct_p99, queued.jct_p99);
+    assert_eq!(serial.avg_util, queued.avg_util);
+    assert_eq!(serial.avg_queue_delay, queued.avg_queue_delay);
+    assert_eq!(serial.util_cdf, queued.util_cdf);
+}
+
+#[test]
+fn duplicated_cells_simulate_once_with_identical_summaries() {
+    // "Reconfig (4^3)" twice in one grid (as Table 1 vs Figure 3 would
+    // list it): the cache must collapse them to one simulation per trial
+    // and both rows must serialize to the same summary bytes.
+    let base = small_cells();
+    let dup = base[2]; // Reconfig (4^3)
+    let cells = vec![base[0], dup, base[1], dup];
+    let cache = ResultCache::new();
+    let runs = 2usize;
+    let rows = sweep::run_grid(&cells, &[Scenario::PaperDefault], runs, 30, 3, 4, &cache);
+    assert_eq!(rows.len(), 4);
+    // 3 unique cells × 2 trials simulate; the duplicate's 2 slots hit.
+    assert_eq!(cache.misses(), 3 * runs as u64);
+    assert_eq!(cache.hits(), runs as u64);
+    let a = report::sweep_row_json(&rows[1]);
+    let b = report::sweep_row_json(&rows[3]);
+    assert_eq!(a, b, "duplicated cell rows must be byte-identical");
+}
+
+#[test]
+fn cached_replay_is_byte_identical_to_cold_run() {
+    let cells = small_cells();
+    let scenarios = [Scenario::PaperDefault, Scenario::CommHeavy];
+    let cache = ResultCache::new();
+    let cold = sweep::run_grid(&cells, &scenarios, 2, 30, 7, 4, &cache);
+    let misses_after_cold = cache.misses();
+    let warm = sweep::run_grid(&cells, &scenarios, 2, 30, 7, 1, &cache);
+    assert_eq!(cache.misses(), misses_after_cold, "warm run must not simulate");
+    let json = |rows: &[sweep::SweepRow]| -> Vec<String> {
+        rows.iter().map(report::sweep_row_json).collect()
+    };
+    assert_eq!(json(&cold), json(&warm));
 }
 
 #[test]
@@ -103,7 +149,15 @@ fn all_scenarios_flow_through_the_grid() {
     // Every named scenario must survive the full pipeline and emit a row
     // whose JSON carries its name (acceptance criterion of the sweep PR).
     let cells = [exp::table1_cells()[1]]; // Folding (16^3): cheap, drops some jobs
-    let rows = sweep::run_grid(&cells, &Scenario::ALL, 2, 30, 3, 0);
+    let rows = sweep::run_grid(
+        &cells,
+        &Scenario::ALL,
+        2,
+        30,
+        3,
+        0,
+        &ResultCache::new(),
+    );
     assert_eq!(rows.len(), Scenario::ALL.len());
     for (row, sc) in rows.iter().zip(Scenario::ALL) {
         let json = report::sweep_row_json(row);
