@@ -7,7 +7,7 @@
 //! Run with: `cargo run --release --example philly_sim [-- jobs runs]`
 
 use rfold::metrics::{report, summarize};
-use rfold::placement::PolicyKind;
+use rfold::placement::builtins;
 use rfold::sim::engine::{SimConfig, Simulation};
 use rfold::topology::cluster::ClusterTopo;
 use rfold::trace::gen::{generate, TraceConfig};
@@ -20,10 +20,10 @@ fn main() {
     println!("== RFold end-to-end: {runs} trace(s) x {jobs} jobs on 4096 XPUs ==");
 
     let cells = [
-        ("FirstFit (16^3)", PolicyKind::FirstFit, ClusterTopo::static_4096()),
-        ("Folding (16^3)", PolicyKind::Folding, ClusterTopo::static_4096()),
-        ("Reconfig (4^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(4)),
-        ("RFold (4^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(4)),
+        ("FirstFit (16^3)", builtins::FIRST_FIT, ClusterTopo::static_4096()),
+        ("Folding (16^3)", builtins::FOLDING, ClusterTopo::static_4096()),
+        ("Reconfig (4^3)", builtins::RECONFIG, ClusterTopo::reconfigurable_4096(4)),
+        ("RFold (4^3)", builtins::RFOLD, ClusterTopo::reconfigurable_4096(4)),
     ];
 
     let mut summaries = Vec::new();

@@ -6,15 +6,16 @@
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::policies::{RFold, Reconfig};
+use rfold::placement::PlacementPolicy;
 use rfold::shape::JobShape;
 use rfold::topology::cluster::{ClusterState, ClusterTopo};
 
 fn main() {
     // The paper's evaluation cluster: 64 reconfigurable 4×4×4 cubes.
     let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-    let mut rfold = Policy::new(PolicyKind::RFold);
-    let mut reconfig = Policy::new(PolicyKind::Reconfig);
+    let mut rfold = RFold::new();
+    let mut reconfig = Reconfig::new();
 
     println!("cluster: {} XPUs, {} free", cluster.num_nodes(), cluster.free_count());
 
@@ -29,7 +30,7 @@ fn main() {
         println!("\njob {id}: {shape}  — {desc}");
 
         // What would reconfiguration alone do?
-        if let Some(plan) = reconfig.plan(&cluster, id + 100, shape) {
+        if let Some(plan) = reconfig.place_now(&cluster, id + 100, shape) {
             println!(
                 "  Reconfig : {} as-is, {} cube(s), {} OCS circuits",
                 plan.variant.placed,
@@ -39,7 +40,7 @@ fn main() {
         }
 
         // RFold folds the shape first, then reconfigures.
-        let plan = rfold.plan(&cluster, id, shape).expect("placeable");
+        let plan = rfold.place_now(&cluster, id, shape).expect("placeable");
         println!(
             "  RFold    : folded to {} ({:?}), {} cube(s), {} OCS circuits",
             plan.variant.placed,

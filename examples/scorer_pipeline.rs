@@ -8,7 +8,8 @@
 
 use std::rc::Rc;
 
-use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::policies::RFold;
+use rfold::placement::PlacementPolicy;
 use rfold::placement::score::{hypothetical_occupancy, NativeScorer, PlanScorer};
 use rfold::placement::reconfig_place;
 use rfold::runtime::{Artifacts, XlaScorer};
@@ -35,7 +36,7 @@ fn main() {
     // Fill a cluster to ~40% with random jobs, then score candidates for
     // the paper's 4×8×2 example through BOTH scorers.
     let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-    let mut policy = Policy::new(PolicyKind::RFold);
+    let mut policy = RFold::new();
     let mut rng = Pcg64::seeded(11);
     let mut id = 0;
     let mut attempts = 0;
@@ -47,7 +48,7 @@ fn main() {
         if let Some(shape) =
             rfold::trace::gen::shape_for_size(&mut rng, size, &Default::default())
         {
-            if let Some(p) = policy.plan(&cluster, id, shape) {
+            if let Some(p) = policy.place_now(&cluster, id, shape) {
                 p.commit(&mut cluster).unwrap();
                 id += 1;
             }

@@ -9,7 +9,7 @@ use std::net::{TcpListener, TcpStream};
 
 use rfold::coordinator::leader::Leader;
 use rfold::coordinator::server;
-use rfold::placement::PolicyKind;
+use rfold::placement::builtins;
 use rfold::topology::cluster::ClusterTopo;
 
 fn main() {
@@ -17,7 +17,7 @@ fn main() {
     let scale = 1e-4;
     let (handle, join) = Leader::new(
         ClusterTopo::reconfigurable_4096(4),
-        PolicyKind::RFold,
+        builtins::RFOLD,
         scale,
     )
     .spawn();

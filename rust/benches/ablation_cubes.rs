@@ -3,7 +3,7 @@
 //! choices §5 calls out.
 
 use rfold::metrics::report;
-use rfold::placement::PolicyKind;
+use rfold::placement::builtins;
 use rfold::sim::experiments as exp;
 use rfold::topology::cluster::ClusterTopo;
 
@@ -31,7 +31,7 @@ fn main() {
 
     rfold::util::bench::section("Ablation A2 — folding dimensionality (RFold 4^3)");
     let cell = exp::Cell {
-        policy: PolicyKind::RFold,
+        policy: builtins::RFOLD,
         topo: ClusterTopo::reconfigurable_4096(4),
         label: "RFold (4^3)",
     };

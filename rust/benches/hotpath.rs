@@ -5,7 +5,8 @@
 
 use std::rc::Rc;
 
-use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::policies::RFold;
+use rfold::placement::{builtins, PlacementPolicy};
 use rfold::placement::score::{hypothetical_occupancy, rank_plans, NativeScorer, PlanScorer};
 use rfold::placement::{reconfig_place, static_place};
 use rfold::shape::fold::{enumerate_variants, Variant};
@@ -42,7 +43,7 @@ fn main() {
 
     section("placement under load (50% busy cluster)");
     let mut busy = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-    let mut policy = Policy::new(PolicyKind::RFold);
+    let mut policy = RFold::new();
     let mut rng = Pcg64::seeded(3);
     let mut id = 0u64;
     let mut attempts = 0;
@@ -52,17 +53,17 @@ fn main() {
         if let Some(shape) =
             rfold::trace::gen::shape_for_size(&mut rng, size, &Default::default())
         {
-            if let Some(plan) = policy.plan(&busy, id, shape) {
+            if let Some(plan) = policy.place_now(&busy, id, shape) {
                 plan.commit(&mut busy).unwrap();
                 id += 1;
             }
         }
     }
     bench("RFold plan 4x8x2 @50% util", 5, 100, || {
-        policy.plan(&busy, 999_999, JobShape::new(4, 8, 2))
+        policy.place_now(&busy, 999_999, JobShape::new(4, 8, 2))
     });
     bench("RFold plan 18x1x1 @50% util", 5, 100, || {
-        policy.plan(&busy, 999_999, JobShape::new(18, 1, 1))
+        policy.place_now(&busy, 999_999, JobShape::new(18, 1, 1))
     });
 
     section("plan scoring");
@@ -99,7 +100,7 @@ fn main() {
     bench("sim 256 jobs RFold(4^3)", 1, 5, || {
         Simulation::new(SimConfig::new(
             ClusterTopo::reconfigurable_4096(4),
-            PolicyKind::RFold,
+            builtins::RFOLD,
         ))
         .run(&trace)
         .scheduled
@@ -107,7 +108,7 @@ fn main() {
     bench("sim 256 jobs FirstFit(16^3)", 1, 5, || {
         Simulation::new(SimConfig::new(
             ClusterTopo::static_4096(),
-            PolicyKind::FirstFit,
+            builtins::FIRST_FIT,
         ))
         .run(&trace)
         .scheduled

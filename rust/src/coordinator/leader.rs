@@ -4,7 +4,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
-use crate::placement::policies::{Policy, PolicyKind};
+use crate::placement::{PlacementPolicy, PolicyHandle};
 use crate::shape::JobShape;
 use crate::topology::cluster::{ClusterState, ClusterTopo};
 
@@ -80,7 +80,7 @@ impl LeaderHandle {
 /// own thread via [`Leader::spawn`].
 pub struct Leader {
     cluster: ClusterState,
-    policy_kind: PolicyKind,
+    policy: PolicyHandle,
     /// Wall seconds per simulated second (e.g. 0.001 → 1000× speedup).
     time_scale: f64,
     queue: VecDeque<(u64, Submission)>,
@@ -92,12 +92,14 @@ pub struct Leader {
 }
 
 impl Leader {
-    pub fn new(topo: ClusterTopo, policy: PolicyKind, time_scale: f64) -> Leader {
+    /// Accepts a [`PolicyHandle`] or (via the deprecated shim) a
+    /// `PolicyKind`.
+    pub fn new(topo: ClusterTopo, policy: impl Into<PolicyHandle>, time_scale: f64) -> Leader {
         let cluster = ClusterState::new(topo);
         let total = cluster.num_nodes();
         Leader {
             cluster,
-            policy_kind: policy,
+            policy: policy.into(),
             time_scale,
             queue: VecDeque::new(),
             running: Vec::new(),
@@ -118,8 +120,9 @@ impl Leader {
         let handle = LeaderHandle { tx };
         let join = std::thread::spawn(move || {
             // The policy (and its scorer trait object) lives entirely on
-            // this thread — PJRT handles are not `Send`.
-            let mut policy = Policy::new(self.policy_kind);
+            // this thread — PJRT handles are not `Send`, which is why the
+            // registry hands out constructors rather than instances.
+            let mut policy = self.policy.instantiate();
             loop {
                 // Wake for the next completion deadline or a command.
                 let timeout = self
@@ -141,7 +144,7 @@ impl Leader {
                         } else {
                             self.states.insert(id, JobState::Queued);
                             self.queue.push_back((id, s));
-                            self.drain(&mut policy);
+                            self.drain(policy.as_mut());
                             let _ = reply.send((id, self.states[&id]));
                         }
                     }
@@ -162,7 +165,7 @@ impl Leader {
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
                 self.reap();
-                self.drain(&mut policy);
+                self.drain(policy.as_mut());
             }
             self.refresh_stats();
             self.stats
@@ -198,9 +201,9 @@ impl Leader {
     }
 
     /// FIFO drain (head-of-line blocking, like the simulator).
-    fn drain(&mut self, policy: &mut Policy) {
+    fn drain(&mut self, policy: &mut dyn PlacementPolicy) {
         while let Some(&(id, s)) = self.queue.front() {
-            match policy.plan(&self.cluster, id, s.shape) {
+            match policy.place_now(&self.cluster, id, s.shape) {
                 Some(plan) => {
                     plan.commit(&mut self.cluster).expect("commit");
                     let dur = Duration::from_secs_f64(
@@ -228,7 +231,7 @@ mod tests {
     fn spawn_leader() -> (LeaderHandle, std::thread::JoinHandle<LeaderStats>) {
         Leader::new(
             ClusterTopo::reconfigurable_4096(4),
-            PolicyKind::RFold,
+            crate::placement::builtins::RFOLD,
             1e-5, // 100k× speedup: 1s job ≈ 10µs wall
         )
         .spawn()
@@ -278,7 +281,7 @@ mod tests {
     fn fifo_queueing_under_load() {
         let (h, join) = Leader::new(
             ClusterTopo::reconfigurable_4096(4),
-            PolicyKind::RFold,
+            crate::placement::builtins::RFOLD,
             1e-3, // long enough that job 1 is still running at submit 2
         )
         .spawn();

@@ -18,6 +18,13 @@
 //! trace-driven experiments, [`sim::sweep`] for result-cached work-queue
 //! experiment grids over the [`trace::scenarios`] workload matrix, and the
 //! `rfold` CLI (`rust/src/main.rs`).
+//!
+//! Placement policies are open: implement
+//! [`placement::PlacementPolicy`], register a handle in the string-keyed
+//! [`placement::PolicyRegistry`], and every driver (engine, sweeps, CLI,
+//! live coordinator) can run the new policy by name. Scheduling decisions
+//! are structured ([`placement::PlacementDecision`]) and observable
+//! through [`sim::SchedulerObserver`] hooks.
 
 pub mod coordinator;
 pub mod metrics;

@@ -12,6 +12,7 @@
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
 //! rfold besteffort [--runs N] [--jobs J]               §5 best-effort crossover
 //! rfold simulate --policy P [--cube N|--static] ...    one cell, detailed
+//!                [--trace-file F]                       replay a CSV trace instead
 //! rfold trace-gen --out FILE [--jobs J] [--seed S]     write a CSV trace
 //! rfold serve [--addr A] [--policy P] [--cube N]       TCP leader
 //! rfold replay --trace FILE [--policy P] [--cube N]    replay CSV live
@@ -25,12 +26,15 @@
 
 use rfold::metrics::report;
 use rfold::metrics::CellSummary;
-use rfold::placement::{score::NativeScorer, score::PlanScorer, PolicyKind};
+use rfold::placement::{
+    builtins, score::NativeScorer, score::PlanScorer, PlacementPolicy, PolicyHandle,
+};
 use rfold::sim::experiments as exp;
 use rfold::sim::sweep;
+use rfold::sim::{SharedTelemetry, SimConfig, Simulation};
 use rfold::topology::cluster::ClusterTopo;
 use rfold::trace;
-use rfold::trace::scenarios::Scenario;
+use rfold::trace::scenarios::{Scenario, Workload};
 use rfold::util::cli::Args;
 use rfold::util::Pcg64;
 
@@ -69,7 +73,10 @@ fn usage() -> &'static str {
      trace-gen|serve|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
      sweep options:  --workers W (0=auto; --threads is an alias) \
-     --scenarios a,b|all --policies p,q --out FILE"
+     --scenarios a,b|all --policies p,q --out FILE\n\
+     simulate options: --trace-file F (replay a recorded CSV trace)\n\
+     policies resolve by registry name (rfold, firstfit, folding, reconfig, \
+     besteffort, hilbert, ...)"
 }
 
 fn runs_jobs_seed(args: &Args) -> (usize, usize, u64) {
@@ -152,24 +159,16 @@ fn sweep_cmd(args: &Args) {
         },
         None => Scenario::ALL.to_vec(),
     };
-    let cells: Vec<exp::Cell> = match args.get("policies") {
-        Some(spec) => {
-            let mut kinds = Vec::new();
-            for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-                match PolicyKind::parse(part) {
-                    Some(k) => kinds.push(k),
-                    None => {
-                        eprintln!("unknown policy '{part}' in --policies");
-                        std::process::exit(2);
-                    }
-                }
-            }
-            exp::table1_cells()
-                .into_iter()
-                .filter(|c| kinds.contains(&c.policy))
-                .collect()
+    let cells: Vec<exp::Cell> = match args.get_policies("policies") {
+        Ok(Some(handles)) => exp::table1_cells()
+            .into_iter()
+            .filter(|c| handles.contains(&c.policy))
+            .collect(),
+        Ok(None) => exp::table1_cells(),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
         }
-        None => exp::table1_cells(),
     };
     if cells.is_empty() {
         eprintln!("--policies selected no Table-1 cells");
@@ -226,7 +225,7 @@ fn ablation(args: &Args) {
         // A2: which folding dimensionalities matter for RFold(4^3)?
         let (runs, jobs, seed) = runs_jobs_seed(args);
         let cell = exp::Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "RFold (4^3)",
         };
@@ -289,20 +288,69 @@ fn parse_topo(args: &Args) -> ClusterTopo {
     }
 }
 
-fn parse_policy(args: &Args, default: PolicyKind) -> PolicyKind {
-    args.get("policy")
-        .and_then(PolicyKind::parse)
-        .unwrap_or(default)
+/// Resolve `--policy` through the registry — the one point where a CLI
+/// string becomes a [`PolicyHandle`]; unknown names exit with the list of
+/// registered policies.
+fn parse_policy(args: &Args, default: PolicyHandle) -> PolicyHandle {
+    match args.get_policy("policy", default) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn simulate(args: &Args) {
-    let policy = parse_policy(args, PolicyKind::RFold);
+    let policy = parse_policy(args, builtins::RFOLD);
     let topo = if policy.wants_reconfigurable() && !args.flag("static") {
         parse_topo(args)
     } else {
         ClusterTopo::static_4096()
     };
     let (runs, jobs, seed) = runs_jobs_seed(args);
+
+    // Real-trace mode (ROADMAP): `--trace-file` replays a recorded CSV
+    // through the scenario registry's Workload wrapper — one realization,
+    // so `--runs`/`--seed` are ignored.
+    if let Some(path) = args.get("trace-file") {
+        let workload = match Workload::from_csv(std::path::Path::new(path)) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("cannot load --trace-file {path}: {e}");
+                std::process::exit(2);
+            }
+        };
+        let t = workload.trace(jobs, seed);
+        eprintln!(
+            "simulating {} on {:?}: trace '{}' ({} jobs)",
+            policy.name(),
+            topo,
+            workload.name(),
+            t.len()
+        );
+        let telemetry = SharedTelemetry::new();
+        let r = Simulation::new(SimConfig::new(topo, policy))
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&t);
+        let pairs = [(&r, t.as_slice())];
+        let s = rfold::metrics::summarize(workload.name(), &pairs);
+        println!(
+            "SIMULATE-TRACE trace={} policy={} jcr={:.2}% jct_p50={} jct_p90={} jct_p99={} \
+             util={:.3} queue-delay={}",
+            workload.name(),
+            policy.name(),
+            s.avg_jcr_pct,
+            report::fmt_secs(s.jct_p50),
+            report::fmt_secs(s.jct_p90),
+            report::fmt_secs(s.jct_p99),
+            s.avg_util,
+            report::fmt_secs(s.avg_queue_delay),
+        );
+        report::print_policy_telemetry(policy.name(), &telemetry.snapshot());
+        return;
+    }
+
     eprintln!(
         "simulating {} on {:?}: {} runs x {} jobs",
         policy.name(),
@@ -326,6 +374,20 @@ fn simulate(args: &Args) {
         s.avg_util,
         report::fmt_secs(s.avg_queue_delay),
     );
+    // Decision telemetry (stderr only, like all introspection output):
+    // replay trial 0's trace with the scheduler observer attached. The
+    // result-cache already holds the summary trials, so this is the only
+    // extra simulation.
+    let telemetry = SharedTelemetry::new();
+    let tc = Scenario::PaperDefault.trace_config(jobs, sweep::trial_seed(seed, 0));
+    let t = trace::gen::generate(&tc);
+    Simulation::new(SimConfig::new(topo, policy))
+        .with_observer(Box::new(telemetry.clone()))
+        .run(&t);
+    report::print_policy_telemetry(
+        &format!("{} trial-0", policy.name()),
+        &telemetry.snapshot(),
+    );
 }
 
 fn trace_gen(args: &Args) {
@@ -342,7 +404,7 @@ fn trace_gen(args: &Args) {
 
 fn serve(args: &Args) {
     let addr = args.get_str("addr", "127.0.0.1:7070").to_string();
-    let policy = parse_policy(args, PolicyKind::RFold);
+    let policy = parse_policy(args, builtins::RFOLD);
     let topo = parse_topo(args);
     let scale = args.get_f64("time-scale", 1.0);
     let (handle, _join) = rfold::coordinator::leader::Leader::new(topo, policy, scale).spawn();
@@ -352,7 +414,7 @@ fn serve(args: &Args) {
 fn replay(args: &Args) {
     let path = args.get_str("trace", "trace.csv").to_string();
     let t = trace::io::read_csv(std::path::Path::new(&path)).expect("read trace");
-    let policy = parse_policy(args, PolicyKind::RFold);
+    let policy = parse_policy(args, builtins::RFOLD);
     let topo = parse_topo(args);
     let scale = args.get_f64("time-scale", 1e-4);
     let (handle, join) = rfold::coordinator::leader::Leader::new(topo, policy, scale).spawn();
@@ -368,7 +430,6 @@ fn replay(args: &Args) {
 /// Analyze the synthetic workload: size/dimensionality distribution and
 /// per-policy feasibility-on-empty (the upper bound on Table 1's JCR).
 fn workload_stats(args: &Args) {
-    use rfold::placement::policies::Policy;
     let (_, jobs, seed) = runs_jobs_seed(args);
     let t = trace::gen::generate(&trace::gen::TraceConfig {
         num_jobs: jobs,
@@ -399,17 +460,17 @@ fn workload_stats(args: &Args) {
         100 * odd / t.len()
     );
     let cells = [
-        ("FirstFit  (16^3)", PolicyKind::FirstFit, ClusterTopo::static_4096()),
-        ("Folding   (16^3)", PolicyKind::Folding, ClusterTopo::static_4096()),
-        ("Reconfig  (8^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(8)),
-        ("RFold     (8^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(8)),
-        ("Reconfig  (4^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(4)),
-        ("RFold     (4^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(4)),
-        ("Reconfig  (2^3)", PolicyKind::Reconfig, ClusterTopo::reconfigurable_4096(2)),
-        ("RFold     (2^3)", PolicyKind::RFold, ClusterTopo::reconfigurable_4096(2)),
+        ("FirstFit  (16^3)", builtins::FIRST_FIT, ClusterTopo::static_4096()),
+        ("Folding   (16^3)", builtins::FOLDING, ClusterTopo::static_4096()),
+        ("Reconfig  (8^3)", builtins::RECONFIG, ClusterTopo::reconfigurable_4096(8)),
+        ("RFold     (8^3)", builtins::RFOLD, ClusterTopo::reconfigurable_4096(8)),
+        ("Reconfig  (4^3)", builtins::RECONFIG, ClusterTopo::reconfigurable_4096(4)),
+        ("RFold     (4^3)", builtins::RFOLD, ClusterTopo::reconfigurable_4096(4)),
+        ("Reconfig  (2^3)", builtins::RECONFIG, ClusterTopo::reconfigurable_4096(2)),
+        ("RFold     (2^3)", builtins::RFOLD, ClusterTopo::reconfigurable_4096(2)),
     ];
-    for (label, kind, topo) in cells {
-        let mut p = Policy::new(kind);
+    for (label, handle, topo) in cells {
+        let mut p = handle.instantiate();
         let feasible = t
             .iter()
             .filter(|j| p.feasible_ever(topo, j.shape))

@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 
 use super::CellSummary;
+use crate::sim::observer::DecisionTelemetry;
 use crate::sim::sweep::SweepRow;
 use crate::util::json::Json;
 
@@ -125,6 +126,39 @@ pub fn print_sweep(rows: &[SweepRow]) {
     }
 }
 
+/// Format the scheduler-observer decision telemetry of one run as
+/// machine-greppable `TELEMETRY` lines.
+pub fn policy_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String> {
+    vec![
+        format!(
+            "TELEMETRY {label} decisions={} placed={} no-capacity={} infeasible={}",
+            t.decisions, t.placed, t.no_capacity, t.infeasible
+        ),
+        format!(
+            "TELEMETRY {label} variants={} folds-tried={} candidates-ranked={}",
+            t.variants_enumerated, t.folds_tried, t.candidates_ranked
+        ),
+        format!(
+            "TELEMETRY {label} reconfigurations={} ocs-entries={} admissions={} completions={}",
+            t.reconfigurations, t.ocs_entries_reserved, t.admissions, t.completions
+        ),
+        format!(
+            "TELEMETRY {label} decision-wall={:.3}ms mean-decision={:.1}us",
+            t.decision_wall.as_secs_f64() * 1e3,
+            t.mean_decision_us()
+        ),
+    ]
+}
+
+/// Print decision telemetry — **stderr only**, never stdout: report rows
+/// (`SWEEP`/`TABLE1`/...) carry no wall-clock or observer state, so
+/// stdout stays byte-identical whether or not anyone observes.
+pub fn print_policy_telemetry(label: &str, t: &DecisionTelemetry) {
+    for line in policy_telemetry_lines(label, t) {
+        eprintln!("{line}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +208,30 @@ mod tests {
         // The determinism contract: no timing or thread info in rows.
         assert!(!line.contains("thread"));
         assert!(!line.contains("wall"));
+    }
+
+    #[test]
+    fn telemetry_lines_are_greppable_and_complete() {
+        let t = DecisionTelemetry {
+            decisions: 10,
+            placed: 7,
+            no_capacity: 2,
+            infeasible: 1,
+            variants_enumerated: 40,
+            folds_tried: 12,
+            candidates_ranked: 25,
+            reconfigurations: 3,
+            ocs_entries_reserved: 18,
+            admissions: 10,
+            completions: 7,
+            decision_wall: std::time::Duration::from_micros(500),
+        };
+        let lines = policy_telemetry_lines("RFold (4^3)", &t);
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.starts_with("TELEMETRY RFold (4^3)")));
+        assert!(lines[0].contains("placed=7") && lines[0].contains("infeasible=1"));
+        assert!(lines[1].contains("folds-tried=12"));
+        assert!(lines[2].contains("ocs-entries=18"));
+        assert!(lines[3].contains("mean-decision=50.0us"));
     }
 }

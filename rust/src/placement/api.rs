@@ -1,0 +1,375 @@
+//! The open placement-policy API: an object-safe trait, a structured
+//! request/decision pair, and the shared helpers every built-in rides on.
+//!
+//! The paper's evaluation (§4–§5) is comparative — RFold wins because it
+//! searches a richer space of homomorphic shapes and OCS reconfigurations
+//! than its baselines — so the repo's long-term value is how cheaply it
+//! hosts *new* policies. A policy is one type implementing
+//! [`PlacementPolicy`] plus one registration line in the
+//! [`registry`](crate::placement::registry); nothing else in the engine,
+//! sweep runner, CLI, or benches needs to change.
+//!
+//! Three pieces:
+//!
+//! * [`PlacementRequest`] — everything a policy may consult: job id,
+//!   shape, arrival time, and a read-only cluster view.
+//! * [`PlacementDecision`] — a committed-ready [`Plan`] or a *structured*
+//!   rejection ([`PlacementDecision::Infeasible`] vs
+//!   [`PlacementDecision::NoCapacity`]), each carrying the
+//!   [`DecisionStats`] of the search that produced it. The engine drops
+//!   infeasible jobs and queues capacity-blocked ones (paper §4 FIFO
+//!   semantics) without ever pattern-matching on the policy itself.
+//! * [`PolicyCore`] — the shared scorer, feasibility cache, and ablation
+//!   knobs, so concrete policies stay a few dozen lines each.
+
+use std::collections::HashMap;
+
+use super::plan::Plan;
+use super::score::{NativeScorer, PlanScorer};
+use crate::shape::fold::{enumerate_variants, rotations_only, FoldKind, Variant};
+use crate::shape::JobShape;
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+
+/// One placement question: "where does this job go *right now*?".
+///
+/// The cluster view is read-only — policies propose, the engine commits.
+#[derive(Clone, Copy)]
+pub struct PlacementRequest<'a> {
+    /// Job id (used to tag the produced [`Plan`]).
+    pub job: u64,
+    /// The job's logical shape.
+    pub shape: JobShape,
+    /// Arrival time in trace seconds; `0.0` for live submissions with no
+    /// trace context. Built-ins ignore it; arrival-aware policies (e.g.
+    /// deadline- or ageing-based ones) get it without an API change.
+    pub arrival: f64,
+    /// Current cluster occupancy and topology.
+    pub cluster: &'a ClusterState,
+}
+
+impl<'a> PlacementRequest<'a> {
+    /// Request with no trace context (live submissions).
+    pub fn new(job: u64, shape: JobShape, cluster: &'a ClusterState) -> PlacementRequest<'a> {
+        PlacementRequest {
+            job,
+            shape,
+            arrival: 0.0,
+            cluster,
+        }
+    }
+}
+
+/// Counters describing one placement search, reported with every
+/// [`PlacementDecision`] and aggregated by the scheduler-observer
+/// telemetry (`sim::observer`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecisionStats {
+    /// Shape variants the policy enumerated for the job.
+    pub variants: usize,
+    /// Of those, true folds (anything beyond an axis rotation).
+    pub folds_tried: usize,
+    /// Candidate plans that materialized and entered ranking.
+    pub candidates: usize,
+}
+
+impl DecisionStats {
+    /// Stats for a variant list, before any candidate materialized.
+    pub fn from_variants(vs: &[Variant]) -> DecisionStats {
+        DecisionStats {
+            variants: vs.len(),
+            folds_tried: vs
+                .iter()
+                .filter(|v| !matches!(v.kind, FoldKind::Identity))
+                .count(),
+            candidates: 0,
+        }
+    }
+}
+
+/// The structured outcome of [`PlacementPolicy::plan`].
+#[derive(Debug)]
+pub enum PlacementDecision {
+    /// A committed-ready plan (not yet applied to the cluster).
+    Placed { plan: Plan, stats: DecisionStats },
+    /// The shape can never be placed on this topology, even on an empty
+    /// cluster — the §4 admission rule removes such jobs from the queue.
+    Infeasible { stats: DecisionStats },
+    /// Feasible in principle, but the cluster lacks capacity right now —
+    /// the job keeps its place at the head of the FIFO queue.
+    NoCapacity { stats: DecisionStats },
+}
+
+impl PlacementDecision {
+    /// The search counters, whatever the outcome.
+    pub fn stats(&self) -> &DecisionStats {
+        match self {
+            PlacementDecision::Placed { stats, .. }
+            | PlacementDecision::Infeasible { stats }
+            | PlacementDecision::NoCapacity { stats } => stats,
+        }
+    }
+
+    /// The plan, if one was produced.
+    pub fn plan(&self) -> Option<&Plan> {
+        match self {
+            PlacementDecision::Placed { plan, .. } => Some(plan),
+            _ => None,
+        }
+    }
+
+    /// Consume the decision into its plan, if any.
+    pub fn into_plan(self) -> Option<Plan> {
+        match self {
+            PlacementDecision::Placed { plan, .. } => Some(plan),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase tag for reports and tests.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementDecision::Placed { .. } => "placed",
+            PlacementDecision::Infeasible { .. } => "infeasible",
+            PlacementDecision::NoCapacity { .. } => "no-capacity",
+        }
+    }
+}
+
+/// One raw placement attempt: the plan (if any) plus search counters.
+/// This is what concrete policies implement; the classification into a
+/// [`PlacementDecision`] is shared (see [`PlacementPolicy::plan`]).
+#[derive(Debug)]
+pub struct Attempt {
+    pub plan: Option<Plan>,
+    pub stats: DecisionStats,
+}
+
+impl Attempt {
+    /// An attempt that produced nothing beyond its counters.
+    pub fn rejected(stats: DecisionStats) -> Attempt {
+        Attempt { plan: None, stats }
+    }
+
+    /// Attempt of a single-candidate search (no variant enumeration):
+    /// scattered/space-filling policies either place their one obvious
+    /// layout or nothing.
+    pub fn single(plan: Option<Plan>) -> Attempt {
+        Attempt {
+            stats: DecisionStats {
+                variants: 1,
+                folds_tried: 0,
+                candidates: plan.is_some() as usize,
+            },
+            plan,
+        }
+    }
+}
+
+/// State shared by every policy: the plan scorer, the feasibility cache,
+/// and the ablation knobs. Concrete policies embed one and expose it via
+/// [`PlacementPolicy::core`], which is what keeps the provided trait
+/// methods (classification, feasibility memoization, scorer swap) free
+/// for implementors.
+pub struct PolicyCore {
+    /// Plan-ranking scorer (native by default; the PJRT-backed one can be
+    /// swapped in via [`PlacementPolicy::set_scorer`]).
+    pub scorer: Box<dyn PlanScorer>,
+    /// Cache of "can this shape ever be placed on an *empty* cluster?",
+    /// keyed on `(topology, shape)`. The topology must be part of the key:
+    /// one policy instance may be queried against several topologies (the
+    /// workload-stats driver does exactly that), and a shape-only key
+    /// returns stale answers across them.
+    pub feasibility: HashMap<(ClusterTopo, JobShape), bool>,
+    /// Ablation A2: which job dimensionalities may be folded.
+    pub fold_dims_enabled: [bool; 3],
+    /// Ablation A4: search shared non-zero piece offsets inside cubes (an
+    /// extension over the paper's origin-anchored prototype). On by
+    /// default only for RFold.
+    pub offset_search: bool,
+}
+
+impl PolicyCore {
+    pub fn new() -> PolicyCore {
+        PolicyCore {
+            scorer: Box::new(NativeScorer),
+            feasibility: HashMap::new(),
+            fold_dims_enabled: [true; 3],
+            offset_search: false,
+        }
+    }
+
+    /// Largest dimension a placed shape may have on this topology.
+    pub fn max_dim(topo: ClusterTopo) -> usize {
+        match topo {
+            ClusterTopo::Static { ext } => ext.0.iter().copied().max().unwrap(),
+            ClusterTopo::Reconfigurable { grid } => (grid.n * grid.num_cubes()).min(4096),
+        }
+    }
+
+    /// Shape variants to consider for a job: full homomorphic folds when
+    /// `folds` is set and the job's dimensionality is enabled (ablation
+    /// A2), axis rotations otherwise.
+    pub fn variants(&self, topo: ClusterTopo, shape: JobShape, folds: bool) -> Vec<Variant> {
+        let max_dim = Self::max_dim(topo);
+        if folds && self.fold_dims_enabled[shape.dimensionality().clamp(1, 3) - 1] {
+            enumerate_variants(shape, max_dim)
+        } else {
+            rotations_only(shape, max_dim)
+        }
+    }
+}
+
+impl Default for PolicyCore {
+    fn default() -> Self {
+        PolicyCore::new()
+    }
+}
+
+/// A placement policy behind the registry: object-safe, so the engine,
+/// sweep runner, and coordinator all drive `Box<dyn PlacementPolicy>`
+/// without knowing the concrete type.
+///
+/// Implementors supply [`attempt`](PlacementPolicy::attempt) (one raw
+/// placement search), [`name`](PlacementPolicy::name), and
+/// [`core`](PlacementPolicy::core); classification, feasibility
+/// memoization, and scorer swapping are provided. Policies are *not*
+/// required to be `Send` — the PJRT scorer handle is thread-local, so
+/// every driver instantiates its policy on the thread that runs it.
+pub trait PlacementPolicy {
+    /// Stable display name (matches the registry's display label, e.g.
+    /// `"RFold"`).
+    fn name(&self) -> &'static str;
+
+    /// One placement attempt against the cluster as-is. Must be
+    /// deterministic: same cluster + request ⇒ same plan bytes (the sweep
+    /// result cache and the golden Table-1 snapshot rely on it).
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt;
+
+    /// The shared scorer/cache/knob block.
+    fn core(&mut self) -> &mut PolicyCore;
+
+    /// `true` for policies whose placements are scattered or routed over
+    /// shared links (best-effort, space-filling curves): the engine then
+    /// charges ring contention instead of the open-ring penalty.
+    fn scattered(&self) -> bool {
+        false
+    }
+
+    /// Answer a request with a structured decision: a plan, or a
+    /// rejection classified as [`PlacementDecision::Infeasible`] (never
+    /// placeable on this topology — drop) vs
+    /// [`PlacementDecision::NoCapacity`] (queue behind the FIFO head).
+    fn plan(&mut self, req: &PlacementRequest<'_>) -> PlacementDecision {
+        let Attempt { plan, stats } = self.attempt(req.cluster, req.job, req.shape);
+        match plan {
+            Some(plan) => PlacementDecision::Placed { plan, stats },
+            None if self.feasible_ever(req.cluster.topo(), req.shape) => {
+                PlacementDecision::NoCapacity { stats }
+            }
+            None => PlacementDecision::Infeasible { stats },
+        }
+    }
+
+    /// Can the job be placed on an *empty* cluster of this topology?
+    /// (FIFO admission drops shape-incompatible jobs, §4.) Memoized per
+    /// `(topology, shape)` in the [`PolicyCore`].
+    fn feasible_ever(&mut self, topo: ClusterTopo, shape: JobShape) -> bool {
+        if let Some(&f) = self.core().feasibility.get(&(topo, shape)) {
+            return f;
+        }
+        let empty = ClusterState::new(topo);
+        let f = self.attempt(&empty, u64::MAX, shape).plan.is_some();
+        self.core().feasibility.insert((topo, shape), f);
+        f
+    }
+
+    /// Swap in a different plan scorer (e.g. the PJRT-backed one).
+    fn set_scorer(&mut self, scorer: Box<dyn PlanScorer>) {
+        self.core().scorer = scorer;
+    }
+
+    /// Convenience `Option<Plan>` view of one attempt — no rejection
+    /// classification, so no hidden empty-cluster probe. Used by tests,
+    /// benches, and the live coordinator's drain loop.
+    fn place_now(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
+        self.attempt(cluster, job, shape).plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::policies::{FirstFit, Reconfig};
+
+    #[test]
+    fn decision_accessors() {
+        let stats = DecisionStats {
+            variants: 3,
+            folds_tried: 1,
+            candidates: 0,
+        };
+        let d = PlacementDecision::NoCapacity { stats };
+        assert_eq!(d.stats().variants, 3);
+        assert_eq!(d.label(), "no-capacity");
+        assert!(d.plan().is_none());
+        assert!(d.into_plan().is_none());
+        let i = PlacementDecision::Infeasible { stats };
+        assert_eq!(i.label(), "infeasible");
+    }
+
+    #[test]
+    fn plan_classifies_rejections() {
+        // 4×4×32 on a static 16³ torus can never fit → Infeasible; a
+        // feasible full-cluster shape on a busy cluster → NoCapacity.
+        let c = ClusterState::new(ClusterTopo::static_4096());
+        let mut p = FirstFit::new();
+        let d = p.plan(&PlacementRequest::new(1, JobShape::new(4, 4, 32), &c));
+        assert_eq!(d.label(), "infeasible");
+
+        let mut busy = ClusterState::new(ClusterTopo::static_4096());
+        let full = p
+            .plan(&PlacementRequest::new(2, JobShape::new(16, 16, 16), &busy))
+            .into_plan()
+            .expect("fits empty cluster");
+        full.commit(&mut busy).unwrap();
+        let d = p.plan(&PlacementRequest::new(3, JobShape::new(2, 2, 2), &busy));
+        assert_eq!(d.label(), "no-capacity");
+    }
+
+    #[test]
+    fn feasibility_keyed_on_topology_and_shape() {
+        // Regression for the shape-only cache key: 4×4×32 is infeasible on
+        // the static torus but feasible on Reconfig(4³). One instance
+        // queried against both topologies must answer both correctly, in
+        // either order.
+        let shape = JobShape::new(4, 4, 32);
+        let static_t = ClusterTopo::static_4096();
+        let ocs_t = ClusterTopo::reconfigurable_4096(4);
+
+        let mut p = Reconfig::new();
+        assert!(!p.feasible_ever(static_t, shape), "cannot fit 16^3 torus");
+        assert!(
+            p.feasible_ever(ocs_t, shape),
+            "stale static-topology answer leaked across topologies"
+        );
+        // And the reverse order on a fresh instance.
+        let mut q = Reconfig::new();
+        assert!(q.feasible_ever(ocs_t, shape));
+        assert!(!q.feasible_ever(static_t, shape));
+        // Both answers are cached under distinct keys.
+        assert_eq!(q.core().feasibility.len(), 2);
+    }
+
+    #[test]
+    fn stats_count_folds_vs_rotations() {
+        let core = PolicyCore::new();
+        let topo = ClusterTopo::static_4096();
+        let rot = core.variants(topo, JobShape::new(2, 4, 8), false);
+        let s = DecisionStats::from_variants(&rot);
+        assert_eq!(s.variants, rot.len());
+        assert_eq!(s.folds_tried, 0, "rotations are not folds");
+        let folded = core.variants(topo, JobShape::new(18, 1, 1), true);
+        let s = DecisionStats::from_variants(&folded);
+        assert!(s.folds_tried > 0, "18x1x1 must enumerate real folds");
+    }
+}

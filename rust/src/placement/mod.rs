@@ -1,23 +1,33 @@
 //! Placement policies (paper §3): FirstFit, Folding, Reconfig, RFold,
-//! plus the §5 best-effort alternative.
+//! plus the §5 best-effort and §2 Hilbert baselines — all behind the open
+//! [`PlacementPolicy`] trait and the string-keyed [`PolicyRegistry`].
 //!
 //! All policies share two engines:
 //! * [`static_place`] — contiguous box search in a statically wired torus;
 //! * [`reconfig_place`] — cube decomposition + OCS chain planning in a
 //!   reconfigurable cluster.
 //!
-//! A policy turns a job into a set of candidate [`plan::Plan`]s, the
-//! [`score`] module ranks them (fewest cubes → fewest OCS links → least
-//! fragmentation — the paper's core heuristic), and the winning plan is
-//! committed atomically against the [`crate::topology::ClusterState`].
+//! A policy turns a [`api::PlacementRequest`] into a
+//! [`api::PlacementDecision`]: a committed-ready [`plan::Plan`] chosen by
+//! the [`score`] ranking (fewest cubes → fewest OCS links → least
+//! fragmentation — the paper's core heuristic), or a structured rejection
+//! the engine acts on without knowing the policy. New policies implement
+//! the trait and add one [`PolicyRegistry::register`] line; see the
+//! README's "Adding a placement policy".
 
+pub mod api;
 pub mod best_effort;
 pub mod hilbert;
 pub mod plan;
 pub mod policies;
 pub mod reconfig_place;
+pub mod registry;
 pub mod score;
 pub mod static_place;
 
+pub use api::{
+    Attempt, DecisionStats, PlacementDecision, PlacementPolicy, PlacementRequest, PolicyCore,
+};
 pub use plan::{OcsChainPlan, Plan};
-pub use policies::{Policy, PolicyKind};
+pub use policies::PolicyKind;
+pub use registry::{builtins, PolicyHandle, PolicyRegistry};

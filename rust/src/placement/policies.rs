@@ -1,21 +1,301 @@
-//! The four placement policies of the paper's evaluation (§4) behind one
-//! trait: FirstFit and Folding drive the static-torus engine; Reconfig and
-//! RFold drive the reconfigurable engine. BestEffort (§5) lives in
-//! `best_effort.rs`.
+//! The built-in placement policies behind the open
+//! [`PlacementPolicy`](super::api::PlacementPolicy) trait: FirstFit and
+//! Folding drive the static-torus engine; Reconfig and RFold drive the
+//! reconfigurable engine; BestEffort and Hilbert are the §5/§2 scattered
+//! baselines (their search lives in `best_effort.rs` / `hilbert.rs`).
+//!
+//! Each policy is one small type embedding a shared
+//! [`PolicyCore`](super::api::PolicyCore); registration lives in
+//! [`registry::builtins`](super::registry::builtins). The old closed
+//! [`PolicyKind`] enum survives only as a deprecated shim over registry
+//! names so existing configs, sweep rows, and golden snapshots keep their
+//! exact bytes.
 
-use std::collections::HashMap;
-
+use super::api::{Attempt, DecisionStats, PlacementPolicy, PolicyCore};
 use super::best_effort;
 use super::hilbert;
 use super::plan::Plan;
+use super::registry::{builtins, PolicyHandle};
 use super::reconfig_place;
-use super::score::{rank_plans, NativeScorer, PlanScorer};
+use super::score::rank_plans;
 use super::static_place;
-use crate::shape::fold::{enumerate_variants, rotations_only, Variant};
+use crate::shape::fold::Variant;
 use crate::shape::JobShape;
 use crate::topology::cluster::{ClusterState, ClusterTopo};
 
-/// Policy selector (CLI names in parentheses).
+/// Engine-bound policies only run on their own topology family; on the
+/// other family every request is a structured rejection (the engines
+/// themselves panic on a family mismatch). Classified as `Infeasible` by
+/// the empty-cluster probe, so mismatched jobs drop instead of wedging
+/// the FIFO head.
+fn wrong_family(cluster: &ClusterState, wants_reconfigurable: bool) -> bool {
+    let is_reconfigurable = matches!(cluster.topo(), ClusterTopo::Reconfigurable { .. });
+    is_reconfigurable != wants_reconfigurable
+}
+
+/// First-Fit with rotations in a static torus (`firstfit`): scan rotations
+/// in order, commit the first hit.
+#[derive(Default)]
+pub struct FirstFit {
+    core: PolicyCore,
+}
+
+impl FirstFit {
+    pub fn new() -> FirstFit {
+        FirstFit::default()
+    }
+}
+
+impl PlacementPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "FirstFit"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        if wrong_family(cluster, false) {
+            return Attempt::rejected(DecisionStats::default());
+        }
+        let vs = self.core.variants(cluster.topo(), shape, false);
+        let mut stats = DecisionStats::from_variants(&vs);
+        for v in &vs {
+            if let Some(p) = static_plan_for_variant(cluster, v, job) {
+                stats.candidates = 1;
+                return Attempt {
+                    plan: Some(p),
+                    stats,
+                };
+            }
+        }
+        Attempt::rejected(stats)
+    }
+}
+
+/// Folding + first-fit in a static torus (`folding`): all homomorphic
+/// variants materialize, the scorer ranks them.
+#[derive(Default)]
+pub struct Folding {
+    core: PolicyCore,
+}
+
+impl Folding {
+    pub fn new() -> Folding {
+        Folding::default()
+    }
+}
+
+impl PlacementPolicy for Folding {
+    fn name(&self) -> &'static str {
+        "Folding"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        if wrong_family(cluster, false) {
+            return Attempt::rejected(DecisionStats::default());
+        }
+        let vs = self.core.variants(cluster.topo(), shape, true);
+        let mut stats = DecisionStats::from_variants(&vs);
+        let plans: Vec<Plan> = vs
+            .iter()
+            .filter_map(|v| static_plan_for_variant(cluster, v, job))
+            .collect();
+        stats.candidates = plans.len();
+        let plan = rank_plans(cluster, &plans, self.core.scorer.as_mut())
+            .map(|best| plans.into_iter().nth(best).unwrap());
+        Attempt { plan, stats }
+    }
+}
+
+/// Shared Reconfig/RFold search: cube decomposition + OCS chain planning
+/// per variant, ranked by the paper's heuristic.
+fn reconfig_attempt(
+    core: &mut PolicyCore,
+    cluster: &ClusterState,
+    job: u64,
+    shape: JobShape,
+    folds: bool,
+) -> Attempt {
+    if wrong_family(cluster, true) {
+        return Attempt::rejected(DecisionStats::default());
+    }
+    let vs = core.variants(cluster.topo(), shape, folds);
+    let mut stats = DecisionStats::from_variants(&vs);
+    let plans: Vec<Plan> = vs
+        .iter()
+        .filter_map(|v| {
+            if core.offset_search {
+                reconfig_place::place_with_offsets(cluster, v, job)
+            } else {
+                reconfig_place::place(cluster, v, job)
+            }
+        })
+        .collect();
+    stats.candidates = plans.len();
+    let plan = rank_plans(cluster, &plans, core.scorer.as_mut())
+        .map(|best| plans.into_iter().nth(best).unwrap());
+    Attempt { plan, stats }
+}
+
+/// Reconfiguration with rotations (`reconfig`) — the paper's
+/// origin-anchored prototype baseline.
+#[derive(Default)]
+pub struct Reconfig {
+    core: PolicyCore,
+}
+
+impl Reconfig {
+    pub fn new() -> Reconfig {
+        Reconfig::default()
+    }
+}
+
+impl PlacementPolicy for Reconfig {
+    fn name(&self) -> &'static str {
+        "Reconfig"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        reconfig_attempt(&mut self.core, cluster, job, shape, false)
+    }
+}
+
+/// Folding + reconfiguration (`rfold`) — the paper's contribution. Also
+/// searches shared in-cube offsets (the fragmentation-aware A4 extension;
+/// flip `core().offset_search` to ablate).
+pub struct RFold {
+    core: PolicyCore,
+}
+
+impl RFold {
+    pub fn new() -> RFold {
+        let mut core = PolicyCore::new();
+        core.offset_search = true;
+        RFold { core }
+    }
+}
+
+impl Default for RFold {
+    fn default() -> Self {
+        RFold::new()
+    }
+}
+
+impl PlacementPolicy for RFold {
+    fn name(&self) -> &'static str {
+        "RFold"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        reconfig_attempt(&mut self.core, cluster, job, shape, true)
+    }
+}
+
+/// Scattered best-effort placement (§5 discussion, `besteffort`): first
+/// free XPUs in snake order, rings routed over shared links.
+#[derive(Default)]
+pub struct BestEffort {
+    core: PolicyCore,
+}
+
+impl BestEffort {
+    pub fn new() -> BestEffort {
+        BestEffort::default()
+    }
+}
+
+impl PlacementPolicy for BestEffort {
+    fn name(&self) -> &'static str {
+        "BestEffort"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn scattered(&self) -> bool {
+        true
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        Attempt::single(best_effort::place_scattered(cluster, job, shape))
+    }
+}
+
+/// SLURM-style Hilbert-curve segment placement (§2 background, `slurm`):
+/// compact but not torus-shaped — rings contend.
+#[derive(Default)]
+pub struct Hilbert {
+    core: PolicyCore,
+}
+
+impl Hilbert {
+    pub fn new() -> Hilbert {
+        Hilbert::default()
+    }
+}
+
+impl PlacementPolicy for Hilbert {
+    fn name(&self) -> &'static str {
+        "Hilbert"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn scattered(&self) -> bool {
+        true
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        Attempt::single(hilbert::place_hilbert(cluster, job, shape))
+    }
+}
+
+/// Place one variant in a static torus (first-fit anchor), if possible.
+/// Shared by [`FirstFit`] and [`Folding`].
+pub(crate) fn static_plan_for_variant(
+    cluster: &ClusterState,
+    v: &Variant,
+    job: u64,
+) -> Option<Plan> {
+    let wrap = static_place::box_wrap(cluster, v.placed);
+    for k in 0..3 {
+        if v.requires_wrap[k] && !wrap[k] {
+            return None;
+        }
+    }
+    let anchor = static_place::find_first_box(cluster, v.placed)?;
+    Some(Plan {
+        job,
+        variant: v.clone(),
+        nodes: static_place::box_nodes(cluster, anchor, v.placed),
+        cubes: vec![],
+        chains: vec![],
+        wrap,
+    })
+}
+
+/// Deprecated policy selector, kept as a thin shim over registry names so
+/// pre-registry call sites (and their golden output bytes) are unchanged.
+/// New code should resolve names through
+/// [`PolicyRegistry`](super::registry::PolicyRegistry) and carry
+/// [`PolicyHandle`]s instead.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum PolicyKind {
     /// First-Fit with rotations in a static torus (`firstfit`).
@@ -34,193 +314,60 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Every built-in, in the registry's reporting order.
+    pub const ALL: [PolicyKind; 6] = [
+        PolicyKind::FirstFit,
+        PolicyKind::Folding,
+        PolicyKind::Reconfig,
+        PolicyKind::RFold,
+        PolicyKind::BestEffort,
+        PolicyKind::Hilbert,
+    ];
+
+    /// Parse a built-in policy name. Derived from the registry handles'
+    /// keys and aliases so the shim can never drift from the registry.
+    /// New code: use
+    /// [`PolicyRegistry::resolve`](super::registry::PolicyRegistry::resolve),
+    /// which also sees externally registered policies.
     pub fn parse(s: &str) -> Option<PolicyKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "firstfit" | "first-fit" | "ff" => Some(PolicyKind::FirstFit),
-            "folding" | "fold" => Some(PolicyKind::Folding),
-            "reconfig" | "reconfiguration" => Some(PolicyKind::Reconfig),
-            "rfold" => Some(PolicyKind::RFold),
-            "besteffort" | "best-effort" | "be" => Some(PolicyKind::BestEffort),
-            "hilbert" | "slurm" | "sfc" => Some(PolicyKind::Hilbert),
-            _ => None,
+        let want = s.trim().to_ascii_lowercase();
+        PolicyKind::ALL.into_iter().find(|kind| {
+            let h = kind.handle();
+            h.key() == want || h.aliases().iter().any(|a| a.eq_ignore_ascii_case(&want))
+        })
+    }
+
+    /// The registry handle of this built-in.
+    pub fn handle(self) -> PolicyHandle {
+        match self {
+            PolicyKind::FirstFit => builtins::FIRST_FIT,
+            PolicyKind::Folding => builtins::FOLDING,
+            PolicyKind::Reconfig => builtins::RECONFIG,
+            PolicyKind::RFold => builtins::RFOLD,
+            PolicyKind::BestEffort => builtins::BEST_EFFORT,
+            PolicyKind::Hilbert => builtins::HILBERT,
         }
     }
 
+    /// Build a fresh boxed policy (shim over [`PolicyHandle::instantiate`]).
+    pub fn build(self) -> Box<dyn PlacementPolicy> {
+        self.handle().instantiate()
+    }
+
     pub fn name(&self) -> &'static str {
-        match self {
-            PolicyKind::FirstFit => "FirstFit",
-            PolicyKind::Folding => "Folding",
-            PolicyKind::Reconfig => "Reconfig",
-            PolicyKind::RFold => "RFold",
-            PolicyKind::BestEffort => "BestEffort",
-            PolicyKind::Hilbert => "Hilbert",
-        }
+        self.handle().name()
     }
 
     /// The topology family the policy is designed for (paper Table 1 pairs
     /// FirstFit/Folding with the static torus).
     pub fn wants_reconfigurable(&self) -> bool {
-        matches!(self, PolicyKind::Reconfig | PolicyKind::RFold)
+        self.handle().wants_reconfigurable()
     }
 
     /// Does the policy fold shapes (vs rotations only)?
     pub fn folds(&self) -> bool {
-        matches!(self, PolicyKind::Folding | PolicyKind::RFold)
+        self.handle().folds()
     }
-}
-
-/// A placement policy: produce a committed-ready plan for a job, or decide
-/// a job can never be placed on this topology.
-pub struct Policy {
-    kind: PolicyKind,
-    scorer: Box<dyn PlanScorer>,
-    /// Cache of "can this shape ever be placed on an empty cluster?".
-    feasibility: HashMap<JobShape, bool>,
-    /// Optional restriction of folding dimensionality (ablation A2):
-    /// folds are only applied to jobs whose dimensionality is enabled.
-    pub fold_dims_enabled: [bool; 3],
-    /// Ablation A4: search shared non-zero piece offsets inside cubes
-    /// (an extension over the paper's origin-anchored prototype).
-    pub offset_search: bool,
-}
-
-impl Policy {
-    pub fn new(kind: PolicyKind) -> Policy {
-        Policy {
-            kind,
-            scorer: Box::new(NativeScorer),
-            feasibility: HashMap::new(),
-            fold_dims_enabled: [true; 3],
-            // RFold is the fragmentation-aware contribution: it searches
-            // shared in-cube offsets. The Reconfig baseline mirrors the
-            // paper's origin-anchored prototype (ablation A4 flips this).
-            offset_search: kind == PolicyKind::RFold,
-        }
-    }
-
-    /// Swap in a different scorer (e.g. the PJRT-backed one).
-    pub fn with_scorer(mut self, scorer: Box<dyn PlanScorer>) -> Policy {
-        self.scorer = scorer;
-        self
-    }
-
-    pub fn kind(&self) -> PolicyKind {
-        self.kind
-    }
-
-    /// Largest dimension a placed shape may have on this topology.
-    fn max_dim(topo: ClusterTopo) -> usize {
-        match topo {
-            ClusterTopo::Static { ext } => ext.0.iter().copied().max().unwrap(),
-            ClusterTopo::Reconfigurable { grid } => (grid.n * grid.num_cubes()).min(4096),
-        }
-    }
-
-    /// Shape variants this policy considers for a job.
-    fn variants(&self, topo: ClusterTopo, shape: JobShape) -> Vec<Variant> {
-        let max_dim = Self::max_dim(topo);
-        if self.kind.folds() && self.fold_dims_enabled[shape.dimensionality().clamp(1, 3) - 1] {
-            enumerate_variants(shape, max_dim)
-        } else {
-            rotations_only(shape, max_dim)
-        }
-    }
-
-    /// Try to place `shape` for `job` on the cluster *now*. The returned
-    /// plan has not been committed.
-    pub fn plan(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
-        match self.kind {
-            PolicyKind::FirstFit => self.plan_first_fit(cluster, job, shape),
-            PolicyKind::Folding => self.plan_static_ranked(cluster, job, shape),
-            PolicyKind::Reconfig | PolicyKind::RFold => {
-                self.plan_reconfig_ranked(cluster, job, shape)
-            }
-            PolicyKind::BestEffort => best_effort::place_scattered(cluster, job, shape),
-            PolicyKind::Hilbert => hilbert::place_hilbert(cluster, job, shape),
-        }
-    }
-
-    /// Can the job be placed on an *empty* cluster of this topology?
-    /// (FIFO admission drops shape-incompatible jobs, §4.)
-    pub fn feasible_ever(&mut self, topo: ClusterTopo, shape: JobShape) -> bool {
-        if let Some(&f) = self.feasibility.get(&shape) {
-            return f;
-        }
-        let empty = ClusterState::new(topo);
-        let f = self.plan(&empty, u64::MAX, shape).is_some();
-        self.feasibility.insert(shape, f);
-        f
-    }
-
-    fn plan_first_fit(
-        &mut self,
-        cluster: &ClusterState,
-        job: u64,
-        shape: JobShape,
-    ) -> Option<Plan> {
-        // True First-Fit: scan rotations in order, commit the first hit.
-        for v in self.variants(cluster.topo(), shape) {
-            if let Some(p) = static_plan_for_variant(cluster, &v, job) {
-                return Some(p);
-            }
-        }
-        None
-    }
-
-    fn plan_static_ranked(
-        &mut self,
-        cluster: &ClusterState,
-        job: u64,
-        shape: JobShape,
-    ) -> Option<Plan> {
-        let plans: Vec<Plan> = self
-            .variants(cluster.topo(), shape)
-            .iter()
-            .filter_map(|v| static_plan_for_variant(cluster, v, job))
-            .collect();
-        let best = rank_plans(cluster, &plans, self.scorer.as_mut())?;
-        Some(plans.into_iter().nth(best).unwrap())
-    }
-
-    fn plan_reconfig_ranked(
-        &mut self,
-        cluster: &ClusterState,
-        job: u64,
-        shape: JobShape,
-    ) -> Option<Plan> {
-        let plans: Vec<Plan> = self
-            .variants(cluster.topo(), shape)
-            .iter()
-            .filter_map(|v| {
-                if self.offset_search {
-                    reconfig_place::place_with_offsets(cluster, v, job)
-                } else {
-                    reconfig_place::place(cluster, v, job)
-                }
-            })
-            .collect();
-        let best = rank_plans(cluster, &plans, self.scorer.as_mut())?;
-        Some(plans.into_iter().nth(best).unwrap())
-    }
-}
-
-/// Place one variant in a static torus (first-fit anchor), if possible.
-fn static_plan_for_variant(cluster: &ClusterState, v: &Variant, job: u64) -> Option<Plan> {
-    let wrap = static_place::box_wrap(cluster, v.placed);
-    for k in 0..3 {
-        if v.requires_wrap[k] && !wrap[k] {
-            return None;
-        }
-    }
-    let anchor = static_place::find_first_box(cluster, v.placed)?;
-    Some(Plan {
-        job,
-        variant: v.clone(),
-        nodes: static_place::box_nodes(cluster, anchor, v.placed),
-        cubes: vec![],
-        chains: vec![],
-        wrap,
-    })
 }
 
 #[cfg(test)]
@@ -244,12 +391,29 @@ mod tests {
     }
 
     #[test]
+    fn kind_shim_matches_registry_metadata() {
+        for kind in PolicyKind::ALL {
+            let h = kind.handle();
+            assert_eq!(kind.name(), h.name());
+            assert_eq!(kind.wants_reconfigurable(), h.wants_reconfigurable());
+            assert_eq!(kind.folds(), h.folds());
+            // Keys AND every alias parse back to the same kind — the shim
+            // is derived from the registry metadata, so it cannot drift.
+            assert_eq!(PolicyKind::parse(h.key()), Some(kind));
+            for alias in h.aliases() {
+                assert_eq!(PolicyKind::parse(alias), Some(kind), "alias {alias}");
+            }
+            assert_eq!(kind.build().name(), h.name());
+        }
+    }
+
+    #[test]
     fn firstfit_rejects_oversized_dim() {
         // §3.2's example: 4×4×32 cannot fit a 16³ static torus in any
         // rotation.
         let c = static_c();
-        let mut p = Policy::new(PolicyKind::FirstFit);
-        assert!(p.plan(&c, 1, JobShape::new(4, 4, 32)).is_none());
+        let mut p = FirstFit::new();
+        assert!(p.place_now(&c, 1, JobShape::new(4, 4, 32)).is_none());
         assert!(!p.feasible_ever(c.topo(), JobShape::new(4, 4, 32)));
     }
 
@@ -257,55 +421,74 @@ mod tests {
     fn folding_places_18x1x1_in_static() {
         // 18 > 16, FirstFit fails even rotated; Folding reshapes to 2×9.
         let c = static_c();
-        let mut ff = Policy::new(PolicyKind::FirstFit);
-        assert!(ff.plan(&c, 1, JobShape::new(18, 1, 1)).is_none());
-        let mut fo = Policy::new(PolicyKind::Folding);
-        let plan = fo.plan(&c, 1, JobShape::new(18, 1, 1)).expect("folds");
+        let mut ff = FirstFit::new();
+        assert!(ff.place_now(&c, 1, JobShape::new(18, 1, 1)).is_none());
+        let mut fo = Folding::new();
+        let plan = fo.place_now(&c, 1, JobShape::new(18, 1, 1)).expect("folds");
         assert_eq!(plan.nodes.len(), 18);
     }
 
     #[test]
     fn reconfig_places_4x4x32() {
         let c = reconfig_c(4);
-        let mut p = Policy::new(PolicyKind::Reconfig);
-        let plan = p.plan(&c, 1, JobShape::new(4, 4, 32)).expect("8 cubes");
+        let mut p = Reconfig::new();
+        let plan = p.place_now(&c, 1, JobShape::new(4, 4, 32)).expect("8 cubes");
         assert_eq!(plan.cubes.len(), 8);
     }
 
     #[test]
     fn rfold_beats_reconfig_on_4x8x2() {
         let c = reconfig_c(4);
-        let mut rf = Policy::new(PolicyKind::RFold);
-        let plan = rf.plan(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+        let mut rf = RFold::new();
+        let plan = rf.place_now(&c, 1, JobShape::new(4, 8, 2)).unwrap();
         assert_eq!(plan.cubes.len(), 1, "RFold folds into one cube");
-        let mut rc = Policy::new(PolicyKind::Reconfig);
-        let plan = rc.plan(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+        let mut rc = Reconfig::new();
+        let plan = rc.place_now(&c, 1, JobShape::new(4, 8, 2)).unwrap();
         assert_eq!(plan.cubes.len(), 2, "Reconfig needs two cubes");
     }
 
     #[test]
-    fn feasibility_cached() {
+    fn feasibility_cached_per_topo_and_shape() {
         let c = static_c();
-        let mut p = Policy::new(PolicyKind::FirstFit);
+        let mut p = FirstFit::new();
         let s = JobShape::new(8, 8, 8);
         assert!(p.feasible_ever(c.topo(), s));
-        assert!(p.feasibility.contains_key(&s));
+        assert!(p.core().feasibility.contains_key(&(c.topo(), s)));
     }
 
     #[test]
     fn fold_dims_ablation_disables_1d_folds() {
         let c = static_c();
-        let mut p = Policy::new(PolicyKind::Folding);
-        p.fold_dims_enabled = [false, true, true];
+        let mut p = Folding::new();
+        p.core().fold_dims_enabled = [false, true, true];
         // 18×1×1 is a 1D job; with 1D folding disabled it cannot fit.
-        assert!(p.plan(&c, 1, JobShape::new(18, 1, 1)).is_none());
+        assert!(p.place_now(&c, 1, JobShape::new(18, 1, 1)).is_none());
     }
 
     #[test]
     fn firstfit_commits_first_rotation() {
         let c = static_c();
-        let mut p = Policy::new(PolicyKind::FirstFit);
-        let plan = p.plan(&c, 1, JobShape::new(2, 4, 8)).unwrap();
+        let mut p = FirstFit::new();
+        let plan = p.place_now(&c, 1, JobShape::new(2, 4, 8)).unwrap();
         plan.commit(&mut { c }).unwrap();
+    }
+
+    #[test]
+    fn scattered_flag_marks_routed_policies() {
+        assert!(BestEffort::new().scattered());
+        assert!(Hilbert::new().scattered());
+        assert!(!FirstFit::new().scattered());
+        assert!(!RFold::new().scattered());
+    }
+
+    #[test]
+    fn decision_stats_track_search_effort() {
+        let c = reconfig_c(4);
+        let mut rf = RFold::new();
+        let a = rf.attempt(&c, 1, JobShape::new(4, 8, 2));
+        assert!(a.plan.is_some());
+        assert!(a.stats.variants >= a.stats.candidates);
+        assert!(a.stats.folds_tried > 0, "4x8x2 has a HalveDouble fold");
+        assert!(a.stats.candidates >= 2, "identity and fold both place");
     }
 }

@@ -1,0 +1,386 @@
+//! The string-keyed policy registry: the single place where policy names
+//! become policy instances.
+//!
+//! Every driver (CLI, sweep grids, the live coordinator, benches) resolves
+//! a name to a [`PolicyHandle`] exactly once at config-build time and
+//! threads the handle — a cheap `Copy` token — through its configs. The
+//! handle instantiates a fresh [`PlacementPolicy`] per simulation, which
+//! is also what the ROADMAP's multi-backend fan-out needs: remote workers
+//! reconstruct policies from nothing but their registry key.
+//!
+//! Adding a policy takes one type implementing
+//! [`PlacementPolicy`](crate::placement::PlacementPolicy) plus one
+//! [`PolicyRegistry::register`] call — `tests/policy_registry.rs`
+//! demonstrates a seventh policy registered entirely from outside the
+//! crate.
+
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::{OnceLock, RwLock};
+
+use super::api::PlacementPolicy;
+use super::policies;
+
+/// Constructor stored in the registry: builds a fresh boxed policy.
+pub type PolicyCtor = fn() -> Box<dyn PlacementPolicy>;
+
+/// A resolved registry entry: copyable, hashable by its canonical key, and
+/// able to instantiate its policy. This is what configs carry instead of
+/// the old closed `PolicyKind` enum.
+#[derive(Clone, Copy)]
+pub struct PolicyHandle {
+    key: &'static str,
+    display: &'static str,
+    aliases: &'static [&'static str],
+    wants_reconfigurable: bool,
+    folds: bool,
+    ctor: PolicyCtor,
+}
+
+impl PolicyHandle {
+    /// Build a handle for registration. `key` is the canonical lowercase
+    /// CLI name; `display` is the label used in report rows.
+    pub const fn new(
+        key: &'static str,
+        display: &'static str,
+        aliases: &'static [&'static str],
+        wants_reconfigurable: bool,
+        folds: bool,
+        ctor: PolicyCtor,
+    ) -> PolicyHandle {
+        PolicyHandle {
+            key,
+            display,
+            aliases,
+            wants_reconfigurable,
+            folds,
+            ctor,
+        }
+    }
+
+    /// Canonical lowercase registry key (the CLI name, e.g. `"rfold"`).
+    pub fn key(&self) -> &'static str {
+        self.key
+    }
+
+    /// Display name used in report rows (e.g. `"RFold"`).
+    pub fn name(&self) -> &'static str {
+        self.display
+    }
+
+    /// Accepted alternative CLI spellings.
+    pub fn aliases(&self) -> &'static [&'static str] {
+        self.aliases
+    }
+
+    /// The topology family the policy is designed for (paper Table 1
+    /// pairs FirstFit/Folding with the static torus).
+    pub fn wants_reconfigurable(&self) -> bool {
+        self.wants_reconfigurable
+    }
+
+    /// Does the policy fold shapes (vs rotations only)?
+    pub fn folds(&self) -> bool {
+        self.folds
+    }
+
+    /// Build a fresh policy instance.
+    pub fn instantiate(&self) -> Box<dyn PlacementPolicy> {
+        (self.ctor)()
+    }
+}
+
+// Identity is the canonical key alone: two handles with the same key are
+// the same policy (the registry enforces key uniqueness), and comparing
+// constructor fn pointers would be both meaningless and a clippy footgun.
+impl PartialEq for PolicyHandle {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl Eq for PolicyHandle {}
+
+impl Hash for PolicyHandle {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.key.hash(state);
+    }
+}
+
+impl fmt::Debug for PolicyHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PolicyHandle({})", self.key)
+    }
+}
+
+/// The built-in handles, in the paper's reporting order. `const`s so the
+/// `PolicyKind` shim and the experiment cell tables can reference them
+/// without a registry lookup.
+pub mod builtins {
+    use super::super::policies::{BestEffort, FirstFit, Folding, Hilbert, RFold, Reconfig};
+    use super::{PlacementPolicy, PolicyHandle};
+
+    fn make_first_fit() -> Box<dyn PlacementPolicy> {
+        Box::new(FirstFit::new())
+    }
+    fn make_folding() -> Box<dyn PlacementPolicy> {
+        Box::new(Folding::new())
+    }
+    fn make_reconfig() -> Box<dyn PlacementPolicy> {
+        Box::new(Reconfig::new())
+    }
+    fn make_rfold() -> Box<dyn PlacementPolicy> {
+        Box::new(RFold::new())
+    }
+    fn make_best_effort() -> Box<dyn PlacementPolicy> {
+        Box::new(BestEffort::new())
+    }
+    fn make_hilbert() -> Box<dyn PlacementPolicy> {
+        Box::new(Hilbert::new())
+    }
+
+    /// First-Fit with rotations in a static torus.
+    pub const FIRST_FIT: PolicyHandle = PolicyHandle::new(
+        "firstfit",
+        "FirstFit",
+        &["first-fit", "ff"],
+        false,
+        false,
+        make_first_fit,
+    );
+    /// Folding + first-fit in a static torus.
+    pub const FOLDING: PolicyHandle =
+        PolicyHandle::new("folding", "Folding", &["fold"], false, true, make_folding);
+    /// Reconfiguration with rotations.
+    pub const RECONFIG: PolicyHandle = PolicyHandle::new(
+        "reconfig",
+        "Reconfig",
+        &["reconfiguration"],
+        true,
+        false,
+        make_reconfig,
+    );
+    /// Folding + reconfiguration — the paper's contribution.
+    pub const RFOLD: PolicyHandle =
+        PolicyHandle::new("rfold", "RFold", &[], true, true, make_rfold);
+    /// Scattered best-effort placement (§5 discussion).
+    pub const BEST_EFFORT: PolicyHandle = PolicyHandle::new(
+        "besteffort",
+        "BestEffort",
+        &["best-effort", "be"],
+        false,
+        false,
+        make_best_effort,
+    );
+    /// SLURM-style Hilbert-curve segment placement (§2 background).
+    pub const HILBERT: PolicyHandle = PolicyHandle::new(
+        "hilbert",
+        "Hilbert",
+        &["slurm", "sfc"],
+        false,
+        false,
+        make_hilbert,
+    );
+
+    /// All built-ins in stable reporting order.
+    pub const ALL: [PolicyHandle; 6] = [
+        FIRST_FIT,
+        FOLDING,
+        RECONFIG,
+        RFOLD,
+        BEST_EFFORT,
+        HILBERT,
+    ];
+}
+
+/// String-keyed policy registry. Names resolve case-insensitively against
+/// canonical keys and aliases; registration order is preserved (it is the
+/// reporting order of the smoke matrix).
+pub struct PolicyRegistry {
+    entries: RwLock<Vec<PolicyHandle>>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (tests compose their own).
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry {
+            entries: RwLock::new(Vec::new()),
+        }
+    }
+
+    /// A registry pre-seeded with the six built-ins.
+    pub fn with_builtins() -> PolicyRegistry {
+        let reg = PolicyRegistry::new();
+        for h in builtins::ALL {
+            reg.register(h).expect("builtin keys are unique");
+        }
+        reg
+    }
+
+    /// The process-wide registry every driver resolves against. Seeded
+    /// with the built-ins; extend it with [`PolicyRegistry::register`].
+    pub fn global() -> &'static PolicyRegistry {
+        static GLOBAL: OnceLock<PolicyRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(PolicyRegistry::with_builtins)
+    }
+
+    /// Register a policy. Rejects empty or non-lowercase keys and any
+    /// key/alias that collides with an existing entry.
+    pub fn register(&self, handle: PolicyHandle) -> Result<(), String> {
+        let key = handle.key();
+        if key.is_empty() || key != key.to_ascii_lowercase() {
+            return Err(format!("policy key '{key}' must be non-empty lowercase"));
+        }
+        let mut entries = self.entries.write().unwrap();
+        for existing in entries.iter() {
+            let mut names = vec![existing.key()];
+            names.extend_from_slice(existing.aliases());
+            for name in names {
+                if name.eq_ignore_ascii_case(key)
+                    || handle.aliases().iter().any(|a| a.eq_ignore_ascii_case(name))
+                {
+                    return Err(format!(
+                        "policy name '{name}' already registered (by '{}')",
+                        existing.key()
+                    ));
+                }
+            }
+        }
+        entries.push(handle);
+        Ok(())
+    }
+
+    /// Resolve a CLI name (canonical key or alias, case-insensitive).
+    pub fn resolve(&self, name: &str) -> Option<PolicyHandle> {
+        let want = name.trim().to_ascii_lowercase();
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .find(|h| {
+                h.key() == want || h.aliases().iter().any(|a| a.eq_ignore_ascii_case(&want))
+            })
+            .copied()
+    }
+
+    /// Snapshot of every registered handle, in registration order.
+    pub fn handles(&self) -> Vec<PolicyHandle> {
+        self.entries.read().unwrap().clone()
+    }
+
+    /// Comma-joined canonical keys, for CLI error messages.
+    pub fn known_keys(&self) -> String {
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .map(|h| h.key())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// Parse a comma-separated policy list. Returns `Err` naming the first
+    /// unknown entry.
+    pub fn parse_list(&self, spec: &str) -> Result<Vec<PolicyHandle>, String> {
+        let mut out = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match self.resolve(part) {
+                Some(h) => out.push(h),
+                None => {
+                    return Err(format!(
+                        "unknown policy '{part}'; known: {}",
+                        self.known_keys()
+                    ))
+                }
+            }
+        }
+        if out.is_empty() {
+            return Err("empty policy list".to_string());
+        }
+        Ok(out)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        PolicyRegistry::with_builtins()
+    }
+}
+
+/// Bridge from the deprecated `PolicyKind` shim: old call sites keep
+/// compiling while new code passes handles directly.
+impl From<policies::PolicyKind> for PolicyHandle {
+    fn from(kind: policies::PolicyKind) -> PolicyHandle {
+        kind.handle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_by_key_and_alias() {
+        let reg = PolicyRegistry::with_builtins();
+        assert_eq!(reg.len(), 6);
+        for h in builtins::ALL {
+            assert_eq!(reg.resolve(h.key()), Some(h), "{}", h.key());
+            for a in h.aliases() {
+                assert_eq!(reg.resolve(a), Some(h), "alias {a}");
+            }
+        }
+        assert_eq!(reg.resolve("First-Fit"), Some(builtins::FIRST_FIT));
+        assert_eq!(reg.resolve("  RFOLD "), Some(builtins::RFOLD));
+        assert_eq!(reg.resolve("nope"), None);
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let reg = PolicyRegistry::with_builtins();
+        assert!(reg.register(builtins::RFOLD).is_err());
+        // Alias collision with an existing key is rejected too.
+        fn ctor() -> Box<dyn PlacementPolicy> {
+            Box::new(super::super::policies::FirstFit::new())
+        }
+        let clash = PolicyHandle::new("newpolicy", "New", &["rfold"], false, false, ctor);
+        assert!(reg.register(clash).is_err());
+        let bad_key = PolicyHandle::new("NewPolicy", "New", &[], false, false, ctor);
+        assert!(reg.register(bad_key).is_err());
+    }
+
+    #[test]
+    fn parse_list_reports_unknown_names() {
+        let reg = PolicyRegistry::with_builtins();
+        let got = reg.parse_list("rfold, ff").unwrap();
+        assert_eq!(got, vec![builtins::RFOLD, builtins::FIRST_FIT]);
+        let err = reg.parse_list("rfold,bogus").unwrap_err();
+        assert!(err.contains("bogus") && err.contains("rfold"), "{err}");
+        assert!(reg.parse_list("").is_err());
+    }
+
+    #[test]
+    fn handle_identity_is_the_key() {
+        let a = builtins::RFOLD;
+        let b = PolicyRegistry::global().resolve("rfold").unwrap();
+        assert_eq!(a, b);
+        let mut set = std::collections::HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+        assert_eq!(format!("{a:?}"), "PolicyHandle(rfold)");
+    }
+
+    #[test]
+    fn instantiated_policies_carry_display_names() {
+        for h in builtins::ALL {
+            assert_eq!(h.instantiate().name(), h.name(), "{}", h.key());
+        }
+    }
+}

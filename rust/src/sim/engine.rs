@@ -7,19 +7,24 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::time::Instant;
 
 use crate::placement::best_effort;
-use crate::placement::policies::{Policy, PolicyKind};
+use crate::placement::{
+    PlacementDecision, PlacementPolicy, PlacementRequest, PolicyHandle,
+};
 use crate::sim::contention::{effective_duration, ContentionModel};
+use crate::sim::observer::SchedulerObserver;
 use crate::topology::cluster::{ClusterState, ClusterTopo};
 use crate::trace::JobSpec;
 use crate::util::stats::WeightedCdf;
 
-/// Simulation configuration.
+/// Simulation configuration. The policy is a registry handle resolved
+/// once at config-build time; the engine instantiates it per run.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
     pub topo: ClusterTopo,
-    pub policy: PolicyKind,
+    pub policy: PolicyHandle,
     /// Ablation A2: which job dimensionalities may be folded.
     pub fold_dims_enabled: [bool; 3],
     /// `true` (default): keep scheduling until the queue drains — JCR is
@@ -31,10 +36,12 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    pub fn new(topo: ClusterTopo, policy: PolicyKind) -> SimConfig {
+    /// Accepts a [`PolicyHandle`] or (via the deprecated shim) a
+    /// `PolicyKind`.
+    pub fn new(topo: ClusterTopo, policy: impl Into<PolicyHandle>) -> SimConfig {
         SimConfig {
             topo,
-            policy,
+            policy: policy.into(),
             fold_dims_enabled: [true; 3],
             drain: true,
         }
@@ -57,7 +64,8 @@ pub enum JobOutcome {
 /// Aggregated result of one simulated trace run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
-    pub policy: PolicyKind,
+    /// Display name of the policy that produced the run.
+    pub policy: &'static str,
     pub outcomes: Vec<(u64, JobOutcome)>,
     /// Time-weighted utilization samples.
     pub utilization: WeightedCdf,
@@ -116,7 +124,10 @@ impl RunResult {
 pub struct Simulation {
     cfg: SimConfig,
     cluster: ClusterState,
-    policy: Policy,
+    policy: Box<dyn PlacementPolicy>,
+    /// Read-only lifecycle observers (`sim::observer`); nothing they see
+    /// flows back into scheduling, so results are observer-invariant.
+    observers: Vec<Box<dyn SchedulerObserver>>,
     contention: ContentionModel,
     /// Physical ring coordinates per best-effort job (for load removal).
     be_rings: HashMap<u64, Vec<Vec<crate::topology::P3>>>,
@@ -163,13 +174,14 @@ enum EventSlot {
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Simulation {
         let cluster = ClusterState::new(cfg.topo);
-        let mut policy = Policy::new(cfg.policy);
-        policy.fold_dims_enabled = cfg.fold_dims_enabled;
+        let mut policy = cfg.policy.instantiate();
+        policy.core().fold_dims_enabled = cfg.fold_dims_enabled;
         let ext = cluster.topo().phys_ext();
         Simulation {
             cfg,
             cluster,
             policy,
+            observers: Vec::new(),
             contention: ContentionModel::new(ext),
             be_rings: HashMap::new(),
             queue: VecDeque::new(),
@@ -188,13 +200,23 @@ impl Simulation {
     }
 
     /// Replace the policy's plan scorer (e.g. with the PJRT-backed one).
+    /// Rebuilds the policy so no cached state from the old scorer leaks.
     pub fn with_scorer(
         mut self,
         scorer: Box<dyn crate::placement::score::PlanScorer>,
     ) -> Simulation {
-        let mut policy = Policy::new(self.cfg.policy).with_scorer(scorer);
-        policy.fold_dims_enabled = self.cfg.fold_dims_enabled;
+        let mut policy = self.cfg.policy.instantiate();
+        policy.core().fold_dims_enabled = self.cfg.fold_dims_enabled;
+        policy.set_scorer(scorer);
         self.policy = policy;
+        self
+    }
+
+    /// Attach a [`SchedulerObserver`]. Observers receive every admission,
+    /// placement decision, reconfiguration, and completion; they cannot
+    /// influence the run.
+    pub fn with_observer(mut self, observer: Box<dyn SchedulerObserver>) -> Simulation {
+        self.observers.push(observer);
         self
     }
 
@@ -219,43 +241,64 @@ impl Simulation {
             if self.head_block == Some((job.id, self.generation)) {
                 break; // nothing changed since this head last failed
             }
-            if let Some(plan) = self.policy.plan(&self.cluster, job.id, job.shape) {
-                // Commit and schedule completion.
-                let scattered = matches!(
-                    self.cfg.policy,
-                    PolicyKind::BestEffort | PolicyKind::Hilbert
-                );
-                let mult = if scattered {
-                    let rings = best_effort::ring_members(&self.cluster, &plan);
-                    let m = self.contention.add_job(&rings);
-                    self.be_rings.insert(job.id, rings);
-                    m
-                } else {
-                    1.0
-                };
-                plan.commit(&mut self.cluster)
-                    .expect("planned placement must commit");
-                let rings = self
-                    .cluster
-                    .allocation(job.id)
-                    .expect("just committed")
-                    .rings
-                    .clone();
-                let eff = effective_duration(job.duration, job.comm_frac, &rings, mult);
-                self.started.insert(job.id, self.now);
-                self.push_event(self.now + eff, EventSlot::Completion(job.id));
-                self.queue.pop_front();
-                self.scheduled += 1;
-            } else if !self.policy.feasible_ever(self.cfg.topo, job.shape) {
-                // Shape incompatible: remove and move on (§4).
-                self.outcomes.push((job.id, JobOutcome::Dropped));
-                self.dropped += 1;
-                self.queue.pop_front();
-            } else {
-                // Head blocks the queue until resources free up; memoize
-                // so arrival storms don't re-run the placement search.
-                self.head_block = Some((job.id, self.generation));
-                break;
+            // The decision wall-clock is observer-only diagnostics; skip
+            // the timer entirely when nobody listens.
+            let t0 = (!self.observers.is_empty()).then(Instant::now);
+            let decision = self.policy.plan(&PlacementRequest {
+                job: job.id,
+                shape: job.shape,
+                arrival: job.arrival,
+                cluster: &self.cluster,
+            });
+            if let Some(t0) = t0 {
+                let wall = t0.elapsed();
+                for o in &mut self.observers {
+                    o.on_decision(self.now, job.id, &decision, wall);
+                }
+            }
+            match decision {
+                PlacementDecision::Placed { plan, .. } => {
+                    // Commit and schedule completion.
+                    let mult = if self.policy.scattered() {
+                        let rings = best_effort::ring_members(&self.cluster, &plan);
+                        let m = self.contention.add_job(&rings);
+                        self.be_rings.insert(job.id, rings);
+                        m
+                    } else {
+                        1.0
+                    };
+                    let ocs_entries = plan.ocs_entries();
+                    plan.commit(&mut self.cluster)
+                        .expect("planned placement must commit");
+                    if ocs_entries > 0 {
+                        for o in &mut self.observers {
+                            o.on_reconfig(self.now, job.id, ocs_entries);
+                        }
+                    }
+                    let rings = self
+                        .cluster
+                        .allocation(job.id)
+                        .expect("just committed")
+                        .rings
+                        .clone();
+                    let eff = effective_duration(job.duration, job.comm_frac, &rings, mult);
+                    self.started.insert(job.id, self.now);
+                    self.push_event(self.now + eff, EventSlot::Completion(job.id));
+                    self.queue.pop_front();
+                    self.scheduled += 1;
+                }
+                PlacementDecision::Infeasible { .. } => {
+                    // Shape incompatible: remove and move on (§4).
+                    self.outcomes.push((job.id, JobOutcome::Dropped));
+                    self.dropped += 1;
+                    self.queue.pop_front();
+                }
+                PlacementDecision::NoCapacity { .. } => {
+                    // Head blocks the queue until resources free up;
+                    // memoize so arrival storms don't re-run the search.
+                    self.head_block = Some((job.id, self.generation));
+                    break;
+                }
             }
         }
     }
@@ -292,6 +335,9 @@ impl Simulation {
             match slot {
                 EventSlot::Arrival(idx) => {
                     self.queue.push_back(idx);
+                    for o in &mut self.observers {
+                        o.on_admit(self.now, trace[idx].id);
+                    }
                 }
                 EventSlot::Completion(id) => {
                     self.cluster.release(id);
@@ -300,6 +346,9 @@ impl Simulation {
                         self.contention.remove_job(&rings);
                     }
                     let start = self.started[&id];
+                    for o in &mut self.observers {
+                        o.on_complete(self.now, id, start, self.now);
+                    }
                     self.outcomes.push((
                         id,
                         JobOutcome::Completed {
@@ -320,7 +369,7 @@ impl Simulation {
         debug_assert_eq!(self.cluster.busy_count(), 0);
         debug_assert!(self.cluster.check_consistency().is_ok());
         RunResult {
-            policy: self.cfg.policy,
+            policy: self.cfg.policy.name(),
             outcomes: self.outcomes,
             utilization: self.util,
             scheduled: self.scheduled,
@@ -333,7 +382,9 @@ impl Simulation {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::PolicyKind;
     use crate::shape::JobShape;
+    use crate::sim::observer::SharedTelemetry;
     use crate::trace::JobSpec;
 
     fn job(id: u64, arrival: f64, duration: f64, shape: JobShape) -> JobSpec {
@@ -528,6 +579,40 @@ mod tests {
         let r = run(PolicyKind::BestEffort, ClusterTopo::static_4096(), &trace);
         assert_eq!(r.scheduled, 2);
         assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn observers_see_the_full_lifecycle() {
+        // One infeasible job (dropped), two placed jobs, one of which
+        // reprograms the OCS — the observer must account for all of it,
+        // and attaching it must not change the results.
+        let trace = vec![
+            job(0, 0.0, 50.0, JobShape::new(17, 17, 17)), // 4913 > 4096 XPUs
+            job(1, 1.0, 50.0, JobShape::new(4, 4, 32)),   // 8 cubes at 4^3 → OCS chains
+            job(2, 2.0, 10.0, JobShape::new(2, 2, 2)),
+        ];
+        let topo = ClusterTopo::reconfigurable_4096(4);
+        let telemetry = SharedTelemetry::new();
+        let mut cfg = SimConfig::new(topo, PolicyKind::Reconfig);
+        cfg.drain = true;
+        let observed = Simulation::new(cfg)
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&trace);
+        let plain = Simulation::new(cfg).run(&trace);
+        assert_eq!(observed.scheduled, plain.scheduled);
+        assert_eq!(observed.dropped, plain.dropped);
+        assert_eq!(observed.jcts(&trace), plain.jcts(&trace));
+
+        let t = telemetry.snapshot();
+        assert_eq!(t.admissions, 3);
+        assert_eq!(t.completions as usize, observed.scheduled);
+        assert_eq!(t.placed as usize, observed.scheduled);
+        assert_eq!(t.infeasible as usize, observed.dropped);
+        assert_eq!(t.decisions, t.placed + t.infeasible + t.no_capacity);
+        assert!(t.reconfigurations >= 1, "4x4x32 must reprogram the OCS");
+        assert!(t.ocs_entries_reserved > 0);
+        assert!(t.variants_enumerated > 0);
+        assert!(t.decision_wall > std::time::Duration::ZERO);
     }
 
     #[test]

@@ -3,17 +3,18 @@
 //! same rows (see DESIGN.md §3 experiment index).
 
 use crate::metrics::CellSummary;
-use crate::placement::PolicyKind;
+use crate::placement::{builtins, PolicyHandle};
 use crate::sim::contention;
 use crate::sim::sweep::{self, SweepConfig};
 use crate::topology::cluster::ClusterTopo;
 use crate::topology::routing::LinkLoads;
 use crate::topology::P3;
 
-/// One (policy, topology) experiment cell.
+/// One (policy, topology) experiment cell. The policy is a resolved
+/// registry handle, so cell tables never pattern-match a policy enum.
 #[derive(Clone, Copy, Debug)]
 pub struct Cell {
-    pub policy: PolicyKind,
+    pub policy: PolicyHandle,
     pub topo: ClusterTopo,
     pub label: &'static str,
 }
@@ -22,32 +23,32 @@ pub struct Cell {
 pub fn table1_cells() -> Vec<Cell> {
     vec![
         Cell {
-            policy: PolicyKind::FirstFit,
+            policy: builtins::FIRST_FIT,
             topo: ClusterTopo::static_4096(),
             label: "FirstFit (16^3)",
         },
         Cell {
-            policy: PolicyKind::Folding,
+            policy: builtins::FOLDING,
             topo: ClusterTopo::static_4096(),
             label: "Folding (16^3)",
         },
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(8),
             label: "Reconfig (8^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(8),
             label: "RFold (8^3)",
         },
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "Reconfig (4^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "RFold (4^3)",
         },
@@ -59,22 +60,22 @@ pub fn table1_cells() -> Vec<Cell> {
 pub fn fig3_cells() -> Vec<Cell> {
     vec![
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "Reconfig (4^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "RFold (4^3)",
         },
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(2),
             label: "Reconfig (2^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(2),
             label: "RFold (2^3)",
         },
@@ -162,32 +163,32 @@ pub fn motivation_rows() -> Vec<(String, f64)> {
 pub fn ablation_cube_cells() -> Vec<Cell> {
     vec![
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(8),
             label: "Reconfig (8^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(8),
             label: "RFold (8^3)",
         },
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "Reconfig (4^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "RFold (4^3)",
         },
         Cell {
-            policy: PolicyKind::Reconfig,
+            policy: builtins::RECONFIG,
             topo: ClusterTopo::reconfigurable_4096(2),
             label: "Reconfig (2^3)",
         },
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(2),
             label: "RFold (2^3)",
         },
@@ -198,17 +199,17 @@ pub fn ablation_cube_cells() -> Vec<Cell> {
 pub fn besteffort_cells() -> Vec<Cell> {
     vec![
         Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "RFold (4^3)",
         },
         Cell {
-            policy: PolicyKind::BestEffort,
+            policy: builtins::BEST_EFFORT,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "BestEffort (4^3)",
         },
         Cell {
-            policy: PolicyKind::Hilbert,
+            policy: builtins::HILBERT,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "Hilbert/SLURM (4^3)",
         },

@@ -5,8 +5,10 @@
 pub mod contention;
 pub mod engine;
 pub mod experiments;
+pub mod observer;
 pub mod sweep;
 
 pub use contention::ContentionModel;
 pub use engine::{RunResult, SimConfig, Simulation};
+pub use observer::{DecisionTelemetry, SchedulerObserver, SharedTelemetry};
 pub use sweep::{ResultCache, SweepConfig, SweepRow, TrialOutput};

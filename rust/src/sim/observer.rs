@@ -1,0 +1,194 @@
+//! Scheduler observer hooks: the engine's structured introspection
+//! surface.
+//!
+//! A [`SchedulerObserver`] is attached to a
+//! [`Simulation`](crate::sim::Simulation) via
+//! [`with_observer`](crate::sim::Simulation::with_observer) and receives
+//! every admission, placement decision (with its
+//! [`DecisionStats`](crate::placement::DecisionStats) and wall time), OCS
+//! reconfiguration, and completion. Observers are read-only bystanders:
+//! nothing they see or do flows back into scheduling, so attaching one
+//! never changes result bytes — telemetry is reported on stderr only
+//! (`metrics::report::print_policy_telemetry`).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::placement::PlacementDecision;
+
+/// Engine lifecycle hooks. All methods default to no-ops so observers
+/// implement only what they care about.
+pub trait SchedulerObserver {
+    /// A job entered the FIFO queue at simulation time `t`.
+    fn on_admit(&mut self, t: f64, job: u64) {
+        let _ = (t, job);
+    }
+
+    /// The policy answered a placement request. `wall` is the real time
+    /// the decision took (diagnostics only — it never feeds back into
+    /// simulation time).
+    fn on_decision(&mut self, t: f64, job: u64, decision: &PlacementDecision, wall: Duration) {
+        let _ = (t, job, decision, wall);
+    }
+
+    /// A committed plan reprogrammed the OCS (`ocs_entries` > 0 switch
+    /// entries reserved).
+    fn on_reconfig(&mut self, t: f64, job: u64, ocs_entries: usize) {
+        let _ = (t, job, ocs_entries);
+    }
+
+    /// A job released its allocation.
+    fn on_complete(&mut self, t: f64, job: u64, start: f64, finish: f64) {
+        let _ = (t, job, start, finish);
+    }
+}
+
+/// Aggregated per-policy decision telemetry: what the scheduler tried and
+/// how long deciding took. Rendered by
+/// `metrics::report::print_policy_telemetry` (stderr only).
+#[derive(Clone, Debug, Default)]
+pub struct DecisionTelemetry {
+    /// Placement decisions observed, by outcome.
+    pub decisions: u64,
+    pub placed: u64,
+    pub no_capacity: u64,
+    pub infeasible: u64,
+    /// Search effort summed over all decisions.
+    pub variants_enumerated: u64,
+    pub folds_tried: u64,
+    pub candidates_ranked: u64,
+    /// Commits that reprogrammed the OCS, and the entries they reserved.
+    pub reconfigurations: u64,
+    pub ocs_entries_reserved: u64,
+    pub admissions: u64,
+    pub completions: u64,
+    /// Total wall time spent inside `PlacementPolicy::plan`.
+    pub decision_wall: Duration,
+}
+
+impl DecisionTelemetry {
+    /// Mean decision wall time in microseconds (0 when no decisions).
+    pub fn mean_decision_us(&self) -> f64 {
+        if self.decisions == 0 {
+            return 0.0;
+        }
+        self.decision_wall.as_secs_f64() * 1e6 / self.decisions as f64
+    }
+
+    fn record_decision(&mut self, decision: &PlacementDecision, wall: Duration) {
+        self.decisions += 1;
+        match decision {
+            PlacementDecision::Placed { .. } => self.placed += 1,
+            PlacementDecision::NoCapacity { .. } => self.no_capacity += 1,
+            PlacementDecision::Infeasible { .. } => self.infeasible += 1,
+        }
+        let stats = decision.stats();
+        self.variants_enumerated += stats.variants as u64;
+        self.folds_tried += stats.folds_tried as u64;
+        self.candidates_ranked += stats.candidates as u64;
+        self.decision_wall += wall;
+    }
+}
+
+impl SchedulerObserver for DecisionTelemetry {
+    fn on_admit(&mut self, _t: f64, _job: u64) {
+        self.admissions += 1;
+    }
+
+    fn on_decision(&mut self, _t: f64, _job: u64, decision: &PlacementDecision, wall: Duration) {
+        self.record_decision(decision, wall);
+    }
+
+    fn on_reconfig(&mut self, _t: f64, _job: u64, ocs_entries: usize) {
+        self.reconfigurations += 1;
+        self.ocs_entries_reserved += ocs_entries as u64;
+    }
+
+    fn on_complete(&mut self, _t: f64, _job: u64, _start: f64, _finish: f64) {
+        self.completions += 1;
+    }
+}
+
+/// Shared telemetry handle: clone one half into the simulation as a boxed
+/// observer, keep the other to read after `run` consumed the box.
+/// `Rc`-based on purpose — simulations (and PJRT scorers) are
+/// single-threaded, and each sweep worker builds its own.
+#[derive(Clone, Default)]
+pub struct SharedTelemetry(Rc<RefCell<DecisionTelemetry>>);
+
+impl SharedTelemetry {
+    pub fn new() -> SharedTelemetry {
+        SharedTelemetry::default()
+    }
+
+    /// Copy of the counters accumulated so far.
+    pub fn snapshot(&self) -> DecisionTelemetry {
+        self.0.borrow().clone()
+    }
+}
+
+impl SchedulerObserver for SharedTelemetry {
+    fn on_admit(&mut self, t: f64, job: u64) {
+        self.0.borrow_mut().on_admit(t, job);
+    }
+
+    fn on_decision(&mut self, t: f64, job: u64, decision: &PlacementDecision, wall: Duration) {
+        self.0.borrow_mut().on_decision(t, job, decision, wall);
+    }
+
+    fn on_reconfig(&mut self, t: f64, job: u64, ocs_entries: usize) {
+        self.0.borrow_mut().on_reconfig(t, job, ocs_entries);
+    }
+
+    fn on_complete(&mut self, t: f64, job: u64, start: f64, finish: f64) {
+        self.0.borrow_mut().on_complete(t, job, start, finish);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::DecisionStats;
+
+    #[test]
+    fn telemetry_classifies_outcomes() {
+        let mut t = DecisionTelemetry::default();
+        let stats = DecisionStats {
+            variants: 4,
+            folds_tried: 2,
+            candidates: 3,
+        };
+        t.record_decision(
+            &PlacementDecision::NoCapacity { stats },
+            Duration::from_micros(10),
+        );
+        t.record_decision(
+            &PlacementDecision::Infeasible { stats },
+            Duration::from_micros(20),
+        );
+        assert_eq!(t.decisions, 2);
+        assert_eq!(t.no_capacity, 1);
+        assert_eq!(t.infeasible, 1);
+        assert_eq!(t.placed, 0);
+        assert_eq!(t.variants_enumerated, 8);
+        assert_eq!(t.folds_tried, 4);
+        assert_eq!(t.candidates_ranked, 6);
+        assert!((t.mean_decision_us() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_telemetry_reads_after_boxing() {
+        let shared = SharedTelemetry::new();
+        let mut boxed: Box<dyn SchedulerObserver> = Box::new(shared.clone());
+        boxed.on_admit(0.0, 1);
+        boxed.on_reconfig(1.0, 1, 6);
+        boxed.on_complete(2.0, 1, 1.0, 2.0);
+        let snap = shared.snapshot();
+        assert_eq!(snap.admissions, 1);
+        assert_eq!(snap.reconfigurations, 1);
+        assert_eq!(snap.ocs_entries_reserved, 6);
+        assert_eq!(snap.completions, 1);
+        assert_eq!(snap.mean_decision_us(), 0.0);
+    }
+}

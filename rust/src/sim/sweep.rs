@@ -41,7 +41,6 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::metrics::{summarize, CellSummary};
-use crate::placement::PolicyKind;
 use crate::sim::engine::{RunResult, SimConfig, Simulation};
 use crate::sim::experiments::Cell;
 use crate::topology::cluster::ClusterTopo;
@@ -112,10 +111,12 @@ impl TrialOutput {
 
 /// Everything that determines a trial's bytes. The cell *label* is
 /// deliberately absent: it names the row, it does not influence the
-/// simulation.
+/// simulation. The policy is identified by its canonical registry key —
+/// stable across processes, which is what the ROADMAP's multi-backend
+/// fan-out needs to share caches between workers.
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 struct TrialKey {
-    policy: PolicyKind,
+    policy: &'static str,
     topo: ClusterTopo,
     scenario: &'static str,
     seed: u64,
@@ -134,7 +135,7 @@ struct WorkItem {
 impl WorkItem {
     fn key(&self) -> TrialKey {
         TrialKey {
-            policy: self.cell.policy,
+            policy: self.cell.policy.key(),
             topo: self.cell.topo,
             scenario: self.cfg.scenario.name(),
             seed: trial_seed(self.cfg.base_seed, self.trial),
@@ -508,11 +509,11 @@ pub fn run_grid(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::PolicyKind;
+    use crate::placement::builtins;
 
     fn tiny_cell() -> Cell {
         Cell {
-            policy: PolicyKind::Folding,
+            policy: builtins::FOLDING,
             topo: ClusterTopo::static_4096(),
             label: "Folding (16^3)",
         }
@@ -618,7 +619,7 @@ mod tests {
     fn fold_dims_are_part_of_the_cache_key() {
         let cache = ResultCache::new();
         let cell = Cell {
-            policy: PolicyKind::RFold,
+            policy: builtins::RFOLD,
             topo: ClusterTopo::reconfigurable_4096(4),
             label: "RFold (4^3)",
         };

@@ -13,7 +13,11 @@
 //! placeable on an empty Reconfig(4³) cluster — the property-test suite
 //! (`tests/prop_trace.rs`) locks this down.
 
-use super::gen::{ShapeRule, TraceConfig};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::gen::{generate, ShapeRule, TraceConfig};
+use super::JobSpec;
 
 /// A named workload scenario.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
@@ -154,10 +158,78 @@ impl Scenario {
     }
 }
 
+/// A workload source for experiment drivers: a registered synthetic
+/// [`Scenario`], or an external CSV trace read through
+/// [`crate::trace::io::read_csv`] — the ROADMAP's real-trace slot, wired
+/// to the CLI's `--trace-file` flag.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// A named synthetic scenario; traces are regenerated per seed.
+    Synthetic(Scenario),
+    /// A fixed external trace (e.g. Philly-derived). The job list is
+    /// shared, not cloned per reference, and is seed-independent: every
+    /// trial replays the same recorded arrivals.
+    Csv {
+        /// Report name (the file stem).
+        name: String,
+        jobs: Arc<Vec<JobSpec>>,
+    },
+}
+
+impl Workload {
+    /// Load a CSV trace (`id,arrival,duration,a,b,c,comm_frac`, header
+    /// required) as a workload. Fails on unreadable or malformed files
+    /// and on empty traces.
+    pub fn from_csv(path: &Path) -> std::io::Result<Workload> {
+        let jobs = crate::trace::io::read_csv(path)?;
+        if jobs.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: trace has no jobs", path.display()),
+            ));
+        }
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("trace")
+            .to_string();
+        Ok(Workload::Csv {
+            name,
+            jobs: Arc::new(jobs),
+        })
+    }
+
+    /// Report name: the scenario name or the trace file stem.
+    pub fn name(&self) -> &str {
+        match self {
+            Workload::Synthetic(sc) => sc.name(),
+            Workload::Csv { name, .. } => name,
+        }
+    }
+
+    /// The job trace for one trial. Synthetic workloads generate
+    /// `num_jobs` jobs from `seed`; CSV workloads replay the recorded
+    /// trace unchanged (both knobs are ignored — a recorded trace has
+    /// exactly one realization).
+    pub fn trace(&self, num_jobs: usize, seed: u64) -> Vec<JobSpec> {
+        match self {
+            Workload::Synthetic(sc) => generate(&sc.trace_config(num_jobs, seed)),
+            Workload::Csv { jobs, .. } => jobs.as_ref().clone(),
+        }
+    }
+
+    /// Number of jobs one trial will see.
+    pub fn num_jobs(&self, requested: usize) -> usize {
+        match self {
+            Workload::Synthetic(_) => requested,
+            Workload::Csv { jobs, .. } => jobs.len(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::gen::generate;
 
     #[test]
     fn names_roundtrip_and_are_distinct() {
@@ -204,6 +276,30 @@ mod tests {
                 "{sc:?}"
             );
         }
+    }
+
+    #[test]
+    fn workload_wraps_scenarios_and_csv() {
+        let w = Workload::Synthetic(Scenario::PaperDefault);
+        assert_eq!(w.name(), "paper-default");
+        assert_eq!(w.trace(12, 3).len(), 12);
+        assert_eq!(w.num_jobs(12), 12);
+
+        let trace = generate(&TraceConfig {
+            num_jobs: 9,
+            ..Default::default()
+        });
+        let tmp = std::env::temp_dir().join("rfold_workload_test.csv");
+        crate::trace::io::write_csv(&tmp, &trace).unwrap();
+        let w = Workload::from_csv(&tmp).unwrap();
+        assert_eq!(w.name(), "rfold_workload_test");
+        // Requested size and seed are ignored: the recorded trace replays.
+        assert_eq!(w.trace(100, 1).len(), 9);
+        assert_eq!(w.trace(100, 1), w.trace(5, 2));
+        assert_eq!(w.num_jobs(100), 9);
+        std::fs::remove_file(&tmp).ok();
+
+        assert!(Workload::from_csv(std::path::Path::new("/no/such/file.csv")).is_err());
     }
 
     #[test]

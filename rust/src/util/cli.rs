@@ -1,8 +1,13 @@
 //! Tiny declarative CLI argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! plus policy-name resolution through the global
+//! [`PolicyRegistry`](crate::placement::PolicyRegistry) — the single
+//! point where CLI strings become [`PolicyHandle`]s.
 
 use std::collections::BTreeMap;
+
+use crate::placement::{PolicyHandle, PolicyRegistry};
 
 /// Parsed arguments: options by name plus positionals in order.
 #[derive(Debug, Default, Clone)]
@@ -83,6 +88,33 @@ impl Args {
     pub fn positionals(&self) -> &[String] {
         &self.pos
     }
+
+    /// Resolve `--<name>` through the global policy registry; `default`
+    /// when absent. `Err` carries a ready-to-print message listing the
+    /// known policies.
+    pub fn get_policy(&self, name: &str, default: PolicyHandle) -> Result<PolicyHandle, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => PolicyRegistry::global().resolve(s).ok_or_else(|| {
+                format!(
+                    "unknown policy '{s}' in --{name}; known: {}",
+                    PolicyRegistry::global().known_keys()
+                )
+            }),
+        }
+    }
+
+    /// Resolve a comma-separated `--<name>` policy list through the
+    /// global registry; `Ok(None)` when the option is absent.
+    pub fn get_policies(&self, name: &str) -> Result<Option<Vec<PolicyHandle>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(spec) => PolicyRegistry::global()
+                .parse_list(spec)
+                .map(Some)
+                .map_err(|e| format!("--{name}: {e}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -127,5 +159,29 @@ mod tests {
         assert_eq!(a.get_usize("runs", 7), 7);
         assert_eq!(a.get_f64("scale", 1.5), 1.5);
         assert_eq!(a.get_str("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn policies_resolve_through_the_registry() {
+        use crate::placement::builtins;
+        let a = args(&["--policy", "ff", "--policies", "rfold, slurm"]);
+        assert_eq!(
+            a.get_policy("policy", builtins::RFOLD).unwrap(),
+            builtins::FIRST_FIT
+        );
+        assert_eq!(
+            a.get_policies("policies").unwrap().unwrap(),
+            vec![builtins::RFOLD, builtins::HILBERT]
+        );
+        // Absent option → default / None.
+        assert_eq!(
+            a.get_policy("other", builtins::FOLDING).unwrap(),
+            builtins::FOLDING
+        );
+        assert!(a.get_policies("other").unwrap().is_none());
+        // Unknown names carry the known-keys list.
+        let b = args(&["--policy", "bogus"]);
+        let err = b.get_policy("policy", builtins::RFOLD).unwrap_err();
+        assert!(err.contains("bogus") && err.contains("rfold"), "{err}");
     }
 }

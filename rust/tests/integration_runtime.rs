@@ -95,22 +95,23 @@ fn xla_scorer_ranks_like_native_in_policy() {
     // The PJRT scorer must produce the same plan choice as the native one
     // when wired into a real policy decision.
     let Some(arts) = artifacts() else { return };
-    use rfold::placement::policies::{Policy, PolicyKind};
+    use rfold::placement::policies::RFold;
+    use rfold::placement::PlacementPolicy;
     use rfold::shape::JobShape;
     use rfold::topology::cluster::{ClusterState, ClusterTopo};
 
     let cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-    let mut native_policy = Policy::new(PolicyKind::RFold);
-    let mut xla_policy =
-        Policy::new(PolicyKind::RFold).with_scorer(Box::new(XlaScorer::new(arts)));
+    let mut native_policy = RFold::new();
+    let mut xla_policy = RFold::new();
+    xla_policy.set_scorer(Box::new(XlaScorer::new(arts)));
     for shape in [
         JobShape::new(4, 8, 2),
         JobShape::new(18, 1, 1),
         JobShape::new(1, 6, 4),
         JobShape::new(4, 4, 32),
     ] {
-        let a = native_policy.plan(&cluster, 1, shape).expect("native plan");
-        let b = xla_policy.plan(&cluster, 1, shape).expect("xla plan");
+        let a = native_policy.place_now(&cluster, 1, shape).expect("native plan");
+        let b = xla_policy.place_now(&cluster, 1, shape).expect("xla plan");
         assert_eq!(a.nodes, b.nodes, "{shape}: scorers disagree on the plan");
         assert_eq!(a.cubes, b.cubes);
     }

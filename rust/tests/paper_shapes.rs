@@ -1,6 +1,7 @@
 //! Every concrete example the paper walks through, as executable checks.
 
-use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::policies::{FirstFit, RFold, Reconfig};
+use rfold::placement::PlacementPolicy;
 use rfold::placement::reconfig_place;
 use rfold::shape::fold::{enumerate_variants, FoldKind, Variant};
 use rfold::shape::JobShape;
@@ -24,7 +25,7 @@ fn s3_2_static_torus_cannot_host_4x4x32() {
     // placed because one of its dimensions exceeds the maximum dimension
     // size of the torus (32>16)."
     let c = ClusterState::new(ClusterTopo::static_4096());
-    let mut ff = Policy::new(PolicyKind::FirstFit);
+    let mut ff = FirstFit::new();
     assert!(!ff.feasible_ever(c.topo(), JobShape::new(4, 4, 32)));
 }
 
@@ -65,12 +66,12 @@ fn fig2_left_green_18x1x1_folds_into_two_cubes() {
     // available 4×4×4 cubes ... With folding, we are able to find 18
     // scattered XPUs forming a cycle."
     let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-    let mut rfold = Policy::new(PolicyKind::RFold);
-    let plan = rfold.plan(&c, 1, JobShape::new(18, 1, 1)).unwrap();
+    let mut rfold = RFold::new();
+    let plan = rfold.place_now(&c, 1, JobShape::new(18, 1, 1)).unwrap();
     assert!(plan.cubes.len() <= 2, "18 XPUs fit two cubes: {plan:?}");
     // Reconfig-only needs a straight 18-line = 5 chained cubes.
-    let mut rc = Policy::new(PolicyKind::Reconfig);
-    let plan_rc = rc.plan(&c, 2, JobShape::new(18, 1, 1)).unwrap();
+    let mut rc = Reconfig::new();
+    let plan_rc = rc.place_now(&c, 2, JobShape::new(18, 1, 1)).unwrap();
     assert!(plan_rc.cubes.len() >= 5);
 }
 
@@ -102,8 +103,8 @@ fn fig2_right_4x8x2_folds_into_one_cube() {
     // "Through folding, it is possible to place the entire job in one
     // single 4×4×4 cube."
     let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-    let mut rfold = Policy::new(PolicyKind::RFold);
-    let plan = rfold.plan(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+    let mut rfold = RFold::new();
+    let plan = rfold.place_now(&c, 1, JobShape::new(4, 8, 2)).unwrap();
     assert_eq!(plan.cubes.len(), 1);
     assert_eq!(plan.variant.placed, P3([4, 4, 4]));
 }

@@ -1,0 +1,195 @@
+//! Acceptance suite for the open placement-policy API:
+//!
+//! * a **seventh policy** defined entirely in this file — its own module
+//!   plus exactly one `PolicyRegistry::register` line — runs end-to-end
+//!   through the unmodified engine, demonstrating that adding a policy
+//!   requires no edits anywhere else;
+//! * a **smoke matrix**: every registered policy runs a small trace on
+//!   both topology families, and every decision is `Placed` or a
+//!   structured rejection — never a panic;
+//! * a **parse → name round-trip** over all registry entries (keys,
+//!   aliases, case-insensitivity, display names).
+
+use std::sync::Once;
+
+use rfold::placement::{
+    best_effort, builtins, Attempt, DecisionStats, PlacementDecision, PlacementPolicy,
+    PlacementRequest, PolicyCore, PolicyHandle, PolicyRegistry,
+};
+use rfold::shape::JobShape;
+use rfold::sim::{SharedTelemetry, SimConfig, Simulation};
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+use rfold::trace::gen::{generate, TraceConfig};
+
+/// The seventh policy, self-contained: accepts only tiny jobs (≤ 8 XPUs)
+/// and scatters them best-effort. Deliberately minimal — the point is the
+/// integration surface, not the scheduling quality.
+mod tiny_only {
+    use super::*;
+
+    #[derive(Default)]
+    pub struct TinyOnly {
+        core: PolicyCore,
+    }
+
+    pub const MAX_XPUS: usize = 8;
+
+    impl PlacementPolicy for TinyOnly {
+        fn name(&self) -> &'static str {
+            "TinyOnly"
+        }
+
+        fn core(&mut self) -> &mut PolicyCore {
+            &mut self.core
+        }
+
+        fn scattered(&self) -> bool {
+            true
+        }
+
+        fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+            if shape.size() > MAX_XPUS {
+                return Attempt::rejected(DecisionStats::default());
+            }
+            Attempt::single(best_effort::place_scattered(cluster, job, shape))
+        }
+    }
+
+    fn make() -> Box<dyn PlacementPolicy> {
+        Box::new(TinyOnly::default())
+    }
+
+    pub const HANDLE: PolicyHandle =
+        PolicyHandle::new("tiny-only", "TinyOnly", &["tiny"], false, false, make);
+}
+
+/// One registration line — the entirety of the integration work.
+fn ensure_registered() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        PolicyRegistry::global()
+            .register(tiny_only::HANDLE)
+            .expect("tiny-only registers once");
+    });
+}
+
+fn small_trace(seed: u64) -> Vec<rfold::trace::JobSpec> {
+    generate(&TraceConfig {
+        num_jobs: 30,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn seventh_policy_runs_end_to_end_without_engine_edits() {
+    ensure_registered();
+    let handle = PolicyRegistry::global()
+        .resolve("tiny-only")
+        .expect("registered from this test file");
+    assert_eq!(handle, tiny_only::HANDLE);
+    assert_eq!(PolicyRegistry::global().resolve("TINY"), Some(handle));
+
+    let trace = small_trace(5);
+    let telemetry = SharedTelemetry::new();
+    let r = Simulation::new(SimConfig::new(ClusterTopo::static_4096(), handle))
+        .with_observer(Box::new(telemetry.clone()))
+        .run(&trace);
+    assert_eq!(r.policy, "TinyOnly");
+    // Every job is accounted for: tiny ones scheduled, big ones dropped
+    // as structured Infeasible rejections.
+    assert_eq!(r.scheduled + r.dropped, trace.len());
+    let tiny = trace
+        .iter()
+        .filter(|j| j.size() <= tiny_only::MAX_XPUS)
+        .count();
+    assert_eq!(r.scheduled, tiny, "exactly the tiny jobs get placed");
+    let t = telemetry.snapshot();
+    assert_eq!(t.placed as usize, r.scheduled);
+    assert_eq!(t.infeasible as usize, r.dropped);
+}
+
+#[test]
+fn registry_smoke_matrix_covers_both_topology_families() {
+    ensure_registered();
+    let topos = [
+        ClusterTopo::static_4096(),
+        ClusterTopo::reconfigurable_4096(4),
+    ];
+    for handle in PolicyRegistry::global().handles() {
+        for topo in topos {
+            // End-to-end: the engine must finish the trace with every job
+            // accounted for, whatever the policy decides.
+            let trace = small_trace(7);
+            let telemetry = SharedTelemetry::new();
+            let r = Simulation::new(SimConfig::new(topo, handle))
+                .with_observer(Box::new(telemetry.clone()))
+                .run(&trace);
+            assert_eq!(
+                r.outcomes.len(),
+                trace.len(),
+                "{} on {topo:?}: every job needs an outcome",
+                handle.key()
+            );
+            let t = telemetry.snapshot();
+            assert!(t.decisions > 0, "{} on {topo:?}", handle.key());
+            assert_eq!(t.decisions, t.placed + t.no_capacity + t.infeasible);
+
+            // Decision-level: a loaded cluster must still yield structured
+            // decisions, and placed plans must commit.
+            let mut cluster = ClusterState::new(topo);
+            let mut policy = handle.instantiate();
+            for (i, job) in trace.iter().take(12).enumerate() {
+                let decision =
+                    policy.plan(&PlacementRequest::new(i as u64, job.shape, &cluster));
+                match decision {
+                    PlacementDecision::Placed { plan, stats } => {
+                        assert!(stats.candidates >= 1, "{}: placed w/o candidate", handle.key());
+                        plan.commit(&mut cluster).unwrap_or_else(|e| {
+                            panic!("{} on {topo:?}: commit failed: {e}", handle.key())
+                        });
+                    }
+                    PlacementDecision::Infeasible { .. }
+                    | PlacementDecision::NoCapacity { .. } => {}
+                }
+                cluster.check_consistency().expect("cluster stays consistent");
+            }
+        }
+    }
+}
+
+#[test]
+fn parse_name_roundtrip_over_all_registry_entries() {
+    ensure_registered();
+    let reg = PolicyRegistry::global();
+    let handles = reg.handles();
+    assert!(handles.len() >= 7, "six builtins + the test-only policy");
+
+    let mut keys = std::collections::BTreeSet::new();
+    let mut displays = std::collections::BTreeSet::new();
+    for h in &handles {
+        // Canonical key round-trips, case-insensitively.
+        assert_eq!(reg.resolve(h.key()), Some(*h));
+        assert_eq!(reg.resolve(&h.key().to_ascii_uppercase()), Some(*h));
+        // Every alias lands on the same handle.
+        for a in h.aliases() {
+            assert_eq!(reg.resolve(a), Some(*h), "alias {a}");
+        }
+        // A fresh instance reports the registered display name.
+        assert_eq!(h.instantiate().name(), h.name());
+        assert!(keys.insert(h.key()), "duplicate key {}", h.key());
+        assert!(displays.insert(h.name()), "duplicate display {}", h.name());
+    }
+
+    // The deprecated shim agrees with the registry for every builtin.
+    for h in builtins::ALL {
+        let kind = rfold::placement::PolicyKind::parse(h.key()).expect("builtin parses");
+        assert_eq!(kind.handle(), h);
+        assert_eq!(kind.name(), h.name());
+    }
+
+    // Re-registering any existing entry is rejected.
+    for h in handles {
+        assert!(reg.register(h).is_err(), "{} re-registered", h.key());
+    }
+}

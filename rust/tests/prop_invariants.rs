@@ -2,7 +2,8 @@
 //! §7): randomized workloads must never violate the core safety and
 //! algebraic properties of the system.
 
-use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::policies::{PolicyKind, RFold, Reconfig};
+use rfold::placement::PlacementPolicy;
 use rfold::shape::fold::{enumerate_variants, FoldKind};
 use rfold::shape::{verify, JobShape};
 use rfold::topology::cluster::{ClusterState, ClusterTopo};
@@ -22,7 +23,7 @@ fn prop_no_double_booking_across_random_schedules() {
     check("no double booking", 30, |rng| {
         let n = *rng.choose(&[2usize, 4, 8]);
         let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
-        let mut policy = Policy::new(*rng.choose(&[PolicyKind::Reconfig, PolicyKind::RFold]));
+        let mut policy = rng.choose(&[PolicyKind::Reconfig, PolicyKind::RFold]).build();
         let mut live: Vec<u64> = Vec::new();
         for job in 0..40u64 {
             if !live.is_empty() && rng.chance(0.35) {
@@ -31,7 +32,7 @@ fn prop_no_double_booking_across_random_schedules() {
                 cluster.release(id);
             }
             let shape = random_shape(rng);
-            if let Some(plan) = policy.plan(&cluster, job, shape) {
+            if let Some(plan) = policy.place_now(&cluster, job, shape) {
                 plan.commit(&mut cluster).map_err(|e| e.to_string())?;
                 live.push(job);
             }
@@ -46,11 +47,11 @@ fn prop_commit_release_restores_everything() {
     check("commit/release roundtrip", 40, |rng| {
         let n = *rng.choose(&[2usize, 4, 8]);
         let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
-        let mut policy = Policy::new(PolicyKind::RFold);
+        let mut policy = RFold::new();
         let shape = random_shape(rng);
         let free0 = cluster.free_count();
         let rewired0 = cluster.ocs().unwrap().rewired_entries();
-        if let Some(plan) = policy.plan(&cluster, 7, shape) {
+        if let Some(plan) = policy.place_now(&cluster, 7, shape) {
             plan.commit(&mut cluster).map_err(|e| e.to_string())?;
             cluster.release(7);
         }
@@ -94,9 +95,9 @@ fn prop_placed_plans_respect_wrap_requirements() {
     check("plans satisfy requires_wrap", 30, |rng| {
         let n = *rng.choose(&[4usize, 8]);
         let cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
-        let mut policy = Policy::new(PolicyKind::RFold);
+        let mut policy = RFold::new();
         let shape = random_shape(rng);
-        if let Some(plan) = policy.plan(&cluster, 1, shape) {
+        if let Some(plan) = policy.place_now(&cluster, 1, shape) {
             for k in 0..3 {
                 expect(
                     !plan.variant.requires_wrap[k] || plan.wrap[k],
@@ -182,7 +183,7 @@ fn prop_rfold_jcr_dominates_reconfig() {
 fn prop_ocs_crossbar_invariant_under_churn() {
     check("OCS invariants under churn", 20, |rng| {
         let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
-        let mut policy = Policy::new(PolicyKind::Reconfig);
+        let mut policy = Reconfig::new();
         let mut live = Vec::new();
         for job in 0..30u64 {
             if !live.is_empty() && rng.chance(0.4) {
@@ -190,7 +191,7 @@ fn prop_ocs_crossbar_invariant_under_churn() {
                 cluster.release(id);
             }
             let shape = random_shape(rng);
-            if let Some(plan) = policy.plan(&cluster, job, shape) {
+            if let Some(plan) = policy.place_now(&cluster, job, shape) {
                 plan.commit(&mut cluster).map_err(|e| e.to_string())?;
                 live.push(job);
             }

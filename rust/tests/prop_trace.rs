@@ -4,7 +4,8 @@
 //! every job is placeable on an empty Reconfig(4³) cluster — the Table-1
 //! invariant that keeps 100% JCR reachable.
 
-use rfold::placement::policies::{Policy, PolicyKind};
+use rfold::placement::policies::Reconfig;
+use rfold::placement::PlacementPolicy;
 use rfold::shape::JobShape;
 use rfold::topology::cluster::ClusterTopo;
 use rfold::trace::gen::{generate, shape_for_size, ShapeRule};
@@ -93,7 +94,7 @@ fn every_scenario_is_nonempty_and_placeable_on_empty_reconfig4() {
     for sc in Scenario::ALL {
         let t = generate(&sc.trace_config(80, 7));
         assert!(!t.is_empty(), "{sc:?}: empty trace");
-        let mut policy = Policy::new(PolicyKind::Reconfig);
+        let mut policy = Reconfig::new();
         for j in &t {
             assert!(
                 policy.feasible_ever(topo, j.shape),
