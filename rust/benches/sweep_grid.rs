@@ -12,7 +12,7 @@ use std::time::Instant;
 use rfold::metrics::report;
 use rfold::sim::experiments as exp;
 use rfold::sim::sweep::{self, ResultCache};
-use rfold::trace::scenarios::Scenario;
+use rfold::trace::scenarios::{Scenario, Workload};
 
 fn env(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -31,9 +31,10 @@ fn main() {
         Scenario::ALL.len()
     ));
     let grid_cache = ResultCache::new();
+    let all: Vec<Workload> = Scenario::ALL.iter().copied().map(Workload::Synthetic).collect();
     let rows = sweep::run_grid(
         &cells,
-        &Scenario::ALL,
+        &all,
         runs,
         jobs,
         seed,
@@ -48,7 +49,7 @@ fn main() {
     let t0 = Instant::now();
     let serial = sweep::run_grid(
         &cells,
-        &[Scenario::PaperDefault],
+        &[Workload::Synthetic(Scenario::PaperDefault)],
         runs,
         jobs,
         seed,
@@ -60,7 +61,7 @@ fn main() {
     let t1 = Instant::now();
     let parallel = sweep::run_grid(
         &cells,
-        &[Scenario::PaperDefault],
+        &[Workload::Synthetic(Scenario::PaperDefault)],
         runs,
         jobs,
         seed,
@@ -84,7 +85,7 @@ fn main() {
     let t2 = Instant::now();
     let replay = sweep::run_grid(
         &cells,
-        &[Scenario::PaperDefault],
+        &[Workload::Synthetic(Scenario::PaperDefault)],
         runs,
         jobs,
         seed,

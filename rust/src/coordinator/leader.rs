@@ -205,7 +205,25 @@ impl Leader {
         while let Some(&(id, s)) = self.queue.front() {
             match policy.place_now(&self.cluster, id, s.shape) {
                 Some(plan) => {
-                    plan.commit(&mut self.cluster).expect("commit");
+                    // Defense in depth: a plan whose OCS reservations
+                    // cannot all be taken (a planner inconsistency today;
+                    // an interleaved reconfiguration if the leader ever
+                    // pipelines placement) must not crash the long-running
+                    // coordinator the way a batch simulation may panic.
+                    // `commit` rolls its reservations back on error, so
+                    // the cluster stays consistent, the job becomes a
+                    // structured rejection, and the queue keeps draining —
+                    // with a loud stderr note so the defect is not silent.
+                    if let Err(e) = plan.commit(&mut self.cluster) {
+                        eprintln!(
+                            "leader: job {id} rejected (placement plan failed \
+                             to commit: {e})"
+                        );
+                        self.states.insert(id, JobState::Rejected);
+                        self.stats.rejected += 1;
+                        self.queue.pop_front();
+                        continue;
+                    }
                     let dur = Duration::from_secs_f64(
                         (s.duration * self.time_scale).max(0.000_001),
                     );

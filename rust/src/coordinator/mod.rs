@@ -8,8 +8,11 @@
 //!   `UTIL`, `QUIT`) for interactive use; std-thread based (tokio is not
 //!   available in this offline environment — see DESIGN.md §4).
 //! * [`replay`] — feeds a trace file to the leader in (scaled) real time.
+//! * [`pool`] — the distributed sweep plane: `rfold worker` trial daemons
+//!   plus the leader-side TCP pool executor behind `rfold sweep --pool`.
 
 pub mod leader;
+pub mod pool;
 pub mod replay;
 pub mod server;
 

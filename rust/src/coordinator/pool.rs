@@ -1,0 +1,876 @@
+//! Distributed sweep fan-out: `rfold worker` daemons plus the leader-side
+//! TCP [`PoolExecutor`] backend for `sim::sweep`.
+//!
+//! The leader streams (workload, cell, trial) work items to a pool of
+//! workers over a line/JSON protocol (one request or reply per line,
+//! `coordinator::server` style) and merges the results position-stably,
+//! so `rfold sweep --pool host1:7171,host2:7171` emits rows byte-identical
+//! to `--workers N` on one box.
+//!
+//! ```text
+//! TRIAL {json}   → RESULT {json} | ERR <msg>
+//! PING           → PONG
+//! QUIT           → closes the connection
+//! ```
+//!
+//! ## Wire format
+//!
+//! [`crate::util::json`] objects, one per line. Policies travel as their
+//! canonical registry key and are reconstructed on the worker through
+//! [`PolicyRegistry::global`] — the registry is the cross-process policy
+//! namespace. Synthetic workloads travel as their scenario name (the
+//! worker regenerates the trace from the seed); CSV workloads ship their
+//! job list inline, so workers need no shared filesystem. Every `f64`
+//! travels as its IEEE-754 bit pattern ([`Json::f64_bits`]), and seeds
+//! and job ids — true 64-bit values — as decimal strings
+//! ([`Json::u64_str`]): the sweep's determinism contract is
+//! *byte*-identical rows for any backend, which a decimal float
+//! rendering cannot guarantee. Small counts (shape dims, job totals)
+//! ride as plain JSON numbers, validated strictly on decode.
+//!
+//! ## Fault tolerance
+//!
+//! A connection that dies mid-item pushes the item back onto a shared
+//! retry queue for the surviving workers; an item rejected by every
+//! worker (`ERR` replies), or left over after all connections are gone,
+//! is simulated by the leader itself. The grid therefore always
+//! completes, and always with the exact bytes a local run would produce.
+//! Per-worker statistics are reported on stderr only (see
+//! `metrics::report::print_pool_telemetry`).
+
+use std::collections::{BTreeMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::metrics::report;
+use crate::placement::{PolicyHandle, PolicyRegistry};
+use crate::shape::JobShape;
+use crate::sim::engine::{JobOutcome, RunResult};
+use crate::sim::sweep::{self, TrialExecutor, TrialOutput, WorkItem};
+use crate::topology::cluster::ClusterTopo;
+use crate::topology::{CubeGrid, P3};
+use crate::trace::scenarios::{Scenario, Workload};
+use crate::trace::JobSpec;
+use crate::util::json::Json;
+use crate::util::stats::WeightedCdf;
+
+// ---------------------------------------------------------------------------
+// Wire codec
+// ---------------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn need<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, String> {
+    need(j, key)?
+        .as_u64_str()
+        .ok_or_else(|| format!("field '{key}' is not a u64 string"))
+}
+
+fn need_f64_bits(j: &Json, key: &str) -> Result<f64, String> {
+    need(j, key)?
+        .as_f64_bits()
+        .ok_or_else(|| format!("field '{key}' is not an f64 bit pattern"))
+}
+
+/// Strict integer read: `Json::as_usize` is a saturating f64 cast (NaN
+/// and negatives → 0, huge → `usize::MAX`), which would let a corrupt
+/// peer smuggle wrong counts into rows instead of tripping the ERR path
+/// that routes the item to retry/fallback.
+fn strict_usize(v: &Json) -> Option<usize> {
+    let n = v.as_f64()?;
+    // f64 integers are exact only up to 2^53; anything larger (or
+    // fractional, or negative) is a malformed wire value.
+    (n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 53) as f64)
+        .then(|| n as usize)
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize, String> {
+    strict_usize(need(j, key)?)
+        .ok_or_else(|| format!("field '{key}' is not a non-negative integer"))
+}
+
+fn need_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    need(j, key)?
+        .as_str()
+        .ok_or_else(|| format!("field '{key}' is not a string"))
+}
+
+fn topo_json(topo: ClusterTopo) -> Json {
+    match topo {
+        ClusterTopo::Static { ext } => obj(vec![
+            ("kind", Json::Str("static".into())),
+            (
+                "ext",
+                Json::Arr(ext.0.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+        ]),
+        ClusterTopo::Reconfigurable { grid } => obj(vec![
+            ("kind", Json::Str("ocs".into())),
+            (
+                "dims",
+                Json::Arr(grid.dims.0.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+            ("n", Json::Num(grid.n as f64)),
+        ]),
+    }
+}
+
+fn parse_topo(j: &Json) -> Result<ClusterTopo, String> {
+    // Geometry values must be >= 1: a zero extent/dim/side would panic
+    // downstream constructors (`JobShape::new`, grid math) on the worker
+    // thread instead of producing the contractual `ERR` reply.
+    let triple = |key: &str| -> Result<P3, String> {
+        let arr = need(j, key)?
+            .as_arr()
+            .filter(|a| a.len() == 3)
+            .ok_or_else(|| format!("field '{key}' is not a 3-array"))?;
+        let mut out = [0usize; 3];
+        for (o, v) in out.iter_mut().zip(arr) {
+            *o = strict_usize(v)
+                .filter(|&d| d >= 1)
+                .ok_or_else(|| format!("field '{key}' holds a non-positive dim"))?;
+        }
+        Ok(P3(out))
+    };
+    match need_str(j, "kind")? {
+        "static" => Ok(ClusterTopo::Static { ext: triple("ext")? }),
+        "ocs" => Ok(ClusterTopo::Reconfigurable {
+            grid: CubeGrid {
+                dims: triple("dims")?,
+                n: need_usize(j, "n").and_then(|n| {
+                    if n >= 1 {
+                        Ok(n)
+                    } else {
+                        Err("field 'n' must be >= 1".to_string())
+                    }
+                })?,
+            },
+        }),
+        k => Err(format!("unknown topology kind '{k}'")),
+    }
+}
+
+fn job_json(j: &JobSpec) -> Json {
+    let d = j.shape.dims();
+    Json::Arr(vec![
+        Json::u64_str(j.id),
+        Json::f64_bits(j.arrival),
+        Json::f64_bits(j.duration),
+        Json::Num(d.0[0] as f64),
+        Json::Num(d.0[1] as f64),
+        Json::Num(d.0[2] as f64),
+        Json::f64_bits(j.comm_frac),
+    ])
+}
+
+fn parse_job(j: &Json) -> Result<JobSpec, String> {
+    let a = j
+        .as_arr()
+        .filter(|a| a.len() == 7)
+        .ok_or("job is not a 7-array")?;
+    // `JobShape::new` asserts dims >= 1, which would panic the worker's
+    // connection thread; reject bad dims as a decode error instead.
+    let dim = |i: usize| {
+        strict_usize(&a[i])
+            .filter(|&d| d >= 1)
+            .ok_or_else(|| format!("job dim {i} not a positive integer"))
+    };
+    Ok(JobSpec {
+        id: a[0].as_u64_str().ok_or("job id not a u64 string")?,
+        arrival: a[1].as_f64_bits().ok_or("job arrival not f64 bits")?,
+        duration: a[2].as_f64_bits().ok_or("job duration not f64 bits")?,
+        shape: JobShape::new(dim(3)?, dim(4)?, dim(5)?),
+        comm_frac: a[6].as_f64_bits().ok_or("job comm_frac not f64 bits")?,
+    })
+}
+
+fn workload_json(w: &Workload) -> Json {
+    match w {
+        Workload::Synthetic(sc) => obj(vec![
+            ("kind", Json::Str("synthetic".into())),
+            ("scenario", Json::Str(sc.name().into())),
+        ]),
+        Workload::Csv { name, jobs, .. } => obj(vec![
+            ("kind", Json::Str("csv".into())),
+            ("name", Json::Str(name.clone())),
+            ("trace", Json::Arr(jobs.iter().map(job_json).collect())),
+        ]),
+    }
+}
+
+fn parse_workload(j: &Json) -> Result<Workload, String> {
+    match need_str(j, "kind")? {
+        "synthetic" => {
+            let name = need_str(j, "scenario")?;
+            Scenario::parse(name)
+                .map(Workload::Synthetic)
+                .ok_or_else(|| format!("unknown scenario '{name}'"))
+        }
+        "csv" => {
+            let name = need_str(j, "name")?.to_string();
+            let arr = need(j, "trace")?.as_arr().ok_or("trace is not an array")?;
+            let jobs: Result<Vec<JobSpec>, String> = arr.iter().map(parse_job).collect();
+            Ok(Workload::from_jobs(name, jobs?))
+        }
+        k => Err(format!("unknown workload kind '{k}'")),
+    }
+}
+
+/// Serialize one work item for the wire. The cell label, run count and
+/// base seed stay leader-side: a worker only needs what determines the
+/// trial's bytes.
+pub fn encode_work_item(item: &WorkItem) -> String {
+    obj(vec![
+        ("policy", Json::Str(item.cell.policy.key().into())),
+        ("topo", topo_json(item.cell.topo)),
+        ("workload", workload_json(&item.cfg.workload)),
+        ("jobs", Json::Num(item.cfg.jobs_per_run as f64)),
+        ("seed", Json::u64_str(item.seed())),
+        (
+            "folds",
+            Json::Arr(
+                item.cfg
+                    .fold_dims_enabled
+                    .iter()
+                    .map(|&b| Json::Bool(b))
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string()
+}
+
+/// A decoded wire item: everything a worker needs to reproduce the
+/// trial's bytes.
+pub struct RemoteWorkItem {
+    pub policy: PolicyHandle,
+    pub topo: ClusterTopo,
+    pub workload: Workload,
+    pub jobs_per_run: usize,
+    pub seed: u64,
+    pub fold_dims: [bool; 3],
+}
+
+impl RemoteWorkItem {
+    /// Simulate the item — the same code path as a leader-local
+    /// [`WorkItem::run`], so the result is bit-identical.
+    pub fn run(&self) -> RunResult {
+        let trace = self.workload.trace(self.jobs_per_run, self.seed);
+        sweep::run_trial_raw(self.policy, self.topo, &trace, self.fold_dims)
+    }
+}
+
+/// Decode a `TRIAL` body. The policy is resolved through the global
+/// registry — an unknown key means leader and worker binaries disagree,
+/// reported as a wire error rather than a panic.
+pub fn decode_work_item(body: &str) -> Result<RemoteWorkItem, String> {
+    let j = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
+    let key = need_str(&j, "policy")?;
+    let policy = PolicyRegistry::global().resolve(key).ok_or_else(|| {
+        format!(
+            "unknown policy '{key}' (worker knows: {})",
+            PolicyRegistry::global().known_keys()
+        )
+    })?;
+    let folds_arr = need(&j, "folds")?
+        .as_arr()
+        .filter(|a| a.len() == 3)
+        .ok_or("folds is not a 3-array")?;
+    let mut fold_dims = [true; 3];
+    for (f, v) in fold_dims.iter_mut().zip(folds_arr) {
+        *f = match v {
+            Json::Bool(b) => *b,
+            _ => return Err("folds holds a non-bool".into()),
+        };
+    }
+    Ok(RemoteWorkItem {
+        policy,
+        topo: parse_topo(need(&j, "topo")?)?,
+        workload: parse_workload(need(&j, "workload")?)?,
+        jobs_per_run: need_usize(&j, "jobs")?,
+        seed: need_u64(&j, "seed")?,
+        fold_dims,
+    })
+}
+
+/// Serialize a trial result. Only the run result travels: the leader
+/// regenerates the trace (synthetic) or already holds it (CSV), so the
+/// reply stays small.
+pub fn encode_run_result(r: &RunResult) -> String {
+    let outcomes: Vec<Json> = r
+        .outcomes
+        .iter()
+        .map(|&(id, o)| match o {
+            JobOutcome::Completed { start, finish } => Json::Arr(vec![
+                Json::u64_str(id),
+                Json::Str("c".into()),
+                Json::f64_bits(start),
+                Json::f64_bits(finish),
+            ]),
+            JobOutcome::Dropped => Json::Arr(vec![Json::u64_str(id), Json::Str("d".into())]),
+            JobOutcome::NotScheduled => {
+                Json::Arr(vec![Json::u64_str(id), Json::Str("n".into())])
+            }
+        })
+        .collect();
+    let util: Vec<Json> = r
+        .utilization
+        .samples()
+        .iter()
+        .map(|&(v, w)| Json::Arr(vec![Json::f64_bits(v), Json::f64_bits(w)]))
+        .collect();
+    obj(vec![
+        ("outcomes", Json::Arr(outcomes)),
+        ("util", Json::Arr(util)),
+        ("scheduled", Json::Num(r.scheduled as f64)),
+        ("dropped", Json::Num(r.dropped as f64)),
+        ("makespan", Json::f64_bits(r.makespan)),
+    ])
+    .to_string()
+}
+
+/// Decode a `RESULT` body. `policy` is the leader-side handle of the item
+/// this result answers (the display name does not travel).
+pub fn decode_run_result(body: &str, policy: PolicyHandle) -> Result<RunResult, String> {
+    let j = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
+    let mut outcomes = Vec::new();
+    for o in need(&j, "outcomes")?.as_arr().ok_or("outcomes not an array")? {
+        let a = o.as_arr().ok_or("outcome is not an array")?;
+        if a.len() < 2 {
+            return Err("outcome array too short".into());
+        }
+        let id = a[0].as_u64_str().ok_or("outcome id not a u64 string")?;
+        let outcome = match (a[1].as_str(), a.len()) {
+            (Some("c"), 4) => JobOutcome::Completed {
+                start: a[2].as_f64_bits().ok_or("outcome start not f64 bits")?,
+                finish: a[3].as_f64_bits().ok_or("outcome finish not f64 bits")?,
+            },
+            (Some("d"), 2) => JobOutcome::Dropped,
+            (Some("n"), 2) => JobOutcome::NotScheduled,
+            _ => return Err("malformed outcome".into()),
+        };
+        outcomes.push((id, outcome));
+    }
+    let mut samples = Vec::new();
+    for s in need(&j, "util")?.as_arr().ok_or("util not an array")? {
+        let a = s
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or("util sample is not a 2-array")?;
+        samples.push((
+            a[0].as_f64_bits().ok_or("util value not f64 bits")?,
+            a[1].as_f64_bits().ok_or("util weight not f64 bits")?,
+        ));
+    }
+    Ok(RunResult {
+        policy: policy.name(),
+        outcomes,
+        utilization: WeightedCdf::from_samples(samples),
+        scheduled: need_usize(&j, "scheduled")?,
+        dropped: need_usize(&j, "dropped")?,
+        makespan: need_f64_bits(&j, "makespan")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Worker daemon
+// ---------------------------------------------------------------------------
+
+/// Execute one protocol line; `None` means close the connection.
+pub fn worker_dispatch(line: &str) -> Option<String> {
+    if line.is_empty() {
+        return Some(String::new());
+    }
+    if line == "QUIT" {
+        return None;
+    }
+    if line == "PING" {
+        return Some("PONG".into());
+    }
+    if let Some(body) = line.strip_prefix("TRIAL ") {
+        return Some(match decode_work_item(body) {
+            Ok(item) => format!("RESULT {}", encode_run_result(&item.run())),
+            Err(e) => format!("ERR {e}"),
+        });
+    }
+    Some("ERR unknown command".into())
+}
+
+/// Handle one leader connection through the shared line-serving loop
+/// (`coordinator::server::serve_lines`): a non-UTF-8 line earns an `ERR`
+/// reply and the connection keeps serving — a flaky peer must not take a
+/// pool worker down; genuine I/O errors close the connection quietly.
+fn handle_worker_conn(stream: TcpStream) {
+    let _ = super::server::serve_lines(stream, worker_dispatch);
+}
+
+/// Serve trials on an already-bound listener (blocking). Each connection
+/// gets its own thread; trials within a connection run serially, so a
+/// worker's parallelism is the number of leader connections it accepts.
+pub fn serve_worker_on(listener: TcpListener) -> std::io::Result<()> {
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                std::thread::spawn(move || handle_worker_conn(s));
+            }
+            Err(e) => eprintln!("worker: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Serve forever on `addr` — the `rfold worker --listen <addr>` daemon.
+pub fn serve_worker(addr: &str) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("rfold worker listening on {}", listener.local_addr()?);
+    serve_worker_on(listener)
+}
+
+/// Spawn a worker on an ephemeral local port, serving on a background
+/// thread; returns the address to hand to a [`PoolExecutor`]. Used by
+/// the distributed test suite and handy for in-process smoke checks.
+pub fn spawn_worker() -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        let _ = serve_worker_on(listener);
+    });
+    Ok(addr)
+}
+
+// ---------------------------------------------------------------------------
+// Leader-side pool executor
+// ---------------------------------------------------------------------------
+
+/// Telemetry of one pool worker connection (stderr reporting only — never
+/// part of any row).
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    pub addr: String,
+    /// Items this connection completed.
+    pub completed: usize,
+    /// The TCP connection was established.
+    pub connected: bool,
+    /// The connection was abandoned (I/O error or repeated `ERR`s).
+    pub died: bool,
+}
+
+/// Aggregate telemetry of one [`PoolExecutor::execute`] call.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    pub workers: Vec<WorkerStats>,
+    /// Items re-queued after a connection failure.
+    pub retried: usize,
+    /// Items the leader simulated itself (all workers dead or rejecting).
+    pub leader_fallback: usize,
+}
+
+/// How long the leader waits for a worker to accept a connection before
+/// writing it off (per resolved address).
+const POOL_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default for how long the leader waits for one `RESULT` before
+/// declaring the connection dead. Sized with a wide margin over the
+/// slowest realistic trial: a wedged worker (SIGSTOP, silent partition)
+/// must hang a few items for minutes, not the whole grid forever — the
+/// timed-out items go back through the retry/fallback path like any
+/// other failure. Grids whose single trial legitimately exceeds this
+/// raise it via [`PoolExecutor::with_read_timeout`] (`--pool-timeout`).
+pub const POOL_READ_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// The TCP-pool [`TrialExecutor`]: one connection (and thread) per worker
+/// address, all pulling from the same atomic cursor the local backend
+/// uses, with dead-connection retry and leader-side fallback. Output is
+/// position-stable and bit-identical to local execution.
+pub struct PoolExecutor {
+    addrs: Vec<String>,
+    read_timeout: Duration,
+    stats: Mutex<PoolStats>,
+}
+
+/// Resolve and connect with [`POOL_CONNECT_TIMEOUT`] per address — a
+/// plain `TcpStream::connect` can block for minutes on a silently
+/// dropping network, stalling the whole pool start.
+fn connect_worker(addr: &str) -> std::io::Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, POOL_CONNECT_TIMEOUT) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "address resolved to nothing")
+    }))
+}
+
+impl PoolExecutor {
+    /// `addrs` as `host:port` strings (e.g. from `--pool a:7171,b:7171`).
+    pub fn new(addrs: Vec<String>) -> PoolExecutor {
+        assert!(!addrs.is_empty(), "a pool needs at least one worker address");
+        PoolExecutor {
+            addrs,
+            read_timeout: POOL_READ_TIMEOUT,
+            stats: Mutex::new(PoolStats::default()),
+        }
+    }
+
+    /// Override the per-`RESULT` read timeout (the CLI's `--pool-timeout`)
+    /// for grids whose single trial legitimately runs longer than the
+    /// [`POOL_READ_TIMEOUT`] default. A zero duration disables the
+    /// timeout entirely (wait forever).
+    pub fn with_read_timeout(mut self, timeout: Duration) -> PoolExecutor {
+        self.read_timeout = timeout;
+        self
+    }
+
+    /// Parse a comma-separated `--pool` list.
+    pub fn parse_pool(spec: &str) -> Vec<String> {
+        spec.split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
+    /// Telemetry of the most recent [`PoolExecutor::execute`] call.
+    pub fn stats(&self) -> PoolStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Drive one connection until the queue drains or the connection is
+    /// abandoned. Returns completed `(item index, output)` pairs.
+    fn run_conn(
+        &self,
+        addr: &str,
+        items: &[WorkItem],
+        next: &(dyn Fn(&HashSet<usize>) -> Option<usize> + Sync),
+        fail: &(dyn Fn(usize) + Sync),
+        progress: &(dyn Fn(&WorkItem) + Sync),
+        stats: &mut WorkerStats,
+    ) -> Vec<(usize, Arc<TrialOutput>)> {
+        let mut got = Vec::new();
+        let stream = match connect_worker(addr) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("pool: cannot connect to {addr}: {e}");
+                stats.died = true;
+                return got;
+            }
+        };
+        stats.connected = true;
+        // A read timeout turns a silently wedged worker into an ordinary
+        // connection death (the pending item is failed and retried); the
+        // timeout error surfaces through the `Err(_)` arm below. A zero
+        // timeout means "wait forever" (`--pool-timeout 0`) — std rejects
+        // `Some(ZERO)`, so it maps to `None`.
+        let timeout = (!self.read_timeout.is_zero()).then_some(self.read_timeout);
+        if let Err(e) = stream.set_read_timeout(timeout) {
+            eprintln!("pool: {addr}: cannot set read timeout: {e}");
+            stats.died = true;
+            return got;
+        }
+        let mut out = match stream.try_clone() {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("pool: {addr}: clone failed: {e}");
+                stats.died = true;
+                return got;
+            }
+        };
+        let mut reader = BufReader::new(stream);
+        // Consecutive items the worker answered with ERR: a peer that
+        // rejects everything (version skew, garbage speaker) is abandoned
+        // rather than fed the whole grid one failure at a time.
+        let mut consecutive_errs = 0usize;
+        // Items this connection already failed: excluded from its retry
+        // pulls, so an ERR'd item is offered to the *other* workers
+        // instead of burning all its failure credits right here.
+        let mut failed_here: HashSet<usize> = HashSet::new();
+        while let Some(i) = next(&failed_here) {
+            let it = &items[i];
+            if writeln!(out, "TRIAL {}", encode_work_item(it)).is_err() {
+                fail(i);
+                stats.died = true;
+                break;
+            }
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => {
+                    fail(i);
+                    stats.died = true;
+                    break;
+                }
+                Ok(_) => {}
+            }
+            let line = line.trim();
+            if let Some(body) = line.strip_prefix("RESULT ") {
+                match decode_run_result(body, it.cell.policy) {
+                    Ok(result) => {
+                        consecutive_errs = 0;
+                        let trace =
+                            it.cfg.workload.trace(it.cfg.jobs_per_run, it.seed());
+                        got.push((i, Arc::new(TrialOutput { result, trace })));
+                        stats.completed += 1;
+                        progress(it);
+                    }
+                    Err(e) => {
+                        eprintln!("pool: {addr}: undecodable RESULT ({e}); dropping connection");
+                        fail(i);
+                        stats.died = true;
+                        break;
+                    }
+                }
+            } else {
+                // ERR (or anything else): the connection still speaks the
+                // protocol, so keep it — unless it keeps failing.
+                eprintln!("pool: {addr}: item {i} failed remotely: {line}");
+                failed_here.insert(i);
+                fail(i);
+                consecutive_errs += 1;
+                if consecutive_errs >= 3 {
+                    eprintln!("pool: {addr}: 3 consecutive failures; dropping connection");
+                    stats.died = true;
+                    break;
+                }
+            }
+        }
+        if !stats.died {
+            let _ = writeln!(out, "QUIT");
+        }
+        got
+    }
+}
+
+impl TrialExecutor for PoolExecutor {
+    fn name(&self) -> &str {
+        "tcp-pool"
+    }
+
+    fn execute(&self, items: &[WorkItem]) -> Vec<Arc<TrialOutput>> {
+        let n = items.len();
+        let cursor = AtomicUsize::new(0);
+        let retries: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let failures: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let retried = AtomicUsize::new(0);
+
+        // Retried items first (they are blocking a grid slot), then the
+        // cursor — the same item-granularity stream the local backend
+        // drains. A connection never re-pulls an item it already failed
+        // (`exclude`): such items wait in the queue for a different
+        // worker, or for the post-join leader fallback.
+        let next = |exclude: &HashSet<usize>| -> Option<usize> {
+            let mut queue = retries.lock().unwrap();
+            if let Some(pos) = queue.iter().rposition(|i| !exclude.contains(i)) {
+                return Some(queue.remove(pos));
+            }
+            drop(queue);
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            (c < n).then_some(c)
+        };
+        // An item that failed on as many attempts as there are workers is
+        // not going to succeed remotely: leave it unqueued — its unfilled
+        // slot routes it to the post-join leader fallback.
+        let fail = |i: usize| {
+            let f = failures[i].fetch_add(1, Ordering::Relaxed) + 1;
+            if f < self.addrs.len() {
+                retried.fetch_add(1, Ordering::Relaxed);
+                retries.lock().unwrap().push(i);
+            }
+        };
+
+        // The same every-tenth-trial liveness reporting the local backend
+        // gives: a healthy multi-hour pooled grid must be distinguishable
+        // from a wedged one before any timeout fires. Stderr only.
+        let progress = sweep::progress_reporter("pool", n);
+
+        let mut slots: Vec<Option<Arc<TrialOutput>>> = vec![None; n];
+        let mut worker_stats: Vec<WorkerStats> = Vec::with_capacity(self.addrs.len());
+        let next_ref = &next;
+        let fail_ref = &fail;
+        let progress_ref = &progress;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .addrs
+                .iter()
+                .map(|addr| {
+                    scope.spawn(move || {
+                        let mut stats = WorkerStats {
+                            addr: addr.clone(),
+                            completed: 0,
+                            connected: false,
+                            died: false,
+                        };
+                        let got = self.run_conn(
+                            addr,
+                            items,
+                            next_ref,
+                            fail_ref,
+                            progress_ref,
+                            &mut stats,
+                        );
+                        (stats, got)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (stats, got) = h.join().expect("pool connection thread panicked");
+                worker_stats.push(stats);
+                for (i, out) in got {
+                    slots[i] = Some(out);
+                }
+            }
+        });
+
+        // Leftovers — items every worker rejected, items stranded on the
+        // retry queue after the last connection died, items never
+        // dispatched because no connection survived long enough — are
+        // exactly the unfilled slots, whatever bookkeeping path got them
+        // there. The leader computes them itself through the in-process
+        // executor (all cores, same determinism), so a fully dead pool
+        // degrades to local parallel execution — the grid always
+        // completes.
+        let rest: Vec<usize> = (0..n).filter(|&i| slots[i].is_none()).collect();
+        let fallback = rest.len();
+        if fallback > 0 {
+            eprintln!("pool: leader simulating {fallback} item(s) no worker could serve");
+            let todo: Vec<WorkItem> = rest.iter().map(|&i| items[i].clone()).collect();
+            let outs = sweep::LocalExecutor::new(0).execute(&todo);
+            for (&i, out) in rest.iter().zip(outs) {
+                slots[i] = Some(out);
+            }
+        }
+
+        let stats = PoolStats {
+            workers: worker_stats,
+            retried: retried.load(Ordering::Relaxed),
+            leader_fallback: fallback,
+        };
+        report::print_pool_telemetry(&stats);
+        *self.stats.lock().unwrap() = stats;
+
+        slots
+            .into_iter()
+            .map(|s| s.expect("every pool slot is filled by a worker or the leader"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::builtins;
+    use crate::sim::experiments::Cell;
+    use crate::sim::sweep::SweepConfig;
+    use crate::trace::gen::{generate, TraceConfig};
+
+    fn item(workload: Workload) -> WorkItem {
+        let mut cfg = SweepConfig::new(3, 14, 9);
+        cfg.workload = workload;
+        WorkItem {
+            cell: Cell {
+                policy: builtins::RFOLD,
+                topo: ClusterTopo::reconfigurable_4096(4),
+                label: "RFold (4^3)",
+            },
+            cfg,
+            trial: 2,
+        }
+    }
+
+    #[test]
+    fn work_item_roundtrips_synthetic() {
+        let it = item(Workload::Synthetic(Scenario::CommHeavy));
+        let decoded = decode_work_item(&encode_work_item(&it)).unwrap();
+        assert_eq!(decoded.policy, it.cell.policy);
+        assert_eq!(decoded.topo, it.cell.topo);
+        assert_eq!(decoded.seed, it.seed());
+        assert_eq!(decoded.jobs_per_run, 14);
+        assert_eq!(decoded.fold_dims, [true; 3]);
+        assert_eq!(decoded.workload.cache_key(), it.cfg.workload.cache_key());
+    }
+
+    #[test]
+    fn work_item_roundtrips_csv_jobs_exactly() {
+        let jobs = generate(&TraceConfig {
+            num_jobs: 6,
+            seed: 4,
+            ..Default::default()
+        });
+        let it = item(Workload::from_jobs("wire-test".into(), jobs.clone()));
+        let decoded = decode_work_item(&encode_work_item(&it)).unwrap();
+        assert_eq!(decoded.workload.trace(0, 0), jobs, "bit-exact job round trip");
+        assert_eq!(decoded.workload.cache_key(), it.cfg.workload.cache_key());
+    }
+
+    #[test]
+    fn run_result_roundtrips_bit_exactly() {
+        let it = item(Workload::Synthetic(Scenario::PaperDefault));
+        let local = it.run();
+        let wire = encode_run_result(&local.result);
+        let back = decode_run_result(&wire, it.cell.policy).unwrap();
+        assert_eq!(back.policy, local.result.policy);
+        assert_eq!(back.outcomes, local.result.outcomes);
+        assert_eq!(back.scheduled, local.result.scheduled);
+        assert_eq!(back.dropped, local.result.dropped);
+        assert_eq!(back.makespan.to_bits(), local.result.makespan.to_bits());
+        assert_eq!(
+            back.utilization.samples(),
+            local.result.utilization.samples()
+        );
+    }
+
+    #[test]
+    fn remote_run_matches_local_run() {
+        let it = item(Workload::Synthetic(Scenario::UniformSmall));
+        let local = it.run();
+        let remote = decode_work_item(&encode_work_item(&it)).unwrap().run();
+        assert_eq!(
+            encode_run_result(&local.result),
+            encode_run_result(&remote),
+            "worker-side execution must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn dispatch_protocol_lines() {
+        assert_eq!(worker_dispatch("PING"), Some("PONG".into()));
+        assert_eq!(worker_dispatch("QUIT"), None);
+        assert_eq!(worker_dispatch(""), Some(String::new()));
+        assert!(worker_dispatch("NOPE").unwrap().starts_with("ERR"));
+        assert!(worker_dispatch("TRIAL not-json").unwrap().starts_with("ERR"));
+        let it = item(Workload::Synthetic(Scenario::PaperDefault));
+        let reply = worker_dispatch(&format!("TRIAL {}", encode_work_item(&it))).unwrap();
+        assert!(reply.starts_with("RESULT "), "{reply}");
+    }
+
+    #[test]
+    fn unknown_policy_is_a_wire_error() {
+        let it = item(Workload::Synthetic(Scenario::PaperDefault));
+        let bad = encode_work_item(&it).replace("\"rfold\"", "\"no-such-policy\"");
+        let err = decode_work_item(&bad).unwrap_err();
+        assert!(err.contains("no-such-policy"), "{err}");
+    }
+
+    #[test]
+    fn parse_pool_splits_and_trims() {
+        assert_eq!(
+            PoolExecutor::parse_pool(" a:1, b:2 ,,c:3 "),
+            vec!["a:1".to_string(), "b:2".into(), "c:3".into()]
+        );
+        assert!(PoolExecutor::parse_pool(" , ").is_empty());
+    }
+}

@@ -23,21 +23,49 @@ fn state_name(s: JobState) -> &'static str {
     }
 }
 
-/// Handle one client connection (blocking).
-pub fn handle_conn(stream: TcpStream, leader: LeaderHandle) -> std::io::Result<()> {
-    let peer = stream.peer_addr().ok();
+/// Serve a line-oriented protocol on one connection (blocking):
+/// `dispatch` maps each trimmed line to `Some(reply)` or `None` (close).
+///
+/// One bad line must not cost the whole connection: a non-UTF-8 line
+/// (`InvalidData` — the bytes up to the newline are already consumed)
+/// earns an `ERR` reply and the loop keeps serving. Genuine transport
+/// errors (reset, broken pipe) end the connection gracefully instead of
+/// propagating `Err` — important now that pooled sweep clients hold
+/// long-lived connections next to interactive ones. Shared by the leader
+/// front end here and the `coordinator::pool` worker daemon.
+pub fn serve_lines(
+    stream: TcpStream,
+    mut dispatch: impl FnMut(&str) -> Option<String>,
+) -> std::io::Result<()> {
     let mut out = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        let reply = dispatch(line.trim(), &leader);
-        match reply {
-            Some(r) => writeln!(out, "{r}")?,
+    let mut lines = BufReader::new(stream).lines();
+    loop {
+        let line = match lines.next() {
+            None => break, // EOF
+            Some(Ok(l)) => l,
+            Some(Err(e)) if e.kind() == std::io::ErrorKind::InvalidData => {
+                if writeln!(out, "ERR non-utf8 line").is_err() {
+                    break;
+                }
+                continue;
+            }
+            Some(Err(_)) => break, // transport gone; nothing to salvage
+        };
+        match dispatch(line.trim()) {
+            Some(r) => {
+                if writeln!(out, "{r}").is_err() {
+                    break;
+                }
+            }
             None => break, // QUIT
         }
     }
-    let _ = peer; // quiet unused in release logs
     Ok(())
+}
+
+/// Handle one client connection (blocking).
+pub fn handle_conn(stream: TcpStream, leader: LeaderHandle) -> std::io::Result<()> {
+    serve_lines(stream, |line| dispatch(line, &leader))
 }
 
 /// Parse and execute one command line; `None` means close.
@@ -138,6 +166,35 @@ mod tests {
         assert!(dispatch("SUBMIT x", &h).unwrap().starts_with("ERR"));
         assert!(dispatch("NOPE", &h).unwrap().starts_with("ERR"));
         assert!(dispatch("QUERY abc", &h).unwrap().starts_with("ERR"));
+        h.shutdown();
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn non_utf8_line_gets_err_and_connection_survives() {
+        let (h, j) = leader();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h2 = h.clone();
+        std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            handle_conn(s, h2).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        // Invalid UTF-8, then a valid command on the same connection.
+        c.write_all(b"\xff\xfe garbage\n").unwrap();
+        writeln!(c, "STATS").unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "bad line must be rejected: {line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.starts_with("STATS"),
+            "connection must keep serving after a bad line: {line}"
+        );
+        writeln!(c, "QUIT").unwrap();
         h.shutdown();
         j.join().unwrap();
     }

@@ -5,9 +5,12 @@
 //! rfold table1   [--runs N] [--jobs J] [--seed S]      Table 1 (JCR)
 //! rfold fig3     [--runs N] [--jobs J] [--seed S]      Figure 3 (JCT)
 //! rfold fig4     [--runs N] [--jobs J] [--seed S]      Figure 4 (utilization)
-//! rfold sweep    [--runs N] [--jobs J] [--seed S]      policy x topology x scenario
+//! rfold sweep    [--runs N] [--jobs J] [--seed S]      policy x topology x workload
 //!                [--workers W] [--scenarios a,b|all]   grid, JSON rows on stdout
 //!                [--policies p,q] [--out FILE]
+//!                [--trace-file F]                      sweep a recorded CSV trace
+//!                [--pool h1:p,h2:p]                    fan out to rfold workers
+//! rfold worker   [--listen A]                          TCP trial worker daemon
 //! rfold motivation                                     §3.1 contention study
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
 //! rfold besteffort [--runs N] [--jobs J]               §5 best-effort crossover
@@ -51,6 +54,7 @@ fn main() {
         "besteffort" => besteffort(&args),
         "simulate" => simulate(&args),
         "trace-gen" => trace_gen(&args),
+        "worker" => worker(&args),
         "serve" => serve(&args),
         "replay" => replay(&args),
         "scorer-check" => scorer_check(&args),
@@ -70,10 +74,13 @@ fn main() {
 
 fn usage() -> &'static str {
     "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
-     trace-gen|serve|replay|scorer-check|all> [options]\n\
+     trace-gen|worker|serve|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
      sweep options:  --workers W (0=auto; --threads is an alias) \
-     --scenarios a,b|all --policies p,q --out FILE\n\
+     --scenarios a,b|all --policies p,q --out FILE --trace-file F \
+     --pool host1:port,host2:port (distributed; workers run `rfold worker`) \
+     --pool-timeout S (per-trial reply timeout, default 600, 0 = none)\n\
+     worker options: --listen A (default 127.0.0.1:7171)\n\
      simulate options: --trace-file F (replay a recorded CSV trace)\n\
      policies resolve by registry name (rfold, firstfit, folding, reconfig, \
      besteffort, hilbert, ...)"
@@ -131,10 +138,11 @@ fn fig4(args: &Args) {
     report::print_fig4(&sums);
 }
 
-/// The full policy × topology × scenario grid on the global work-queue
-/// runner. One `SWEEP {json}` row per cell on stdout; progress/timing and
-/// cache hit/miss statistics on stderr, so stdout is byte-identical for
-/// any `--workers` value.
+/// The full policy × topology × workload grid on the work-queue runner.
+/// One `SWEEP {json}` row per cell on stdout; progress/timing and cache
+/// hit/miss statistics on stderr, so stdout is byte-identical for any
+/// `--workers` value — and for any `--pool`, which fans the same work
+/// items out to `rfold worker` daemons over TCP.
 fn sweep_cmd(args: &Args) {
     let runs = args.get_usize("runs", 8);
     let jobs = args.get_usize("jobs", 256);
@@ -145,9 +153,12 @@ fn sweep_cmd(args: &Args) {
         eprintln!("--runs and --jobs must be >= 1");
         std::process::exit(2);
     }
-    let scenarios = match args.get("scenarios") {
+    // Workload axis: named synthetic scenarios, a recorded CSV trace, or
+    // both. `--trace-file` alone replaces the scenario grid (the common
+    // replay case); adding an explicit `--scenarios` sweeps both.
+    let mut workloads: Vec<Workload> = match args.get("scenarios") {
         Some(spec) => match Scenario::parse_list(spec) {
-            Some(v) => v,
+            Some(v) => v.into_iter().map(Workload::Synthetic).collect(),
             None => {
                 let known: Vec<&str> = Scenario::ALL.iter().map(|s| s.name()).collect();
                 eprintln!(
@@ -157,8 +168,18 @@ fn sweep_cmd(args: &Args) {
                 std::process::exit(2);
             }
         },
-        None => Scenario::ALL.to_vec(),
+        None if args.get("trace-file").is_some() => Vec::new(),
+        None => Scenario::ALL.iter().copied().map(Workload::Synthetic).collect(),
     };
+    if let Some(path) = args.get("trace-file") {
+        match Workload::from_csv(std::path::Path::new(path)) {
+            Ok(w) => workloads.push(w),
+            Err(e) => {
+                eprintln!("cannot load --trace-file {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let cells: Vec<exp::Cell> = match args.get_policies("policies") {
         Ok(Some(handles)) => exp::table1_cells()
             .into_iter()
@@ -174,25 +195,47 @@ fn sweep_cmd(args: &Args) {
         eprintln!("--policies selected no Table-1 cells");
         std::process::exit(2);
     }
+    let pool = args.get("pool").map(rfold::coordinator::pool::PoolExecutor::parse_pool);
     eprintln!(
-        "sweep: {} cells x {} scenarios x {runs} runs x {jobs} jobs ({} workers)",
+        "sweep: {} cells x {} workloads x {runs} runs x {jobs} jobs ({})",
         cells.len(),
-        scenarios.len(),
-        if workers == 0 {
-            format!("auto={}", sweep::auto_workers())
-        } else {
-            workers.to_string()
+        workloads.len(),
+        match &pool {
+            Some(addrs) => format!("pool of {} workers", addrs.len()),
+            None if workers == 0 => format!("auto={} workers", sweep::auto_workers()),
+            None => format!("{workers} workers"),
         }
     );
     let t0 = std::time::Instant::now();
-    let rows = sweep::run_grid(
+    // One grid invocation for both backends: only the executor differs.
+    let executor: Box<dyn sweep::TrialExecutor> = match pool {
+        Some(addrs) => {
+            if addrs.is_empty() {
+                eprintln!("--pool needs at least one host:port");
+                std::process::exit(2);
+            }
+            if args.get("workers").is_some() || args.get("threads").is_some() {
+                eprintln!(
+                    "note: --workers/--threads is ignored with --pool \
+                     (parallelism = one connection per pool address)"
+                );
+            }
+            Box::new(
+                rfold::coordinator::pool::PoolExecutor::new(addrs).with_read_timeout(
+                    std::time::Duration::from_secs(args.get_u64("pool-timeout", 600)),
+                ),
+            )
+        }
+        None => Box::new(sweep::LocalExecutor::new(workers)),
+    };
+    let rows = sweep::run_grid_with(
         &cells,
-        &scenarios,
+        &workloads,
         runs,
         jobs,
         seed,
-        workers,
         sweep::ResultCache::global(),
+        executor.as_ref(),
     );
     report::print_sweep(&rows);
     if let Some(out) = args.get("out") {
@@ -400,6 +443,16 @@ fn trace_gen(args: &Args) {
     let t = trace::gen::generate(&cfg);
     trace::io::write_csv(std::path::Path::new(&out), &t).expect("write trace");
     println!("wrote {} jobs to {out}", t.len());
+}
+
+/// A distributed-sweep trial worker: serves `TRIAL` work items from any
+/// number of leader connections (`rfold sweep --pool ...`), reconstructing
+/// policies by registry name. One listener thread per connection; run
+/// several leaders (or one leader listed several times behind distinct
+/// daemons) to use several cores.
+fn worker(args: &Args) {
+    let addr = args.get_str("listen", "127.0.0.1:7171").to_string();
+    rfold::coordinator::pool::serve_worker(&addr).expect("worker serve");
 }
 
 fn serve(args: &Args) {

@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 
 use super::CellSummary;
+use crate::coordinator::pool::PoolStats;
 use crate::sim::observer::DecisionTelemetry;
 use crate::sim::sweep::SweepRow;
 use crate::util::json::Json;
@@ -91,7 +92,7 @@ pub fn sweep_row_json(row: &SweepRow) -> String {
     let mut put = |k: &str, v: Json| {
         m.insert(k.to_string(), v);
     };
-    put("scenario", Json::Str(row.scenario.to_string()));
+    put("scenario", Json::Str(row.scenario.clone()));
     put("cell", Json::Str(row.cell.to_string()));
     put("policy", Json::Str(row.policy.to_string()));
     put("topo", Json::Str(row.topo.clone()));
@@ -159,6 +160,42 @@ pub fn print_policy_telemetry(label: &str, t: &DecisionTelemetry) {
     }
 }
 
+/// Format distributed-pool telemetry as machine-greppable `POOL` lines:
+/// one per worker connection plus an aggregate retry/fallback line.
+pub fn pool_telemetry_lines(stats: &PoolStats) -> Vec<String> {
+    let mut lines: Vec<String> = stats
+        .workers
+        .iter()
+        .map(|w| {
+            let state = if !w.connected {
+                "unreachable"
+            } else if w.died {
+                "died"
+            } else {
+                "ok"
+            };
+            format!(
+                "POOL worker={} items={} state={state}",
+                w.addr, w.completed
+            )
+        })
+        .collect();
+    lines.push(format!(
+        "POOL retried={} leader-fallback={}",
+        stats.retried, stats.leader_fallback
+    ));
+    lines
+}
+
+/// Print pool telemetry — **stderr only**, like every other introspection
+/// channel: SWEEP rows must stay byte-identical between `--workers N` and
+/// `--pool host1,host2`, so nothing about the pool may reach stdout.
+pub fn print_pool_telemetry(stats: &PoolStats) {
+    for line in pool_telemetry_lines(stats) {
+        eprintln!("{line}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,7 +212,7 @@ mod tests {
     #[test]
     fn sweep_row_json_is_valid_and_thread_free() {
         let row = SweepRow {
-            scenario: "paper-default",
+            scenario: "paper-default".to_string(),
             cell: "RFold (4^3)",
             policy: "RFold",
             topo: "ocs-64cubes-4^3".to_string(),
@@ -208,6 +245,42 @@ mod tests {
         // The determinism contract: no timing or thread info in rows.
         assert!(!line.contains("thread"));
         assert!(!line.contains("wall"));
+    }
+
+    #[test]
+    fn pool_telemetry_lines_cover_every_worker_state() {
+        use crate::coordinator::pool::WorkerStats;
+        let stats = PoolStats {
+            workers: vec![
+                WorkerStats {
+                    addr: "10.0.0.1:7171".into(),
+                    completed: 12,
+                    connected: true,
+                    died: false,
+                },
+                WorkerStats {
+                    addr: "10.0.0.2:7171".into(),
+                    completed: 3,
+                    connected: true,
+                    died: true,
+                },
+                WorkerStats {
+                    addr: "10.0.0.3:7171".into(),
+                    completed: 0,
+                    connected: false,
+                    died: true,
+                },
+            ],
+            retried: 2,
+            leader_fallback: 1,
+        };
+        let lines = pool_telemetry_lines(&stats);
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.starts_with("POOL ")));
+        assert!(lines[0].contains("items=12") && lines[0].contains("state=ok"));
+        assert!(lines[1].contains("state=died"));
+        assert!(lines[2].contains("state=unreachable"));
+        assert!(lines[3].contains("retried=2") && lines[3].contains("leader-fallback=1"));
     }
 
     #[test]

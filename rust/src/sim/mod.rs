@@ -11,4 +11,6 @@ pub mod sweep;
 pub use contention::ContentionModel;
 pub use engine::{RunResult, SimConfig, Simulation};
 pub use observer::{DecisionTelemetry, SchedulerObserver, SharedTelemetry};
-pub use sweep::{ResultCache, SweepConfig, SweepRow, TrialOutput};
+pub use sweep::{
+    LocalExecutor, ResultCache, SweepConfig, SweepRow, TrialExecutor, TrialOutput, WorkItem,
+};

@@ -1,39 +1,59 @@
-//! Global work-queue experiment runner over the workload-scenario matrix,
-//! with a process-wide trial-result cache.
+//! Global work-queue experiment runner over the workload matrix, with a
+//! process-wide trial-result cache and pluggable trial executors.
 //!
-//! Every paper table/figure is a grid of (policy × topology × scenario)
+//! Every paper table/figure is a grid of (policy × topology × workload)
 //! cells, each averaged over `runs` seeded trials. Trials are mutually
 //! independent — they share nothing but their configuration — so the
-//! whole grid flattens into (scenario, cell, trial) work items that N
-//! worker threads pull off a shared atomic cursor. Sharding at work-item
-//! granularity (not per-cell) keeps every core busy even when `runs` is
-//! tiny: a `runs=2` grid of 12 cells is 24 items, not 2-at-a-time.
+//! whole grid flattens into (workload, cell, trial) work items. *Where*
+//! those items simulate is behind the [`TrialExecutor`] trait:
+//!
+//! * [`LocalExecutor`] — N worker threads pulling items off a shared
+//!   atomic cursor in this process (the default; 0 = one per core);
+//! * [`crate::coordinator::pool::PoolExecutor`] — the same item stream
+//!   fanned out to `rfold worker` daemons over TCP, with items from dead
+//!   connections retried and a leader-side fallback, for cluster-scale
+//!   grids.
 //!
 //! ## Determinism contract
 //!
-//! Results are **bit-identical for any worker count**, including 1:
+//! Results are **bit-identical for any executor**, including 1 local
+//! worker and any mix of TCP workers:
 //!
 //! * trial `r` always uses seed [`trial_seed`]`(base_seed, r)` — the same
 //!   derivation the old serial loop in `experiments::run_cell` used;
 //! * every work item writes into its pre-indexed slot, so aggregation
-//!   order never depends on scheduling;
-//! * per-trial simulation is single-threaded and deterministic, and no
-//!   wall-clock or worker-count value flows into any reported row
-//!   (progress/timing and cache statistics go to stderr only).
+//!   order never depends on scheduling or on which worker computed what;
+//! * per-trial simulation is single-threaded and deterministic, remote
+//!   results travel bit-exactly (f64s as IEEE-754 bit patterns), and no
+//!   wall-clock, worker-count or host value flows into any reported row
+//!   (progress/timing, cache and pool statistics go to stderr only).
 //!
 //! ## Result cache
 //!
 //! A trial is fully determined by
-//! `(policy, topology, scenario, trial seed, jobs_per_run, fold_dims)` —
+//! `(policy, topology, workload, trial seed, jobs_per_run, fold_dims)` —
 //! notably *not* by the cell label — so cells sharing that tuple (Table 1
 //! vs Figure 3 vs the ablation grids reuse many (policy, topology) pairs)
-//! simulate once. [`ResultCache::global`] persists across grids within a
-//! process: `rfold all` pays for Figure 4's cells only once because Table
-//! 1 already ran them. Duplicates inside one grid are deduplicated before
-//! the queue is built, so they never occupy a worker. Hit/miss counts are
-//! reported on stderr only.
+//! simulate once. The workload component is an *owned* key
+//! ([`Workload::cache_key`]): synthetic scenarios key on their registry
+//! name, `--trace-file` workloads on stem + content hash, so file-backed
+//! traces flow through the cache without ever colliding across files.
+//! Fixed traces also drop the seed and requested job count from the key
+//! (their replay ignores both), so every trial of a trace cell beyond
+//! the first is a cache hit rather than a duplicate simulation.
+//! [`ResultCache::global`] persists across grids within a process;
+//! duplicates inside one grid are deduplicated before the queue is built.
+//! When the resident set would exceed the byte bound, the cache evicts
+//! the **oldest half** of its entries (replacing the old wholesale
+//! flush) while preserving keys pinned by grids still issuing items.
+//! Within one `run_queue` call the pins are belt-and-braces — every
+//! resolved hit already holds its `Arc` — but they keep concurrent
+//! grids' inserts from evicting entries another grid is mid-resolve on,
+//! and they are released before a grid's own inserts so the byte bound
+//! still applies to it.
 //!
-//! `tests/sweep_determinism.rs` locks both contracts down.
+//! `tests/sweep_determinism.rs` and `tests/distributed_pool.rs` lock
+//! these contracts down.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -41,15 +61,15 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::metrics::{summarize, CellSummary};
+use crate::placement::PolicyHandle;
 use crate::sim::engine::{RunResult, SimConfig, Simulation};
 use crate::sim::experiments::Cell;
 use crate::topology::cluster::ClusterTopo;
-use crate::trace::gen::generate;
-use crate::trace::scenarios::Scenario;
+use crate::trace::scenarios::{Scenario, Workload};
 use crate::trace::JobSpec;
 
 /// Knobs of one swept cell.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SweepConfig {
     pub runs: usize,
     pub jobs_per_run: usize,
@@ -58,7 +78,9 @@ pub struct SweepConfig {
     pub workers: usize,
     /// Ablation A2 knob, forwarded to [`SimConfig`].
     pub fold_dims_enabled: [bool; 3],
-    pub scenario: Scenario,
+    /// The workload: a synthetic scenario (regenerated per seed) or a
+    /// fixed CSV trace.
+    pub workload: Workload,
 }
 
 impl SweepConfig {
@@ -69,7 +91,7 @@ impl SweepConfig {
             base_seed,
             workers: 0,
             fold_dims_enabled: [true; 3],
-            scenario: Scenario::PaperDefault,
+            workload: Workload::Synthetic(Scenario::PaperDefault),
         }
     }
 }
@@ -83,7 +105,7 @@ pub fn auto_workers() -> usize {
 
 /// Seed of trial `r`: `base_seed + r`, the derivation the serial driver
 /// always used, independent of scheduling. Seeds are shared across cells
-/// and scenarios so every policy sees identical per-trial randomness
+/// and workloads so every policy sees identical per-trial randomness
 /// streams.
 pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
     base_seed.wrapping_add(trial as u64)
@@ -111,78 +133,248 @@ impl TrialOutput {
 
 /// Everything that determines a trial's bytes. The cell *label* is
 /// deliberately absent: it names the row, it does not influence the
-/// simulation. The policy is identified by its canonical registry key —
-/// stable across processes, which is what the ROADMAP's multi-backend
-/// fan-out needs to share caches between workers.
+/// simulation. The policy is identified by its canonical registry key and
+/// the workload by [`Workload::cache_key`] — both stable across
+/// processes, which is what the TCP pool needs to share caches between
+/// leader and workers.
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 struct TrialKey {
     policy: &'static str,
     topo: ClusterTopo,
-    scenario: &'static str,
+    workload: String,
     seed: u64,
     jobs_per_run: usize,
     fold_dims: [bool; 3],
 }
 
-/// One (scenario, cell, trial) work item of a flattened grid.
-#[derive(Clone, Copy, Debug)]
-struct WorkItem {
-    cell: Cell,
-    cfg: SweepConfig,
-    trial: usize,
+/// One (workload, cell, trial) work item of a flattened grid. Public so
+/// [`TrialExecutor`] backends outside this module (the TCP pool) can
+/// encode and run items.
+#[derive(Clone, Debug)]
+pub struct WorkItem {
+    pub cell: Cell,
+    pub cfg: SweepConfig,
+    pub trial: usize,
 }
 
 impl WorkItem {
+    /// The seed this item's trace is generated from.
+    pub fn seed(&self) -> u64 {
+        trial_seed(self.cfg.base_seed, self.trial)
+    }
+
     fn key(&self) -> TrialKey {
+        // A fixed CSV trace ignores both the seed and the requested job
+        // count (`Workload::trace` replays the recorded realization), so
+        // neither may enter the key: with them, a `--runs 8` trace sweep
+        // would simulate the identical trial 8 times; without them, trial
+        // 0 computes and trials 1..8 are in-grid cache hits.
+        let (seed, jobs_per_run) = match &self.cfg.workload {
+            Workload::Synthetic(_) => (self.seed(), self.cfg.jobs_per_run),
+            Workload::Csv { jobs, .. } => (0, jobs.len()),
+        };
         TrialKey {
             policy: self.cell.policy.key(),
             topo: self.cell.topo,
-            scenario: self.cfg.scenario.name(),
-            seed: trial_seed(self.cfg.base_seed, self.trial),
-            jobs_per_run: self.cfg.jobs_per_run,
+            workload: self.cfg.workload.cache_key(),
+            seed,
+            jobs_per_run,
             fold_dims: self.cfg.fold_dims_enabled,
+        }
+    }
+
+    /// Simulate this item in-process: generate (or replay) the trace for
+    /// this trial's seed and run it. Every executor backend bottoms out
+    /// here — locally, or inside a remote `rfold worker`.
+    pub fn run(&self) -> TrialOutput {
+        let trace = self.cfg.workload.trace(self.cfg.jobs_per_run, self.seed());
+        let result = run_trial_raw(
+            self.cell.policy,
+            self.cell.topo,
+            &trace,
+            self.cfg.fold_dims_enabled,
+        );
+        TrialOutput { result, trace }
+    }
+}
+
+/// One trial from raw parts — the exact simulation a [`WorkItem::run`]
+/// performs, exposed so a pool worker can execute a decoded wire item
+/// through the same code path as the leader.
+pub fn run_trial_raw(
+    policy: PolicyHandle,
+    topo: ClusterTopo,
+    trace: &[JobSpec],
+    fold_dims_enabled: [bool; 3],
+) -> RunResult {
+    let mut sim_cfg = SimConfig::new(topo, policy);
+    sim_cfg.fold_dims_enabled = fold_dims_enabled;
+    Simulation::new(sim_cfg).run(trace)
+}
+
+/// Build the every-tenth-trial stderr liveness reporter shared by the
+/// executor backends (`prefix` tags the backend, e.g. `"sweep"` /
+/// `"pool"`): a paper-scale grid takes hours, and silence would be
+/// indistinguishable from a hang.
+pub fn progress_reporter(prefix: &'static str, total: usize) -> impl Fn(&WorkItem) + Sync {
+    let done = AtomicUsize::new(0);
+    move |it: &WorkItem| {
+        let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+        let step = (total / 10).max(1);
+        if d % step == 0 || d == total {
+            eprintln!(
+                "{prefix}: {d}/{total} trials done ({} {})",
+                it.cfg.workload.name(),
+                it.cell.label
+            );
         }
     }
 }
 
-/// Upper bound on the approximate bytes a cache keeps resident (256 MiB).
-/// A `TrialOutput` holds the full trace plus per-job outcomes and
-/// utilization samples (~100 KB at paper scale), so an unbounded
+/// Where a batch of fresh (cache-missed) work items gets computed. The
+/// contract every backend must honor:
+///
+/// * return exactly one output per input item, **in input order** — the
+///   caller's slot table depends on position stability;
+/// * each output must be bit-identical to `items[i].run()` — determinism
+///   across backends is what makes SWEEP rows byte-comparable between
+///   `--workers N` and `--pool host1,host2`;
+/// * progress/telemetry goes to stderr only.
+pub trait TrialExecutor: Sync {
+    /// Short backend tag for stderr diagnostics (e.g. `"local"`).
+    fn name(&self) -> &str;
+
+    /// Compute every item, position-stably.
+    fn execute(&self, items: &[WorkItem]) -> Vec<Arc<TrialOutput>>;
+}
+
+/// The in-process backend: `workers` OS threads (0 = one per core) racing
+/// on one atomic cursor over the item list — item granularity, so
+/// small-`runs` grids still saturate every core.
+pub struct LocalExecutor {
+    pub workers: usize,
+}
+
+impl LocalExecutor {
+    pub fn new(workers: usize) -> LocalExecutor {
+        LocalExecutor { workers }
+    }
+}
+
+impl TrialExecutor for LocalExecutor {
+    fn name(&self) -> &str {
+        "local"
+    }
+
+    fn execute(&self, items: &[WorkItem]) -> Vec<Arc<TrialOutput>> {
+        let total = items.len();
+        let progress = progress_reporter("sweep", total);
+        let requested = if self.workers == 0 {
+            auto_workers()
+        } else {
+            self.workers
+        };
+        let w = requested.clamp(1, total.max(1));
+        if w <= 1 {
+            return items
+                .iter()
+                .map(|it| {
+                    let out = Arc::new(it.run());
+                    progress(it);
+                    out
+                })
+                .collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let mut computed: Vec<Option<Arc<TrialOutput>>> = Vec::new();
+        computed.resize_with(total, || None);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..w)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            let f = cursor.fetch_add(1, Ordering::Relaxed);
+                            let Some(it) = items.get(f) else { break };
+                            local.push((f, Arc::new(it.run())));
+                            progress(it);
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (f, out) in h.join().expect("sweep worker panicked") {
+                    computed[f] = Some(out);
+                }
+            }
+        });
+        computed
+            .into_iter()
+            .map(|s| s.expect("queue fills every slot"))
+            .collect()
+    }
+}
+
+/// Upper bound on the approximate bytes the default caches keep resident
+/// (256 MiB). A `TrialOutput` holds the full trace plus per-job outcomes
+/// and utilization samples (~100 KB at paper scale), so an unbounded
 /// process-global cache would grow monotonically across `rfold all` /
 /// `make bench-full`. When an insert would exceed the bound the cache
-/// flushes wholesale (stderr note) — crude, but memory stays bounded,
-/// determinism is unaffected (a flushed trial re-simulates to identical
-/// bytes), and the reuse patterns that matter (Table 1 ↔ Figure 3/4
-/// overlap, repeated grids) fit comfortably under it.
+/// evicts its oldest half (stderr note), preserving keys pinned by grids
+/// still in flight; determinism is unaffected (an evicted trial
+/// re-simulates to identical bytes).
 pub const MAX_RESIDENT_BYTES: usize = 256 << 20;
 
-/// Resident entries plus their bookkept approximate footprint — one
-/// struct behind one mutex so the two can never drift.
+/// A resident entry plus its insertion sequence number (the eviction
+/// age — older entries go first).
+struct CacheEntry {
+    out: Arc<TrialOutput>,
+    seq: u64,
+}
+
+/// Resident entries plus their bookkept approximate footprint and the
+/// pin set — one struct behind one mutex so none of them can drift.
 struct CacheInner {
-    map: HashMap<TrialKey, Arc<TrialOutput>>,
+    map: HashMap<TrialKey, CacheEntry>,
     bytes: usize,
+    next_seq: u64,
+    /// Refcounted keys of grids currently inside [`run_queue`]: eviction
+    /// must not discard a trial that a not-yet-issued duplicate item in
+    /// an in-flight grid still references.
+    pinned: HashMap<TrialKey, usize>,
 }
 
 /// Memoized trial results keyed by [`TrialKey`], plus hit/miss counters.
 /// Thread-safe; the process-global instance ([`ResultCache::global`])
 /// makes repeated grids (Table 1 → Figure 4, repeated CLI subcommands in
 /// `rfold all`, overlapping bench sections) reuse each other's trials.
-/// Bounded by [`MAX_RESIDENT_BYTES`].
+/// Byte-bounded with oldest-half eviction (pinned keys survive).
 pub struct ResultCache {
     inner: Mutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    capacity: usize,
 }
 
 impl ResultCache {
     pub fn new() -> ResultCache {
+        ResultCache::with_capacity(MAX_RESIDENT_BYTES)
+    }
+
+    /// A cache with an explicit byte bound (tests shrink it to force
+    /// eviction without gigabytes of trials).
+    pub fn with_capacity(capacity: usize) -> ResultCache {
         ResultCache {
             inner: Mutex::new(CacheInner {
                 map: HashMap::new(),
                 bytes: 0,
+                next_seq: 0,
+                pinned: HashMap::new(),
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            capacity,
         }
     }
 
@@ -193,26 +385,69 @@ impl ResultCache {
     }
 
     fn get(&self, key: &TrialKey) -> Option<Arc<TrialOutput>> {
-        self.inner.lock().unwrap().map.get(key).cloned()
+        self.inner.lock().unwrap().map.get(key).map(|e| e.out.clone())
     }
 
+    /// Insert one trial, evicting the oldest unpinned half of the
+    /// resident set first if the byte bound would be exceeded.
     fn insert(&self, key: TrialKey, out: Arc<TrialOutput>) {
         let add = out.approx_bytes();
         let mut inner = self.inner.lock().unwrap();
-        if inner.bytes + add > MAX_RESIDENT_BYTES && !inner.map.is_empty() {
+        if inner.bytes + add > self.capacity && !inner.map.is_empty() {
+            let before = (inner.map.len(), inner.bytes);
+            // Oldest (smallest seq) unpinned entries first, capped at
+            // half the resident set. If everything is pinned the bound
+            // is allowed to overshoot: correctness of in-flight grids
+            // beats the memory target.
+            let mut ages: Vec<(u64, TrialKey)> = inner
+                .map
+                .iter()
+                .filter(|(k, _)| !inner.pinned.contains_key(*k))
+                .map(|(k, e)| (e.seq, k.clone()))
+                .collect();
+            ages.sort_unstable_by_key(|(seq, _)| *seq);
+            let target = inner.map.len().div_ceil(2);
+            for (_, k) in ages.into_iter().take(target) {
+                if let Some(e) = inner.map.remove(&k) {
+                    inner.bytes = inner.bytes.saturating_sub(e.out.approx_bytes());
+                }
+            }
             eprintln!(
-                "sweep: result cache flushed at {} trials / ~{} MiB (bound {} MiB)",
-                inner.map.len(),
+                "sweep: result cache evicted {} of {} trials (~{} -> ~{} MiB, bound {} MiB)",
+                before.0 - inner.map.len(),
+                before.0,
+                before.1 >> 20,
                 inner.bytes >> 20,
-                MAX_RESIDENT_BYTES >> 20
+                self.capacity >> 20
             );
-            inner.map.clear();
-            inner.bytes = 0;
         }
-        if let Some(old) = inner.map.insert(key, out) {
-            inner.bytes = inner.bytes.saturating_sub(old.approx_bytes());
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if let Some(old) = inner.map.insert(key, CacheEntry { out, seq }) {
+            inner.bytes = inner.bytes.saturating_sub(old.out.approx_bytes());
         }
         inner.bytes += add;
+    }
+
+    /// Pin `keys` against eviction for the duration of a grid (refcounted;
+    /// call [`ResultCache::unpin`] with the same keys when done).
+    fn pin(&self, keys: &[TrialKey]) {
+        let mut inner = self.inner.lock().unwrap();
+        for k in keys {
+            *inner.pinned.entry(k.clone()).or_insert(0) += 1;
+        }
+    }
+
+    fn unpin(&self, keys: &[TrialKey]) {
+        let mut inner = self.inner.lock().unwrap();
+        for k in keys {
+            if let Some(c) = inner.pinned.get_mut(k) {
+                *c -= 1;
+                if *c == 0 {
+                    inner.pinned.remove(k);
+                }
+            }
+        }
     }
 
     /// Cached trial count.
@@ -254,36 +489,47 @@ impl Default for ResultCache {
     }
 }
 
-/// One trial: generate the scenario trace for this trial's seed, simulate.
-fn run_trial(cell: Cell, cfg: &SweepConfig, trial: usize) -> TrialOutput {
-    let tc = cfg
-        .scenario
-        .trace_config(cfg.jobs_per_run, trial_seed(cfg.base_seed, trial));
-    let trace = generate(&tc);
-    let mut sim_cfg = SimConfig::new(cell.topo, cell.policy);
-    sim_cfg.fold_dims_enabled = cfg.fold_dims_enabled;
-    let result = Simulation::new(sim_cfg).run(&trace);
-    TrialOutput { result, trace }
-}
-
 /// Where slot `i` of a queue run gets its output from.
 enum Source {
     /// Served by the cache (or an identical item earlier in this grid).
     Cached(Arc<TrialOutput>),
-    /// Computed by the queue; index into the fresh-output table.
+    /// Computed by the executor; index into the fresh-output table.
     Fresh(usize),
 }
 
-/// Run a flattened item list through the shared work queue. Slot `i` of
+/// Run a flattened item list against a cache and an executor. Slot `i` of
 /// the returned vector always holds item `i`'s output, so results are
-/// position-stable for any worker count; items whose [`TrialKey`] repeats
-/// (within the list or in the cache) simulate exactly once.
-fn run_queue(items: &[WorkItem], workers: usize, cache: &ResultCache) -> Vec<Arc<TrialOutput>> {
+/// position-stable for any backend; items whose [`TrialKey`] repeats
+/// (within the list or in the cache) simulate exactly once. The item
+/// keys stay pinned in the cache while items are still being issued
+/// (resolve + execute); the pins are released before results are
+/// inserted so the grid's own inserts can evict normally.
+/// Drop-guard releasing a grid's cache pins even if the executor (or a
+/// collection assert) panics mid-queue — a leaked pin would permanently
+/// exempt its key from eviction in the process-global cache.
+struct PinGuard<'a> {
+    cache: &'a ResultCache,
+    keys: &'a [TrialKey],
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        self.cache.unpin(self.keys);
+    }
+}
+
+fn run_queue(
+    items: &[WorkItem],
+    cache: &ResultCache,
+    executor: &dyn TrialExecutor,
+) -> Vec<Arc<TrialOutput>> {
     let keys: Vec<TrialKey> = items.iter().map(WorkItem::key).collect();
+    cache.pin(&keys);
+    let _pins = PinGuard { cache, keys: &keys };
 
     // Resolve each slot: cache hit, duplicate of an earlier slot, or a
-    // fresh item for the queue. `fresh[f]` is the item index computed by
-    // queue position `f`.
+    // fresh item for the executor. `fresh[f]` is the item index computed
+    // by executor position `f`.
     let mut sources: Vec<Source> = Vec::with_capacity(items.len());
     let mut fresh: Vec<usize> = Vec::new();
     let mut fresh_of: HashMap<&TrialKey, usize> = HashMap::new();
@@ -304,69 +550,24 @@ fn run_queue(items: &[WorkItem], workers: usize, cache: &ResultCache) -> Vec<Arc
     cache.hits.fetch_add(hits, Ordering::Relaxed);
     cache.misses.fetch_add(fresh.len() as u64, Ordering::Relaxed);
 
-    // Drain the queue: workers race on one atomic cursor over the fresh
-    // list — item granularity, so small-`runs` grids still saturate every
-    // worker. Outputs come back tagged with their queue position; no
-    // ordering or result content ever depends on scheduling.
-    //
-    // Liveness goes to stderr only: roughly every tenth completed trial a
-    // worker reports the running count (a paper-scale grid takes hours —
-    // silence would be indistinguishable from a hang).
-    let total = fresh.len();
-    let done = AtomicUsize::new(0);
-    let progress = |it: &WorkItem| {
-        let d = done.fetch_add(1, Ordering::Relaxed) + 1;
-        let step = (total / 10).max(1);
-        if d % step == 0 || d == total {
-            eprintln!(
-                "sweep: {d}/{total} trials done ({} {})",
-                it.cfg.scenario.name(),
-                it.cell.label
-            );
-        }
-    };
-    let mut computed: Vec<Option<Arc<TrialOutput>>> = Vec::new();
-    computed.resize_with(fresh.len(), || None);
+    let mut computed: Vec<Arc<TrialOutput>> = Vec::new();
     if !fresh.is_empty() {
-        let requested = if workers == 0 { auto_workers() } else { workers };
-        let w = requested.clamp(1, fresh.len());
-        if w == 1 {
-            for (slot, &i) in computed.iter_mut().zip(&fresh) {
-                let it = &items[i];
-                *slot = Some(Arc::new(run_trial(it.cell, &it.cfg, it.trial)));
-                progress(it);
-            }
-        } else {
-            let cursor = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..w)
-                    .map(|_| {
-                        scope.spawn(|| {
-                            let mut local = Vec::new();
-                            loop {
-                                let f = cursor.fetch_add(1, Ordering::Relaxed);
-                                let Some(&i) = fresh.get(f) else { break };
-                                let it = &items[i];
-                                local.push((
-                                    f,
-                                    Arc::new(run_trial(it.cell, &it.cfg, it.trial)),
-                                ));
-                                progress(it);
-                            }
-                            local
-                        })
-                    })
-                    .collect();
-                for h in handles {
-                    for (f, out) in h.join().expect("sweep worker panicked") {
-                        computed[f] = Some(out);
-                    }
-                }
-            });
-        }
+        let fresh_items: Vec<WorkItem> = fresh.iter().map(|&i| items[i].clone()).collect();
+        computed = executor.execute(&fresh_items);
+        assert_eq!(
+            computed.len(),
+            fresh_items.len(),
+            "executor '{}' must fill every fresh slot",
+            executor.name()
+        );
+        // Every item is now issued and its output held by an `Arc`, so
+        // the pins have done their job — release them *before* the
+        // insert loop, or a paper-scale grid (whose own keys can exceed
+        // the byte bound) would exempt itself from eviction and overshoot
+        // the cache's memory target until some later grid's insert.
+        drop(_pins);
         for (f, &i) in fresh.iter().enumerate() {
-            let out = computed[f].clone().expect("queue fills every fresh slot");
-            cache.insert(keys[i].clone(), out);
+            cache.insert(keys[i].clone(), computed[f].clone());
         }
     }
 
@@ -374,22 +575,27 @@ fn run_queue(items: &[WorkItem], workers: usize, cache: &ResultCache) -> Vec<Arc
         .into_iter()
         .map(|s| match s {
             Source::Cached(out) => out,
-            Source::Fresh(f) => computed[f].clone().expect("queue fills every fresh slot"),
+            Source::Fresh(f) => computed[f].clone(),
         })
         .collect()
 }
 
 /// Run every trial of one cell through the work queue against an explicit
-/// cache. Slot `r` of the returned vector always holds trial `r`.
+/// cache (in-process, `cfg.workers` threads). Slot `r` of the returned
+/// vector always holds trial `r`.
 pub fn run_trials_with(
     cell: Cell,
     cfg: &SweepConfig,
     cache: &ResultCache,
 ) -> Vec<Arc<TrialOutput>> {
     let items: Vec<WorkItem> = (0..cfg.runs)
-        .map(|trial| WorkItem { cell, cfg: *cfg, trial })
+        .map(|trial| WorkItem {
+            cell,
+            cfg: cfg.clone(),
+            trial,
+        })
         .collect();
-    run_queue(&items, cfg.workers, cache)
+    run_queue(&items, cache, &LocalExecutor::new(cfg.workers))
 }
 
 /// [`run_trials_with`] against the process-global cache.
@@ -410,12 +616,13 @@ pub fn run_cell_sharded(cell: Cell, cfg: &SweepConfig) -> CellSummary {
     summarize(cell.label, &pairs)
 }
 
-/// One row of the sweep grid: a (scenario, policy, topology) cell summary
+/// One row of the sweep grid: a (workload, policy, topology) cell summary
 /// plus the knobs that produced it. Serialized to machine-readable JSON by
 /// `metrics::report::sweep_row_json`.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
-    pub scenario: &'static str,
+    /// Workload report name (scenario name or trace-file stem).
+    pub scenario: String,
     pub cell: &'static str,
     pub policy: &'static str,
     pub topo: String,
@@ -437,44 +644,70 @@ pub fn topo_tag(topo: ClusterTopo) -> String {
     }
 }
 
-/// Run the full policy × topology × scenario grid on the global work
-/// queue: every (scenario, cell, trial) item is pulled by `workers` OS
-/// threads (0 = auto) from one shared cursor, deduplicated through
-/// `cache`. Progress, timing and cache statistics go to stderr so the
-/// returned rows (and anything printed from them) stay byte-identical
-/// across worker counts and cache states.
+/// [`run_grid_with`] on the in-process executor: every (workload, cell,
+/// trial) item is pulled by `workers` OS threads (0 = auto) from one
+/// shared cursor.
 pub fn run_grid(
     cells: &[Cell],
-    scenarios: &[Scenario],
+    workloads: &[Workload],
     runs: usize,
     jobs_per_run: usize,
     base_seed: u64,
     workers: usize,
     cache: &ResultCache,
 ) -> Vec<SweepRow> {
+    run_grid_with(
+        cells,
+        workloads,
+        runs,
+        jobs_per_run,
+        base_seed,
+        cache,
+        &LocalExecutor::new(workers),
+    )
+}
+
+/// Run the full policy × topology × workload grid: flatten into
+/// (workload, cell, trial) items, deduplicate through `cache`, compute
+/// the misses on `executor` (in-process threads or the TCP pool), and
+/// aggregate position-stably. Progress, timing and cache statistics go
+/// to stderr so the returned rows (and anything printed from them) stay
+/// byte-identical across executors and cache states.
+pub fn run_grid_with(
+    cells: &[Cell],
+    workloads: &[Workload],
+    runs: usize,
+    jobs_per_run: usize,
+    base_seed: u64,
+    cache: &ResultCache,
+    executor: &dyn TrialExecutor,
+) -> Vec<SweepRow> {
     if runs == 0 {
         return Vec::new();
     }
-    let mut items = Vec::with_capacity(cells.len() * scenarios.len() * runs);
-    for &scenario in scenarios {
+    let mut items = Vec::with_capacity(cells.len() * workloads.len() * runs);
+    for workload in workloads {
         for &cell in cells {
             let mut cfg = SweepConfig::new(runs, jobs_per_run, base_seed);
-            cfg.workers = workers;
-            cfg.scenario = scenario;
+            cfg.workload = workload.clone();
             for trial in 0..runs {
-                items.push(WorkItem { cell, cfg, trial });
+                items.push(WorkItem {
+                    cell,
+                    cfg: cfg.clone(),
+                    trial,
+                });
             }
         }
     }
     let (hits0, misses0) = (cache.hits(), cache.misses());
     let t0 = Instant::now();
-    let slots = run_queue(&items, workers, cache);
+    let slots = run_queue(&items, cache, executor);
 
-    // Aggregate per cell: slots are grid-ordered (scenario-major, then
+    // Aggregate per cell: slots are grid-ordered (workload-major, then
     // cell, then trial), so each cell owns one contiguous `runs` chunk.
-    let mut rows = Vec::with_capacity(cells.len() * scenarios.len());
+    let mut rows = Vec::with_capacity(cells.len() * workloads.len());
     let mut chunks = slots.chunks(runs);
-    for &scenario in scenarios {
+    for workload in workloads {
         for &cell in cells {
             let trials = chunks.next().expect("one slot chunk per cell");
             let pairs: Vec<(&RunResult, &[JobSpec])> = trials
@@ -482,22 +715,27 @@ pub fn run_grid(
                 .map(|t| (&t.result, t.trace.as_slice()))
                 .collect();
             rows.push(SweepRow {
-                scenario: scenario.name(),
+                scenario: workload.name().to_string(),
                 cell: cell.label,
                 policy: cell.policy.name(),
                 topo: topo_tag(cell.topo),
-                runs,
-                jobs_per_run,
+                // What a trial actually saw, not the requested knobs: a
+                // fixed trace ignores `--jobs` and replays one recording
+                // for every seed, so its rows must not claim e.g. 256
+                // jobs or 8 independent runs for a 12-job file.
+                runs: workload.num_runs(runs),
+                jobs_per_run: workload.num_jobs(jobs_per_run),
                 base_seed,
                 summary: summarize(cell.label, &pairs),
             });
         }
     }
     eprintln!(
-        "sweep: {} rows ({} work items) in {:>6.1}s — cache: {} hits / {} misses \
-         this grid, {} trials resident",
+        "sweep: {} rows ({} work items, {} executor) in {:>6.1}s — cache: {} hits / {} \
+         misses this grid, {} trials resident",
         rows.len(),
         items.len(),
+        executor.name(),
         t0.elapsed().as_secs_f64(),
         cache.hits() - hits0,
         cache.misses() - misses0,
@@ -510,6 +748,7 @@ pub fn run_grid(
 mod tests {
     use super::*;
     use crate::placement::builtins;
+    use crate::trace::gen::{generate, TraceConfig};
 
     fn tiny_cell() -> Cell {
         Cell {
@@ -517,6 +756,10 @@ mod tests {
             topo: ClusterTopo::static_4096(),
             label: "Folding (16^3)",
         }
+    }
+
+    fn paper_default() -> Vec<Workload> {
+        vec![Workload::Synthetic(Scenario::PaperDefault)]
     }
 
     #[test]
@@ -558,7 +801,7 @@ mod tests {
         assert!(run_trials_with(tiny_cell(), &cfg, &ResultCache::new()).is_empty());
         let rows = run_grid(
             &[tiny_cell()],
-            &[Scenario::PaperDefault],
+            &paper_default(),
             0,
             10,
             1,
@@ -575,7 +818,7 @@ mod tests {
         // must be identical.
         let cache = ResultCache::new();
         let cells = [tiny_cell(), tiny_cell()];
-        let rows = run_grid(&cells, &[Scenario::PaperDefault], 3, 25, 7, 2, &cache);
+        let rows = run_grid(&cells, &paper_default(), 3, 25, 7, 2, &cache);
         assert_eq!(rows.len(), 2);
         assert_eq!(cache.misses(), 3, "3 unique trials simulate");
         assert_eq!(cache.hits(), 3, "the duplicate cell's 3 slots are hits");
@@ -588,10 +831,10 @@ mod tests {
     fn cache_survives_across_grids() {
         let cache = ResultCache::new();
         let cells = [tiny_cell()];
-        let first = run_grid(&cells, &[Scenario::PaperDefault], 2, 25, 7, 2, &cache);
+        let first = run_grid(&cells, &paper_default(), 2, 25, 7, 2, &cache);
         assert_eq!(cache.misses(), 2);
         assert!(cache.resident_bytes() > 0, "byte accounting must track inserts");
-        let again = run_grid(&cells, &[Scenario::PaperDefault], 2, 25, 7, 8, &cache);
+        let again = run_grid(&cells, &paper_default(), 2, 25, 7, 8, &cache);
         assert_eq!(cache.misses(), 2, "second grid is all hits");
         // Cold grid: 0 hits / 2 misses; warm grid: 2 hits / 0 misses.
         assert_eq!(cache.hits(), 2);
@@ -608,7 +851,7 @@ mod tests {
         let cache = ResultCache::new();
         let a = tiny_cell();
         let b = Cell { label: "same cell, other name", ..a };
-        let rows = run_grid(&[a, b], &[Scenario::PaperDefault], 2, 20, 5, 0, &cache);
+        let rows = run_grid(&[a, b], &paper_default(), 2, 20, 5, 0, &cache);
         assert_eq!(cache.misses(), 2);
         assert_eq!(rows[0].summary.avg_jcr_pct, rows[1].summary.avg_jcr_pct);
         assert_eq!(rows[0].cell, "Folding (16^3)");
@@ -628,6 +871,100 @@ mod tests {
         cfg.fold_dims_enabled = [false, false, false];
         let _ = run_trials_with(cell, &cfg, &cache);
         assert_eq!(cache.misses(), 4, "ablation knobs must not collide");
+    }
+
+    #[test]
+    fn csv_workloads_key_on_content_not_stem() {
+        // Two file-backed workloads with the same stem but different jobs
+        // must occupy distinct cache keys; re-running the first must hit.
+        let mk = |seed: u64| {
+            generate(&TraceConfig {
+                num_jobs: 10,
+                seed,
+                ..Default::default()
+            })
+        };
+        let wa = Workload::from_jobs("trace".into(), mk(1));
+        let wb = Workload::from_jobs("trace".into(), mk(2));
+        let cache = ResultCache::new();
+        // A fixed trace ignores the trial seed, so `runs = 2` is one
+        // simulation plus one in-grid hit — not two simulations.
+        let rows_a = run_grid(&[tiny_cell()], &[wa.clone()], 2, 10, 3, 1, &cache);
+        assert_eq!(cache.misses(), 1, "fixed traces simulate once per cell");
+        assert_eq!(cache.hits(), 1, "the second trial replays trial 0");
+        let rows_b = run_grid(&[tiny_cell()], &[wb], 2, 10, 3, 1, &cache);
+        assert_eq!(cache.misses(), 2, "same stem, different content: no collision");
+        let again = run_grid(&[tiny_cell()], &[wa], 2, 10, 3, 1, &cache);
+        assert_eq!(cache.misses(), 2, "identical content replays from cache");
+        assert_eq!(rows_a[0].scenario, "trace");
+        assert_eq!(rows_b[0].scenario, "trace");
+        assert_eq!(rows_a[0].runs, 1, "a fixed trace is one realization, not 2");
+        assert_eq!(rows_a[0].jobs_per_run, 10, "the trace's own job count");
+        assert_eq!(
+            rows_a[0].summary.avg_jcr_pct,
+            again[0].summary.avg_jcr_pct
+        );
+    }
+
+    #[test]
+    fn eviction_drops_oldest_half_but_never_pinned_keys() {
+        // A cache that holds roughly two trials: inserting a stream of
+        // distinct trials must evict the oldest, yet a pinned key must
+        // survive every eviction.
+        let sample = WorkItem {
+            cell: tiny_cell(),
+            cfg: SweepConfig::new(1, 12, 1),
+            trial: 0,
+        };
+        let bytes = sample.run().approx_bytes();
+        let cache = ResultCache::with_capacity(bytes * 2 + bytes / 2);
+        let item = |trial: usize| WorkItem {
+            cell: tiny_cell(),
+            cfg: SweepConfig::new(8, 12, 1),
+            trial,
+        };
+        let pinned_key = item(0).key();
+        cache.pin(std::slice::from_ref(&pinned_key));
+        for trial in 0..8 {
+            let it = item(trial);
+            cache.insert(it.key(), Arc::new(it.run()));
+        }
+        assert!(
+            cache.len() < 8,
+            "a 2-trial capacity must have forced evictions ({} resident)",
+            cache.len()
+        );
+        assert!(
+            cache.get(&pinned_key).is_some(),
+            "pinned key must survive every eviction"
+        );
+        cache.unpin(std::slice::from_ref(&pinned_key));
+        // Once unpinned, the key is evictable again like any other.
+        for trial in 8..16 {
+            let it = item(trial);
+            cache.insert(it.key(), Arc::new(it.run()));
+        }
+        assert!(cache.get(&pinned_key).is_none(), "unpinned oldest entry evicts");
+    }
+
+    #[test]
+    fn pins_are_refcounted() {
+        let key = WorkItem {
+            cell: tiny_cell(),
+            cfg: SweepConfig::new(1, 10, 1),
+            trial: 0,
+        }
+        .key();
+        let cache = ResultCache::new();
+        cache.pin(std::slice::from_ref(&key));
+        cache.pin(std::slice::from_ref(&key));
+        cache.unpin(std::slice::from_ref(&key));
+        assert!(
+            cache.inner.lock().unwrap().pinned.contains_key(&key),
+            "one of two pins released: still pinned"
+        );
+        cache.unpin(std::slice::from_ref(&key));
+        assert!(!cache.inner.lock().unwrap().pinned.contains_key(&key));
     }
 
     #[test]

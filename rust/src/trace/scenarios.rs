@@ -173,7 +173,37 @@ pub enum Workload {
         /// Report name (the file stem).
         name: String,
         jobs: Arc<Vec<JobSpec>>,
+        /// FNV-1a hash of the job list, computed once at load time. Part
+        /// of the sweep cache key: two different files sharing a stem
+        /// must never share trial results.
+        content_hash: u64,
     },
+}
+
+/// FNV-1a over the full job list (ids, arrival/duration/comm_frac bits,
+/// shape dims). Cheap, dependency-free, and stable across processes —
+/// exactly what the sweep cache key and the pool wire format need.
+pub fn jobs_content_hash(jobs: &[JobSpec]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for j in jobs {
+        eat(j.id);
+        eat(j.arrival.to_bits());
+        eat(j.duration.to_bits());
+        let d = j.shape.dims();
+        eat(d.0[0] as u64);
+        eat(d.0[1] as u64);
+        eat(d.0[2] as u64);
+        eat(j.comm_frac.to_bits());
+    }
+    h
 }
 
 impl Workload {
@@ -193,10 +223,18 @@ impl Workload {
             .and_then(|s| s.to_str())
             .unwrap_or("trace")
             .to_string();
-        Ok(Workload::Csv {
+        Ok(Workload::from_jobs(name, jobs))
+    }
+
+    /// Wrap an in-memory job list as a fixed-trace workload (the pool
+    /// worker's decode path; [`Workload::from_csv`] routes through here).
+    pub fn from_jobs(name: String, jobs: Vec<JobSpec>) -> Workload {
+        let content_hash = jobs_content_hash(&jobs);
+        Workload::Csv {
             name,
             jobs: Arc::new(jobs),
-        })
+            content_hash,
+        }
     }
 
     /// Report name: the scenario name or the trace file stem.
@@ -204,6 +242,21 @@ impl Workload {
         match self {
             Workload::Synthetic(sc) => sc.name(),
             Workload::Csv { name, .. } => name,
+        }
+    }
+
+    /// Owned cache-key component for the sweep's `TrialKey`. Synthetic
+    /// scenarios are fully identified by their registry name (the name
+    /// pins every generator parameter); CSV workloads add the job-list
+    /// content hash so two different files with the same stem can never
+    /// collide, and carry a `csv:` prefix so a file named
+    /// `paper-default.csv` cannot impersonate the synthetic scenario.
+    pub fn cache_key(&self) -> String {
+        match self {
+            Workload::Synthetic(sc) => sc.name().to_string(),
+            Workload::Csv {
+                name, content_hash, ..
+            } => format!("csv:{name}:{content_hash:016x}"),
         }
     }
 
@@ -223,6 +276,18 @@ impl Workload {
         match self {
             Workload::Synthetic(_) => requested,
             Workload::Csv { jobs, .. } => jobs.len(),
+        }
+    }
+
+    /// Number of *distinct* trial realizations `requested` runs produce:
+    /// `requested` for synthetic workloads (each seed generates a new
+    /// trace), at most 1 for a fixed trace (every trial replays the same
+    /// recording). Report rows use this so a trace-file sweep cannot
+    /// overstate its statistical support.
+    pub fn num_runs(&self, requested: usize) -> usize {
+        match self {
+            Workload::Synthetic(_) => requested,
+            Workload::Csv { .. } => requested.min(1),
         }
     }
 }
@@ -300,6 +365,33 @@ mod tests {
         std::fs::remove_file(&tmp).ok();
 
         assert!(Workload::from_csv(std::path::Path::new("/no/such/file.csv")).is_err());
+    }
+
+    #[test]
+    fn cache_keys_distinguish_files_by_content_not_stem() {
+        let mk = |seed: u64| {
+            generate(&TraceConfig {
+                num_jobs: 8,
+                seed,
+                ..Default::default()
+            })
+        };
+        let a = Workload::from_jobs("trace".into(), mk(1));
+        let b = Workload::from_jobs("trace".into(), mk(2));
+        let a2 = Workload::from_jobs("trace".into(), mk(1));
+        assert_eq!(a.name(), b.name(), "same stem");
+        assert_ne!(a.cache_key(), b.cache_key(), "different content must not collide");
+        assert_eq!(a.cache_key(), a2.cache_key(), "same content, same key");
+        // A CSV stem equal to a scenario name cannot impersonate it.
+        let fake = Workload::from_jobs("paper-default".into(), mk(3));
+        assert_ne!(
+            fake.cache_key(),
+            Workload::Synthetic(Scenario::PaperDefault).cache_key()
+        );
+        assert_eq!(
+            Workload::Synthetic(Scenario::PaperDefault).cache_key(),
+            "paper-default"
+        );
     }
 
     #[test]

@@ -55,6 +55,34 @@ impl Json {
         self.as_obj().and_then(|m| m.get(key))
     }
 
+    /// A `u64` carried as a decimal string. JSON numbers travel as `f64`
+    /// here, which silently corrupts integers above 2^53 — seeds and job
+    /// ids must survive the wire exactly, so they ride as strings.
+    pub fn u64_str(v: u64) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Read back a [`Json::u64_str`] value.
+    pub fn as_u64_str(&self) -> Option<u64> {
+        self.as_str().and_then(|s| s.parse().ok())
+    }
+
+    /// An `f64` carried bit-exactly as its IEEE-754 bit pattern in a
+    /// decimal string. The distributed sweep's determinism contract is
+    /// *byte*-identical rows for any backend, so wire floats must
+    /// round-trip exactly — including NaN payloads, which no decimal
+    /// rendering preserves.
+    pub fn f64_bits(v: f64) -> Json {
+        Json::Str(v.to_bits().to_string())
+    }
+
+    /// Read back a [`Json::f64_bits`] value.
+    pub fn as_f64_bits(&self) -> Option<f64> {
+        self.as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .map(f64::from_bits)
+    }
+
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -339,5 +367,22 @@ mod tests {
     fn number_formats() {
         assert_eq!(Json::parse("-1.5e2").unwrap().as_f64(), Some(-150.0));
         assert_eq!(Json::parse("0").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn u64_str_roundtrips_above_2_pow_53() {
+        let v = u64::MAX - 3; // would corrupt through an f64
+        let j = Json::parse(&Json::u64_str(v).to_string()).unwrap();
+        assert_eq!(j.as_u64_str(), Some(v));
+        assert_eq!(Json::Num(1.0).as_u64_str(), None);
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exactly() {
+        for v in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NAN, f64::INFINITY] {
+            let j = Json::parse(&Json::f64_bits(v).to_string()).unwrap();
+            let back = j.as_f64_bits().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
     }
 }

@@ -83,6 +83,25 @@ impl WeightedCdf {
         self.samples.is_empty()
     }
 
+    /// The raw `(value, weight)` samples in insertion order — the full
+    /// state of the CDF (the quantile index is derived), which is what
+    /// the distributed sweep ships over the wire.
+    pub fn samples(&self) -> &[(f64, f64)] {
+        &self.samples
+    }
+
+    /// Rebuild a CDF from samples previously read via
+    /// [`WeightedCdf::samples`]. Zero/negative-weight entries are dropped
+    /// exactly as [`WeightedCdf::push`] would drop them, so a wire
+    /// round-trip is state-identical and quantiles stay byte-identical.
+    pub fn from_samples(samples: Vec<(f64, f64)>) -> Self {
+        let mut cdf = WeightedCdf::new();
+        for (v, w) in samples {
+            cdf.push(v, w);
+        }
+        cdf
+    }
+
     pub fn total_weight(&self) -> f64 {
         self.samples.iter().map(|s| s.1).sum()
     }
@@ -257,6 +276,21 @@ mod tests {
         cdf.push(5.0, 10.0); // must invalidate it
         assert_eq!(cdf.quantile(1.0), 5.0);
         assert_eq!(cdf.quantile(0.0), 1.0);
+    }
+
+    #[test]
+    fn samples_roundtrip_preserves_quantiles() {
+        let mut cdf = WeightedCdf::new();
+        let mut r = crate::util::Pcg64::seeded(23);
+        for _ in 0..200 {
+            cdf.push(r.f64(), r.f64() + 1e-3);
+        }
+        let back = WeightedCdf::from_samples(cdf.samples().to_vec());
+        for i in 0..=50 {
+            let q = i as f64 / 50.0;
+            assert_eq!(cdf.quantile(q).to_bits(), back.quantile(q).to_bits());
+        }
+        assert_eq!(cdf.mean().to_bits(), back.mean().to_bits());
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! End-to-end distributed sweep contracts:
+//!
+//! * a grid fanned out to in-process TCP workers must emit SWEEP rows
+//!   byte-identical to `--workers 1` on the leader — the determinism
+//!   guarantee that makes `--pool` a drop-in scale-out;
+//! * a worker dying mid-grid must cost retries, never rows: the
+//!   survivors (or the leader itself) pick up the orphaned items;
+//! * `--trace-file` workloads flow through the sweep result cache with
+//!   content-hashed keys — identical files hit, distinct files with the
+//!   same stem never collide (the ROADMAP cache-key bugfix).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+
+use rfold::coordinator::pool::{self, PoolExecutor};
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+use rfold::sim::sweep::{self, ResultCache};
+use rfold::trace::gen::{generate, TraceConfig};
+use rfold::trace::scenarios::{Scenario, Workload};
+
+/// Cheap sub-grid: one static cell and one reconfigurable cell cross the
+/// wire format's topology variants without long runtimes.
+fn cells() -> Vec<exp::Cell> {
+    exp::table1_cells()
+        .into_iter()
+        .filter(|c| matches!(c.label, "Folding (16^3)" | "Reconfig (4^3)"))
+        .collect()
+}
+
+fn rows_local(workloads: &[Workload]) -> Vec<String> {
+    let rows = sweep::run_grid(&cells(), workloads, 2, 30, 5, 1, &ResultCache::new());
+    rows.iter().map(report::sweep_row_json).collect()
+}
+
+fn rows_pooled(workloads: &[Workload], executor: &PoolExecutor) -> Vec<String> {
+    let rows = sweep::run_grid_with(
+        &cells(),
+        workloads,
+        2,
+        30,
+        5,
+        &ResultCache::new(),
+        executor,
+    );
+    rows.iter().map(report::sweep_row_json).collect()
+}
+
+#[test]
+fn two_tcp_workers_match_local_bytes() {
+    let a = pool::spawn_worker().unwrap();
+    let b = pool::spawn_worker().unwrap();
+    let workloads = [
+        Workload::Synthetic(Scenario::PaperDefault),
+        Workload::Synthetic(Scenario::UniformSmall),
+    ];
+    let executor = PoolExecutor::new(vec![a.to_string(), b.to_string()]);
+    let pooled = rows_pooled(&workloads, &executor);
+    let local = rows_local(&workloads);
+    assert_eq!(local.len(), pooled.len());
+    for (l, p) in local.iter().zip(&pooled) {
+        assert_eq!(l, p, "SWEEP row differs between --workers 1 and a 2-worker pool");
+    }
+    let stats = executor.stats();
+    let completed: usize = stats.workers.iter().map(|w| w.completed).sum();
+    // 2 cells × 2 workloads × 2 runs = 8 unique trials, each computed
+    // exactly once, somewhere.
+    assert_eq!(completed + stats.leader_fallback, 8, "{stats:?}");
+    assert!(
+        stats.workers.iter().all(|w| w.connected),
+        "both workers served: {stats:?}"
+    );
+}
+
+#[test]
+fn csv_workload_ships_inline_and_matches_local() {
+    // A file-backed workload must survive the wire (jobs ship inline, no
+    // shared filesystem) and produce local-identical bytes.
+    let jobs = generate(&TraceConfig {
+        num_jobs: 18,
+        seed: 31,
+        ..Default::default()
+    });
+    let workloads = [Workload::from_jobs("wire-trace".into(), jobs)];
+    let a = pool::spawn_worker().unwrap();
+    let executor = PoolExecutor::new(vec![a.to_string()]);
+    let pooled = rows_pooled(&workloads, &executor);
+    let local = rows_local(&workloads);
+    assert_eq!(local, pooled);
+    assert!(pooled[0].contains("\"scenario\":\"wire-trace\""), "{}", pooled[0]);
+}
+
+/// A worker that honestly serves `limit` trials through the library's own
+/// dispatch, then drops the connection mid-grid.
+fn spawn_flaky_worker(limit: usize) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            let mut out = stream.try_clone().unwrap();
+            let mut served = 0usize;
+            for line in BufReader::new(stream).lines() {
+                let Ok(line) = line else { break };
+                if served >= limit {
+                    break; // die mid-grid, connection dropped
+                }
+                match pool::worker_dispatch(line.trim()) {
+                    Some(reply) => {
+                        if writeln!(out, "{reply}").is_err() {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+                served += 1;
+            }
+        }
+    });
+    addr
+}
+
+#[test]
+fn worker_death_mid_grid_is_retried_not_lost() {
+    // A worker that dies after two trials next to a healthy one: whoever
+    // ends up holding the orphaned items (the survivor via the retry
+    // queue, or the leader), the rows must not change. Which worker
+    // observes the death is a scheduling race, so this test asserts the
+    // byte contract plus conservation of trials only.
+    let flaky = spawn_flaky_worker(2);
+    let healthy = pool::spawn_worker().unwrap();
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let executor = PoolExecutor::new(vec![flaky.to_string(), healthy.to_string()]);
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(
+        rows_local(&workloads),
+        pooled,
+        "rows must be byte-identical even with a mid-grid worker death"
+    );
+    let stats = executor.stats();
+    let completed: usize = stats.workers.iter().map(|w| w.completed).sum();
+    // 2 cells × 1 workload × 2 runs = 4 unique trials.
+    assert_eq!(completed + stats.leader_fallback, 4, "{stats:?}");
+}
+
+#[test]
+fn sole_worker_death_is_observed_and_survived() {
+    // With only the flaky worker in the pool, it is guaranteed to receive
+    // a third item and die mid-grid; the leader must absorb the orphans.
+    let flaky = spawn_flaky_worker(2);
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let executor = PoolExecutor::new(vec![flaky.to_string()]);
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(rows_local(&workloads), pooled);
+    let stats = executor.stats();
+    assert!(stats.workers[0].died, "{stats:?}");
+    assert_eq!(stats.workers[0].completed, 2, "{stats:?}");
+    assert_eq!(
+        stats.workers[0].completed + stats.leader_fallback,
+        4,
+        "leader picks up everything the dead worker dropped: {stats:?}"
+    );
+}
+
+#[test]
+fn unreachable_pool_falls_back_to_leader() {
+    // Bind-then-drop yields a port that refuses connections.
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let workloads = [Workload::Synthetic(Scenario::CommHeavy)];
+    let executor = PoolExecutor::new(vec![dead.to_string()]);
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(
+        rows_local(&workloads),
+        pooled,
+        "an unreachable pool must degrade to leader-local bytes, not fail"
+    );
+    let stats = executor.stats();
+    assert!(stats.leader_fallback > 0, "{stats:?}");
+    assert!(stats.workers.iter().all(|w| !w.connected));
+}
+
+#[test]
+fn trace_files_hit_the_cache_and_never_collide_by_stem() {
+    // Two files with the same stem but different content, plus a replay
+    // of the first: the replay is all hits, the second file all misses.
+    let dir_a = std::env::temp_dir().join("rfold_pool_a");
+    let dir_b = std::env::temp_dir().join("rfold_pool_b");
+    std::fs::create_dir_all(&dir_a).unwrap();
+    std::fs::create_dir_all(&dir_b).unwrap();
+    let path_a = dir_a.join("trace.csv");
+    let path_b = dir_b.join("trace.csv");
+    let mk = |seed: u64| {
+        generate(&TraceConfig {
+            num_jobs: 12,
+            seed,
+            ..Default::default()
+        })
+    };
+    rfold::trace::io::write_csv(&path_a, &mk(1)).unwrap();
+    rfold::trace::io::write_csv(&path_b, &mk(2)).unwrap();
+    let wa = Workload::from_csv(&path_a).unwrap();
+    let wb = Workload::from_csv(&path_b).unwrap();
+    assert_eq!(wa.name(), wb.name(), "same stem");
+    assert_ne!(wa.cache_key(), wb.cache_key(), "distinct files, distinct keys");
+
+    let cells = cells();
+    let cache = ResultCache::new();
+    let rows_a = sweep::run_grid(&cells, &[wa.clone()], 2, 0, 5, 1, &cache);
+    let misses_a = cache.misses();
+    // A fixed trace ignores the trial seed: one simulation per cell, the
+    // second trial of each cell is an in-grid hit.
+    assert_eq!(misses_a, cells.len() as u64, "cold file simulates once per cell");
+
+    // Identical content (re-read from disk) replays entirely from cache.
+    let wa2 = Workload::from_csv(&path_a).unwrap();
+    let rows_a2 = sweep::run_grid(&cells, &[wa2], 2, 0, 5, 1, &cache);
+    assert_eq!(cache.misses(), misses_a, "identical trace file is all hits");
+    assert_eq!(
+        rows_a.iter().map(report::sweep_row_json).collect::<Vec<_>>(),
+        rows_a2.iter().map(report::sweep_row_json).collect::<Vec<_>>(),
+        "cached replay must be byte-identical"
+    );
+
+    // Same stem, different content: must simulate from scratch.
+    let _ = sweep::run_grid(&cells, &[wb], 2, 0, 5, 1, &cache);
+    assert_eq!(
+        cache.misses(),
+        misses_a * 2,
+        "a different file with the same stem must not reuse cached trials"
+    );
+
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+}

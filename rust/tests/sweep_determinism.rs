@@ -13,7 +13,7 @@
 use rfold::metrics::report;
 use rfold::sim::experiments as exp;
 use rfold::sim::sweep::{self, ResultCache, SweepConfig};
-use rfold::trace::scenarios::Scenario;
+use rfold::trace::scenarios::{Scenario, Workload};
 
 /// Cheap sub-grid: two static cells plus one reconfigurable cell — enough
 /// to cross every code path without long runtimes.
@@ -29,11 +29,16 @@ fn small_cells() -> Vec<exp::Cell> {
         .collect()
 }
 
+/// Synthetic-scenario list → workload axis for `run_grid`.
+fn wl(scenarios: &[Scenario]) -> Vec<Workload> {
+    scenarios.iter().copied().map(Workload::Synthetic).collect()
+}
+
 /// A multi-scenario grid at `runs=2` — the regime where per-cell trial
 /// sharding degenerates (at most 2 busy threads per cell) and only the
 /// global work queue keeps every worker fed.
 fn rows_json(workers: usize) -> Vec<String> {
-    let scenarios = [Scenario::PaperDefault, Scenario::UniformSmall];
+    let scenarios = wl(&[Scenario::PaperDefault, Scenario::UniformSmall]);
     let cache = ResultCache::new(); // fresh: determinism, not cache replay
     let rows = sweep::run_grid(&small_cells(), &scenarios, 2, 40, 5, workers, &cache);
     rows.iter().map(report::sweep_row_json).collect()
@@ -119,7 +124,7 @@ fn duplicated_cells_simulate_once_with_identical_summaries() {
     let cells = vec![base[0], dup, base[1], dup];
     let cache = ResultCache::new();
     let runs = 2usize;
-    let rows = sweep::run_grid(&cells, &[Scenario::PaperDefault], runs, 30, 3, 4, &cache);
+    let rows = sweep::run_grid(&cells, &wl(&[Scenario::PaperDefault]), runs, 30, 3, 4, &cache);
     assert_eq!(rows.len(), 4);
     // 3 unique cells × 2 trials simulate; the duplicate's 2 slots hit.
     assert_eq!(cache.misses(), 3 * runs as u64);
@@ -132,7 +137,7 @@ fn duplicated_cells_simulate_once_with_identical_summaries() {
 #[test]
 fn cached_replay_is_byte_identical_to_cold_run() {
     let cells = small_cells();
-    let scenarios = [Scenario::PaperDefault, Scenario::CommHeavy];
+    let scenarios = wl(&[Scenario::PaperDefault, Scenario::CommHeavy]);
     let cache = ResultCache::new();
     let cold = sweep::run_grid(&cells, &scenarios, 2, 30, 7, 4, &cache);
     let misses_after_cold = cache.misses();
@@ -151,7 +156,7 @@ fn all_scenarios_flow_through_the_grid() {
     let cells = [exp::table1_cells()[1]]; // Folding (16^3): cheap, drops some jobs
     let rows = sweep::run_grid(
         &cells,
-        &Scenario::ALL,
+        &wl(&Scenario::ALL),
         2,
         30,
         3,
