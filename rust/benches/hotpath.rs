@@ -2,42 +2,61 @@
 //! EXPERIMENTS.md): variant enumeration, box search, reconfig planning,
 //! plan scoring (native and, when artifacts exist, PJRT), and end-to-end
 //! simulator throughput.
+//!
+//! Machine-readable mode: `BENCH_JSON=BENCH_hotpath.json` writes one JSON
+//! row per case (name, iters, ns_per_iter, p50/p99) so CI can track the
+//! perf trajectory across PRs; `BENCH_SMOKE=1` truncates iteration counts
+//! to a smoke run (see `util::bench`).
 
 use std::rc::Rc;
 
+use rfold::placement::index::{PlacementIndex, ReconfigIndex};
 use rfold::placement::policies::RFold;
-use rfold::placement::{builtins, PlacementPolicy};
 use rfold::placement::score::{hypothetical_occupancy, rank_plans, NativeScorer, PlanScorer};
+use rfold::placement::{builtins, PlacementPolicy};
 use rfold::placement::{reconfig_place, static_place};
 use rfold::shape::fold::{enumerate_variants, Variant};
 use rfold::shape::JobShape;
 use rfold::sim::engine::{SimConfig, Simulation};
 use rfold::topology::cluster::{ClusterState, ClusterTopo};
 use rfold::topology::P3;
-use rfold::util::bench::{bench, section};
+use rfold::util::bench::{bench, section, smoke_iters, write_json_env, BenchResult};
 use rfold::util::Pcg64;
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    // Shorthand: run one case at smoke-scaled iterations and collect it.
+    macro_rules! case {
+        ($name:expr, $warmup:expr, $iters:expr, $f:expr) => {
+            results.push(bench($name, smoke_iters($warmup), smoke_iters($iters), $f))
+        };
+    }
+
     section("shape algebra");
-    bench("enumerate_variants 18x1x1", 10, 200, || {
+    case!("enumerate_variants 18x1x1", 10, 200, || {
         enumerate_variants(JobShape::new(18, 1, 1), 256)
     });
-    bench("enumerate_variants 4x8x2", 10, 200, || {
+    case!("enumerate_variants 4x8x2", 10, 200, || {
         enumerate_variants(JobShape::new(4, 8, 2), 256)
     });
-    bench("rings 4x4x4 fold", 10, 200, || {
+    case!("rings 4x4x4 fold", 10, 200, || {
         let vs = enumerate_variants(JobShape::new(4, 8, 2), 64);
         vs.iter().map(|v| v.rings().len()).sum::<usize>()
     });
 
     section("placement engines (empty cluster)");
     let static_c = ClusterState::new(ClusterTopo::static_4096());
-    bench("static find_first_box 4x4x4", 10, 200, || {
+    case!("static find_first_box 4x4x4", 10, 200, || {
         static_place::find_first_box(&static_c, P3([4, 4, 4]))
     });
     let rc = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
     let v = Variant::identity(JobShape::new(4, 4, 32));
-    bench("reconfig place 4x4x32 (8 cubes)", 10, 200, || {
+    // Renamed from "reconfig place 4x4x32 (8 cubes)": since the index PR,
+    // the convenience wrapper builds a fresh ReconfigIndex per call, so
+    // this row measures build + search — a different quantity than the
+    // pre-index rows. The policy hot path amortizes the build per epoch
+    // (see "placement under load" below).
+    case!("reconfig place 4x4x32 (8 cubes, fresh index)", 10, 200, || {
         reconfig_place::place(&rc, &v, 1)
     });
 
@@ -59,11 +78,31 @@ fn main() {
             }
         }
     }
-    bench("RFold plan 4x8x2 @50% util", 5, 100, || {
+    case!("RFold plan 4x8x2 @50% util", 5, 100, || {
         policy.place_now(&busy, 999_999, JobShape::new(4, 8, 2))
     });
-    bench("RFold plan 18x1x1 @50% util", 5, 100, || {
+    case!("RFold plan 18x1x1 @50% util", 5, 100, || {
         policy.place_now(&busy, 999_999, JobShape::new(18, 1, 1))
+    });
+
+    section("spatial index (epoch rebuild cost vs per-probe savings)");
+    case!("PlacementIndex build @50% util (4^3)", 5, 100, || {
+        PlacementIndex::build(&busy)
+    });
+    let idx = ReconfigIndex::build(&busy);
+    let v48 = Variant::identity(JobShape::new(4, 8, 2));
+    case!("indexed place 4x8x2 @50% util", 5, 100, || {
+        reconfig_place::place_indexed(&busy, &idx, &v48, 999_999, true)
+    });
+    // Build + search per call — the cost a caller pays when it cannot
+    // amortize the index across probes (NOT the pre-index algorithm,
+    // which paid per-probe sorts and O(box-volume) scans instead).
+    case!("per-call-build place 4x8x2 @50% util", 5, 100, || {
+        reconfig_place::place_with_offsets(&busy, &v48, 999_999)
+    });
+    let static_idx = static_place::OccupancySums::build(&static_c);
+    case!("indexed find_first_box 4x4x4", 10, 200, || {
+        static_idx.find_first_box(P3([4, 4, 4]))
     });
 
     section("plan scoring");
@@ -72,11 +111,11 @@ fn main() {
         .filter_map(|v| reconfig_place::place(&busy, v, 999_999))
         .collect();
     eprintln!("  ({} candidate plans)", plans.len());
-    bench("native rank_plans", 5, 100, || {
+    case!("native rank_plans", 5, 100, || {
         rank_plans(&busy, &plans, &mut NativeScorer)
     });
     let (occ, cubes, n) = hypothetical_occupancy(&busy, &plans);
-    bench("native frag_stats batch", 5, 100, || {
+    case!("native frag_stats batch", 5, 100, || {
         NativeScorer.frag_stats(&occ, plans.len(), cubes, n)
     });
     let dir = rfold::runtime::Artifacts::default_dir();
@@ -85,7 +124,7 @@ fn main() {
     } else if dir.join("manifest.json").exists() {
         let arts = Rc::new(rfold::runtime::Artifacts::load(&dir).unwrap());
         let mut xla = rfold::runtime::XlaScorer::new(arts);
-        bench("xla frag_stats batch (PJRT)", 3, 30, || {
+        case!("xla frag_stats batch (PJRT)", 3, 30, || {
             xla.frag_stats(&occ, plans.len(), cubes, n)
         });
     } else {
@@ -97,7 +136,7 @@ fn main() {
         num_jobs: 256,
         ..Default::default()
     });
-    bench("sim 256 jobs RFold(4^3)", 1, 5, || {
+    case!("sim 256 jobs RFold(4^3)", 1, 5, || {
         Simulation::new(SimConfig::new(
             ClusterTopo::reconfigurable_4096(4),
             builtins::RFOLD,
@@ -105,7 +144,7 @@ fn main() {
         .run(&trace)
         .scheduled
     });
-    bench("sim 256 jobs FirstFit(16^3)", 1, 5, || {
+    case!("sim 256 jobs FirstFit(16^3)", 1, 5, || {
         Simulation::new(SimConfig::new(
             ClusterTopo::static_4096(),
             builtins::FIRST_FIT,
@@ -113,4 +152,6 @@ fn main() {
         .run(&trace)
         .scheduled
     });
+
+    write_json_env(&results);
 }

@@ -491,12 +491,19 @@ const POOL_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 /// raise it via [`PoolExecutor::with_read_timeout`] (`--pool-timeout`).
 pub const POOL_READ_TIMEOUT: Duration = Duration::from_secs(600);
 
-/// The TCP-pool [`TrialExecutor`]: one connection (and thread) per worker
-/// address, all pulling from the same atomic cursor the local backend
-/// uses, with dead-connection retry and leader-side fallback. Output is
-/// position-stable and bit-identical to local execution.
+/// The TCP-pool [`TrialExecutor`]: [`connections`](PoolExecutor::with_connections)
+/// connections (and threads) per worker address, all pulling from the
+/// same atomic cursor the local backend uses, with dead-connection retry
+/// and leader-side fallback. Output is position-stable and bit-identical
+/// to local execution.
 pub struct PoolExecutor {
     addrs: Vec<String>,
+    /// Connections opened per address. A worker serves each connection on
+    /// its own thread with trials serialized per connection, so one
+    /// connection occupies exactly one remote core — `--pool-connections`
+    /// is how a multi-core worker box gets saturated without listing its
+    /// address N times.
+    connections: usize,
     read_timeout: Duration,
     stats: Mutex<PoolStats>,
 }
@@ -523,9 +530,20 @@ impl PoolExecutor {
         assert!(!addrs.is_empty(), "a pool needs at least one worker address");
         PoolExecutor {
             addrs,
+            connections: 1,
             read_timeout: POOL_READ_TIMEOUT,
             stats: Mutex::new(PoolStats::default()),
         }
+    }
+
+    /// Open `n` connections per worker host (the CLI's
+    /// `--pool-connections`; default 1, 0 is clamped to 1). One
+    /// connection ≙ one busy remote core, so this is the remote
+    /// parallelism knob. Determinism is unaffected: connections are just
+    /// more pullers on the same position-stable item stream.
+    pub fn with_connections(mut self, n: usize) -> PoolExecutor {
+        self.connections = n.max(1);
+        self
     }
 
     /// Override the per-`RESULT` read timeout (the CLI's `--pool-timeout`)
@@ -552,16 +570,22 @@ impl PoolExecutor {
     }
 
     /// Drive one connection until the queue drains or the connection is
-    /// abandoned. Returns completed `(item index, output)` pairs.
+    /// abandoned. `conn` is (connect address, host index); `fail`'s third
+    /// argument flags a deterministic remote rejection (`ERR` reply) as
+    /// opposed to a transient connection death — rejections are recorded
+    /// per *host*, so an item a host refused is never futilely re-sent to
+    /// that host's sibling connections. Returns completed
+    /// `(item index, output)` pairs.
     fn run_conn(
         &self,
-        addr: &str,
+        conn: (&str, usize),
         items: &[WorkItem],
-        next: &(dyn Fn(&HashSet<usize>) -> Option<usize> + Sync),
-        fail: &(dyn Fn(usize) + Sync),
+        next: &(dyn Fn(usize) -> Option<usize> + Sync),
+        fail: &(dyn Fn(usize, usize, bool) + Sync),
         progress: &(dyn Fn(&WorkItem) + Sync),
         stats: &mut WorkerStats,
     ) -> Vec<(usize, Arc<TrialOutput>)> {
+        let (addr, host) = conn;
         let mut got = Vec::new();
         let stream = match connect_worker(addr) {
             Ok(s) => s,
@@ -596,21 +620,17 @@ impl PoolExecutor {
         // rejects everything (version skew, garbage speaker) is abandoned
         // rather than fed the whole grid one failure at a time.
         let mut consecutive_errs = 0usize;
-        // Items this connection already failed: excluded from its retry
-        // pulls, so an ERR'd item is offered to the *other* workers
-        // instead of burning all its failure credits right here.
-        let mut failed_here: HashSet<usize> = HashSet::new();
-        while let Some(i) = next(&failed_here) {
+        while let Some(i) = next(host) {
             let it = &items[i];
             if writeln!(out, "TRIAL {}", encode_work_item(it)).is_err() {
-                fail(i);
+                fail(i, host, false);
                 stats.died = true;
                 break;
             }
             let mut line = String::new();
             match reader.read_line(&mut line) {
                 Ok(0) | Err(_) => {
-                    fail(i);
+                    fail(i, host, false);
                     stats.died = true;
                     break;
                 }
@@ -629,7 +649,7 @@ impl PoolExecutor {
                     }
                     Err(e) => {
                         eprintln!("pool: {addr}: undecodable RESULT ({e}); dropping connection");
-                        fail(i);
+                        fail(i, host, false);
                         stats.died = true;
                         break;
                     }
@@ -638,8 +658,7 @@ impl PoolExecutor {
                 // ERR (or anything else): the connection still speaks the
                 // protocol, so keep it — unless it keeps failing.
                 eprintln!("pool: {addr}: item {i} failed remotely: {line}");
-                failed_here.insert(i);
-                fail(i);
+                fail(i, host, true);
                 consecutive_errs += 1;
                 if consecutive_errs >= 3 {
                     eprintln!("pool: {addr}: 3 consecutive failures; dropping connection");
@@ -662,34 +681,80 @@ impl TrialExecutor for PoolExecutor {
 
     fn execute(&self, items: &[WorkItem]) -> Vec<Arc<TrialOutput>> {
         let n = items.len();
+        // One pulling connection per (address, connection slot), round-
+        // robin across hosts so retries visit every box before a host's
+        // extra connections. `#k` labels keep per-connection telemetry
+        // readable when a host appears more than once.
+        let conns: Vec<(String, usize)> = (0..self.connections)
+            .flat_map(|k| {
+                self.addrs.iter().enumerate().map(move |(host, addr)| {
+                    let label = if self.connections > 1 {
+                        format!("{addr}#{k}")
+                    } else {
+                        addr.clone()
+                    };
+                    (label, host)
+                })
+            })
+            .collect();
         let cursor = AtomicUsize::new(0);
         let retries: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        // Per-item deterministic rejections (`ERR`) and transient
+        // connection deaths, counted separately — see `fail` below.
         let failures: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let deaths: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        // Items each *host* has failed (shared by the host's connections):
+        // an item one connection ERR'd or died on is offered to *other
+        // hosts*, never to a sibling connection of the same worker process
+        // — a deterministic remote failure costs one attempt per host,
+        // exactly as with one connection each.
+        let host_failed: Vec<Mutex<HashSet<usize>>> =
+            self.addrs.iter().map(|_| Mutex::new(HashSet::new())).collect();
         let retried = AtomicUsize::new(0);
 
         // Retried items first (they are blocking a grid slot), then the
         // cursor — the same item-granularity stream the local backend
-        // drains. A connection never re-pulls an item it already failed
-        // (`exclude`): such items wait in the queue for a different
-        // worker, or for the post-join leader fallback.
-        let next = |exclude: &HashSet<usize>| -> Option<usize> {
+        // drains. A connection never re-pulls an item its host already
+        // failed: such items wait in the queue for a different host, or
+        // for the post-join leader fallback.
+        let next = |host: usize| -> Option<usize> {
+            let exclude = host_failed[host].lock().unwrap();
             let mut queue = retries.lock().unwrap();
             if let Some(pos) = queue.iter().rposition(|i| !exclude.contains(i)) {
                 return Some(queue.remove(pos));
             }
             drop(queue);
+            drop(exclude);
             let c = cursor.fetch_add(1, Ordering::Relaxed);
             (c < n).then_some(c)
         };
-        // An item that failed on as many attempts as there are workers is
-        // not going to succeed remotely: leave it unqueued — its unfilled
-        // slot routes it to the post-join leader fallback.
-        let fail = |i: usize| {
-            let f = failures[i].fetch_add(1, Ordering::Relaxed) + 1;
-            if f < self.addrs.len() {
-                retried.fetch_add(1, Ordering::Relaxed);
-                retries.lock().unwrap().push(i);
+        // `rejected` distinguishes a deterministic remote refusal (an
+        // `ERR` reply — the host will refuse it again, so exclude the
+        // host and burn one of the item's per-host rejection credits; an
+        // item every host rejected goes unqueued, straight to leader
+        // fallback) from a transient connection death/timeout, which may
+        // retry on any surviving connection *including the same host's
+        // siblings* — but on its own bounded budget of `host_count + 1`
+        // attempts: a single-host pool still gets a sibling retry after a
+        // blip, while a trial that reliably kills or wedges workers burns
+        // at most hosts+1 connections (not hosts × --pool-connections
+        // read-timeouts) before its unfilled slot reaches leader fallback.
+        let host_count = self.addrs.len();
+        let fail = |i: usize, host: usize, rejected: bool| {
+            if rejected {
+                host_failed[host].lock().unwrap().insert(i);
+                let f = failures[i].fetch_add(1, Ordering::Relaxed) + 1;
+                if f >= host_count {
+                    return;
+                }
+            } else {
+                let d = deaths[i].fetch_add(1, Ordering::Relaxed) + 1;
+                if d > host_count {
+                    return;
+                }
             }
+            retried.fetch_add(1, Ordering::Relaxed);
+            retries.lock().unwrap().push(i);
         };
 
         // The same every-tenth-trial liveness reporting the local backend
@@ -698,24 +763,24 @@ impl TrialExecutor for PoolExecutor {
         let progress = sweep::progress_reporter("pool", n);
 
         let mut slots: Vec<Option<Arc<TrialOutput>>> = vec![None; n];
-        let mut worker_stats: Vec<WorkerStats> = Vec::with_capacity(self.addrs.len());
+        let mut worker_stats: Vec<WorkerStats> = Vec::with_capacity(conns.len());
         let next_ref = &next;
         let fail_ref = &fail;
         let progress_ref = &progress;
         std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .addrs
+            let handles: Vec<_> = conns
                 .iter()
-                .map(|addr| {
+                .map(|(label, host)| {
+                    let host = *host;
                     scope.spawn(move || {
                         let mut stats = WorkerStats {
-                            addr: addr.clone(),
+                            addr: label.clone(),
                             completed: 0,
                             connected: false,
                             died: false,
                         };
                         let got = self.run_conn(
-                            addr,
+                            (&self.addrs[host], host),
                             items,
                             next_ref,
                             fail_ref,
@@ -812,7 +877,11 @@ mod tests {
         });
         let it = item(Workload::from_jobs("wire-test".into(), jobs.clone()));
         let decoded = decode_work_item(&encode_work_item(&it)).unwrap();
-        assert_eq!(decoded.workload.trace(0, 0), jobs, "bit-exact job round trip");
+        assert_eq!(
+            &decoded.workload.trace(0, 0)[..],
+            &jobs[..],
+            "bit-exact job round trip"
+        );
         assert_eq!(decoded.workload.cache_key(), it.cfg.workload.cache_key());
     }
 

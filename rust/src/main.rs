@@ -10,6 +10,7 @@
 //!                [--policies p,q] [--out FILE]
 //!                [--trace-file F]                      sweep a recorded CSV trace
 //!                [--pool h1:p,h2:p]                    fan out to rfold workers
+//!                [--pool-connections N]                N connections per worker host
 //! rfold worker   [--listen A]                          TCP trial worker daemon
 //! rfold motivation                                     §3.1 contention study
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
@@ -79,6 +80,8 @@ fn usage() -> &'static str {
      sweep options:  --workers W (0=auto; --threads is an alias) \
      --scenarios a,b|all --policies p,q --out FILE --trace-file F \
      --pool host1:port,host2:port (distributed; workers run `rfold worker`) \
+     --pool-connections N (connections per worker host; one connection = one busy \
+     remote core, default 1) \
      --pool-timeout S (per-trial reply timeout, default 600, 0 = none)\n\
      worker options: --listen A (default 127.0.0.1:7171)\n\
      simulate options: --trace-file F (replay a recorded CSV trace)\n\
@@ -201,7 +204,11 @@ fn sweep_cmd(args: &Args) {
         cells.len(),
         workloads.len(),
         match &pool {
-            Some(addrs) => format!("pool of {} workers", addrs.len()),
+            Some(addrs) => format!(
+                "pool of {} workers x {} connection(s)",
+                addrs.len(),
+                args.get_usize("pool-connections", 1).max(1)
+            ),
             None if workers == 0 => format!("auto={} workers", sweep::auto_workers()),
             None => format!("{workers} workers"),
         }
@@ -221,9 +228,11 @@ fn sweep_cmd(args: &Args) {
                 );
             }
             Box::new(
-                rfold::coordinator::pool::PoolExecutor::new(addrs).with_read_timeout(
-                    std::time::Duration::from_secs(args.get_u64("pool-timeout", 600)),
-                ),
+                rfold::coordinator::pool::PoolExecutor::new(addrs)
+                    .with_connections(args.get_usize("pool-connections", 1))
+                    .with_read_timeout(std::time::Duration::from_secs(
+                        args.get_u64("pool-timeout", 600),
+                    )),
             )
         }
         None => Box::new(sweep::LocalExecutor::new(workers)),
@@ -376,7 +385,7 @@ fn simulate(args: &Args) {
         let r = Simulation::new(SimConfig::new(topo, policy))
             .with_observer(Box::new(telemetry.clone()))
             .run(&t);
-        let pairs = [(&r, t.as_slice())];
+        let pairs = [(&r, &t[..])];
         let s = rfold::metrics::summarize(workload.name(), &pairs);
         println!(
             "SIMULATE-TRACE trace={} policy={} jcr={:.2}% jct_p50={} jct_p90={} jct_p99={} \

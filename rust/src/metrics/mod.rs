@@ -48,13 +48,13 @@ pub fn summarize(label: &str, runs: &[(&RunResult, &[JobSpec])]) -> CellSummary 
     let mut curves: Vec<Vec<f64>> = vec![Vec::new(); CDF_POINTS + 1];
     for &(r, trace) in runs {
         jcrs.push(r.jcr() * 100.0);
-        let jcts = r.jcts(trace);
+        // One arrivals-map build per (run, cell) instead of two.
+        let (jcts, qd) = r.jcts_and_queueing_delays(trace);
         if !jcts.is_empty() {
             p50s.push(stats::percentile_of(&jcts, 50.0));
             p90s.push(stats::percentile_of(&jcts, 90.0));
             p99s.push(stats::percentile_of(&jcts, 99.0));
         }
-        let qd = r.queueing_delays(trace);
         if !qd.is_empty() {
             delays.push(stats::mean(&qd));
         }

@@ -23,7 +23,10 @@
 //!   knobs, so concrete policies stay a few dozen lines each.
 
 use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
 
+use super::index::{PlacementIndex, ScanOrders};
 use super::plan::Plan;
 use super::score::{NativeScorer, PlanScorer};
 use crate::shape::fold::{enumerate_variants, rotations_only, FoldKind, Variant};
@@ -186,6 +189,18 @@ pub struct PolicyCore {
     /// extension over the paper's origin-anchored prototype). On by
     /// default only for RFold.
     pub offset_search: bool,
+    /// Epoch-cached spatial index (`placement::index`): rebuilt lazily
+    /// when the cluster's occupancy epoch moves, shared (`Rc`) across
+    /// every variant probe of every request at that epoch. Policies are
+    /// single-threaded by contract (see [`PlacementPolicy`]), so `Rc`
+    /// keeps borrows out of the policy's way.
+    index: Option<Rc<PlacementIndex>>,
+    /// Per-policy memo of the topology's scan orders (pure geometry, so
+    /// epoch-independent): the scattered policies read these every
+    /// attempt, and going through the process-wide cache each time would
+    /// put one global mutex acquisition on every scheduling decision of
+    /// every concurrent sweep worker.
+    scan: Option<(ClusterTopo, Arc<ScanOrders>)>,
 }
 
 impl PolicyCore {
@@ -195,6 +210,39 @@ impl PolicyCore {
             feasibility: HashMap::new(),
             fold_dims_enabled: [true; 3],
             offset_search: false,
+            index: None,
+            scan: None,
+        }
+    }
+
+    /// The topology's scan orders (snake + Hilbert), memoized on the
+    /// policy so repeat attempts skip the process-wide cache's mutex.
+    pub fn scan_orders(&mut self, topo: ClusterTopo) -> Arc<ScanOrders> {
+        match &self.scan {
+            Some((t, orders)) if *t == topo => orders.clone(),
+            _ => {
+                let orders = super::index::scan_orders(topo);
+                self.scan = Some((topo, orders.clone()));
+                orders
+            }
+        }
+    }
+
+    /// The spatial index for `cluster`'s current occupancy, built at most
+    /// once per epoch: a cached index whose epoch matches is returned
+    /// as-is; anything else (stale epoch, different cluster, first call)
+    /// triggers one O(V) rebuild. Epochs are globally unique per
+    /// occupancy state, so a matching epoch *proves* the bitmap is the
+    /// one the index was built from — including across the empty-cluster
+    /// feasibility probes interleaved by [`PlacementPolicy::feasible_ever`].
+    pub fn placement_index(&mut self, cluster: &ClusterState) -> Rc<PlacementIndex> {
+        match &self.index {
+            Some(idx) if idx.epoch() == cluster.epoch() => idx.clone(),
+            _ => {
+                let idx = Rc::new(PlacementIndex::build(cluster));
+                self.index = Some(idx.clone());
+                idx
+            }
         }
     }
 
@@ -277,8 +325,13 @@ pub trait PlacementPolicy {
         if let Some(&f) = self.core().feasibility.get(&(topo, shape)) {
             return f;
         }
+        // The throwaway empty-cluster probe must not evict the live
+        // cluster's index from the single-slot cache — park it and put it
+        // back, so the next same-epoch probe stays a cache hit.
+        let live_index = self.core().index.take();
         let empty = ClusterState::new(topo);
         let f = self.attempt(&empty, u64::MAX, shape).plan.is_some();
+        self.core().index = live_index;
         self.core().feasibility.insert((topo, shape), f);
         f
     }
@@ -358,6 +411,60 @@ mod tests {
         assert!(!q.feasible_ever(static_t, shape));
         // Both answers are cached under distinct keys.
         assert_eq!(q.core().feasibility.len(), 2);
+    }
+
+    #[test]
+    fn placement_index_cached_per_epoch() {
+        let mut core = PolicyCore::new();
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let a = core.placement_index(&c);
+        let b = core.placement_index(&c);
+        assert!(std::rc::Rc::ptr_eq(&a, &b), "same epoch must not rebuild");
+        // Occupancy change → epoch change → rebuild reflecting the commit.
+        let mut p = Reconfig::new();
+        p.place_now(&c, 1, crate::shape::JobShape::new(4, 4, 4))
+            .unwrap()
+            .commit(&mut c)
+            .unwrap();
+        let d = core.placement_index(&c);
+        assert!(!std::rc::Rc::ptr_eq(&a, &d), "stale epoch must rebuild");
+        assert_eq!(d.epoch(), c.epoch());
+        assert!(!d.reconfig().is_box_free(
+            0,
+            crate::topology::P3([0, 0, 0]),
+            crate::topology::P3([1, 1, 1])
+        ));
+        // An interleaved empty-cluster probe (the feasible_ever pattern)
+        // cannot poison the cache into serving stale answers.
+        let empty = ClusterState::new(c.topo());
+        let e = core.placement_index(&empty);
+        assert!(e.reconfig().is_box_free(
+            0,
+            crate::topology::P3([0, 0, 0]),
+            crate::topology::P3([4, 4, 4])
+        ));
+        let f = core.placement_index(&c);
+        assert_eq!(f.epoch(), c.epoch());
+        assert!(!f.reconfig().is_box_free(
+            0,
+            crate::topology::P3([0, 0, 0]),
+            crate::topology::P3([1, 1, 1])
+        ));
+    }
+
+    #[test]
+    fn feasibility_probe_does_not_evict_live_index() {
+        let mut p = Reconfig::new();
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let live = p.core().placement_index(&c);
+        // A first-seen shape runs the empty-cluster probe internally; the
+        // live cluster's index must still be cached afterwards.
+        assert!(p.feasible_ever(c.topo(), JobShape::new(2, 2, 2)));
+        let again = p.core().placement_index(&c);
+        assert!(
+            std::rc::Rc::ptr_eq(&live, &again),
+            "the throwaway empty-cluster probe must not evict the live index"
+        );
     }
 
     #[test]

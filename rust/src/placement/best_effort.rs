@@ -41,17 +41,30 @@ pub fn snake_order(ext: P3) -> Vec<P3> {
 
 /// Place a job on any `size` free XPUs (snake order). Returns `None` only
 /// when fewer than `size` XPUs are free — best-effort never blocks on
-/// shape.
+/// shape. Resolves the scan order through the process-wide
+/// [`scan_orders`](super::index::scan_orders) cache (one map lookup), so
+/// it is equivalent to [`place_scattered_indexed`] with the cached order;
+/// callers already holding the order skip the lookup.
 pub fn place_scattered(cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
+    let order = super::index::scan_orders(cluster.topo());
+    place_scattered_indexed(cluster, &order.snake, job, shape)
+}
+
+/// [`place_scattered`] over a precomputed snake-order node-id list
+/// ([`ScanOrders::snake`](super::index::ScanOrders)): skips the per-probe
+/// curve materialization and coordinate→node mapping.
+pub fn place_scattered_indexed(
+    cluster: &ClusterState,
+    order: &[usize],
+    job: u64,
+    shape: JobShape,
+) -> Option<Plan> {
     let size = shape.size();
     if size > cluster.free_count() {
         return None;
     }
-    let ext = cluster.topo().phys_ext();
     let mut nodes = Vec::with_capacity(size);
-    // Map physical coordinates back to node ids via the topology.
-    for p in snake_order(ext) {
-        let node = phys_to_node(cluster, p);
+    for &node in order {
         if cluster.is_free(node) {
             nodes.push(node);
             if nodes.len() == size {
@@ -76,8 +89,14 @@ pub fn place_scattered(cluster: &ClusterState, job: u64, shape: JobShape) -> Opt
 
 /// Inverse of `ClusterState::phys_coords`.
 pub fn phys_to_node(cluster: &ClusterState, p: P3) -> usize {
+    phys_to_node_topo(cluster.topo(), p)
+}
+
+/// [`phys_to_node`] from the topology alone (the mapping is pure
+/// geometry; precomputed scan orders use this without a cluster).
+pub fn phys_to_node_topo(topo: crate::topology::cluster::ClusterTopo, p: P3) -> usize {
     use crate::topology::cluster::ClusterTopo;
-    match cluster.topo() {
+    match topo {
         ClusterTopo::Static { ext } => p.index_in(ext),
         ClusterTopo::Reconfigurable { grid } => {
             let c = P3([p.0[0] / grid.n, p.0[1] / grid.n, p.0[2] / grid.n]);

@@ -60,33 +60,42 @@ pub fn hilbert_order(order: u32) -> Vec<P3> {
 
 /// Place `shape` for `job` on the first free Hilbert segment of length
 /// `size`; fall back to the first `size` free nodes in curve order.
-/// Returns `None` only when fewer than `size` XPUs are free.
+/// Returns `None` only when fewer than `size` XPUs are free (or the
+/// machine extent is not a power-of-two cube). Resolves the curve through
+/// the process-wide scan-order cache; the policy hot path hands the
+/// cached curve to [`place_hilbert_indexed`] directly.
 pub fn place_hilbert(cluster: &ClusterState, job: u64, shape: JobShape) -> Option<Plan> {
+    let orders = super::index::scan_orders(cluster.topo());
+    place_hilbert_indexed(cluster, orders.hilbert.as_deref(), job, shape)
+}
+
+/// [`place_hilbert`] over a precomputed curve-order node-id list
+/// ([`ScanOrders::hilbert`](super::index::ScanOrders)): skips the
+/// per-probe Skilling transform of the whole machine. A `None` curve
+/// (exotic machine extent) rejects, exactly like the uncached search did.
+pub fn place_hilbert_indexed(
+    cluster: &ClusterState,
+    curve: Option<&[usize]>,
+    job: u64,
+    shape: JobShape,
+) -> Option<Plan> {
     let size = shape.size();
     if size > cluster.free_count() {
         return None;
     }
-    let ext = cluster.topo().phys_ext();
-    // The 4096-XPU machine is 16^3 = 2^4 per side; reject exotic extents.
-    let order = ext.0[0].trailing_zeros();
-    if ext.0 != [1 << order, 1 << order, 1 << order] {
-        return None;
-    }
-    let curve = hilbert_order(order);
-    let node_of = |p: P3| super::best_effort::phys_to_node(cluster, p);
+    let curve = curve?;
 
     // Line-segment search: first contiguous free run of length `size`.
     let mut run_start = 0usize;
     let mut run_len = 0usize;
-    for (i, &p) in curve.iter().enumerate() {
-        if cluster.is_free(node_of(p)) {
+    for (i, &node) in curve.iter().enumerate() {
+        if cluster.is_free(node) {
             if run_len == 0 {
                 run_start = i;
             }
             run_len += 1;
             if run_len == size {
-                let nodes = curve[run_start..=i].iter().map(|&p| node_of(p)).collect();
-                return Some(segment_plan(job, shape, nodes));
+                return Some(segment_plan(job, shape, curve[run_start..=i].to_vec()));
             }
         } else {
             run_len = 0;
@@ -95,7 +104,7 @@ pub fn place_hilbert(cluster: &ClusterState, job: u64, shape: JobShape) -> Optio
     // Fallback: scattered, still in curve order (keeps locality).
     let nodes: Vec<usize> = curve
         .iter()
-        .map(|&p| node_of(p))
+        .copied()
         .filter(|&nd| cluster.is_free(nd))
         .take(size)
         .collect();

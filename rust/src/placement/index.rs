@@ -1,0 +1,337 @@
+//! Epoch-cached spatial indices over cluster occupancy — the scheduling
+//! hot path's shared acceleration structure.
+//!
+//! Placement probes used to re-derive everything from the raw busy bitmap
+//! on every call: `static_place::find_first_box` rebuilt its O(V) prefix
+//! table per fold variant, `reconfig_place` re-sorted the candidate-cube
+//! list per (variant, offset) probe and checked cube-box freeness with
+//! O(box-volume) scans. One scheduling event fires dozens of such probes
+//! (every fold variant × every shared offset), and under head-of-line
+//! FIFO the same head job re-probes at every completion — all against an
+//! occupancy that only changes on commit/release.
+//!
+//! [`PlacementIndex`] captures everything those probes need, built **at
+//! most once per occupancy change**: it is stamped with the cluster's
+//! [`epoch`](crate::topology::cluster::ClusterState::epoch) and cached in
+//! [`PolicyCore`](super::api::PolicyCore), which rebuilds only when the
+//! epoch moved. Contents per topology family:
+//!
+//! * static torus — the existing [`OccupancySums`] 3D prefix table
+//!   (O(1) wrap-aware box-freeness), shared across every variant;
+//! * reconfigurable — a [`ReconfigIndex`]: per-cube 3D summed-occupancy
+//!   tables making `is_cube_box_free`-style queries O(1) instead of
+//!   O(box volume), plus the free-count-ordered candidate-cube list that
+//!   `reconfig_place` previously re-filtered and re-sorted per probe.
+//!
+//! The scattered baselines' scan orders (snake order for BestEffort,
+//! Hilbert curve order for SLURM-style segment search) are pure geometry,
+//! not occupancy — they live outside the per-epoch index, in the
+//! process-wide [`scan_orders`] cache, memoized per policy via
+//! [`PolicyCore::scan_orders`](super::api::PolicyCore::scan_orders).
+//!
+//! Everything here is a pure function of the busy bitmap, so every query
+//! is byte-equivalent to a fresh rebuild — `tests/prop_index.rs` locks
+//! that down under randomized commit/release churn.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::static_place::OccupancySums;
+use crate::topology::cluster::{ClusterState, ClusterTopo};
+use crate::topology::P3;
+
+/// Per-cube 3D summed-occupancy tables plus the candidate-cube list, for
+/// reconfigurable topologies.
+pub struct ReconfigIndex {
+    n: usize,
+    num_cubes: usize,
+    /// `num_cubes` tables of `(n+1)³` inclusive prefix sums, flattened
+    /// cube-major: `sums[cube * (n+1)³ + ((x*(n+1))+y)*(n+1)+z]` is the
+    /// busy count of the cube-local box `[0,x)×[0,y)×[0,z)`.
+    sums: Vec<u32>,
+    /// Cubes with at least one free XPU, ascending free count with ties
+    /// in cube-id order — exactly the best-fit scan order
+    /// `reconfig_place` used to rebuild per probe (stable sort).
+    cubes_by_fill: Vec<usize>,
+}
+
+impl ReconfigIndex {
+    /// Build from the current busy bitmap. Panics on static topologies.
+    pub fn build(cluster: &ClusterState) -> ReconfigIndex {
+        let grid = match cluster.topo() {
+            ClusterTopo::Reconfigurable { grid } => grid,
+            _ => panic!("ReconfigIndex requires a reconfigurable topology"),
+        };
+        let n = grid.n;
+        let num_cubes = grid.num_cubes();
+        let vol = n * n * n;
+        let s = n + 1;
+        let tsize = s * s * s;
+        let idx = |x: usize, y: usize, z: usize| (x * s + y) * s + z;
+        let mut sums = vec![0u32; num_cubes * tsize];
+        for cube in 0..num_cubes {
+            let t = &mut sums[cube * tsize..(cube + 1) * tsize];
+            for x in 0..n {
+                for y in 0..n {
+                    for z in 0..n {
+                        // Cube-local linear order matches the global node
+                        // numbering: node = cube·n³ + local.index_in(n³).
+                        let node = cube * vol + (x * n + y) * n + z;
+                        let busy = !cluster.is_free(node);
+                        t[idx(x + 1, y + 1, z + 1)] = busy as u32
+                            + t[idx(x, y + 1, z + 1)]
+                            + t[idx(x + 1, y, z + 1)]
+                            + t[idx(x + 1, y + 1, z)]
+                            - t[idx(x, y, z + 1)]
+                            - t[idx(x, y + 1, z)]
+                            - t[idx(x + 1, y, z)]
+                            + t[idx(x, y, z)];
+                    }
+                }
+            }
+        }
+        let mut cubes_by_fill: Vec<usize> = (0..num_cubes)
+            .filter(|&c| cluster.cube_free_count(c) > 0)
+            .collect();
+        cubes_by_fill.sort_by_key(|&c| cluster.cube_free_count(c));
+        ReconfigIndex {
+            n,
+            num_cubes,
+            sums,
+            cubes_by_fill,
+        }
+    }
+
+    /// Cube side.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn prefix(&self, cube: usize, x: usize, y: usize, z: usize) -> u32 {
+        let s = self.n + 1;
+        self.sums[cube * s * s * s + (x * s + y) * s + z]
+    }
+
+    /// Busy count in the cube-local half-open box `[lo, hi)` (component-
+    /// wise; callers guarantee `lo ≤ hi ≤ n`).
+    #[inline]
+    pub fn busy_in(&self, cube: usize, lo: P3, hi: P3) -> u32 {
+        let (x0, y0, z0) = (lo.0[0], lo.0[1], lo.0[2]);
+        let (x1, y1, z1) = (hi.0[0], hi.0[1], hi.0[2]);
+        self.prefix(cube, x1, y1, z1)
+            .wrapping_sub(self.prefix(cube, x0, y1, z1))
+            .wrapping_sub(self.prefix(cube, x1, y0, z1))
+            .wrapping_sub(self.prefix(cube, x1, y1, z0))
+            .wrapping_add(self.prefix(cube, x0, y0, z1))
+            .wrapping_add(self.prefix(cube, x0, y1, z0))
+            .wrapping_add(self.prefix(cube, x1, y0, z0))
+            .wrapping_sub(self.prefix(cube, x0, y0, z0))
+    }
+
+    /// O(1) twin of
+    /// [`ClusterState::is_cube_box_free`](crate::topology::cluster::ClusterState::is_cube_box_free):
+    /// is the local box `[off, off+ext)` entirely free inside `cube`?
+    /// Out-of-bounds boxes are `false`, matching the O(volume) original.
+    #[inline]
+    pub fn is_box_free(&self, cube: usize, off: P3, ext: P3) -> bool {
+        if (0..3).any(|a| off.0[a] + ext.0[a] > self.n) {
+            return false;
+        }
+        self.busy_in(cube, off, off.add(ext)) == 0
+    }
+
+    /// Cubes with free capacity in best-fit order (ascending free count,
+    /// ties by cube id) — the shared candidate list for piece assignment.
+    pub fn candidate_cubes(&self) -> &[usize] {
+        &self.cubes_by_fill
+    }
+
+    /// Number of cubes in the machine.
+    pub fn num_cubes(&self) -> usize {
+        self.num_cubes
+    }
+}
+
+/// Occupancy-independent node scan orders of one topology, shared
+/// process-wide (the machine geometry never changes mid-run): the snake
+/// order BestEffort allocates along and the Hilbert curve order the
+/// SLURM-style baseline runs its segment search on (`None` when the
+/// physical extent is not a power-of-two cube).
+pub struct ScanOrders {
+    pub snake: Vec<usize>,
+    pub hilbert: Option<Vec<usize>>,
+}
+
+/// The per-topology scan-order cache. Scan orders are pure geometry, so
+/// entries are computed once per process and shared by every index build,
+/// every epoch, every thread.
+pub fn scan_orders(topo: ClusterTopo) -> Arc<ScanOrders> {
+    static CACHE: OnceLock<Mutex<HashMap<ClusterTopo, Arc<ScanOrders>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    map.entry(topo)
+        .or_insert_with(|| {
+            let ext = topo.phys_ext();
+            let snake = super::best_effort::snake_order(ext)
+                .into_iter()
+                .map(|p| super::best_effort::phys_to_node_topo(topo, p))
+                .collect();
+            // The Hilbert baseline only runs on power-of-two cubes (the
+            // 4096-XPU machine is 16³); other extents keep `None` and the
+            // policy rejects, exactly as the uncached search did.
+            let order = ext.0[0].trailing_zeros();
+            let hilbert = (ext.0 == [1 << order, 1 << order, 1 << order]).then(|| {
+                super::hilbert::hilbert_order(order)
+                    .into_iter()
+                    .map(|p| super::best_effort::phys_to_node_topo(topo, p))
+                    .collect()
+            });
+            Arc::new(ScanOrders { snake, hilbert })
+        })
+        .clone()
+}
+
+/// The topology-family-specific part of a [`PlacementIndex`].
+enum IndexKind {
+    Static(OccupancySums),
+    Reconfig(ReconfigIndex),
+}
+
+/// Everything the placement engines consult about occupancy, built from
+/// one bitmap sweep and valid for exactly one cluster epoch. Obtained via
+/// [`PolicyCore::placement_index`](super::api::PolicyCore::placement_index),
+/// which caches it across probes until the epoch moves.
+pub struct PlacementIndex {
+    epoch: u64,
+    kind: IndexKind,
+}
+
+impl PlacementIndex {
+    /// Build for the cluster's current occupancy (O(V) bitmap sweep).
+    pub fn build(cluster: &ClusterState) -> PlacementIndex {
+        let kind = match cluster.topo() {
+            ClusterTopo::Static { .. } => IndexKind::Static(OccupancySums::build(cluster)),
+            ClusterTopo::Reconfigurable { .. } => {
+                IndexKind::Reconfig(ReconfigIndex::build(cluster))
+            }
+        };
+        PlacementIndex {
+            epoch: cluster.epoch(),
+            kind,
+        }
+    }
+
+    /// The cluster epoch this index was built against.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The static-torus prefix table. Panics on reconfigurable indices —
+    /// policies gate on topology family before touching the index.
+    pub fn static_sums(&self) -> &OccupancySums {
+        match &self.kind {
+            IndexKind::Static(s) => s,
+            IndexKind::Reconfig(_) => panic!("static_sums on a reconfigurable index"),
+        }
+    }
+
+    /// The reconfigurable-cluster index. Panics on static indices.
+    pub fn reconfig(&self) -> &ReconfigIndex {
+        match &self.kind {
+            IndexKind::Reconfig(r) => r,
+            IndexKind::Static(_) => panic!("reconfig index on a static topology"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::cluster::Allocation;
+    use crate::util::Pcg64;
+
+    fn occupy(c: &mut ClusterState, job: u64, nodes: Vec<usize>) {
+        c.commit(Allocation {
+            job,
+            nodes,
+            cubes: vec![],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 1]),
+        });
+    }
+
+    #[test]
+    fn reconfig_index_matches_bruteforce_box_queries() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut rng = Pcg64::seeded(11);
+        let mut nodes: Vec<usize> = (0..900).map(|_| rng.below(4096)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        occupy(&mut c, 1, nodes);
+        let idx = ReconfigIndex::build(&c);
+        for _ in 0..300 {
+            let cube = rng.below(64);
+            let off = P3([rng.below(5), rng.below(5), rng.below(5)]);
+            let ext = P3([rng.range(1, 5), rng.range(1, 5), rng.range(1, 5)]);
+            assert_eq!(
+                idx.is_box_free(cube, off, ext),
+                c.is_cube_box_free(cube, off, ext),
+                "cube={cube} off={off} ext={ext}"
+            );
+        }
+    }
+
+    #[test]
+    fn candidate_cubes_match_legacy_best_fit_order() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut rng = Pcg64::seeded(5);
+        let mut nodes: Vec<usize> = (0..2600).map(|_| rng.below(4096)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        occupy(&mut c, 1, nodes);
+        let idx = ReconfigIndex::build(&c);
+        // The exact expression reconfig_place's inner loop used per probe.
+        let mut legacy: Vec<usize> = (0..64).filter(|&cb| c.cube_free_count(cb) > 0).collect();
+        legacy.sort_by_key(|&cb| c.cube_free_count(cb));
+        assert_eq!(idx.candidate_cubes(), legacy.as_slice());
+    }
+
+    #[test]
+    fn scan_orders_are_cached_and_match_direct_computation() {
+        let topo = ClusterTopo::reconfigurable_4096(4);
+        let a = scan_orders(topo);
+        let b = scan_orders(topo);
+        assert!(Arc::ptr_eq(&a, &b), "one computation per topology");
+        let c = ClusterState::new(topo);
+        let direct: Vec<usize> = super::super::best_effort::snake_order(topo.phys_ext())
+            .into_iter()
+            .map(|p| super::super::best_effort::phys_to_node(&c, p))
+            .collect();
+        assert_eq!(a.snake, direct);
+        assert!(a.hilbert.is_some(), "16^3 machine supports the curve");
+        assert_eq!(a.hilbert.as_ref().unwrap().len(), 4096);
+    }
+
+    #[test]
+    fn placement_index_carries_the_build_epoch() {
+        let mut c = ClusterState::new(ClusterTopo::static_4096());
+        let i0 = PlacementIndex::build(&c);
+        assert_eq!(i0.epoch(), c.epoch());
+        let _ = i0.static_sums();
+        occupy(&mut c, 1, vec![0]);
+        assert_ne!(i0.epoch(), c.epoch(), "stale index is detectable");
+        let i1 = PlacementIndex::build(&c);
+        assert_eq!(i1.epoch(), c.epoch());
+        assert!(!i1.static_sums().box_free(P3([0, 0, 0]), P3([1, 1, 1])));
+    }
+
+    #[test]
+    #[should_panic(expected = "reconfigurable index")]
+    fn family_accessors_guard() {
+        let c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let idx = PlacementIndex::build(&c);
+        let _ = idx.static_sums();
+    }
+}

@@ -7,6 +7,11 @@
 //! * [`reconfig_place`] — cube decomposition + OCS chain planning in a
 //!   reconfigurable cluster.
 //!
+//! Both engines run against the epoch-cached spatial index in [`index`]
+//! (built at most once per occupancy change, shared across every variant
+//! probe and queued job at that epoch via
+//! [`PolicyCore::placement_index`](api::PolicyCore::placement_index)).
+//!
 //! A policy turns a [`api::PlacementRequest`] into a
 //! [`api::PlacementDecision`]: a committed-ready [`plan::Plan`] chosen by
 //! the [`score`] ranking (fewest cubes → fewest OCS links → least
@@ -18,6 +23,7 @@
 pub mod api;
 pub mod best_effort;
 pub mod hilbert;
+pub mod index;
 pub mod plan;
 pub mod policies;
 pub mod reconfig_place;
@@ -28,6 +34,7 @@ pub mod static_place;
 pub use api::{
     Attempt, DecisionStats, PlacementDecision, PlacementPolicy, PlacementRequest, PolicyCore,
 };
+pub use index::{PlacementIndex, ReconfigIndex};
 pub use plan::{OcsChainPlan, Plan};
 pub use policies::PolicyKind;
 pub use registry::{builtins, PolicyHandle, PolicyRegistry};

@@ -61,8 +61,9 @@ impl PlacementPolicy for FirstFit {
         }
         let vs = self.core.variants(cluster.topo(), shape, false);
         let mut stats = DecisionStats::from_variants(&vs);
+        let index = self.core.placement_index(cluster);
         for v in &vs {
-            if let Some(p) = static_plan_for_variant(cluster, v, job) {
+            if let Some(p) = static_plan_indexed(cluster, index.static_sums(), v, job) {
                 stats.candidates = 1;
                 return Attempt {
                     plan: Some(p),
@@ -102,9 +103,10 @@ impl PlacementPolicy for Folding {
         }
         let vs = self.core.variants(cluster.topo(), shape, true);
         let mut stats = DecisionStats::from_variants(&vs);
+        let index = self.core.placement_index(cluster);
         let plans: Vec<Plan> = vs
             .iter()
-            .filter_map(|v| static_plan_for_variant(cluster, v, job))
+            .filter_map(|v| static_plan_indexed(cluster, index.static_sums(), v, job))
             .collect();
         stats.candidates = plans.len();
         let plan = rank_plans(cluster, &plans, self.core.scorer.as_mut())
@@ -114,7 +116,9 @@ impl PlacementPolicy for Folding {
 }
 
 /// Shared Reconfig/RFold search: cube decomposition + OCS chain planning
-/// per variant, ranked by the paper's heuristic.
+/// per variant against the epoch-cached index (one build serves every
+/// variant × offset probe of the request — and every request until the
+/// occupancy changes), ranked by the paper's heuristic.
 fn reconfig_attempt(
     core: &mut PolicyCore,
     cluster: &ClusterState,
@@ -127,14 +131,12 @@ fn reconfig_attempt(
     }
     let vs = core.variants(cluster.topo(), shape, folds);
     let mut stats = DecisionStats::from_variants(&vs);
+    let offset_search = core.offset_search;
+    let index = core.placement_index(cluster);
     let plans: Vec<Plan> = vs
         .iter()
         .filter_map(|v| {
-            if core.offset_search {
-                reconfig_place::place_with_offsets(cluster, v, job)
-            } else {
-                reconfig_place::place(cluster, v, job)
-            }
+            reconfig_place::place_indexed(cluster, index.reconfig(), v, job, offset_search)
         })
         .collect();
     stats.candidates = plans.len();
@@ -232,7 +234,17 @@ impl PlacementPolicy for BestEffort {
     }
 
     fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
-        Attempt::single(best_effort::place_scattered(cluster, job, shape))
+        // Scattered search only needs the occupancy-independent scan
+        // order (freeness is probed per node on the live bitmap), so it
+        // uses the policy-memoized scan orders instead of paying the
+        // per-epoch occupancy-index build it would never query.
+        let orders = self.core.scan_orders(cluster.topo());
+        Attempt::single(best_effort::place_scattered_indexed(
+            cluster,
+            &orders.snake,
+            job,
+            shape,
+        ))
     }
 }
 
@@ -263,14 +275,25 @@ impl PlacementPolicy for Hilbert {
     }
 
     fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
-        Attempt::single(hilbert::place_hilbert(cluster, job, shape))
+        // Like BestEffort: the curve is pure geometry, freeness is probed
+        // per node — skip the occupancy-index build entirely.
+        let orders = self.core.scan_orders(cluster.topo());
+        Attempt::single(hilbert::place_hilbert_indexed(
+            cluster,
+            orders.hilbert.as_deref(),
+            job,
+            shape,
+        ))
     }
 }
 
-/// Place one variant in a static torus (first-fit anchor), if possible.
-/// Shared by [`FirstFit`] and [`Folding`].
-pub(crate) fn static_plan_for_variant(
+/// Place one variant in a static torus (first-fit anchor) against the
+/// shared prefix table, if possible. Shared by [`FirstFit`] and
+/// [`Folding`]: one epoch's table answers every variant where the old
+/// path rebuilt it O(V) per variant.
+pub(crate) fn static_plan_indexed(
     cluster: &ClusterState,
+    sums: &static_place::OccupancySums,
     v: &Variant,
     job: u64,
 ) -> Option<Plan> {
@@ -280,7 +303,7 @@ pub(crate) fn static_plan_for_variant(
             return None;
         }
     }
-    let anchor = static_place::find_first_box(cluster, v.placed)?;
+    let anchor = sums.find_first_box(v.placed)?;
     Some(Plan {
         job,
         variant: v.clone(),

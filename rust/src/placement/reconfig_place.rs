@@ -13,6 +13,7 @@
 //! * stranded-core XPUs are naturally unusable for multi-cube jobs because
 //!   chains only touch face positions (§3.2 inefficiency #1).
 
+use super::index::ReconfigIndex;
 use super::plan::{OcsChainPlan, Plan};
 use crate::shape::fold::Variant;
 use crate::topology::cluster::{ClusterState, ClusterTopo};
@@ -21,19 +22,30 @@ use crate::topology::P3;
 /// Attempt to place `variant` for `job` on a reconfigurable cluster,
 /// pieces anchored at each cube's origin (the paper prototype's
 /// behaviour; see [`place_with_offsets`] for the extension).
+///
+/// Builds a fresh [`ReconfigIndex`] per call — the one-shot convenience
+/// entry for tests and benches. Policy hot paths reuse the epoch-cached
+/// index through [`place_indexed`].
 pub fn place(cluster: &ClusterState, variant: &Variant, job: u64) -> Option<Plan> {
-    place_opts(cluster, variant, job, false)
+    place_indexed(cluster, &ReconfigIndex::build(cluster), variant, job, false)
 }
 
 /// Like [`place`] but additionally searches shared non-zero offsets for
 /// axes that fit inside one cube — reuses shifted free regions of
 /// partially occupied cubes (ablation A4 quantifies the gain).
 pub fn place_with_offsets(cluster: &ClusterState, variant: &Variant, job: u64) -> Option<Plan> {
-    place_opts(cluster, variant, job, true)
+    place_indexed(cluster, &ReconfigIndex::build(cluster), variant, job, true)
 }
 
-fn place_opts(
+/// The index-backed placement search: cube-box freeness is O(1) against
+/// the index's per-cube summed-occupancy tables and the best-fit
+/// candidate-cube order is read precomputed, instead of re-scanning
+/// O(box-volume) nodes and re-sorting all cubes per (variant, offset)
+/// probe. `index` must have been built at the cluster's current epoch;
+/// results are byte-identical to the uncached search.
+pub fn place_indexed(
     cluster: &ClusterState,
+    index: &ReconfigIndex,
     variant: &Variant,
     job: u64,
     offset_search: bool,
@@ -101,7 +113,7 @@ fn place_opts(
         for oy in 0..=off_range(1) {
             for oz in 0..=off_range(2) {
                 let off = P3([ox, oy, oz]);
-                if let Some(plan) = try_offset(cluster, variant, job, off, &g, &sizes) {
+                if let Some(plan) = try_offset(cluster, index, variant, job, off, &g, &sizes) {
                     let slack: usize = plan
                         .cubes
                         .iter()
@@ -125,6 +137,7 @@ fn place_opts(
 /// Try to assign cubes for every piece under a fixed shared offset.
 fn try_offset(
     cluster: &ClusterState,
+    index: &ReconfigIndex,
     variant: &Variant,
     job: u64,
     off: P3,
@@ -143,16 +156,12 @@ fn try_offset(
     // Assign a host cube to every piece: iterate pieces grouped by extent
     // class, choosiest (largest volume) first; within a class use best-fit
     // (least free XPUs) so partial pieces pack into fragmented cubes and
-    // full pieces take exactly-empty cubes.
+    // full pieces take exactly-empty cubes. The best-fit candidate order
+    // and the O(1) box-freeness queries both come from the shared index.
     let mut piece_order: Vec<P3> = gp.iter_box().collect();
     piece_order.sort_by_key(|p| {
         std::cmp::Reverse(sizes[0][p.0[0]] * sizes[1][p.0[1]] * sizes[2][p.0[2]])
     });
-
-    let mut cubes_by_fill: Vec<usize> = (0..grid.num_cubes())
-        .filter(|&c| cluster.cube_free_count(c) > 0)
-        .collect();
-    cubes_by_fill.sort_by_key(|&c| cluster.cube_free_count(c));
 
     let mut assignment = vec![usize::MAX; pieces];
     let mut used = vec![false; grid.num_cubes()];
@@ -163,11 +172,11 @@ fn try_offset(
             sizes[2][piece.0[2]],
         ]);
         let mut found = None;
-        for &cube in &cubes_by_fill {
+        for &cube in index.candidate_cubes() {
             if used[cube] || cluster.cube_free_count(cube) < pe.volume() {
                 continue;
             }
-            if cluster.is_cube_box_free(cube, off, pe) {
+            if index.is_box_free(cube, off, pe) {
                 found = Some(cube);
                 break;
             }
@@ -394,6 +403,36 @@ mod tests {
         let p = place_with_offsets(&c, &v, 1).unwrap();
         assert_eq!(p.cubes, vec![0]);
         assert!(p.nodes.iter().all(|&nd| c.is_free(nd)));
+    }
+
+    #[test]
+    fn shared_index_matches_per_call_builds() {
+        // One index serving every variant of a job must produce the same
+        // plans as the per-call fresh builds (the pre-index behaviour).
+        let mut c = cluster(4);
+        let warm = Variant::identity(JobShape::new(3, 4, 4));
+        place_with_offsets(&c, &warm, 50).unwrap().commit(&mut c).unwrap();
+        let idx = ReconfigIndex::build(&c);
+        for s in [
+            JobShape::new(4, 4, 32),
+            JobShape::new(2, 4, 4),
+            JobShape::new(18, 1, 1),
+        ] {
+            for v in enumerate_variants(s, 64) {
+                let fresh = place_with_offsets(&c, &v, 1);
+                let shared = place_indexed(&c, &idx, &v, 1, true);
+                assert_eq!(
+                    fresh.as_ref().map(|p| &p.nodes),
+                    shared.as_ref().map(|p| &p.nodes),
+                    "{s} {v:?}"
+                );
+                assert_eq!(
+                    fresh.map(|p| p.cubes),
+                    shared.map(|p| p.cubes),
+                    "{s} {v:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,17 @@ impl OccupancySums {
         self.s[(x * sy + y) * sz + z]
     }
 
+    /// Total busy nodes (the full-extent prefix).
+    pub fn total_busy(&self) -> u32 {
+        self.prefix(self.ext.0[0], self.ext.0[1], self.ext.0[2])
+    }
+
+    /// Free nodes in the torus — identical to the cluster's
+    /// `free_count()` at the epoch the table was built.
+    pub fn free_count(&self) -> usize {
+        self.ext.volume() - self.total_busy() as usize
+    }
+
     /// Busy count in the half-open box `[x0,x1)×[y0,y1)×[z0,z1)` (no wrap).
     pub fn busy_in(&self, x0: usize, x1: usize, y0: usize, y1: usize, z0: usize, z1: usize) -> u32 {
         self.prefix(x1, y1, z1)
@@ -96,38 +107,58 @@ impl OccupancySums {
         }
         true
     }
+
+    /// Find the first (lexicographic anchor order) free box of extent `e`,
+    /// or `None`. Extents exceeding the torus are rejected. This is the
+    /// index-backed probe: one table answers every variant of a job and
+    /// every queued job at the same epoch, where the hot path used to
+    /// rebuild the O(V) table per variant.
+    pub fn find_first_box(&self, e: P3) -> Option<P3> {
+        let ext = self.ext;
+        if (0..3).any(|a| e.0[a] > ext.0[a] || e.0[a] == 0) {
+            return None;
+        }
+        if e.volume() > self.free_count() {
+            return None;
+        }
+        // Anchors only need to range over positions where wrapping
+        // matters: if e[a] == ext[a] the anchor on that axis is
+        // irrelevant — pin to 0.
+        let ax = if e.0[0] == ext.0[0] { 1 } else { ext.0[0] };
+        let ay = if e.0[1] == ext.0[1] { 1 } else { ext.0[1] };
+        let az = if e.0[2] == ext.0[2] { 1 } else { ext.0[2] };
+        for x in 0..ax {
+            for y in 0..ay {
+                for z in 0..az {
+                    let anchor = P3([x, y, z]);
+                    if self.box_free(anchor, e) {
+                        return Some(anchor);
+                    }
+                }
+            }
+        }
+        None
+    }
 }
 
-/// Find the first (lexicographic anchor order) free box of extent `e` in
-/// the static torus, or `None`. Extents exceeding the torus are rejected.
+/// [`OccupancySums::find_first_box`] against a freshly built table — the
+/// uncached convenience entry used by tests and one-shot callers. Policy
+/// hot paths go through the epoch-cached table in
+/// [`PolicyCore::placement_index`](super::api::PolicyCore::placement_index)
+/// instead.
 pub fn find_first_box(cluster: &ClusterState, e: P3) -> Option<P3> {
     let ext = match cluster.topo() {
         ClusterTopo::Static { ext } => ext,
         _ => panic!("find_first_box requires a static topology"),
     };
+    // Cheap rejections before paying the O(V) build.
     if (0..3).any(|a| e.0[a] > ext.0[a] || e.0[a] == 0) {
         return None;
     }
     if e.volume() > cluster.free_count() {
         return None;
     }
-    let sums = OccupancySums::build(cluster);
-    // Anchors only need to range over positions where wrapping matters:
-    // if e[a] == ext[a] the anchor on that axis is irrelevant — pin to 0.
-    let ax = if e.0[0] == ext.0[0] { 1 } else { ext.0[0] };
-    let ay = if e.0[1] == ext.0[1] { 1 } else { ext.0[1] };
-    let az = if e.0[2] == ext.0[2] { 1 } else { ext.0[2] };
-    for x in 0..ax {
-        for y in 0..ay {
-            for z in 0..az {
-                let anchor = P3([x, y, z]);
-                if sums.box_free(anchor, e) {
-                    return Some(anchor);
-                }
-            }
-        }
-    }
-    None
+    OccupancySums::build(cluster).find_first_box(e)
 }
 
 /// Node ids covered by the (possibly wrapping) box, in placed-box linear
@@ -270,6 +301,25 @@ mod tests {
             });
             assert_eq!(sums.box_free(anchor, e), brute, "anchor={anchor} e={e}");
         }
+    }
+
+    #[test]
+    fn indexed_find_first_box_matches_fresh_build() {
+        let mut c = static_cluster();
+        let mut rng = crate::util::Pcg64::seeded(31);
+        let mut nodes: Vec<usize> = (0..1500).map(|_| rng.below(4096)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        occupy(&mut c, 1, nodes);
+        let sums = OccupancySums::build(&c);
+        assert_eq!(sums.free_count(), c.free_count());
+        for _ in 0..60 {
+            let e = P3([rng.range(1, 17), rng.range(1, 17), rng.range(1, 17)]);
+            assert_eq!(sums.find_first_box(e), find_first_box(&c, e), "e={e}");
+        }
+        // Degenerate extents reject in both paths.
+        assert_eq!(sums.find_first_box(P3([0, 4, 4])), None);
+        assert_eq!(sums.find_first_box(P3([17, 1, 1])), None);
     }
 
     #[test]

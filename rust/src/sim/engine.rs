@@ -6,7 +6,7 @@
 //! from the system and proceeds to the next."
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use crate::placement::best_effort;
@@ -84,13 +84,15 @@ impl RunResult {
         self.scheduled as f64 / self.outcomes.len() as f64
     }
 
-    /// Per-completed-job metric rows in job-id order. Jobs absent from
-    /// `trace` (a caller handed the wrong trace for this run) are skipped
-    /// rather than panicking on a missing arrival; debug builds still
-    /// assert so the mismatch is caught in tests.
-    fn completed_rows(&self, trace: &[JobSpec], f: impl Fn(f64, f64, f64) -> f64) -> Vec<f64> {
+    /// `(start, finish, arrival)` of every completed job, in job-id
+    /// order — the one arrivals-map build and sort behind every
+    /// per-completed-job metric. Jobs absent from `trace` (a caller
+    /// handed the wrong trace for this run) are skipped rather than
+    /// panicking on a missing arrival; debug builds still assert so the
+    /// mismatch is caught in tests.
+    fn completed_triples(&self, trace: &[JobSpec]) -> Vec<(f64, f64, f64)> {
         let arrivals: HashMap<u64, f64> = trace.iter().map(|j| (j.id, j.arrival)).collect();
-        let mut rows: Vec<(u64, f64)> = self
+        let mut rows: Vec<(u64, (f64, f64, f64))> = self
             .outcomes
             .iter()
             .filter_map(|(id, o)| match o {
@@ -99,7 +101,7 @@ impl RunResult {
                         debug_assert!(false, "job {id} is not in the provided trace");
                         return None;
                     };
-                    Some((*id, f(*start, *finish, arrival)))
+                    Some((*id, (*start, *finish, arrival)))
                 }
                 _ => None,
             })
@@ -111,12 +113,36 @@ impl RunResult {
     /// Completion times (finish − arrival) of scheduled jobs in job-id
     /// order, given the original trace for arrival lookup.
     pub fn jcts(&self, trace: &[JobSpec]) -> Vec<f64> {
-        self.completed_rows(trace, |_start, finish, arrival| finish - arrival)
+        self.completed_triples(trace)
+            .into_iter()
+            .map(|(_start, finish, arrival)| finish - arrival)
+            .collect()
     }
 
     /// Queueing delays (start − arrival) of scheduled jobs in job-id order.
     pub fn queueing_delays(&self, trace: &[JobSpec]) -> Vec<f64> {
-        self.completed_rows(trace, |start, _finish, arrival| start - arrival)
+        self.completed_triples(trace)
+            .into_iter()
+            .map(|(start, _finish, arrival)| start - arrival)
+            .collect()
+    }
+
+    /// [`RunResult::jcts`] and [`RunResult::queueing_delays`] from one
+    /// arrivals-map build and one sort. `metrics::summarize` needs both
+    /// per run per cell; computing them separately built the `HashMap`
+    /// twice for every (run, cell) pair of every sweep row.
+    pub fn jcts_and_queueing_delays(&self, trace: &[JobSpec]) -> (Vec<f64>, Vec<f64>) {
+        let triples = self.completed_triples(trace);
+        (
+            triples
+                .iter()
+                .map(|&(_start, finish, arrival)| finish - arrival)
+                .collect(),
+            triples
+                .iter()
+                .map(|&(start, _finish, arrival)| start - arrival)
+                .collect(),
+        )
     }
 }
 
@@ -141,12 +167,21 @@ pub struct Simulation {
     scheduled: usize,
     dropped: usize,
     started: HashMap<u64, f64>,
-    /// Memo: head job that failed to place against the current cluster
-    /// generation — skip re-planning until a release changes the cluster
-    /// (arrivals cannot make a blocked head placeable).
+    /// Memo: head job that got `NoCapacity` against the given cluster
+    /// epoch — skip re-planning until the occupancy epoch moves (only a
+    /// release can move it while a head is blocked; arrivals cannot make
+    /// a blocked head placeable).
     head_block: Option<(u64, u64)>,
-    /// Bumped on every release (cluster can only have gained capacity).
-    generation: u64,
+    /// Memo of shapes the policy judged `Infeasible`. Topology and
+    /// `fold_dims_enabled` — the other two components of the conceptual
+    /// `(topo, shape, fold_dims)` key — are run constants, so the set is
+    /// keyed on shape alone. A later job with a memoized shape drops via
+    /// one hash lookup instead of a full variant-enumeration search.
+    /// Sound because decisions are monotone: a shape that cannot place on
+    /// an *empty* cluster (what `Infeasible` certifies) can never place
+    /// on a loaded one, and the policy's own feasibility cache would
+    /// repeat the verdict anyway.
+    infeasible_shapes: HashSet<crate::shape::JobShape>,
 }
 
 /// f64 ordered wrapper for the event heap (times are never NaN).
@@ -195,7 +230,7 @@ impl Simulation {
             dropped: 0,
             started: HashMap::new(),
             head_block: None,
-            generation: 0,
+            infeasible_shapes: HashSet::new(),
         }
     }
 
@@ -238,18 +273,29 @@ impl Simulation {
     fn drain_queue(&mut self, trace: &[JobSpec]) {
         while let Some(&idx) = self.queue.front() {
             let job = trace[idx];
-            if self.head_block == Some((job.id, self.generation)) {
-                break; // nothing changed since this head last failed
+            if self.head_block == Some((job.id, self.cluster.epoch())) {
+                break; // occupancy unchanged since this head last failed
             }
             // The decision wall-clock is observer-only diagnostics; skip
             // the timer entirely when nobody listens.
             let t0 = (!self.observers.is_empty()).then(Instant::now);
-            let decision = self.policy.plan(&PlacementRequest {
-                job: job.id,
-                shape: job.shape,
-                arrival: job.arrival,
-                cluster: &self.cluster,
-            });
+            let decision = if self.infeasible_shapes.contains(&job.shape) {
+                // A shape already judged never-placeable on this
+                // (topology, fold_dims) run drops on a map lookup — the
+                // synthesized decision keeps the observer stream (and its
+                // decisions = placed + infeasible + no_capacity
+                // invariant) intact, with zero search counters.
+                PlacementDecision::Infeasible {
+                    stats: Default::default(),
+                }
+            } else {
+                self.policy.plan(&PlacementRequest {
+                    job: job.id,
+                    shape: job.shape,
+                    arrival: job.arrival,
+                    cluster: &self.cluster,
+                })
+            };
             if let Some(t0) = t0 {
                 let wall = t0.elapsed();
                 for o in &mut self.observers {
@@ -288,15 +334,20 @@ impl Simulation {
                     self.scheduled += 1;
                 }
                 PlacementDecision::Infeasible { .. } => {
-                    // Shape incompatible: remove and move on (§4).
+                    // Shape incompatible: remove and move on (§4), and
+                    // memoize so later jobs with the same shape skip the
+                    // search entirely.
+                    self.infeasible_shapes.insert(job.shape);
                     self.outcomes.push((job.id, JobOutcome::Dropped));
                     self.dropped += 1;
                     self.queue.pop_front();
                 }
                 PlacementDecision::NoCapacity { .. } => {
                     // Head blocks the queue until resources free up;
-                    // memoize so arrival storms don't re-run the search.
-                    self.head_block = Some((job.id, self.generation));
+                    // memoize against the occupancy epoch so arrival
+                    // storms don't re-run the search — the next release
+                    // moves the epoch and wakes the head up.
+                    self.head_block = Some((job.id, self.cluster.epoch()));
                     break;
                 }
             }
@@ -340,8 +391,10 @@ impl Simulation {
                     }
                 }
                 EventSlot::Completion(id) => {
+                    // `release` moves the occupancy epoch, which both
+                    // invalidates the policy's placement index and wakes
+                    // a `head_block`ed queue head.
                     self.cluster.release(id);
-                    self.generation += 1;
                     if let Some(rings) = self.be_rings.remove(&id) {
                         self.contention.remove_job(&rings);
                     }
@@ -472,6 +525,23 @@ mod tests {
         // job 2 stays blocked while job 1 hogs the whole cluster; it can
         // only start at t=200 → finish 210 → JCT 190.
         assert_eq!(jcts[2], 190.0);
+    }
+
+    #[test]
+    fn combined_rows_match_separate_computations() {
+        let trace = vec![
+            job(0, 0.0, 100.0, JobShape::new(16, 16, 16)),
+            job(1, 10.0, 100.0, JobShape::new(16, 16, 16)),
+            job(2, 20.0, 10.0, JobShape::new(2, 2, 2)),
+        ];
+        let r = run(
+            PolicyKind::Reconfig,
+            ClusterTopo::reconfigurable_4096(4),
+            &trace,
+        );
+        let (jcts, delays) = r.jcts_and_queueing_delays(&trace);
+        assert_eq!(jcts, r.jcts(&trace));
+        assert_eq!(delays, r.queueing_delays(&trace));
     }
 
     #[test]
@@ -613,6 +683,80 @@ mod tests {
         assert!(t.ocs_entries_reserved > 0);
         assert!(t.variants_enumerated > 0);
         assert!(t.decision_wall > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn no_capacity_memo_skips_probes_and_wakes_on_release() {
+        // Job 0 fills the cluster; job 1 blocks at its head; five more
+        // arrivals land while blocked. Each arrival triggers a drain, but
+        // the epoch memo must keep the policy to exactly one NoCapacity
+        // search — and job 0's release (epoch bump) must wake the head so
+        // everything still completes.
+        let mut trace = vec![
+            job(0, 0.0, 100.0, JobShape::new(16, 16, 16)),
+            // Half the cluster: blocked while job 0 runs, and leaves room
+            // for the small jobs once it lands (so the storm behind it
+            // never produces a second NoCapacity decision).
+            job(1, 10.0, 10.0, JobShape::new(16, 16, 8)),
+        ];
+        for i in 2..7 {
+            trace.push(job(i, 10.0 + i as f64, 5.0, JobShape::new(2, 2, 2)));
+        }
+        let telemetry = SharedTelemetry::new();
+        let mut cfg = SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::Reconfig,
+        );
+        cfg.drain = true;
+        let r = Simulation::new(cfg)
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&trace);
+        assert_eq!(r.scheduled, 7, "the release must wake the blocked head");
+        let t = telemetry.snapshot();
+        assert_eq!(
+            t.no_capacity, 1,
+            "arrival storms must not re-run the blocked head's search"
+        );
+        assert_eq!(t.decisions, t.placed + t.infeasible + t.no_capacity);
+    }
+
+    #[test]
+    fn infeasible_shape_memoized_across_jobs() {
+        // Three jobs sharing one never-placeable shape: all three drop,
+        // but only the first runs a variant search — the repeats are
+        // memo lookups whose synthesized decisions carry zero counters.
+        let bad = JobShape::new(4, 4, 32); // > 16 on every static rotation
+        let trace = vec![
+            job(0, 0.0, 50.0, bad),
+            job(1, 1.0, 50.0, JobShape::new(2, 2, 2)),
+            job(2, 2.0, 50.0, bad),
+            job(3, 3.0, 50.0, bad),
+        ];
+        let telemetry = SharedTelemetry::new();
+        let mut cfg = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+        cfg.drain = true;
+        let r = Simulation::new(cfg)
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&trace);
+        assert_eq!(r.dropped, 3);
+        assert_eq!(r.scheduled, 1);
+        let t = telemetry.snapshot();
+        assert_eq!(t.infeasible, 3, "observers still see every drop");
+        // One real search for the bad shape + one for the good job; the
+        // two memoized drops contribute nothing.
+        let single_bad = {
+            let tele = SharedTelemetry::new();
+            let mut c = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+            c.drain = true;
+            Simulation::new(c)
+                .with_observer(Box::new(tele.clone()))
+                .run(&trace[..2]);
+            tele.snapshot().variants_enumerated
+        };
+        assert_eq!(
+            t.variants_enumerated, single_bad,
+            "repeated infeasible shapes must cost a map lookup, not a search"
+        );
     }
 
     #[test]

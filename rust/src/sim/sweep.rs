@@ -113,18 +113,23 @@ pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
 
 /// One simulated trial: the run result plus the trace it consumed (needed
 /// for arrival lookups during aggregation). Shared via `Arc` — the cache
-/// hands the same output to every cell that maps to the same key.
+/// hands the same output to every cell that maps to the same key. The
+/// trace itself is also shared (`Arc<[JobSpec]>`): a fixed CSV workload's
+/// job list is one allocation referenced by every trial, never re-cloned
+/// per trial or per wire decode.
 #[derive(Debug)]
 pub struct TrialOutput {
     pub result: RunResult,
-    pub trace: Vec<JobSpec>,
+    pub trace: Arc<[JobSpec]>,
 }
 
 impl TrialOutput {
-    /// Approximate heap footprint, for the cache's byte bound.
+    /// Approximate heap footprint, for the cache's byte bound. The trace
+    /// allocation is counted per referencing trial (an over-estimate for
+    /// shared CSV traces — the safe direction for a memory bound).
     pub fn approx_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
-            + self.trace.capacity() * std::mem::size_of::<JobSpec>()
+            + self.trace.len() * std::mem::size_of::<JobSpec>()
             + self.result.outcomes.capacity()
                 * std::mem::size_of::<(u64, crate::sim::engine::JobOutcome)>()
             + self.result.utilization.approx_bytes()
@@ -611,7 +616,7 @@ pub fn run_cell_sharded(cell: Cell, cfg: &SweepConfig) -> CellSummary {
     let trials = run_trials(cell, cfg);
     let pairs: Vec<(&RunResult, &[JobSpec])> = trials
         .iter()
-        .map(|t| (&t.result, t.trace.as_slice()))
+        .map(|t| (&t.result, &t.trace[..]))
         .collect();
     summarize(cell.label, &pairs)
 }
@@ -712,7 +717,7 @@ pub fn run_grid_with(
             let trials = chunks.next().expect("one slot chunk per cell");
             let pairs: Vec<(&RunResult, &[JobSpec])> = trials
                 .iter()
-                .map(|t| (&t.result, t.trace.as_slice()))
+                .map(|t| (&t.result, &t.trace[..]))
                 .collect();
             rows.push(SweepRow {
                 scenario: workload.name().to_string(),

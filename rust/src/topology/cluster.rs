@@ -1,9 +1,23 @@
 //! Cluster occupancy state: nodes, allocations, and the OCS plant.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::coords::{CubeGrid, P3};
 use super::ocs::OcsState;
+
+/// Process-wide epoch source. Epochs are *globally* unique, not
+/// per-cluster sequential: two live `ClusterState` values can only share
+/// an epoch by being clones of the same snapshot (identical occupancy),
+/// so `(epoch)` alone is a sound cache key for occupancy-derived indices
+/// — no `(cluster id, generation)` pair needed, and clones stay safe.
+/// Epoch values never flow into any simulation result, only into cache
+/// validity checks, so the cross-thread counter cannot break determinism.
+static EPOCH_SOURCE: AtomicU64 = AtomicU64::new(0);
+
+fn next_epoch() -> u64 {
+    EPOCH_SOURCE.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Cluster topology flavor (paper §4 builds both). `Hash` so the sweep
 /// result cache can key trial results on the topology identity.
@@ -88,6 +102,11 @@ pub struct ClusterState {
     ocs: Option<OcsState>,
     allocs: HashMap<u64, Allocation>,
     busy_count: usize,
+    /// Occupancy version: a fresh globally-unique value on construction
+    /// and after every [`ClusterState::commit`] / [`ClusterState::release`].
+    /// Spatial indices built against one epoch (`placement::index`) stay
+    /// valid exactly while the epoch is unchanged.
+    epoch: u64,
 }
 
 impl ClusterState {
@@ -107,11 +126,22 @@ impl ClusterState {
             ocs,
             allocs: HashMap::new(),
             busy_count: 0,
+            epoch: next_epoch(),
         }
     }
 
     pub fn topo(&self) -> ClusterTopo {
         self.topo
+    }
+
+    /// The occupancy epoch: changes (to a globally-unique value) on every
+    /// commit and release. Two reads returning the same epoch bracket a
+    /// window in which the busy bitmap did not change, which is what lets
+    /// `placement::index::PlacementIndex` be built once per occupancy
+    /// change and shared across every variant probe and queued job.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn ocs(&self) -> Option<&OcsState> {
@@ -184,6 +214,7 @@ impl ClusterState {
         }
         self.busy_count += alloc.nodes.len();
         self.allocs.insert(alloc.job, alloc);
+        self.epoch = next_epoch();
     }
 
     /// Release a job's nodes and OCS reservations. Returns the allocation
@@ -203,6 +234,7 @@ impl ClusterState {
         if let Some(ocs) = self.ocs.as_mut() {
             ocs.release_job(job);
         }
+        self.epoch = next_epoch();
         Some(alloc)
     }
 
@@ -320,6 +352,35 @@ mod tests {
     fn release_unknown_job_is_none() {
         let mut c = reconfig();
         assert!(c.release(99).is_none());
+    }
+
+    #[test]
+    fn epoch_changes_on_commit_and_release_only() {
+        let mut c = reconfig();
+        let e0 = c.epoch();
+        // Reads leave the epoch alone.
+        let _ = (c.free_count(), c.is_free(0), c.utilization());
+        assert_eq!(c.epoch(), e0);
+        c.commit(Allocation {
+            job: 1,
+            nodes: vec![0],
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 1]),
+        });
+        let e1 = c.epoch();
+        assert_ne!(e1, e0, "commit must bump the epoch");
+        // A failed release is a read.
+        assert!(c.release(99).is_none());
+        assert_eq!(c.epoch(), e1);
+        c.release(1).unwrap();
+        assert_ne!(c.epoch(), e1, "release must bump the epoch");
+        // Distinct clusters never share an epoch, even with identical
+        // occupancy — the index cache key needs no instance id.
+        let a = reconfig();
+        let b = reconfig();
+        assert_ne!(a.epoch(), b.epoch());
     }
 
     #[test]

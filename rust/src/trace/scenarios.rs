@@ -172,7 +172,7 @@ pub enum Workload {
     Csv {
         /// Report name (the file stem).
         name: String,
-        jobs: Arc<Vec<JobSpec>>,
+        jobs: Arc<[JobSpec]>,
         /// FNV-1a hash of the job list, computed once at load time. Part
         /// of the sweep cache key: two different files sharing a stem
         /// must never share trial results.
@@ -232,7 +232,7 @@ impl Workload {
         let content_hash = jobs_content_hash(&jobs);
         Workload::Csv {
             name,
-            jobs: Arc::new(jobs),
+            jobs: jobs.into(),
             content_hash,
         }
     }
@@ -260,14 +260,16 @@ impl Workload {
         }
     }
 
-    /// The job trace for one trial. Synthetic workloads generate
-    /// `num_jobs` jobs from `seed`; CSV workloads replay the recorded
-    /// trace unchanged (both knobs are ignored — a recorded trace has
-    /// exactly one realization).
-    pub fn trace(&self, num_jobs: usize, seed: u64) -> Vec<JobSpec> {
+    /// The job trace for one trial, shared rather than owned: synthetic
+    /// workloads generate `num_jobs` jobs from `seed` (a fresh list per
+    /// call); CSV workloads hand out another reference to the one
+    /// recorded realization (both knobs are ignored) — every trial and
+    /// every wire decode used to deep-clone the full job list here
+    /// (ROADMAP perf item, retired).
+    pub fn trace(&self, num_jobs: usize, seed: u64) -> Arc<[JobSpec]> {
         match self {
-            Workload::Synthetic(sc) => generate(&sc.trace_config(num_jobs, seed)),
-            Workload::Csv { jobs, .. } => jobs.as_ref().clone(),
+            Workload::Synthetic(sc) => generate(&sc.trace_config(num_jobs, seed)).into(),
+            Workload::Csv { jobs, .. } => jobs.clone(),
         }
     }
 
@@ -361,6 +363,8 @@ mod tests {
         // Requested size and seed are ignored: the recorded trace replays.
         assert_eq!(w.trace(100, 1).len(), 9);
         assert_eq!(w.trace(100, 1), w.trace(5, 2));
+        // A fixed trace is *shared*, not deep-cloned per trial.
+        assert!(Arc::ptr_eq(&w.trace(100, 1), &w.trace(5, 2)));
         assert_eq!(w.num_jobs(100), 9);
         std::fs::remove_file(&tmp).ok();
 

@@ -3,8 +3,20 @@
 //! `cargo bench` runs binaries with `harness = false`; they use this module
 //! to time closures with warmup, report mean/p50/p99 per iteration, and
 //! print machine-greppable `BENCH` lines consumed by EXPERIMENTS.md.
+//!
+//! Two environment knobs make the harness CI-friendly:
+//!
+//! * `BENCH_SMOKE=1` — truncate warmup/iteration counts to a handful via
+//!   [`smoke_iters`], so a bench binary doubles as a seconds-long CI
+//!   smoke run (numbers are noisy but present);
+//! * `BENCH_JSON=<path>` — benches that collect their [`BenchResult`]s
+//!   call [`write_json_env`] at exit to emit one JSON object per line
+//!   (`name`, `iters`, `ns_per_iter`, `p50_ns`, `p99_ns`), giving CI a
+//!   machine-readable perf trajectory across PRs.
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Timing summary for one benchmark case.
 #[derive(Debug, Clone)]
@@ -73,6 +85,49 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Is this a `BENCH_SMOKE=1` run (CI smoke: tiny iteration counts)?
+pub fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Iteration count to actually run: `n` normally, at most 3 (and at
+/// least 1) under `BENCH_SMOKE=1`.
+pub fn smoke_iters(n: usize) -> usize {
+    if smoke() {
+        n.clamp(1, 3)
+    } else {
+        n
+    }
+}
+
+/// One machine-readable row per result (JSON lines): `name`, `iters`,
+/// `ns_per_iter` (the mean), plus the `p50_ns`/`p99_ns` spread.
+pub fn results_json(results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    for r in results {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(r.name.clone()));
+        obj.insert("iters".to_string(), Json::Num(r.iters as f64));
+        obj.insert("ns_per_iter".to_string(), Json::Num(r.mean_ns));
+        obj.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+        obj.insert("p99_ns".to_string(), Json::Num(r.p99_ns));
+        out.push_str(&Json::Obj(obj).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write [`results_json`] rows to the path named by `BENCH_JSON`, if set.
+/// Returns the path written to. I/O failures are loud (a CI perf row
+/// silently missing is worse than a failed step).
+pub fn write_json_env(results: &[BenchResult]) -> Option<String> {
+    let path = std::env::var("BENCH_JSON").ok().filter(|p| !p.is_empty())?;
+    std::fs::write(&path, results_json(results))
+        .unwrap_or_else(|e| panic!("BENCH_JSON: cannot write {path}: {e}"));
+    eprintln!("bench: wrote {} JSON rows to {path}", results.len());
+    Some(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +140,35 @@ mod tests {
         assert!(r.mean_ns >= 0.0);
         assert!(r.p99_ns >= r.p50_ns * 0.5);
         assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn json_rows_roundtrip() {
+        let rows = vec![BenchResult {
+            name: "case a".into(),
+            iters: 7,
+            mean_ns: 1234.5,
+            p50_ns: 1200.0,
+            p99_ns: 2000.0,
+        }];
+        let text = results_json(&rows);
+        assert_eq!(text.lines().count(), 1);
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("case a"));
+        assert_eq!(j.get("iters").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("ns_per_iter").and_then(Json::as_f64), Some(1234.5));
+    }
+
+    #[test]
+    fn smoke_iters_clamps_only_under_env() {
+        // The env var is process-global; only assert the pure logic for
+        // the current environment state.
+        if smoke() {
+            assert_eq!(smoke_iters(200), 3);
+            assert_eq!(smoke_iters(0), 1);
+        } else {
+            assert_eq!(smoke_iters(200), 200);
+        }
     }
 
     #[test]

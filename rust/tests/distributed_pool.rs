@@ -73,6 +73,31 @@ fn two_tcp_workers_match_local_bytes() {
 }
 
 #[test]
+fn multiple_connections_per_host_match_local_bytes() {
+    // `--pool-connections 3` on one worker host: every connection gets
+    // its own serving thread on the worker, the rows stay byte-identical,
+    // and the per-connection telemetry covers all three connections.
+    let a = pool::spawn_worker().unwrap();
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let executor = PoolExecutor::new(vec![a.to_string()]).with_connections(3);
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(
+        rows_local(&workloads),
+        pooled,
+        "SWEEP rows differ between --workers 1 and a 1-host x 3-connection pool"
+    );
+    let stats = executor.stats();
+    assert_eq!(stats.workers.len(), 3, "one stats row per connection: {stats:?}");
+    let completed: usize = stats.workers.iter().map(|w| w.completed).sum();
+    // 2 cells × 1 workload × 2 runs = 4 unique trials.
+    assert_eq!(completed + stats.leader_fallback, 4, "{stats:?}");
+    assert!(
+        stats.workers.iter().all(|w| w.connected),
+        "every connection must be accepted: {stats:?}"
+    );
+}
+
+#[test]
 fn csv_workload_ships_inline_and_matches_local() {
     // A file-backed workload must survive the wire (jobs ship inline, no
     // shared filesystem) and produce local-identical bytes.

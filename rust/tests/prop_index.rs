@@ -1,0 +1,223 @@
+//! Property suite for the epoch-cached placement index (`placement::index`):
+//! under randomized commit/release churn, on both topology families,
+//! index-backed queries must stay byte-equivalent to fresh rebuilds and
+//! to the raw-bitmap oracles — and a policy that caches its index across
+//! probes must decide exactly like one that rebuilds from scratch.
+
+use rfold::placement::index::{PlacementIndex, ReconfigIndex};
+use rfold::placement::policies::{Folding, RFold};
+use rfold::placement::static_place::{self, OccupancySums};
+use rfold::placement::PlacementPolicy;
+use rfold::shape::JobShape;
+use rfold::topology::cluster::{Allocation, ClusterState, ClusterTopo};
+use rfold::topology::P3;
+use rfold::util::prop::{check, expect};
+use rfold::util::Pcg64;
+
+fn random_shape(rng: &mut Pcg64) -> JobShape {
+    let size = rng.range(1, 512);
+    rfold::trace::gen::shape_for_size(rng, size, &Default::default())
+        .unwrap_or(JobShape::new(1, 1, 1))
+}
+
+/// Commit a random batch of currently-free nodes as one allocation.
+fn commit_random_nodes(cluster: &mut ClusterState, rng: &mut Pcg64, job: u64) {
+    let total = cluster.num_nodes();
+    let mut nodes: Vec<usize> = (0..rng.range(1, 200))
+        .map(|_| rng.below(total))
+        .filter(|&n| cluster.is_free(n))
+        .collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    if nodes.is_empty() {
+        return;
+    }
+    cluster.commit(Allocation {
+        job,
+        nodes,
+        cubes: vec![],
+        ocs_entries: 0,
+        rings: vec![],
+        placed_ext: P3([1, 1, 1]),
+    });
+}
+
+#[test]
+fn prop_reconfig_index_matches_bitmap_oracle_under_churn() {
+    check("reconfig index == bitmap oracle", 25, |rng| {
+        let n = *rng.choose(&[2usize, 4, 8]);
+        let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(n));
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..12u64 {
+            if !live.is_empty() && rng.chance(0.4) {
+                let id = live.swap_remove(rng.below(live.len()));
+                cluster.release(id);
+            } else {
+                commit_random_nodes(&mut cluster, rng, step);
+                live.push(step);
+            }
+            let idx = ReconfigIndex::build(&cluster);
+            // Box-freeness: O(1) summed tables vs the O(volume) bitmap scan.
+            for _ in 0..40 {
+                let cube = rng.below(idx.num_cubes());
+                let off = P3([rng.below(n + 1), rng.below(n + 1), rng.below(n + 1)]);
+                let ext = P3([
+                    rng.range(1, n + 2),
+                    rng.range(1, n + 2),
+                    rng.range(1, n + 2),
+                ]);
+                expect(
+                    idx.is_box_free(cube, off, ext)
+                        == cluster.is_cube_box_free(cube, off, ext),
+                    "indexed box query must equal the bitmap scan",
+                )?;
+            }
+            // Candidate order: exactly the legacy per-probe computation.
+            let mut legacy: Vec<usize> = (0..idx.num_cubes())
+                .filter(|&c| cluster.cube_free_count(c) > 0)
+                .collect();
+            legacy.sort_by_key(|&c| cluster.cube_free_count(c));
+            expect(
+                idx.candidate_cubes() == legacy.as_slice(),
+                "candidate-cube order must equal the legacy stable sort",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_static_index_matches_bruteforce_under_churn() {
+    check("static sums == brute force", 25, |rng| {
+        let mut cluster = ClusterState::new(ClusterTopo::static_4096());
+        let ext = P3([16, 16, 16]);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..10u64 {
+            if !live.is_empty() && rng.chance(0.4) {
+                let id = live.swap_remove(rng.below(live.len()));
+                cluster.release(id);
+            } else {
+                commit_random_nodes(&mut cluster, rng, step);
+                live.push(step);
+            }
+            let sums = OccupancySums::build(&cluster);
+            expect(
+                sums.free_count() == cluster.free_count(),
+                "table free count must match the cluster",
+            )?;
+            for _ in 0..30 {
+                let anchor = P3([rng.below(16), rng.below(16), rng.below(16)]);
+                let e = P3([rng.range(1, 6), rng.range(1, 6), rng.range(1, 6)]);
+                let brute = e.iter_box().all(|d| {
+                    let p = P3([
+                        (anchor.0[0] + d.0[0]) % 16,
+                        (anchor.0[1] + d.0[1]) % 16,
+                        (anchor.0[2] + d.0[2]) % 16,
+                    ]);
+                    cluster.is_free(p.index_in(ext))
+                });
+                expect(
+                    sums.box_free(anchor, e) == brute,
+                    "wrap-aware box query must equal the brute force scan",
+                )?;
+            }
+            // The indexed first-fit scan equals the uncached wrapper.
+            for _ in 0..10 {
+                let e = P3([
+                    rng.range(1, 17),
+                    rng.range(1, 17),
+                    rng.range(1, 17),
+                ]);
+                expect(
+                    sums.find_first_box(e) == static_place::find_first_box(&cluster, e),
+                    "indexed find_first_box must equal the fresh-build path",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_policy_decides_like_fresh_policy_under_churn() {
+    // One long-lived policy (epoch-cached index reused across probes)
+    // against a throwaway instance per probe (always a cold rebuild):
+    // every plan must be byte-identical through arbitrary commit/release
+    // churn, on both topology families.
+    check("cached == fresh policy decisions", 12, |rng| {
+        let reconfigurable = rng.chance(0.5);
+        let topo = if reconfigurable {
+            ClusterTopo::reconfigurable_4096(*rng.choose(&[2usize, 4, 8]))
+        } else {
+            ClusterTopo::static_4096()
+        };
+        let mut cluster = ClusterState::new(topo);
+        let mut cached_rfold = RFold::new();
+        let mut cached_folding = Folding::new();
+        let mut live: Vec<u64> = Vec::new();
+        for job in 0..25u64 {
+            if !live.is_empty() && rng.chance(0.35) {
+                let id = live.swap_remove(rng.below(live.len()));
+                cluster.release(id);
+            }
+            let shape = random_shape(rng);
+            let (cached_plan, fresh_plan) = if reconfigurable {
+                (
+                    cached_rfold.place_now(&cluster, job, shape),
+                    RFold::new().place_now(&cluster, job, shape),
+                )
+            } else {
+                (
+                    cached_folding.place_now(&cluster, job, shape),
+                    Folding::new().place_now(&cluster, job, shape),
+                )
+            };
+            expect(
+                cached_plan.as_ref().map(|p| &p.nodes)
+                    == fresh_plan.as_ref().map(|p| &p.nodes),
+                "cached index must never change the chosen nodes",
+            )?;
+            expect(
+                cached_plan.as_ref().map(|p| &p.cubes)
+                    == fresh_plan.as_ref().map(|p| &p.cubes),
+                "cached index must never change the chosen cubes",
+            )?;
+            if let Some(plan) = cached_plan {
+                plan.commit(&mut cluster).map_err(|e| e.to_string())?;
+                live.push(job);
+            }
+            cluster.check_consistency()?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn placement_index_epoch_tracks_cluster() {
+    // Deterministic regression for epoch invalidation: a stale index is
+    // detectable by epoch comparison, and a rebuilt one sees the change.
+    let mut cluster = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+    let before = PlacementIndex::build(&cluster);
+    assert_eq!(before.epoch(), cluster.epoch());
+    assert!(before
+        .reconfig()
+        .is_box_free(0, P3([0, 0, 0]), P3([4, 4, 4])));
+    let mut policy = RFold::new();
+    policy
+        .place_now(&cluster, 1, JobShape::new(4, 4, 4))
+        .unwrap()
+        .commit(&mut cluster)
+        .unwrap();
+    assert_ne!(before.epoch(), cluster.epoch(), "stale epoch must differ");
+    let after = PlacementIndex::build(&cluster);
+    assert_eq!(after.epoch(), cluster.epoch());
+    assert!(!after
+        .reconfig()
+        .is_box_free(0, P3([0, 0, 0]), P3([4, 4, 4])));
+    cluster.release(1).unwrap();
+    let released = PlacementIndex::build(&cluster);
+    assert_ne!(released.epoch(), after.epoch());
+    assert!(released
+        .reconfig()
+        .is_box_free(0, P3([0, 0, 0]), P3([4, 4, 4])));
+}
