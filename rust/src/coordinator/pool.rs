@@ -52,7 +52,7 @@ use crate::sim::engine::{JobOutcome, RunResult};
 use crate::sim::sweep::{self, TrialExecutor, TrialOutput, WorkItem};
 use crate::topology::cluster::ClusterTopo;
 use crate::topology::{CubeGrid, P3};
-use crate::trace::scenarios::{Scenario, Workload};
+use crate::trace::scenarios::{ModifierSet, Scenario, Workload};
 use crate::trace::JobSpec;
 use crate::util::json::Json;
 use crate::util::stats::WeightedCdf;
@@ -231,9 +231,11 @@ fn parse_workload(j: &Json) -> Result<Workload, String> {
 
 /// Serialize one work item for the wire. The cell label, run count and
 /// base seed stay leader-side: a worker only needs what determines the
-/// trial's bytes.
+/// trial's bytes. Modifiers travel as their canonical fingerprint, and
+/// only when non-empty — a modifier-free item's wire bytes are exactly
+/// what older workers expect.
 pub fn encode_work_item(item: &WorkItem) -> String {
-    obj(vec![
+    let mut pairs = vec![
         ("policy", Json::Str(item.cell.policy.key().into())),
         ("topo", topo_json(item.cell.topo)),
         ("workload", workload_json(&item.cfg.workload)),
@@ -249,8 +251,11 @@ pub fn encode_work_item(item: &WorkItem) -> String {
                     .collect(),
             ),
         ),
-    ])
-    .to_string()
+    ];
+    if !item.cfg.modifiers.is_empty() {
+        pairs.push(("mods", Json::Str(item.cfg.modifiers.fingerprint())));
+    }
+    obj(pairs).to_string()
 }
 
 /// A decoded wire item: everything a worker needs to reproduce the
@@ -262,6 +267,10 @@ pub struct RemoteWorkItem {
     pub jobs_per_run: usize,
     pub seed: u64,
     pub fold_dims: [bool; 3],
+    /// The *base* modifier set — the worker mixes the wire seed in via
+    /// [`ModifierSet::for_trial`], exactly as the leader would, so both
+    /// sides derive the same per-trial fault stream by construction.
+    pub mods: ModifierSet,
 }
 
 impl RemoteWorkItem {
@@ -269,7 +278,13 @@ impl RemoteWorkItem {
     /// [`WorkItem::run`], so the result is bit-identical.
     pub fn run(&self) -> RunResult {
         let trace = self.workload.trace(self.jobs_per_run, self.seed);
-        sweep::run_trial_raw(self.policy, self.topo, &trace, self.fold_dims)
+        sweep::run_trial_raw(
+            self.policy,
+            self.topo,
+            &trace,
+            self.fold_dims,
+            self.mods.for_trial(self.seed),
+        )
     }
 }
 
@@ -296,6 +311,16 @@ pub fn decode_work_item(body: &str) -> Result<RemoteWorkItem, String> {
             _ => return Err("folds holds a non-bool".into()),
         };
     }
+    // Absent "mods" means a modifier-free item (the encoder omits the
+    // field for the default set); a present fingerprint must parse, or
+    // the item earns an ERR instead of silently simulating fault-free.
+    let mods = match j.get("mods") {
+        None => ModifierSet::default(),
+        Some(v) => {
+            let s = v.as_str().ok_or("field 'mods' is not a string")?;
+            ModifierSet::parse(s).map_err(|e| format!("bad 'mods': {e}"))?
+        }
+    };
     Ok(RemoteWorkItem {
         policy,
         topo: parse_topo(need(&j, "topo")?)?,
@@ -303,6 +328,7 @@ pub fn decode_work_item(body: &str) -> Result<RemoteWorkItem, String> {
         jobs_per_run: need_usize(&j, "jobs")?,
         seed: need_u64(&j, "seed")?,
         fold_dims,
+        mods,
     })
 }
 
@@ -924,6 +950,38 @@ mod tests {
         let it = item(Workload::Synthetic(Scenario::PaperDefault));
         let reply = worker_dispatch(&format!("TRIAL {}", encode_work_item(&it))).unwrap();
         assert!(reply.starts_with("RESULT "), "{reply}");
+    }
+
+    #[test]
+    fn work_item_roundtrips_modifiers() {
+        let mut it = item(Workload::Synthetic(Scenario::PaperDefault));
+        it.cfg.modifiers =
+            ModifierSet::parse("failures=philly,ocs-latency=5s,stragglers=0.05").unwrap();
+        let wire = encode_work_item(&it);
+        let decoded = decode_work_item(&wire).unwrap();
+        assert_eq!(decoded.mods, it.cfg.modifiers);
+        // Worker-side execution mixes the same trial seed the leader
+        // would, so modified trials stay bit-identical across the wire.
+        let local = it.run();
+        let remote = decoded.run();
+        assert_eq!(
+            encode_run_result(&local.result),
+            encode_run_result(&remote),
+            "modified trials must be bit-identical remotely"
+        );
+        // A modifier-free item omits the field: its wire bytes are what
+        // older workers already accept.
+        let plain = item(Workload::Synthetic(Scenario::PaperDefault));
+        assert!(!encode_work_item(&plain).contains("\"mods\""));
+        assert_eq!(
+            decode_work_item(&encode_work_item(&plain)).unwrap().mods,
+            ModifierSet::default()
+        );
+        // An unparseable fingerprint is a decode error (→ ERR reply), not
+        // a silent fault-free simulation.
+        let bad = wire.replace("philly", "weird-model");
+        let err = decode_work_item(&bad).unwrap_err();
+        assert!(err.contains("bad 'mods'"), "{err}");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!                [--workers W] [--scenarios a,b|all]   grid, JSON rows on stdout
 //!                [--policies p,q] [--out FILE]
 //!                [--trace-file F]                      sweep a recorded CSV trace
+//!                [--with failures=philly,...]          composable fault injection
 //!                [--pool h1:p,h2:p]                    fan out to rfold workers
 //!                [--pool-connections N]                N connections per worker host
 //! rfold worker   [--listen A]                          TCP trial worker daemon
@@ -38,7 +39,7 @@ use rfold::sim::sweep;
 use rfold::sim::{SharedTelemetry, SimConfig, Simulation};
 use rfold::topology::cluster::ClusterTopo;
 use rfold::trace;
-use rfold::trace::scenarios::{Scenario, Workload};
+use rfold::trace::scenarios::{ModifierSet, Scenario, Workload};
 use rfold::util::cli::Args;
 use rfold::util::Pcg64;
 
@@ -77,8 +78,10 @@ fn usage() -> &'static str {
     "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
      trace-gen|worker|serve|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
+     fault injection (sweep/simulate): --with failures=philly|exp:MTBF:REPAIR:LINKFRAC,\
+     ocs-latency=5s,stragglers=0.05,seed=U64 (composable, comma-separated)\n\
      sweep options:  --workers W (0=auto; --threads is an alias) \
-     --scenarios a,b|all --policies p,q --out FILE --trace-file F \
+     --scenarios a,b|all (--scenario works too) --policies p,q --out FILE --trace-file F \
      --pool host1:port,host2:port (distributed; workers run `rfold worker`) \
      --pool-connections N (connections per worker host; one connection = one busy \
      remote core, default 1) \
@@ -95,6 +98,22 @@ fn runs_jobs_seed(args: &Args) -> (usize, usize, u64) {
         args.get_usize("jobs", 512),
         args.get_u64("seed", 1),
     )
+}
+
+/// Parse `--with key=value,...` scenario modifiers. A malformed spec is a
+/// structured CLI error (exit 2) listing the valid modifiers — never a
+/// panic.
+fn parse_with(args: &Args) -> ModifierSet {
+    match args.get("with") {
+        None => ModifierSet::default(),
+        Some(spec) => match ModifierSet::parse(spec) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("--with: {e}");
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn run_cells(cells: &[exp::Cell], args: &Args) -> Vec<CellSummary> {
@@ -156,10 +175,13 @@ fn sweep_cmd(args: &Args) {
         eprintln!("--runs and --jobs must be >= 1");
         std::process::exit(2);
     }
+    let modifiers = parse_with(args);
     // Workload axis: named synthetic scenarios, a recorded CSV trace, or
     // both. `--trace-file` alone replaces the scenario grid (the common
     // replay case); adding an explicit `--scenarios` sweeps both.
-    let mut workloads: Vec<Workload> = match args.get("scenarios") {
+    // `--scenario` is accepted as a singular alias.
+    let scenario_spec = args.get("scenarios").or_else(|| args.get("scenario"));
+    let mut workloads: Vec<Workload> = match scenario_spec {
         Some(spec) => match Scenario::parse_list(spec) {
             Some(v) => v.into_iter().map(Workload::Synthetic).collect(),
             None => {
@@ -243,6 +265,7 @@ fn sweep_cmd(args: &Args) {
         runs,
         jobs,
         seed,
+        modifiers,
         sweep::ResultCache::global(),
         executor.as_ref(),
     );
@@ -361,10 +384,12 @@ fn simulate(args: &Args) {
         ClusterTopo::static_4096()
     };
     let (runs, jobs, seed) = runs_jobs_seed(args);
+    let modifiers = parse_with(args);
 
     // Real-trace mode (ROADMAP): `--trace-file` replays a recorded CSV
     // through the scenario registry's Workload wrapper — one realization,
-    // so `--runs`/`--seed` are ignored.
+    // so `--runs`/`--seed` are ignored (except as the fault-stream mix
+    // under `--with`).
     if let Some(path) = args.get("trace-file") {
         let workload = match Workload::from_csv(std::path::Path::new(path)) {
             Ok(w) => w,
@@ -382,7 +407,9 @@ fn simulate(args: &Args) {
             t.len()
         );
         let telemetry = SharedTelemetry::new();
-        let r = Simulation::new(SimConfig::new(topo, policy))
+        let mut sc = SimConfig::new(topo, policy);
+        sc.modifiers = modifiers.for_trial(seed);
+        let r = Simulation::new(sc)
             .with_observer(Box::new(telemetry.clone()))
             .run(&t);
         let pairs = [(&r, &t[..])];
@@ -415,7 +442,7 @@ fn simulate(args: &Args) {
         topo,
         label: "custom",
     };
-    let s = exp::run_cell(cell, runs, jobs, seed);
+    let s = exp::run_cell_mods(cell, runs, jobs, seed, modifiers);
     println!(
         "SIMULATE policy={} jcr={:.2}% jct_p50={} jct_p90={} jct_p99={} util={:.3} queue-delay={}",
         policy.name(),
@@ -433,7 +460,9 @@ fn simulate(args: &Args) {
     let telemetry = SharedTelemetry::new();
     let tc = Scenario::PaperDefault.trace_config(jobs, sweep::trial_seed(seed, 0));
     let t = trace::gen::generate(&tc);
-    Simulation::new(SimConfig::new(topo, policy))
+    let mut sc = SimConfig::new(topo, policy);
+    sc.modifiers = modifiers.for_trial(sweep::trial_seed(seed, 0));
+    Simulation::new(sc)
         .with_observer(Box::new(telemetry.clone()))
         .run(&t);
     report::print_policy_telemetry(

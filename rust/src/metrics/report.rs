@@ -151,11 +151,41 @@ pub fn policy_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String>
     ]
 }
 
+/// Format the fault-injection counters as machine-greppable `FAULTS`
+/// lines. Empty when no fault, kill, or stall was observed — modifier-free
+/// runs emit no `FAULTS` section at all.
+pub fn faults_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String> {
+    let any = t.node_failures
+        + t.link_failures
+        + t.repairs
+        + t.jobs_killed
+        + t.jobs_stalled
+        > 0
+        || t.stall_time > 0.0;
+    if !any {
+        return Vec::new();
+    }
+    vec![
+        format!(
+            "FAULTS {label} node-failures={} link-failures={} repairs={} jobs-killed={}",
+            t.node_failures, t.link_failures, t.repairs, t.jobs_killed
+        ),
+        format!(
+            "FAULTS {label} jobs-stalled={} stall-time={}",
+            t.jobs_stalled,
+            fmt_secs(t.stall_time)
+        ),
+    ]
+}
+
 /// Print decision telemetry — **stderr only**, never stdout: report rows
 /// (`SWEEP`/`TABLE1`/...) carry no wall-clock or observer state, so
 /// stdout stays byte-identical whether or not anyone observes.
 pub fn print_policy_telemetry(label: &str, t: &DecisionTelemetry) {
     for line in policy_telemetry_lines(label, t) {
+        eprintln!("{line}");
+    }
+    for line in faults_telemetry_lines(label, t) {
         eprintln!("{line}");
     }
 }
@@ -298,6 +328,7 @@ mod tests {
             admissions: 10,
             completions: 7,
             decision_wall: std::time::Duration::from_micros(500),
+            ..Default::default()
         };
         let lines = policy_telemetry_lines("RFold (4^3)", &t);
         assert_eq!(lines.len(), 4);
@@ -306,5 +337,28 @@ mod tests {
         assert!(lines[1].contains("folds-tried=12"));
         assert!(lines[2].contains("ocs-entries=18"));
         assert!(lines[3].contains("mean-decision=50.0us"));
+    }
+
+    #[test]
+    fn faults_lines_appear_only_when_faults_happened() {
+        let quiet = DecisionTelemetry::default();
+        assert!(
+            faults_telemetry_lines("RFold (4^3)", &quiet).is_empty(),
+            "modifier-free runs must emit no FAULTS section"
+        );
+        let t = DecisionTelemetry {
+            node_failures: 4,
+            link_failures: 2,
+            repairs: 3,
+            jobs_killed: 5,
+            jobs_stalled: 2,
+            stall_time: 10.0,
+            ..Default::default()
+        };
+        let lines = faults_telemetry_lines("RFold (4^3)", &t);
+        assert_eq!(lines.len(), 2);
+        assert!(lines.iter().all(|l| l.starts_with("FAULTS RFold (4^3)")));
+        assert!(lines[0].contains("node-failures=4") && lines[0].contains("jobs-killed=5"));
+        assert!(lines[1].contains("jobs-stalled=2") && lines[1].contains("stall-time=10s"));
     }
 }

@@ -16,8 +16,21 @@ use crate::placement::{
 use crate::sim::contention::{effective_duration, ContentionModel};
 use crate::sim::observer::SchedulerObserver;
 use crate::topology::cluster::{ClusterState, ClusterTopo};
+use crate::trace::scenarios::ModifierSet;
 use crate::trace::JobSpec;
 use crate::util::stats::WeightedCdf;
+use crate::util::Pcg64;
+
+/// Stream id of the fault RNG — distinct from the trace generator's
+/// `0x7ace`, so fault draws can never perturb job arrivals.
+const FAULT_STREAM: u64 = 0xFA;
+
+/// A job killed by faults more often than this is abandoned (`Dropped`)
+/// instead of requeued — the Philly schedulers' retry-then-give-up
+/// policy. Without a cap, a heavy-tail job (up to 30 days) under a
+/// realistic MTBF is killed before finishing with near certainty and the
+/// simulation would requeue it forever.
+const MAX_KILL_RETRIES: u32 = 3;
 
 /// Simulation configuration. The policy is a registry handle resolved
 /// once at config-build time; the engine instantiates it per run.
@@ -33,6 +46,12 @@ pub struct SimConfig {
     /// runs). `false`: freeze scheduling at the last arrival and count
     /// still-queued jobs as `NotScheduled` (a stricter JCR for ablation).
     pub drain: bool,
+    /// Fault-injection modifiers (`--with`). The default (empty) set
+    /// leaves every byte of a run unchanged; callers running sweeps are
+    /// expected to pass a *per-trial* set
+    /// ([`ModifierSet::for_trial`]) so trials draw independent fault
+    /// realizations.
+    pub modifiers: ModifierSet,
 }
 
 impl SimConfig {
@@ -44,6 +63,7 @@ impl SimConfig {
             policy: policy.into(),
             fold_dims_enabled: [true; 3],
             drain: true,
+            modifiers: ModifierSet::default(),
         }
     }
 }
@@ -167,6 +187,29 @@ pub struct Simulation {
     scheduled: usize,
     dropped: usize,
     started: HashMap<u64, f64>,
+    /// Dedicated fault RNG stream, seeded from
+    /// `cfg.modifiers.fault_seed` — never shared with trace generation,
+    /// so job streams are byte-identical with and without modifiers.
+    fault_rng: Pcg64,
+    /// Per-job attempt counter; bumped by a fault kill so the dead
+    /// attempt's in-flight completion event is recognized as stale.
+    incarnation: HashMap<u64, u32>,
+    /// Fault kills per job, for the retry cap.
+    kill_count: HashMap<u64, u32>,
+    /// Authoritative finish time per running job — maintained only when
+    /// `ocs_latency > 0`, where stalls can push a finish past its already
+    /// scheduled heap event (the event re-arms itself on pop).
+    finish_at: HashMap<u64, f64>,
+    /// Trace index by job id, for fault-kill requeueing (built only when
+    /// failures are enabled).
+    idx_of: HashMap<u64, usize>,
+    /// Arrivals not yet delivered — part of the "work pending" predicate
+    /// that keeps the fault chain alive.
+    arrivals_pending: usize,
+    /// Time of the last arrival or genuine completion: the makespan.
+    /// Without faults this equals `now` at loop exit; with faults it
+    /// excludes trailing repair events from the reported makespan.
+    job_now: f64,
     /// Memo: head job that got `NoCapacity` against the given cluster
     /// epoch — skip re-planning until the occupancy epoch moves (only a
     /// release can move it while a head is blocked; arrivals cannot make
@@ -203,7 +246,15 @@ impl Ord for OrdF64 {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EventSlot {
     Arrival(usize),
-    Completion(u64),
+    /// `(job id, incarnation)`: a completion is only honored if the job's
+    /// incarnation still matches — a fault-kill bumps the incarnation, so
+    /// the dead attempt's completion event becomes a stale no-op instead
+    /// of a phantom completion.
+    Completion(u64, u32),
+    /// The next failure of the MTBF chain (node chosen when it fires).
+    Fault,
+    /// A failed node comes back.
+    NodeRepair(usize),
 }
 
 impl Simulation {
@@ -229,6 +280,13 @@ impl Simulation {
             scheduled: 0,
             dropped: 0,
             started: HashMap::new(),
+            fault_rng: Pcg64::new(cfg.modifiers.fault_seed, FAULT_STREAM),
+            incarnation: HashMap::new(),
+            kill_count: HashMap::new(),
+            finish_at: HashMap::new(),
+            idx_of: HashMap::new(),
+            arrivals_pending: 0,
+            job_now: 0.0,
             head_block: None,
             infeasible_shapes: HashSet::new(),
         }
@@ -266,6 +324,121 @@ impl Simulation {
         if dt > 0.0 {
             self.util.push(self.cluster.utilization(), dt);
             self.last_sample_t = t;
+        }
+    }
+
+    /// Current incarnation of a job (0 until it is ever killed).
+    #[inline]
+    fn incarnation_of(&self, job: u64) -> u32 {
+        self.incarnation.get(&job).copied().unwrap_or(0)
+    }
+
+    /// Faults, repairs, and kills change what is placeable mid-run, so
+    /// the two feasibility memos stop being sound: a `head_block` epoch
+    /// is already invalidated by the epoch bump, but the
+    /// `infeasible_shapes` set certifies "never placeable on an *empty*
+    /// cluster", which failed nodes falsify. Drop both; they repopulate.
+    fn clear_fault_memos(&mut self) {
+        self.head_block = None;
+        self.infeasible_shapes.clear();
+    }
+
+    /// Kill a running job (fault landed on one of its nodes): release its
+    /// allocation, invalidate its in-flight completion event via the
+    /// incarnation bump, and requeue it in FIFO (arrival) order — or drop
+    /// it outright once it exhausted [`MAX_KILL_RETRIES`].
+    fn kill_job(&mut self, job: u64) {
+        if self.cluster.release(job).is_none() {
+            return; // not running (already completed or never placed)
+        }
+        if let Some(rings) = self.be_rings.remove(&job) {
+            self.contention.remove_job(&rings);
+        }
+        self.started.remove(&job);
+        self.finish_at.remove(&job);
+        *self.incarnation.entry(job).or_insert(0) += 1;
+        self.scheduled -= 1;
+        self.clear_fault_memos();
+        for o in &mut self.observers {
+            o.on_job_killed(self.now, job);
+        }
+        let kills = self.kill_count.entry(job).or_insert(0);
+        *kills += 1;
+        if *kills > MAX_KILL_RETRIES {
+            self.outcomes.push((job, JobOutcome::Dropped));
+            self.dropped += 1;
+            return;
+        }
+        // Requeue where FIFO order dictates: trace indices are
+        // arrival-ordered, so a sorted insert restores (arrival, id)
+        // order even when several kills interleave with a partially
+        // drained queue.
+        let idx = self.idx_of[&job];
+        let pos = self.queue.partition_point(|&q| q < idx);
+        self.queue.insert(pos, idx);
+    }
+
+    /// One fault event: schedule the chain's next fault (while work is
+    /// pending), pick link-vs-node and the victim node, kill whatever job
+    /// touches it, and for node faults remove the capacity until the
+    /// scheduled repair. The draw order (chain gap, kind, node, repair)
+    /// is fixed so the failure realization is a pure function of the
+    /// fault stream, independent of policy and occupancy.
+    fn handle_fault(&mut self, pending: bool) {
+        let Some(fm) = self.cfg.modifiers.failures else {
+            return;
+        };
+        if pending {
+            let gap = self.fault_rng.exponential(fm.mtbf);
+            self.push_event(self.now + gap, EventSlot::Fault);
+        }
+        let is_link = self.fault_rng.chance(fm.link_fraction);
+        let node = self.fault_rng.below(self.cluster.num_nodes());
+        if let Some(victim) = self.cluster.job_on_node(node) {
+            self.kill_job(victim);
+        }
+        if is_link {
+            // Transient: the job is gone, the capacity survives.
+            for o in &mut self.observers {
+                o.on_fault(self.now, node, true);
+            }
+            return;
+        }
+        let repair_gap = self.fault_rng.exponential(fm.mean_repair);
+        if self.cluster.fail_node(node) {
+            self.push_event(self.now + repair_gap, EventSlot::NodeRepair(node));
+            self.clear_fault_memos();
+        }
+        // Already-failed nodes keep their in-flight repair; the draw is
+        // still consumed so the stream stays occupancy-independent.
+        for o in &mut self.observers {
+            o.on_fault(self.now, node, false);
+        }
+    }
+
+    /// Stall every *other* in-flight job sharing a cube with `job`'s
+    /// fresh allocation: an OCS reconfiguration is not hitless for
+    /// traffic through the reconfigured cubes.
+    fn stall_neighbours(&mut self, job: u64, delay: f64) {
+        let Some(alloc) = self.cluster.allocation(job) else {
+            return;
+        };
+        let cubes: HashSet<usize> = alloc.cubes.iter().copied().collect();
+        let victims: Vec<u64> = self
+            .cluster
+            .live_allocations()
+            .filter(|a| a.job != job && a.cubes.iter().any(|c| cubes.contains(c)))
+            .map(|a| a.job)
+            .collect();
+        for v in victims {
+            // Every running job has a `finish_at` entry when ocs_latency
+            // is active; its completion event re-arms itself on pop.
+            if let Some(f) = self.finish_at.get_mut(&v) {
+                *f += delay;
+                for o in &mut self.observers {
+                    o.on_stall(self.now, v, delay);
+                }
+            }
         }
     }
 
@@ -327,9 +500,32 @@ impl Simulation {
                         .expect("just committed")
                         .rings
                         .clone();
-                    let eff = effective_duration(job.duration, job.comm_frac, &rings, mult);
+                    let mut eff = effective_duration(job.duration, job.comm_frac, &rings, mult);
+                    // Modifier shaping. Every branch below draws from (or
+                    // touches) fault state only when its modifier is
+                    // active, so the default set runs this arm with zero
+                    // extra RNG draws — byte-identical to the unmodified
+                    // engine.
+                    let mods = self.cfg.modifiers;
+                    if mods.straggler_rate > 0.0 && self.fault_rng.chance(mods.straggler_rate) {
+                        // Multiplicative slowdown in [1.25, 2.0): a
+                        // straggling worker gates the whole ring.
+                        eff *= 1.25 + 0.75 * self.fault_rng.f64();
+                    }
+                    if mods.ocs_latency > 0.0 {
+                        if ocs_entries > 0 {
+                            // Reconfiguration is not hitless: this job
+                            // pays the switch latency, and in-flight
+                            // neighbours through the reconfigured cubes
+                            // stall for the same window.
+                            eff += mods.ocs_latency;
+                            self.stall_neighbours(job.id, mods.ocs_latency);
+                        }
+                        self.finish_at.insert(job.id, self.now + eff);
+                    }
                     self.started.insert(job.id, self.now);
-                    self.push_event(self.now + eff, EventSlot::Completion(job.id));
+                    let inc = self.incarnation_of(job.id);
+                    self.push_event(self.now + eff, EventSlot::Completion(job.id, inc));
                     self.queue.pop_front();
                     self.scheduled += 1;
                 }
@@ -368,6 +564,12 @@ impl Simulation {
         for (idx, j) in trace.iter().enumerate() {
             self.push_event(j.arrival, EventSlot::Arrival(idx));
         }
+        self.arrivals_pending = trace.len();
+        if let Some(fm) = self.cfg.modifiers.failures {
+            self.idx_of = trace.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+            let gap = self.fault_rng.exponential(fm.mtbf);
+            self.push_event(gap, EventSlot::Fault);
+        }
         // Utilization is measured over the workload window [0, last
         // arrival] — the drain tail after submissions stop would otherwise
         // dilute every policy's numbers (Figure 4 semantics). A degenerate
@@ -378,27 +580,51 @@ impl Simulation {
         // empty measurement — and never the diluted full-drain integral.
         let mut util_end = if horizon > 0.0 { horizon } else { f64::INFINITY };
         while let Some(Reverse((OrdF64(t), _, slot))) = self.events.pop() {
-            if util_end.is_infinite() && matches!(slot, EventSlot::Completion(_)) {
+            if let EventSlot::Completion(id, inc) = slot {
+                // A fault kill bumped the incarnation: this event belongs
+                // to a dead attempt. Filter *before* the zero-horizon
+                // util_end extension so a phantom completion never widens
+                // the measurement window.
+                if self.incarnation_of(id) != inc {
+                    continue;
+                }
+                // An OCS stall pushed the finish later than this event:
+                // re-arm at the authoritative time.
+                if let Some(&f) = self.finish_at.get(&id) {
+                    if f > t {
+                        self.push_event(f, EventSlot::Completion(id, inc));
+                        continue;
+                    }
+                }
+            }
+            if util_end.is_infinite() && matches!(slot, EventSlot::Completion(..)) {
                 util_end = t;
             }
             self.sample_util(t.min(util_end));
             self.now = t;
             match slot {
                 EventSlot::Arrival(idx) => {
+                    self.arrivals_pending -= 1;
+                    self.job_now = self.now;
                     self.queue.push_back(idx);
                     for o in &mut self.observers {
                         o.on_admit(self.now, trace[idx].id);
                     }
                 }
-                EventSlot::Completion(id) => {
+                EventSlot::Completion(id, _inc) => {
                     // `release` moves the occupancy epoch, which both
                     // invalidates the policy's placement index and wakes
                     // a `head_block`ed queue head.
+                    self.job_now = self.now;
                     self.cluster.release(id);
                     if let Some(rings) = self.be_rings.remove(&id) {
                         self.contention.remove_job(&rings);
                     }
-                    let start = self.started[&id];
+                    let start = self
+                        .started
+                        .remove(&id)
+                        .expect("completing job has a start time");
+                    self.finish_at.remove(&id);
                     for o in &mut self.observers {
                         o.on_complete(self.now, id, start, self.now);
                     }
@@ -410,6 +636,25 @@ impl Simulation {
                         },
                     ));
                 }
+                EventSlot::Fault => {
+                    // Keep the fault chain alive only while work is
+                    // pending — arrivals to come, jobs in flight, or a
+                    // queue the scheduler may still drain. A frozen
+                    // queue past the horizon is *not* pending work, or
+                    // the chain would self-perpetuate forever.
+                    let queue_live = !freeze || self.now <= horizon;
+                    let pending = self.arrivals_pending > 0
+                        || !self.started.is_empty()
+                        || (!self.queue.is_empty() && queue_live);
+                    self.handle_fault(pending);
+                }
+                EventSlot::NodeRepair(node) => {
+                    self.cluster.repair_node(node);
+                    self.clear_fault_memos();
+                    for o in &mut self.observers {
+                        o.on_repair(self.now, node);
+                    }
+                }
             }
             if !freeze || self.now <= horizon {
                 self.drain_queue(trace);
@@ -419,7 +664,7 @@ impl Simulation {
         for idx in std::mem::take(&mut self.queue) {
             self.outcomes.push((trace[idx].id, JobOutcome::NotScheduled));
         }
-        debug_assert_eq!(self.cluster.busy_count(), 0);
+        debug_assert_eq!(self.cluster.busy_count(), self.cluster.failed_count());
         debug_assert!(self.cluster.check_consistency().is_ok());
         RunResult {
             policy: self.cfg.policy.name(),
@@ -427,7 +672,7 @@ impl Simulation {
             utilization: self.util,
             scheduled: self.scheduled,
             dropped: self.dropped,
-            makespan: self.now,
+            makespan: self.job_now,
         }
     }
 }
@@ -756,6 +1001,141 @@ mod tests {
         assert_eq!(
             t.variants_enumerated, single_bad,
             "repeated infeasible shapes must cost a map lookup, not a search"
+        );
+    }
+
+    #[test]
+    fn ocs_latency_charges_reconfiguring_jobs() {
+        // 4x4x32 reprograms the OCS (8 cubes chained); with
+        // `ocs-latency=5s` its completion slips by exactly the switch
+        // latency. The 2x2x2 job fits one cube without rewiring and must
+        // pay nothing.
+        let trace = vec![
+            job(0, 0.0, 50.0, JobShape::new(4, 4, 32)),
+            job(1, 0.0, 10.0, JobShape::new(2, 2, 2)),
+        ];
+        let mut cfg = SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::Reconfig,
+        );
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse("ocs-latency=5s").unwrap();
+        let r = Simulation::new(cfg).run(&trace);
+        assert_eq!(r.scheduled, 2);
+        let jcts = r.jcts(&trace);
+        assert_eq!(jcts[0], 55.0, "OCS job pays the reconfiguration latency");
+        assert_eq!(jcts[1], 10.0, "cube-local job is untouched");
+    }
+
+    #[test]
+    fn fault_injection_yields_exactly_one_outcome_per_job() {
+        // Aggressive Philly-style failures on a generated trace: jobs are
+        // killed, requeued, re-killed, and sometimes dropped — but every
+        // job must end with exactly one outcome (no phantom completion
+        // from a dead attempt's stale event), Completed count must match
+        // `scheduled`, and utilization must stay a probability even with
+        // failures landing inside the measurement window.
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 80,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        let mut cfg = SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+        );
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet {
+            failures: Some(crate::trace::scenarios::FailureModel {
+                mtbf: 200.0,
+                mean_repair: 100.0,
+                link_fraction: 0.3,
+            }),
+            fault_seed: 11,
+            ..ModifierSet::default()
+        };
+        let telemetry = SharedTelemetry::new();
+        let r = Simulation::new(cfg)
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&trace);
+        assert_eq!(r.outcomes.len(), trace.len(), "one outcome per job");
+        let mut ids: Vec<u64> = r.outcomes.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "no job may finish twice");
+        let completed = r
+            .outcomes
+            .iter()
+            .filter(|(_, o)| matches!(o, JobOutcome::Completed { .. }))
+            .count();
+        assert_eq!(completed, r.scheduled);
+        assert_eq!(r.jcts(&trace).len(), r.scheduled);
+        let u = r.utilization.mean();
+        assert!((0.0..=1.0).contains(&u), "utilization corrupted: {u}");
+        let t = telemetry.snapshot();
+        assert!(
+            t.node_failures + t.link_failures > 0,
+            "an MTBF of 200s must fire during a multi-hour trace"
+        );
+        assert!(t.repairs <= t.node_failures, "a repair needs a failure");
+    }
+
+    #[test]
+    fn fault_runs_are_deterministic() {
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 60,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        let mk = || {
+            let mut cfg = SimConfig::new(
+                ClusterTopo::reconfigurable_4096(4),
+                PolicyKind::RFold,
+            );
+            cfg.drain = true;
+            cfg.modifiers =
+                ModifierSet::parse("failures=philly,ocs-latency=5s,stragglers=0.05")
+                    .unwrap();
+            Simulation::new(cfg).run(&trace)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.outcomes, b.outcomes);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.jcts(&trace)), bits(&b.jcts(&trace)));
+        assert_eq!(
+            a.utilization.mean().to_bits(),
+            b.utilization.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn modifier_free_runs_match_the_unmodified_engine() {
+        // Belt-and-braces for the golden bytes: constructing the config
+        // with an explicit empty ModifierSet must change nothing
+        // relative to the plain helper (which uses the default).
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 40,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        let plain = run(
+            PolicyKind::RFold,
+            ClusterTopo::reconfigurable_4096(4),
+            &trace,
+        );
+        let mut cfg = SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+        );
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse("").unwrap();
+        let explicit = Simulation::new(cfg).run(&trace);
+        assert_eq!(plain.outcomes, explicit.outcomes);
+        assert_eq!(plain.makespan.to_bits(), explicit.makespan.to_bits());
+        assert_eq!(
+            plain.utilization.mean().to_bits(),
+            explicit.utilization.mean().to_bits()
         );
     }
 

@@ -108,6 +108,21 @@ pub fn run_cell_with(
     sweep::run_cell_sharded(cell, &cfg)
 }
 
+/// `run_cell` with scenario modifiers (`--with` fault injection). The
+/// base set is stored on the sweep config; each trial mixes its own seed
+/// in at simulation time.
+pub fn run_cell_mods(
+    cell: Cell,
+    runs: usize,
+    jobs_per_run: usize,
+    base_seed: u64,
+    modifiers: crate::trace::scenarios::ModifierSet,
+) -> CellSummary {
+    let mut cfg = SweepConfig::new(runs, jobs_per_run, base_seed);
+    cfg.modifiers = modifiers;
+    sweep::run_cell_sharded(cell, &cfg)
+}
+
 /// §3.1 motivation experiment on a 2×2 mesh: returns
 /// `(label, modeled slowdown vs baseline)` rows matching the paper's
 /// measured percentages.

@@ -42,6 +42,30 @@ pub trait SchedulerObserver {
     fn on_complete(&mut self, t: f64, job: u64, start: f64, finish: f64) {
         let _ = (t, job, start, finish);
     }
+
+    /// Fault injection hit `node` at time `t`. Link faults are transient
+    /// (the touching job dies, capacity survives); node faults take the
+    /// node out until [`on_repair`](Self::on_repair).
+    fn on_fault(&mut self, t: f64, node: usize, is_link: bool) {
+        let _ = (t, node, is_link);
+    }
+
+    /// A failed node came back at time `t`.
+    fn on_repair(&mut self, t: f64, node: usize) {
+        let _ = (t, node);
+    }
+
+    /// A running job was killed by a fault and returned to the queue (or
+    /// abandoned after too many retries).
+    fn on_job_killed(&mut self, t: f64, job: u64) {
+        let _ = (t, job);
+    }
+
+    /// An in-flight job was stalled by `delay` seconds because an OCS
+    /// reconfiguration touched cubes it occupies.
+    fn on_stall(&mut self, t: f64, job: u64, delay: f64) {
+        let _ = (t, job, delay);
+    }
 }
 
 /// Aggregated per-policy decision telemetry: what the scheduler tried and
@@ -65,6 +89,15 @@ pub struct DecisionTelemetry {
     pub completions: u64,
     /// Total wall time spent inside `PlacementPolicy::plan`.
     pub decision_wall: Duration,
+    /// Fault-injection counters (all zero without `--with` modifiers;
+    /// rendered as the stderr-only `FAULTS` section).
+    pub node_failures: u64,
+    pub link_failures: u64,
+    pub repairs: u64,
+    pub jobs_killed: u64,
+    pub jobs_stalled: u64,
+    /// Total stall time injected by OCS reconfigurations (s).
+    pub stall_time: f64,
 }
 
 impl DecisionTelemetry {
@@ -108,6 +141,27 @@ impl SchedulerObserver for DecisionTelemetry {
     fn on_complete(&mut self, _t: f64, _job: u64, _start: f64, _finish: f64) {
         self.completions += 1;
     }
+
+    fn on_fault(&mut self, _t: f64, _node: usize, is_link: bool) {
+        if is_link {
+            self.link_failures += 1;
+        } else {
+            self.node_failures += 1;
+        }
+    }
+
+    fn on_repair(&mut self, _t: f64, _node: usize) {
+        self.repairs += 1;
+    }
+
+    fn on_job_killed(&mut self, _t: f64, _job: u64) {
+        self.jobs_killed += 1;
+    }
+
+    fn on_stall(&mut self, _t: f64, _job: u64, delay: f64) {
+        self.jobs_stalled += 1;
+        self.stall_time += delay;
+    }
 }
 
 /// Shared telemetry handle: clone one half into the simulation as a boxed
@@ -143,6 +197,22 @@ impl SchedulerObserver for SharedTelemetry {
 
     fn on_complete(&mut self, t: f64, job: u64, start: f64, finish: f64) {
         self.0.borrow_mut().on_complete(t, job, start, finish);
+    }
+
+    fn on_fault(&mut self, t: f64, node: usize, is_link: bool) {
+        self.0.borrow_mut().on_fault(t, node, is_link);
+    }
+
+    fn on_repair(&mut self, t: f64, node: usize) {
+        self.0.borrow_mut().on_repair(t, node);
+    }
+
+    fn on_job_killed(&mut self, t: f64, job: u64) {
+        self.0.borrow_mut().on_job_killed(t, job);
+    }
+
+    fn on_stall(&mut self, t: f64, job: u64, delay: f64) {
+        self.0.borrow_mut().on_stall(t, job, delay);
     }
 }
 
@@ -190,5 +260,25 @@ mod tests {
         assert_eq!(snap.ocs_entries_reserved, 6);
         assert_eq!(snap.completions, 1);
         assert_eq!(snap.mean_decision_us(), 0.0);
+    }
+
+    #[test]
+    fn fault_hooks_accumulate_counters() {
+        let shared = SharedTelemetry::new();
+        let mut boxed: Box<dyn SchedulerObserver> = Box::new(shared.clone());
+        boxed.on_fault(1.0, 5, false);
+        boxed.on_fault(2.0, 9, true);
+        boxed.on_fault(3.0, 5, false);
+        boxed.on_repair(4.0, 5);
+        boxed.on_job_killed(2.0, 7);
+        boxed.on_stall(5.0, 8, 2.5);
+        boxed.on_stall(6.0, 9, 1.5);
+        let snap = shared.snapshot();
+        assert_eq!(snap.node_failures, 2);
+        assert_eq!(snap.link_failures, 1);
+        assert_eq!(snap.repairs, 1);
+        assert_eq!(snap.jobs_killed, 1);
+        assert_eq!(snap.jobs_stalled, 2);
+        assert_eq!(snap.stall_time, 4.0);
     }
 }

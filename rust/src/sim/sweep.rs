@@ -65,7 +65,7 @@ use crate::placement::PolicyHandle;
 use crate::sim::engine::{RunResult, SimConfig, Simulation};
 use crate::sim::experiments::Cell;
 use crate::topology::cluster::ClusterTopo;
-use crate::trace::scenarios::{Scenario, Workload};
+use crate::trace::scenarios::{ModifierSet, Scenario, Workload};
 use crate::trace::JobSpec;
 
 /// Knobs of one swept cell.
@@ -81,6 +81,10 @@ pub struct SweepConfig {
     /// The workload: a synthetic scenario (regenerated per seed) or a
     /// fixed CSV trace.
     pub workload: Workload,
+    /// Scenario modifiers (`--with`). Stored as the *base* set; each
+    /// trial mixes its own seed in via [`ModifierSet::for_trial`] at
+    /// simulation time so trials draw independent fault realizations.
+    pub modifiers: ModifierSet,
 }
 
 impl SweepConfig {
@@ -92,6 +96,7 @@ impl SweepConfig {
             workers: 0,
             fold_dims_enabled: [true; 3],
             workload: Workload::Synthetic(Scenario::PaperDefault),
+            modifiers: ModifierSet::default(),
         }
     }
 }
@@ -150,6 +155,11 @@ struct TrialKey {
     seed: u64,
     jobs_per_run: usize,
     fold_dims: [bool; 3],
+    /// Canonical modifier fingerprint ([`ModifierSet::fingerprint`]):
+    /// empty for the default set, so modifier-free grids key exactly as
+    /// before. The fingerprint includes the fault seed, so two sweeps
+    /// differing only in `seed=` never share trials.
+    mods: String,
 }
 
 /// One (workload, cell, trial) work item of a flattened grid. Public so
@@ -174,9 +184,18 @@ impl WorkItem {
         // neither may enter the key: with them, a `--runs 8` trace sweep
         // would simulate the identical trial 8 times; without them, trial
         // 0 computes and trials 1..8 are in-grid cache hits.
+        //
+        // That collapse is only sound *without* modifiers: with faults
+        // on, each trial mixes its own seed into the fault stream
+        // ([`ModifierSet::for_trial`]), so trials of the same fixed trace
+        // are genuinely distinct simulations and must keep their seed —
+        // collapsing them would serve trial 0's fault realization for
+        // every run *and* let a modified trial collide with its
+        // unmodified twin's cached bytes.
         let (seed, jobs_per_run) = match &self.cfg.workload {
             Workload::Synthetic(_) => (self.seed(), self.cfg.jobs_per_run),
-            Workload::Csv { jobs, .. } => (0, jobs.len()),
+            Workload::Csv { jobs, .. } if self.cfg.modifiers.is_empty() => (0, jobs.len()),
+            Workload::Csv { jobs, .. } => (self.seed(), jobs.len()),
         };
         TrialKey {
             policy: self.cell.policy.key(),
@@ -185,6 +204,7 @@ impl WorkItem {
             seed,
             jobs_per_run,
             fold_dims: self.cfg.fold_dims_enabled,
+            mods: self.cfg.modifiers.fingerprint(),
         }
     }
 
@@ -198,6 +218,7 @@ impl WorkItem {
             self.cell.topo,
             &trace,
             self.cfg.fold_dims_enabled,
+            self.cfg.modifiers.for_trial(self.seed()),
         );
         TrialOutput { result, trace }
     }
@@ -205,15 +226,20 @@ impl WorkItem {
 
 /// One trial from raw parts — the exact simulation a [`WorkItem::run`]
 /// performs, exposed so a pool worker can execute a decoded wire item
-/// through the same code path as the leader.
+/// through the same code path as the leader. `modifiers` is the
+/// *per-trial* set — callers mix the trial seed in via
+/// [`ModifierSet::for_trial`] before handing it over, so leader and
+/// remote workers agree by construction (both mix the same wire seed).
 pub fn run_trial_raw(
     policy: PolicyHandle,
     topo: ClusterTopo,
     trace: &[JobSpec],
     fold_dims_enabled: [bool; 3],
+    modifiers: ModifierSet,
 ) -> RunResult {
     let mut sim_cfg = SimConfig::new(topo, policy);
     sim_cfg.fold_dims_enabled = fold_dims_enabled;
+    sim_cfg.modifiers = modifiers;
     Simulation::new(sim_cfg).run(trace)
 }
 
@@ -651,7 +677,8 @@ pub fn topo_tag(topo: ClusterTopo) -> String {
 
 /// [`run_grid_with`] on the in-process executor: every (workload, cell,
 /// trial) item is pulled by `workers` OS threads (0 = auto) from one
-/// shared cursor.
+/// shared cursor. Modifier-free — `rfold sweep --with ...` goes through
+/// [`run_grid_with`] directly.
 pub fn run_grid(
     cells: &[Cell],
     workloads: &[Workload],
@@ -667,6 +694,7 @@ pub fn run_grid(
         runs,
         jobs_per_run,
         base_seed,
+        ModifierSet::default(),
         cache,
         &LocalExecutor::new(workers),
     )
@@ -684,6 +712,7 @@ pub fn run_grid_with(
     runs: usize,
     jobs_per_run: usize,
     base_seed: u64,
+    modifiers: ModifierSet,
     cache: &ResultCache,
     executor: &dyn TrialExecutor,
 ) -> Vec<SweepRow> {
@@ -695,6 +724,7 @@ pub fn run_grid_with(
         for &cell in cells {
             let mut cfg = SweepConfig::new(runs, jobs_per_run, base_seed);
             cfg.workload = workload.clone();
+            cfg.modifiers = modifiers;
             for trial in 0..runs {
                 items.push(WorkItem {
                     cell,
@@ -727,8 +757,14 @@ pub fn run_grid_with(
                 // What a trial actually saw, not the requested knobs: a
                 // fixed trace ignores `--jobs` and replays one recording
                 // for every seed, so its rows must not claim e.g. 256
-                // jobs or 8 independent runs for a 12-job file.
-                runs: workload.num_runs(runs),
+                // jobs or 8 independent runs for a 12-job file. With
+                // modifiers on, each trial of a fixed trace draws its own
+                // fault realization, so the runs really are independent.
+                runs: if modifiers.is_empty() {
+                    workload.num_runs(runs)
+                } else {
+                    runs
+                },
                 jobs_per_run: workload.num_jobs(jobs_per_run),
                 base_seed,
                 summary: summarize(cell.label, &pairs),

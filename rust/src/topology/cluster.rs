@@ -102,6 +102,11 @@ pub struct ClusterState {
     ocs: Option<OcsState>,
     allocs: HashMap<u64, Allocation>,
     busy_count: usize,
+    /// Nodes down for repair (fault injection). A failed node is also
+    /// `busy` — placement policies need no failure awareness, they simply
+    /// cannot use it — but belongs to no allocation.
+    failed: Vec<bool>,
+    failed_count: usize,
     /// Occupancy version: a fresh globally-unique value on construction
     /// and after every [`ClusterState::commit`] / [`ClusterState::release`].
     /// Spatial indices built against one epoch (`placement::index`) stay
@@ -126,8 +131,76 @@ impl ClusterState {
             ocs,
             allocs: HashMap::new(),
             busy_count: 0,
+            failed: vec![false; n_nodes],
+            failed_count: 0,
             epoch: next_epoch(),
         }
+    }
+
+    /// Cube index of a node (0 for static topologies).
+    fn cube_of(&self, node: usize) -> usize {
+        match self.topo {
+            ClusterTopo::Reconfigurable { grid } => node / (grid.n * grid.n * grid.n),
+            ClusterTopo::Static { .. } => 0,
+        }
+    }
+
+    /// Take a node down for repair. The node must be unoccupied (the
+    /// engine kills any job touching it first); it then reads as busy to
+    /// every placement query until [`repair_node`](Self::repair_node).
+    /// Bumps the occupancy epoch — feasibility is no longer a run
+    /// constant once nodes fail, so epoch-keyed caches must refresh.
+    /// Returns `false` (and changes nothing) if the node is already down.
+    pub fn fail_node(&mut self, node: usize) -> bool {
+        if self.failed[node] {
+            return false;
+        }
+        debug_assert!(!self.busy[node], "kill the occupant before failing node {node}");
+        if self.busy[node] {
+            return false;
+        }
+        self.failed[node] = true;
+        self.busy[node] = true;
+        self.busy_count += 1;
+        self.failed_count += 1;
+        self.cube_free[self.cube_of(node)] -= 1;
+        self.epoch = next_epoch();
+        true
+    }
+
+    /// Bring a failed node back. Bumps the occupancy epoch (capacity
+    /// reappeared; head-of-line blocks may clear). Returns `false` if the
+    /// node was not down.
+    pub fn repair_node(&mut self, node: usize) -> bool {
+        if !self.failed[node] {
+            return false;
+        }
+        self.failed[node] = false;
+        self.busy[node] = false;
+        self.busy_count -= 1;
+        self.failed_count -= 1;
+        self.cube_free[self.cube_of(node)] += 1;
+        self.epoch = next_epoch();
+        true
+    }
+
+    #[inline]
+    pub fn is_failed(&self, node: usize) -> bool {
+        self.failed[node]
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.failed_count
+    }
+
+    /// The job whose allocation contains `node`, if any. Linear in the
+    /// number of live allocations — fault injection is rare enough that
+    /// a reverse index isn't worth carrying on the placement hot path.
+    pub fn job_on_node(&self, node: usize) -> Option<u64> {
+        self.allocs
+            .values()
+            .find(|a| a.nodes.contains(&node))
+            .map(|a| a.job)
     }
 
     pub fn topo(&self) -> ClusterTopo {
@@ -165,8 +238,17 @@ impl ClusterState {
         self.busy.len() - self.busy_count
     }
 
+    /// Fraction of *available* (non-failed) nodes doing work. With no
+    /// failures this is exactly `busy_count / num_nodes` — the historical
+    /// definition, so fault-free runs keep their bytes; failed nodes are
+    /// excluded from both numerator and denominator rather than counted
+    /// as "utilized".
     pub fn utilization(&self) -> f64 {
-        self.busy_count as f64 / self.busy.len() as f64
+        let avail = self.busy.len() - self.failed_count;
+        if avail == 0 {
+            return 0.0;
+        }
+        (self.busy_count - self.failed_count) as f64 / avail as f64
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -278,14 +360,25 @@ impl ClusterState {
                 total += 1;
             }
         }
-        if total != self.busy_count {
+        for (n, &f) in self.failed.iter().enumerate() {
+            if f && !self.busy[n] {
+                return Err(format!("failed node {n} not marked busy"));
+            }
+            if f && seen[n] {
+                return Err(format!("failed node {n} inside an allocation"));
+            }
+        }
+        if self.failed.iter().filter(|&&f| f).count() != self.failed_count {
+            return Err("failed bitmap disagrees with failed_count".into());
+        }
+        if total + self.failed_count != self.busy_count {
             return Err(format!(
-                "busy_count {} != allocated total {total}",
-                self.busy_count
+                "busy_count {} != allocated total {total} + failed {}",
+                self.busy_count, self.failed_count
             ));
         }
-        if self.busy.iter().filter(|&&b| b).count() != total {
-            return Err("busy bitmap disagrees with allocations".into());
+        if self.busy.iter().filter(|&&b| b).count() != self.busy_count {
+            return Err("busy bitmap disagrees with busy_count".into());
         }
         if let ClusterTopo::Reconfigurable { grid } = self.topo {
             let vol = grid.n * grid.n * grid.n;
@@ -414,6 +507,75 @@ mod tests {
         let c = ClusterState::new(ClusterTopo::static_4096());
         assert_eq!(c.phys_coords(0), P3([0, 0, 0]));
         assert_eq!(c.phys_coords(16 * 16), P3([1, 0, 0]));
+    }
+
+    #[test]
+    fn fail_repair_roundtrip_updates_counters_and_epoch() {
+        let mut c = reconfig();
+        let e0 = c.epoch();
+        assert!(c.fail_node(3));
+        assert!(c.is_failed(3));
+        assert!(!c.is_free(3), "a failed node must read as busy to placement");
+        assert_eq!(c.failed_count(), 1);
+        assert_eq!(c.busy_count(), 1);
+        assert_eq!(c.cube_free_count(0), 63);
+        assert_eq!(c.utilization(), 0.0, "failed capacity is not utilization");
+        assert_ne!(c.epoch(), e0, "failure must bump the epoch");
+        c.check_consistency().unwrap();
+
+        // Double-failure is a no-op.
+        let e1 = c.epoch();
+        assert!(!c.fail_node(3));
+        assert_eq!(c.epoch(), e1);
+
+        assert!(c.repair_node(3));
+        assert!(!c.is_failed(3));
+        assert!(c.is_free(3));
+        assert_eq!(c.failed_count(), 0);
+        assert_eq!(c.busy_count(), 0);
+        assert_eq!(c.cube_free_count(0), 64);
+        assert_ne!(c.epoch(), e1, "repair must bump the epoch");
+        c.check_consistency().unwrap();
+        assert!(!c.repair_node(3), "repairing a healthy node is a no-op");
+    }
+
+    #[test]
+    fn utilization_excludes_failed_capacity() {
+        let mut c = reconfig();
+        c.commit(Allocation {
+            job: 1,
+            nodes: (0..64).collect(),
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([4, 4, 4]),
+        });
+        let before = c.utilization();
+        assert_eq!(before, 64.0 / 4096.0);
+        c.fail_node(100);
+        // 64 working of 4095 available.
+        assert_eq!(c.utilization(), 64.0 / 4095.0);
+        c.repair_node(100);
+        assert_eq!(c.utilization(), before);
+    }
+
+    #[test]
+    fn job_on_node_finds_the_owner() {
+        let mut c = reconfig();
+        c.commit(Allocation {
+            job: 7,
+            nodes: vec![10, 11],
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 2]),
+        });
+        assert_eq!(c.job_on_node(10), Some(7));
+        assert_eq!(c.job_on_node(11), Some(7));
+        assert_eq!(c.job_on_node(12), None);
+        // A failed (but unallocated) node has no owner.
+        c.fail_node(20);
+        assert_eq!(c.job_on_node(20), None);
     }
 
     #[test]

@@ -92,6 +92,12 @@ pub struct TraceConfig {
     pub comm_lo: f64,
     pub comm_hi: f64,
     pub shape_rule: ShapeRule,
+    /// Use the reference `packing.py` size/shape rules instead of the §4
+    /// rule of thumb: sizes are integer-truncated truncated-exponential
+    /// draws snapped down to multiples of 4 (1 and 2 stay as-is), and the
+    /// dimensionality is picked uniformly from a size-class-dependent set
+    /// (1D for size 1, 3D above 1024, 2D/3D above 128, anything below).
+    pub packing_ref: bool,
     pub seed: u64,
 }
 
@@ -111,6 +117,7 @@ impl Default for TraceConfig {
             comm_lo: 0.1,
             comm_hi: 0.5,
             shape_rule: ShapeRule::default(),
+            packing_ref: false,
             seed: 1,
         }
     }
@@ -222,6 +229,45 @@ pub fn shape_for_size(rng: &mut Pcg64, size: usize, rule: &ShapeRule) -> Option<
     Some(weighted_even_choice(rng, &ok, rule.even_weight))
 }
 
+/// Generate the job shape for a given size following the reference
+/// `packing.py` rules: the dimensionality set is a hard function of the
+/// size class (1D for size 1, 3D above 1024, 2D or 3D above 128, any
+/// below), one dimensionality is drawn uniformly from that set, and the
+/// factorization is chosen uniformly within it — no elongation classes,
+/// no even-dimension weighting. The [`ShapeRule`] caps (`max_dim`,
+/// `max_cubes4`) still apply so every job stays placeable on an empty
+/// Reconfig(4³) cluster. Returns `None` when no factorization survives
+/// the caps (the caller then adjusts the size).
+pub fn shape_for_size_packing(rng: &mut Pcg64, size: usize, rule: &ShapeRule) -> Option<JobShape> {
+    let ok: Vec<JobShape> = JobShape::factorizations(size, rule.max_dim)
+        .into_iter()
+        .filter(|s| cubes4(*s) <= rule.max_cubes4)
+        .collect();
+    if ok.is_empty() {
+        return None;
+    }
+    let allowed: &[usize] = if size == 1 {
+        &[1]
+    } else if size > 1024 {
+        &[3]
+    } else if size > 128 {
+        &[2, 3]
+    } else {
+        &[1, 2, 3]
+    };
+    let want = *rng.choose(allowed);
+    // The wanted dimensionality can be unfactorizable (e.g. size 2 is
+    // 1D-only); fall back to the nearest dimensionality that exists.
+    for d in [want, 3, 2, 1] {
+        let of_d: Vec<JobShape> =
+            ok.iter().copied().filter(|s| dimensionality(*s) == d).collect();
+        if !of_d.is_empty() {
+            return Some(*rng.choose(&of_d));
+        }
+    }
+    Some(*rng.choose(&ok))
+}
+
 /// Choose a shape, weighting all-even-dimension shapes by `even_weight`
 /// (communicating dims only; size-1 dims are ignored).
 fn weighted_even_choice(rng: &mut Pcg64, shapes: &[JobShape], even_weight: f64) -> JobShape {
@@ -262,15 +308,37 @@ pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
             .clamp(cfg.dur_min, cfg.dur_max);
         // Sample size; walk down until a shapeable size is found (primes
         // above the dim cap, for example, are unshapeable).
-        let mut size = rng.trunc_exponential(cfg.size_scale, 1.0, 4096.0).round() as usize;
-        size = size.clamp(1, 4096);
-        if size >= 8 && rng.chance(cfg.round8_prob) {
-            size = (size + 4) / 8 * 8; // nearest multiple of 8
-        }
+        let mut size = if cfg.packing_ref {
+            // Reference packing.py: integer truncation of the draw, then
+            // sizes above 2 snap *down* to a multiple of 4. The reference
+            // snaps a sample of 3 to 0; we clamp that to 4 since a
+            // zero-XPU job is meaningless.
+            let s = (rng.trunc_exponential(cfg.size_scale, 1.0, 4096.0) as usize).clamp(1, 4096);
+            if s > 2 {
+                (s / 4 * 4).max(4)
+            } else {
+                s
+            }
+        } else {
+            let s = rng.trunc_exponential(cfg.size_scale, 1.0, 4096.0).round() as usize;
+            let mut s = s.clamp(1, 4096);
+            if s >= 8 && rng.chance(cfg.round8_prob) {
+                s = (s + 4) / 8 * 8; // nearest multiple of 8
+            }
+            s
+        };
         let shape = loop {
-            match shape_for_size(&mut rng, size, &cfg.shape_rule) {
+            let attempt = if cfg.packing_ref {
+                shape_for_size_packing(&mut rng, size, &cfg.shape_rule)
+            } else {
+                shape_for_size(&mut rng, size, &cfg.shape_rule)
+            };
+            match attempt {
                 Some(s) => break s,
-                None => size -= 1, // size 1 always factorizes: terminates
+                // Size 4 (packing: stays on multiples of 4) and size 1
+                // always factorize, so both walks terminate.
+                None if cfg.packing_ref && size > 4 => size -= 4,
+                None => size -= 1,
             }
         };
         let comm_frac = cfg.comm_lo + (cfg.comm_hi - cfg.comm_lo) * rng.f64();
@@ -342,6 +410,79 @@ mod tests {
             frac_3d(&large),
             frac_3d(&small)
         );
+    }
+
+    #[test]
+    fn packing_ref_sizes_snap_to_multiples_of_four() {
+        let t = generate(&TraceConfig {
+            num_jobs: 400,
+            packing_ref: true,
+            seed: 5,
+            ..Default::default()
+        });
+        for j in &t {
+            let s = j.size();
+            assert!(
+                s == 1 || s == 2 || s % 4 == 0,
+                "packing-ref size {s} is neither 1, 2, nor a multiple of 4"
+            );
+            assert!((1..=4096).contains(&s));
+        }
+        // The snap keeps real mass on the small non-multiple sizes too.
+        assert!(t.iter().any(|j| j.size() % 4 == 0));
+    }
+
+    #[test]
+    fn packing_ref_dimension_rules_follow_size_class() {
+        let t = generate(&TraceConfig {
+            num_jobs: 1500,
+            packing_ref: true,
+            seed: 11,
+            ..Default::default()
+        });
+        for j in &t {
+            let d = j.shape.dimensionality().max(1);
+            let s = j.size();
+            if s == 1 {
+                assert_eq!(d, 1, "size-1 job must be 1D, got {}", j.shape);
+            } else if s > 1024 {
+                assert_eq!(d, 3, "size {s} must be 3D, got {}", j.shape);
+            } else if s > 128 {
+                assert!(d >= 2, "size {s} must be 2D/3D, got {}", j.shape);
+            }
+            assert!(cubes4(j.shape) <= 64, "{} breaks the cube cap", j.shape);
+            assert!(j.shape.dims().0.iter().all(|&dim| dim <= 256));
+        }
+    }
+
+    #[test]
+    fn packing_ref_is_deterministic_and_differs_from_default() {
+        let cfg = TraceConfig {
+            num_jobs: 80,
+            packing_ref: true,
+            ..Default::default()
+        };
+        assert_eq!(generate(&cfg), generate(&cfg));
+        let plain = generate(&TraceConfig {
+            packing_ref: false,
+            ..cfg
+        });
+        assert_ne!(generate(&cfg), plain, "the reference rules must change the mix");
+    }
+
+    #[test]
+    fn shape_for_size_packing_respects_caps() {
+        let mut rng = Pcg64::seeded(13);
+        let rule = ShapeRule::default();
+        for size in [1usize, 2, 4, 128, 132, 1024, 2048, 4096] {
+            let s = shape_for_size_packing(&mut rng, size, &rule)
+                .unwrap_or_else(|| panic!("size {size} must factorize"));
+            assert_eq!(s.size(), size);
+            assert!(s.dims().0.iter().all(|&d| d <= rule.max_dim));
+            assert!(cubes4(s) <= rule.max_cubes4);
+        }
+        // A large prime still can't be shaped under the cap.
+        assert!(shape_for_size_packing(&mut rng, 4093, &rule).is_none());
     }
 
     #[test]

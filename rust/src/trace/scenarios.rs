@@ -40,17 +40,23 @@ pub enum Scenario {
     /// Communication-dominated jobs: comm_frac drawn from [0.45, 0.80),
     /// amplifying placement sensitivity of JCT.
     CommHeavy,
+    /// The reference `packing.py` job mix: truncated-exponential sizes
+    /// snapped to multiples of 4, dimensionality fixed by size class
+    /// (1D for singletons, 3D above 1024 XPUs, 2D/3D above 128), uniform
+    /// factorization choice.
+    PackingRef,
 }
 
 impl Scenario {
     /// Every registered scenario, in stable reporting order.
-    pub const ALL: [Scenario; 6] = [
+    pub const ALL: [Scenario; 7] = [
         Scenario::PaperDefault,
         Scenario::BurstyPhilly,
         Scenario::HeavyTailDurations,
         Scenario::ElongatedAdversarial,
         Scenario::UniformSmall,
         Scenario::CommHeavy,
+        Scenario::PackingRef,
     ];
 
     /// Stable CLI / report name.
@@ -62,6 +68,7 @@ impl Scenario {
             Scenario::ElongatedAdversarial => "elongated-adversarial",
             Scenario::UniformSmall => "uniform-small",
             Scenario::CommHeavy => "comm-heavy",
+            Scenario::PackingRef => "packing-ref",
         }
     }
 
@@ -74,6 +81,7 @@ impl Scenario {
             Scenario::ElongatedAdversarial => "mostly-elongated adversarial shapes",
             Scenario::UniformSmall => "many small round jobs, high churn",
             Scenario::CommHeavy => "communication-dominated jobs",
+            Scenario::PackingRef => "reference packing.py size/shape rules",
         }
     }
 
@@ -154,6 +162,241 @@ impl Scenario {
                 size_scale: 500.0,
                 ..base
             },
+            Scenario::PackingRef => TraceConfig {
+                packing_ref: true,
+                ..base
+            },
+        }
+    }
+}
+
+/// Default seed of the dedicated failure RNG stream. Modifiers draw from
+/// their own [`Pcg64`](crate::util::Pcg64) stream, never from the trace
+/// generator's, so job arrivals are byte-identical with and without
+/// modifiers; this seed is the base the per-trial mixing starts from.
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17;
+
+/// Exponential node/link failure-and-repair model (Philly-style MTBF,
+/// Jeon et al., ATC'19). Times are cluster-wide: one failure somewhere in
+/// the cluster every `mtbf` seconds on average.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureModel {
+    /// Mean time between failures across the whole cluster (s).
+    pub mtbf: f64,
+    /// Mean node repair time (s).
+    pub mean_repair: f64,
+    /// Fraction of failures that are link (transient, kill the touching
+    /// job but remove no capacity) rather than node failures.
+    pub link_fraction: f64,
+}
+
+impl FailureModel {
+    /// The Philly trace regime (Jeon et al., ATC'19): a failure somewhere
+    /// in the cluster every ~6 hours, hour-scale repairs, a quarter of
+    /// incidents network-side.
+    pub fn philly() -> FailureModel {
+        FailureModel {
+            mtbf: 21_600.0,
+            mean_repair: 3_600.0,
+            link_fraction: 0.25,
+        }
+    }
+
+    /// Parse a failure-model value: `philly`, or
+    /// `exp:<mtbf>:<mean-repair>:<link-fraction>` for explicit
+    /// exponential parameters.
+    pub fn parse(v: &str) -> Result<FailureModel, String> {
+        if v == "philly" {
+            return Ok(FailureModel::philly());
+        }
+        if let Some(rest) = v.strip_prefix("exp:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() == 3 {
+                let field = |s: &str, what: &str| -> Result<f64, String> {
+                    s.parse::<f64>()
+                        .ok()
+                        .filter(|x| x.is_finite() && *x >= 0.0)
+                        .ok_or_else(|| {
+                            format!("failure-model {what} '{s}' is not a non-negative number")
+                        })
+                };
+                let mtbf = field(parts[0], "mtbf")?;
+                if mtbf <= 0.0 {
+                    return Err(format!("failure-model mtbf '{}' must be > 0", parts[0]));
+                }
+                let mean_repair = field(parts[1], "mean-repair")?;
+                let link_fraction = field(parts[2], "link-fraction")?;
+                if link_fraction > 1.0 {
+                    return Err(format!(
+                        "failure-model link-fraction '{}' out of range [0, 1]",
+                        parts[2]
+                    ));
+                }
+                return Ok(FailureModel {
+                    mtbf,
+                    mean_repair,
+                    link_fraction,
+                });
+            }
+        }
+        Err(format!(
+            "unknown failure model '{v}'; known: philly, exp:<mtbf>:<mean-repair>:<link-fraction>"
+        ))
+    }
+}
+
+/// The parsed `--with` modifier set: composable fault-injection knobs
+/// applied on top of any scenario or trace file. Parsed once at the CLI
+/// boundary into this typed form; its [`fingerprint`](Self::fingerprint)
+/// is the canonical string that flows into sweep cache keys and the pool
+/// wire protocol.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModifierSet {
+    /// Node/link failure injection; `None` disables it.
+    pub failures: Option<FailureModel>,
+    /// OCS reconfiguration latency (s): every placement that programs OCS
+    /// entries pays this once, and stalls in-flight jobs sharing the
+    /// reconfigured cubes by the same amount. 0 disables it.
+    pub ocs_latency: f64,
+    /// Probability a placed job is a straggler and runs 1.25–2× slower.
+    /// 0 disables it.
+    pub straggler_rate: f64,
+    /// Base seed of the failure RNG stream; mixed per trial via
+    /// [`for_trial`](Self::for_trial) so every trial sees an independent
+    /// fault realization.
+    pub fault_seed: u64,
+}
+
+impl Default for ModifierSet {
+    fn default() -> Self {
+        ModifierSet {
+            failures: None,
+            ocs_latency: 0.0,
+            straggler_rate: 0.0,
+            fault_seed: DEFAULT_FAULT_SEED,
+        }
+    }
+}
+
+/// One-line list of valid modifiers, appended to every parse error.
+const VALID_MODIFIERS: &str = "valid modifiers: failures=philly|exp:<mtbf>:<repair>:<link-frac>, \
+     ocs-latency=<duration, e.g. 500ms|5s|2m|1h>, stragglers=<rate in [0,1]>, seed=<u64>";
+
+/// Parse a duration with an optional `ms`/`s`/`m`/`h` suffix (bare
+/// numbers are seconds) into seconds.
+fn parse_duration(v: &str) -> Result<f64, String> {
+    let (num, mult) = if let Some(n) = v.strip_suffix("ms") {
+        (n, 1e-3)
+    } else if let Some(n) = v.strip_suffix('s') {
+        (n, 1.0)
+    } else if let Some(n) = v.strip_suffix('m') {
+        (n, 60.0)
+    } else if let Some(n) = v.strip_suffix('h') {
+        (n, 3600.0)
+    } else {
+        (v, 1.0)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("malformed duration '{v}' (use e.g. 500ms, 5s, 2m, 1h)"))?;
+    if !x.is_finite() || x < 0.0 {
+        return Err(format!("duration '{v}' must be finite and >= 0"));
+    }
+    Ok(x * mult)
+}
+
+impl ModifierSet {
+    /// Parse a comma-separated `--with` spec
+    /// (`failures=philly,ocs-latency=5s,stragglers=0.05`). Unknown keys,
+    /// malformed durations, and out-of-range rates return a structured
+    /// error listing the valid modifiers — never a panic. The empty spec
+    /// parses to the default (no-op) set.
+    pub fn parse(spec: &str) -> Result<ModifierSet, String> {
+        let mut out = ModifierSet::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, value)) = part.split_once('=') else {
+                return Err(format!("modifier '{part}' is not key=value; {VALID_MODIFIERS}"));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "failures" => out.failures = Some(FailureModel::parse(value)?),
+                "ocs-latency" => {
+                    out.ocs_latency =
+                        parse_duration(value).map_err(|e| format!("ocs-latency: {e}"))?;
+                }
+                "stragglers" => {
+                    let rate: f64 = value
+                        .parse()
+                        .map_err(|_| format!("stragglers '{value}' is not a number"))?;
+                    if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                        return Err(format!("stragglers {value} out of range [0, 1]"));
+                    }
+                    out.straggler_rate = rate;
+                }
+                "seed" => {
+                    out.fault_seed = value
+                        .parse()
+                        .map_err(|_| format!("seed '{value}' is not a u64"))?;
+                }
+                other => {
+                    return Err(format!("unknown modifier '{other}'; {VALID_MODIFIERS}"));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when no modifier is active: the engine runs byte-identically
+    /// to a build without the fault layer.
+    pub fn is_empty(&self) -> bool {
+        *self == ModifierSet::default()
+    }
+
+    /// True when failure injection is on (the knob that creates fault
+    /// events, as opposed to latency/straggler shaping).
+    pub fn has_faults(&self) -> bool {
+        self.failures.is_some()
+    }
+
+    /// Canonical string form: parseable back via [`parse`](Self::parse)
+    /// (`parse(fingerprint()) == self`), empty for the default set, and
+    /// stable across processes — the sweep cache-key and wire-protocol
+    /// representation. f64 components use Rust's shortest-round-trip
+    /// `Display`, so re-parsing is bit-exact.
+    pub fn fingerprint(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(fm) = self.failures {
+            if fm == FailureModel::philly() {
+                parts.push("failures=philly".to_string());
+            } else {
+                parts.push(format!(
+                    "failures=exp:{}:{}:{}",
+                    fm.mtbf, fm.mean_repair, fm.link_fraction
+                ));
+            }
+        }
+        if self.ocs_latency > 0.0 {
+            parts.push(format!("ocs-latency={}s", self.ocs_latency));
+        }
+        if self.straggler_rate > 0.0 {
+            parts.push(format!("stragglers={}", self.straggler_rate));
+        }
+        if self.fault_seed != DEFAULT_FAULT_SEED {
+            parts.push(format!("seed={}", self.fault_seed));
+        }
+        parts.join(",")
+    }
+
+    /// The per-trial modifier set: same knobs, fault seed mixed with the
+    /// trial seed so each trial draws an independent failure realization.
+    /// Engine-facing only — cache keys and the wire carry the base set
+    /// plus the trial seed and re-mix on both sides, so leader and worker
+    /// agree by construction.
+    pub fn for_trial(&self, trial_seed: u64) -> ModifierSet {
+        ModifierSet {
+            fault_seed: self.fault_seed ^ trial_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..*self
         }
     }
 }
@@ -396,6 +639,131 @@ mod tests {
             Workload::Synthetic(Scenario::PaperDefault).cache_key(),
             "paper-default"
         );
+    }
+
+    #[test]
+    fn packing_ref_uses_reference_size_rules() {
+        assert!(Scenario::PackingRef.trace_config(8, 1).packing_ref);
+        for sc in Scenario::ALL {
+            if sc != Scenario::PackingRef {
+                assert!(!sc.trace_config(8, 1).packing_ref, "{sc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn modifier_parse_happy_paths() {
+        let m = ModifierSet::parse("failures=philly,ocs-latency=5s,stragglers=0.05").unwrap();
+        assert_eq!(m.failures, Some(FailureModel::philly()));
+        assert_eq!(m.ocs_latency, 5.0);
+        assert_eq!(m.straggler_rate, 0.05);
+        assert_eq!(m.fault_seed, DEFAULT_FAULT_SEED);
+        assert!(!m.is_empty());
+        assert!(m.has_faults());
+
+        // Duration suffixes, bare seconds, and whitespace tolerance.
+        assert_eq!(ModifierSet::parse("ocs-latency=500ms").unwrap().ocs_latency, 0.5);
+        assert_eq!(ModifierSet::parse("ocs-latency=2m").unwrap().ocs_latency, 120.0);
+        assert_eq!(ModifierSet::parse("ocs-latency=1h").unwrap().ocs_latency, 3600.0);
+        assert_eq!(ModifierSet::parse("ocs-latency=7").unwrap().ocs_latency, 7.0);
+        assert_eq!(
+            ModifierSet::parse(" failures = philly , seed = 42 ").unwrap().fault_seed,
+            42
+        );
+
+        // Explicit exponential model.
+        let e = ModifierSet::parse("failures=exp:100:50:0.5").unwrap();
+        assert_eq!(
+            e.failures,
+            Some(FailureModel {
+                mtbf: 100.0,
+                mean_repair: 50.0,
+                link_fraction: 0.5
+            })
+        );
+
+        // Empty spec is the no-op set.
+        let empty = ModifierSet::parse("").unwrap();
+        assert!(empty.is_empty());
+        assert!(!empty.has_faults());
+        assert_eq!(empty, ModifierSet::default());
+    }
+
+    #[test]
+    fn modifier_parse_rejects_unknown_keys() {
+        let err = ModifierSet::parse("failures=philly,bogus=1").unwrap_err();
+        assert!(err.contains("unknown modifier 'bogus'"), "{err}");
+        assert!(err.contains("valid modifiers"), "error must list valid modifiers: {err}");
+    }
+
+    #[test]
+    fn modifier_parse_rejects_malformed_durations() {
+        let err = ModifierSet::parse("ocs-latency=5x").unwrap_err();
+        assert!(err.contains("malformed duration '5x'"), "{err}");
+        let err = ModifierSet::parse("ocs-latency=-3s").unwrap_err();
+        assert!(err.contains("finite and >= 0"), "{err}");
+        let err = ModifierSet::parse("ocs-latency=inf").unwrap_err();
+        assert!(err.contains("finite and >= 0"), "{err}");
+    }
+
+    #[test]
+    fn modifier_parse_rejects_out_of_range_rates() {
+        let err = ModifierSet::parse("stragglers=1.5").unwrap_err();
+        assert!(err.contains("out of range [0, 1]"), "{err}");
+        let err = ModifierSet::parse("stragglers=-0.1").unwrap_err();
+        assert!(err.contains("out of range [0, 1]"), "{err}");
+        let err = ModifierSet::parse("stragglers=abc").unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+    }
+
+    #[test]
+    fn modifier_parse_rejects_bad_seeds_models_and_bare_keys() {
+        let err = ModifierSet::parse("seed=abc").unwrap_err();
+        assert!(err.contains("not a u64"), "{err}");
+        let err = ModifierSet::parse("failures=weird").unwrap_err();
+        assert!(err.contains("unknown failure model 'weird'"), "{err}");
+        let err = ModifierSet::parse("failures=exp:0:1:0").unwrap_err();
+        assert!(err.contains("must be > 0"), "{err}");
+        let err = ModifierSet::parse("failures=exp:1:1:2").unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let err = ModifierSet::parse("justakey").unwrap_err();
+        assert!(err.contains("not key=value"), "{err}");
+    }
+
+    #[test]
+    fn modifier_fingerprint_roundtrips_and_is_canonical() {
+        for spec in [
+            "",
+            "failures=philly",
+            "failures=philly,ocs-latency=5s,stragglers=0.05",
+            "ocs-latency=500ms",
+            "stragglers=0.25,seed=77",
+            "failures=exp:100:50:0.5,ocs-latency=2m",
+        ] {
+            let m = ModifierSet::parse(spec).unwrap();
+            let fp = m.fingerprint();
+            let back = ModifierSet::parse(&fp).unwrap();
+            assert_eq!(back, m, "fingerprint '{fp}' of '{spec}' must round-trip");
+        }
+        assert_eq!(ModifierSet::default().fingerprint(), "");
+        // Two differently-spelled but equal specs share one fingerprint.
+        assert_eq!(
+            ModifierSet::parse("ocs-latency=120s").unwrap().fingerprint(),
+            ModifierSet::parse("ocs-latency=2m").unwrap().fingerprint()
+        );
+    }
+
+    #[test]
+    fn for_trial_mixes_the_fault_seed_only() {
+        let base = ModifierSet::parse("failures=philly,stragglers=0.1").unwrap();
+        let a = base.for_trial(1);
+        let b = base.for_trial(2);
+        assert_ne!(a.fault_seed, b.fault_seed, "trials need independent fault streams");
+        assert_eq!(a.failures, base.failures);
+        assert_eq!(a.straggler_rate, base.straggler_rate);
+        assert_eq!(a.ocs_latency, base.ocs_latency);
+        // Mixing is deterministic.
+        assert_eq!(base.for_trial(1), a);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use rfold::metrics::report;
 use rfold::sim::experiments as exp;
 use rfold::sim::sweep::{self, ResultCache};
 use rfold::trace::gen::{generate, TraceConfig};
-use rfold::trace::scenarios::{Scenario, Workload};
+use rfold::trace::scenarios::{ModifierSet, Scenario, Workload};
 
 /// Cheap sub-grid: one static cell and one reconfigurable cell cross the
 /// wire format's topology variants without long runtimes.
@@ -40,6 +40,7 @@ fn rows_pooled(workloads: &[Workload], executor: &PoolExecutor) -> Vec<String> {
         2,
         30,
         5,
+        ModifierSet::default(),
         &ResultCache::new(),
         executor,
     );

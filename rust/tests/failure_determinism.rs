@@ -1,0 +1,186 @@
+//! Fault-injection determinism contracts (the PR-6 bugfix suite):
+//!
+//! * a modified sweep (`--with failures=philly,...`) must emit SWEEP rows
+//!   byte-identical across worker counts AND between local and TCP-pool
+//!   execution — fault draws come from a dedicated per-trial stream, so
+//!   scheduling can never reorder them;
+//! * job traces must be byte-identical with modifiers on and off: fault
+//!   injection perturbs *execution*, never the workload;
+//! * modified trials must occupy distinct cache keys from their
+//!   unmodified twins (and from each other when only the fault seed
+//!   differs), including the fixed-CSV trials whose unmodified key
+//!   deliberately drops the trial seed.
+
+use rfold::metrics::report;
+use rfold::sim::experiments as exp;
+use rfold::sim::sweep::{self, ResultCache, SweepConfig};
+use rfold::trace::gen::{generate, TraceConfig};
+use rfold::trace::scenarios::{ModifierSet, Scenario, Workload};
+
+/// One static + one reconfigurable cell: crosses the straggler, kill, and
+/// OCS-latency paths without long runtimes.
+fn cells() -> Vec<exp::Cell> {
+    exp::table1_cells()
+        .into_iter()
+        .filter(|c| matches!(c.label, "Folding (16^3)" | "RFold (4^3)"))
+        .collect()
+}
+
+fn mods() -> ModifierSet {
+    ModifierSet::parse("failures=philly,ocs-latency=5s,stragglers=0.05").unwrap()
+}
+
+fn rows_json(workers: usize, m: ModifierSet) -> Vec<String> {
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let rows = sweep::run_grid_with(
+        &cells(),
+        &workloads,
+        3,
+        40,
+        5,
+        m,
+        &ResultCache::new(),
+        &sweep::LocalExecutor::new(workers),
+    );
+    rows.iter().map(report::sweep_row_json).collect()
+}
+
+#[test]
+fn modified_rows_byte_identical_across_worker_counts() {
+    let one = rows_json(1, mods());
+    let eight = rows_json(8, mods());
+    assert_eq!(one.len(), eight.len());
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(
+            a, b,
+            "modified sweep row differs between --workers 1 and --workers 8"
+        );
+    }
+}
+
+#[test]
+fn modified_rows_byte_identical_local_vs_pool() {
+    let addr = rfold::coordinator::pool::spawn_worker().expect("spawn worker");
+    let pool = rfold::coordinator::pool::PoolExecutor::new(vec![addr.to_string()]);
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let grid = |executor: &dyn sweep::TrialExecutor| -> Vec<String> {
+        sweep::run_grid_with(
+            &cells(),
+            &workloads,
+            2,
+            30,
+            5,
+            mods(),
+            &ResultCache::new(),
+            executor,
+        )
+        .iter()
+        .map(report::sweep_row_json)
+        .collect()
+    };
+    let local = grid(&sweep::LocalExecutor::new(1));
+    let pooled = grid(&pool);
+    assert_eq!(local, pooled, "pool must reproduce modified rows byte-exactly");
+    let stats = pool.stats();
+    assert_eq!(
+        stats.leader_fallback, 0,
+        "the worker must have served the modified items itself"
+    );
+}
+
+#[test]
+fn job_streams_identical_with_and_without_modifiers() {
+    // The fault RNG lives on its own stream: enabling modifiers must not
+    // move a single arrival, duration, or shape in the generated traces.
+    let cell = cells()[1]; // RFold (4^3)
+    let traces = |m: ModifierSet| {
+        let mut cfg = SweepConfig::new(3, 40, 9);
+        cfg.workers = 1;
+        cfg.modifiers = m;
+        sweep::run_trials_with(cell, &cfg, &ResultCache::new())
+            .iter()
+            .map(|t| t.trace.clone())
+            .collect::<Vec<_>>()
+    };
+    let plain = traces(ModifierSet::default());
+    let modified = traces(mods());
+    assert_eq!(plain.len(), modified.len());
+    for (slot, (a, b)) in plain.iter().zip(&modified).enumerate() {
+        assert_eq!(
+            a, b,
+            "trial {slot}: modifiers changed the job stream itself"
+        );
+    }
+}
+
+#[test]
+fn modifiers_are_part_of_the_cache_key() {
+    // The same cell swept plain and then modified must miss twice per
+    // trial — a modified trial served from its unmodified twin's cache
+    // entry would silently report fault-free numbers.
+    let cell = cells()[0];
+    let cache = ResultCache::new();
+    let run = |m: ModifierSet| {
+        let mut cfg = SweepConfig::new(2, 30, 7);
+        cfg.workers = 1;
+        cfg.modifiers = m;
+        sweep::run_trials_with(cell, &cfg, &cache)
+    };
+    run(ModifierSet::default());
+    assert_eq!(cache.misses(), 2);
+    run(mods());
+    assert_eq!(cache.misses(), 4, "modified trials must not hit plain entries");
+    // Same modifiers, different fault seed: distinct realizations,
+    // distinct keys.
+    run(ModifierSet::parse("failures=philly,ocs-latency=5s,stragglers=0.05,seed=99").unwrap());
+    assert_eq!(cache.misses(), 6, "the fault seed must be part of the key");
+    // Replaying any of the three is all hits.
+    run(mods());
+    assert_eq!(cache.misses(), 6);
+}
+
+#[test]
+fn modified_csv_trials_keep_their_per_trial_seed() {
+    // Unmodified fixed traces collapse all trials onto one key (replays
+    // ignore the seed). With modifiers each trial draws its own fault
+    // realization, so the collapse would be wrong twice over: trial 1..n
+    // would reuse trial 0's faults, and a modified run could collide with
+    // the unmodified cached bytes.
+    let jobs = generate(&TraceConfig {
+        num_jobs: 12,
+        seed: 3,
+        ..Default::default()
+    });
+    let workload = Workload::from_jobs("fixed".into(), jobs);
+    let cell = cells()[0];
+    let cache = ResultCache::new();
+    let run = |m: ModifierSet| {
+        let mut cfg = SweepConfig::new(2, 12, 7);
+        cfg.workers = 1;
+        cfg.workload = workload.clone();
+        cfg.modifiers = m;
+        sweep::run_trials_with(cell, &cfg, &cache)
+    };
+    run(ModifierSet::default());
+    assert_eq!(cache.misses(), 1, "plain fixed trace: one simulation");
+    assert_eq!(cache.hits(), 1, "plain fixed trace: trial 1 replays trial 0");
+    let outs = run(mods());
+    assert_eq!(
+        cache.misses(),
+        3,
+        "each modified CSV trial simulates its own fault realization"
+    );
+    // Both trials replay the same fixed job list — only the fault
+    // realization (mixed from the per-trial seed) may differ.
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].trace, outs[1].trace, "same recorded jobs");
+}
+
+#[test]
+fn modified_runs_are_reproducible_end_to_end() {
+    // Same grid, fresh caches, twice: byte-identical rows. This is the
+    // `rfold sweep --scenario paper-default --with failures=philly`
+    // acceptance path in miniature.
+    let m = ModifierSet::parse("failures=philly").unwrap();
+    assert_eq!(rows_json(4, m), rows_json(2, m));
+}
