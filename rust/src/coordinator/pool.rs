@@ -165,7 +165,7 @@ fn parse_topo(j: &Json) -> Result<ClusterTopo, String> {
 
 fn job_json(j: &JobSpec) -> Json {
     let d = j.shape.dims();
-    Json::Arr(vec![
+    let mut a = vec![
         Json::u64_str(j.id),
         Json::f64_bits(j.arrival),
         Json::f64_bits(j.duration),
@@ -173,14 +173,21 @@ fn job_json(j: &JobSpec) -> Json {
         Json::Num(d.0[1] as f64),
         Json::Num(d.0[2] as f64),
         Json::f64_bits(j.comm_frac),
-    ])
+    ];
+    // Priority rides as an optional eighth element: the default class
+    // encodes exactly the legacy 7-array, so priority-free traces keep
+    // the wire bytes older workers already accept.
+    if j.priority != 0 {
+        a.push(Json::Num(j.priority as f64));
+    }
+    Json::Arr(a)
 }
 
 fn parse_job(j: &Json) -> Result<JobSpec, String> {
     let a = j
         .as_arr()
-        .filter(|a| a.len() == 7)
-        .ok_or("job is not a 7-array")?;
+        .filter(|a| a.len() == 7 || a.len() == 8)
+        .ok_or("job is not a 7- or 8-array")?;
     // `JobShape::new` asserts dims >= 1, which would panic the worker's
     // connection thread; reject bad dims as a decode error instead.
     let dim = |i: usize| {
@@ -188,12 +195,19 @@ fn parse_job(j: &Json) -> Result<JobSpec, String> {
             .filter(|&d| d >= 1)
             .ok_or_else(|| format!("job dim {i} not a positive integer"))
     };
+    let priority = match a.get(7) {
+        None => 0,
+        Some(v) => strict_usize(v)
+            .filter(|&p| p <= u8::MAX as usize)
+            .ok_or("job priority not in 0..=255")? as u8,
+    };
     Ok(JobSpec {
         id: a[0].as_u64_str().ok_or("job id not a u64 string")?,
         arrival: a[1].as_f64_bits().ok_or("job arrival not f64 bits")?,
         duration: a[2].as_f64_bits().ok_or("job duration not f64 bits")?,
         shape: JobShape::new(dim(3)?, dim(4)?, dim(5)?),
         comm_frac: a[6].as_f64_bits().ok_or("job comm_frac not f64 bits")?,
+        priority,
     })
 }
 
@@ -358,14 +372,28 @@ pub fn encode_run_result(r: &RunResult) -> String {
         .iter()
         .map(|&(v, w)| Json::Arr(vec![Json::f64_bits(v), Json::f64_bits(w)]))
         .collect();
-    obj(vec![
+    let mut pairs = vec![
         ("outcomes", Json::Arr(outcomes)),
         ("util", Json::Arr(util)),
         ("scheduled", Json::Num(r.scheduled as f64)),
         ("dropped", Json::Num(r.dropped as f64)),
         ("makespan", Json::f64_bits(r.makespan)),
-    ])
-    .to_string()
+    ];
+    // Disruption accounting travels only when something actually happened:
+    // a knob-free (or merely fault-injected) result keeps the exact reply
+    // bytes older workers produce and older leaders accept.
+    if r.preemptions > 0 || r.wasted_work != 0.0 || r.migration_time != 0.0 {
+        pairs.push((
+            "preempt",
+            obj(vec![
+                ("count", Json::Num(r.preemptions as f64)),
+                ("wasted", Json::f64_bits(r.wasted_work)),
+                ("migration", Json::f64_bits(r.migration_time)),
+                ("useful_util", Json::f64_bits(r.useful_util)),
+            ]),
+        ));
+    }
+    obj(pairs).to_string()
 }
 
 /// Decode a `RESULT` body. `policy` is the leader-side handle of the item
@@ -401,13 +429,30 @@ pub fn decode_run_result(body: &str, policy: PolicyHandle) -> Result<RunResult, 
             a[1].as_f64_bits().ok_or("util weight not f64 bits")?,
         ));
     }
+    let utilization = WeightedCdf::from_samples(samples);
+    // An absent "preempt" object means nothing was disrupted; the engine
+    // then defines `useful_util` as exactly the utilization mean, which
+    // the bit-exact samples reproduce on this side of the wire.
+    let (preemptions, wasted_work, migration_time, useful_util) = match j.get("preempt") {
+        None => (0, 0.0, 0.0, utilization.mean()),
+        Some(p) => (
+            need_usize(p, "count")?,
+            need_f64_bits(p, "wasted")?,
+            need_f64_bits(p, "migration")?,
+            need_f64_bits(p, "useful_util")?,
+        ),
+    };
     Ok(RunResult {
         policy: policy.name(),
         outcomes,
-        utilization: WeightedCdf::from_samples(samples),
+        utilization,
         scheduled: need_usize(&j, "scheduled")?,
         dropped: need_usize(&j, "dropped")?,
         makespan: need_f64_bits(&j, "makespan")?,
+        preemptions,
+        wasted_work,
+        migration_time,
+        useful_util,
     })
 }
 
@@ -926,6 +971,56 @@ mod tests {
             back.utilization.samples(),
             local.result.utilization.samples()
         );
+        // A disruption-free reply omits the "preempt" object and decodes
+        // to the engine's definition: useful_util == utilization mean.
+        assert!(!wire.contains("\"preempt\""));
+        assert_eq!(back.preemptions, 0);
+        assert_eq!(back.wasted_work, 0.0);
+        assert_eq!(back.migration_time, 0.0);
+        assert_eq!(
+            back.useful_util.to_bits(),
+            back.utilization.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn disrupted_run_result_roundtrips_bit_exactly() {
+        let it = item(Workload::Synthetic(Scenario::PaperDefault));
+        let mut r = it.run().result;
+        r.preemptions = 3;
+        r.wasted_work = 8192.5;
+        r.migration_time = 60.0;
+        r.useful_util = 0.4321;
+        let wire = encode_run_result(&r);
+        assert!(wire.contains("\"preempt\""));
+        let back = decode_run_result(&wire, it.cell.policy).unwrap();
+        assert_eq!(back.preemptions, r.preemptions);
+        assert_eq!(back.wasted_work.to_bits(), r.wasted_work.to_bits());
+        assert_eq!(back.migration_time.to_bits(), r.migration_time.to_bits());
+        assert_eq!(back.useful_util.to_bits(), r.useful_util.to_bits());
+    }
+
+    #[test]
+    fn priority_rides_as_optional_eighth_job_field() {
+        let mut jobs = generate(&TraceConfig {
+            num_jobs: 2,
+            seed: 9,
+            ..Default::default()
+        });
+        jobs[1].priority = 3;
+        // The default class keeps the legacy 7-element encoding older
+        // workers accept; a real priority widens the array to 8.
+        let legacy = job_json(&jobs[0]);
+        assert_eq!(legacy.as_arr().unwrap().len(), 7);
+        let wide = job_json(&jobs[1]);
+        assert_eq!(wide.as_arr().unwrap().len(), 8);
+        assert_eq!(parse_job(&legacy).unwrap(), jobs[0]);
+        assert_eq!(parse_job(&wide).unwrap(), jobs[1]);
+        // An out-of-range priority is a decode error, never a silent
+        // truncation into a different scheduling class.
+        let mut arr = wide.as_arr().unwrap().to_vec();
+        arr[7] = Json::Num(300.0);
+        assert!(parse_job(&Json::Arr(arr)).is_err());
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!                [--workers W] [--scenarios a,b|all]   grid, JSON rows on stdout
 //!                [--policies p,q] [--out FILE]
 //!                [--trace-file F]                      sweep a recorded CSV trace
-//!                [--with failures=philly,...]          composable fault injection
+//!                [--with failures=philly,...]          composable scenario modifiers
+//!                [--with preempt=priority,...]         preemption / defrag knobs
 //!                [--pool h1:p,h2:p]                    fan out to rfold workers
 //!                [--pool-connections N]                N connections per worker host
 //! rfold worker   [--listen A]                          TCP trial worker daemon
@@ -78,8 +79,9 @@ fn usage() -> &'static str {
     "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
      trace-gen|worker|serve|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
-     fault injection (sweep/simulate): --with failures=philly|exp:MTBF:REPAIR:LINKFRAC,\
-     ocs-latency=5s,stragglers=0.05,seed=U64 (composable, comma-separated)\n\
+     scenario modifiers (sweep/simulate): --with failures=philly|exp:MTBF:REPAIR:LINKFRAC,\
+     ocs-latency=5s,stragglers=0.05,seed=U64,preempt=priority|srtf,migration-cost=30s,\
+     defrag=idle,checkpoint=10m (composable, comma-separated)\n\
      sweep options:  --workers W (0=auto; --threads is an alias) \
      --scenarios a,b|all (--scenario works too) --policies p,q --out FILE --trace-file F \
      --pool host1:port,host2:port (distributed; workers run `rfold worker`) \
@@ -89,7 +91,7 @@ fn usage() -> &'static str {
      worker options: --listen A (default 127.0.0.1:7171)\n\
      simulate options: --trace-file F (replay a recorded CSV trace)\n\
      policies resolve by registry name (rfold, firstfit, folding, reconfig, \
-     besteffort, hilbert, ...)"
+     besteffort, hilbert, preempt-rfold, ...)"
 }
 
 fn runs_jobs_seed(args: &Args) -> (usize, usize, u64) {

@@ -27,6 +27,15 @@ pub struct CellSummary {
     pub avg_util: f64,
     /// Mean queueing delay (the §5 best-effort trade-off).
     pub avg_queue_delay: f64,
+    /// Disruption averages (all exactly zero — and `avg_useful_util ==
+    /// avg_util` bit-for-bit — when no preemption/checkpoint knob ran).
+    pub avg_preemptions: f64,
+    /// Mean node-seconds of evicted-then-rerun work per run.
+    pub avg_wasted_work: f64,
+    /// Mean migration surcharge per run (s).
+    pub avg_migration_time: f64,
+    /// Mean utilization net of wasted work.
+    pub avg_useful_util: f64,
 }
 
 /// Number of points on the reported utilization CDF curves.
@@ -45,9 +54,17 @@ pub fn summarize(label: &str, runs: &[(&RunResult, &[JobSpec])]) -> CellSummary 
     let mut p99s = Vec::new();
     let mut utils = Vec::new();
     let mut delays = Vec::new();
+    let mut preemptions = Vec::new();
+    let mut wasted = Vec::new();
+    let mut migration = Vec::new();
+    let mut useful = Vec::new();
     let mut curves: Vec<Vec<f64>> = vec![Vec::new(); CDF_POINTS + 1];
     for &(r, trace) in runs {
         jcrs.push(r.jcr() * 100.0);
+        preemptions.push(r.preemptions as f64);
+        wasted.push(r.wasted_work);
+        migration.push(r.migration_time);
+        useful.push(r.useful_util);
         // One arrivals-map build per (run, cell) instead of two.
         let (jcts, qd) = r.jcts_and_queueing_delays(trace);
         if !jcts.is_empty() {
@@ -79,6 +96,10 @@ pub fn summarize(label: &str, runs: &[(&RunResult, &[JobSpec])]) -> CellSummary 
         } else {
             stats::mean(&delays)
         },
+        avg_preemptions: stats::mean(&preemptions),
+        avg_wasted_work: stats::mean(&wasted),
+        avg_migration_time: stats::mean(&migration),
+        avg_useful_util: stats::mean(&useful),
     }
 }
 

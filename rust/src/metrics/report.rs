@@ -117,6 +117,15 @@ pub fn sweep_row_json(row: &SweepRow) -> String {
                 .collect(),
         ),
     );
+    // Disruption keys appear only when some disruption actually happened:
+    // rows from preemption-free configurations (including pure
+    // fault-injection ones) keep their pre-preemption bytes exactly.
+    if s.avg_preemptions > 0.0 || s.avg_wasted_work > 0.0 || s.avg_migration_time > 0.0 {
+        put("preemptions", num(s.avg_preemptions));
+        put("wasted_work_s", num(s.avg_wasted_work));
+        put("migration_s", num(s.avg_migration_time));
+        put("useful_util", num(s.avg_useful_util));
+    }
     Json::Obj(m).to_string()
 }
 
@@ -178,6 +187,31 @@ pub fn faults_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String>
     ]
 }
 
+/// Format the preemption/defrag/migration counters as machine-greppable
+/// `PREEMPT` lines. Empty when nothing was disrupted — preemption-free
+/// runs emit no `PREEMPT` section at all.
+pub fn disruption_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String> {
+    let any = t.preemptions + t.migrations + t.defrag_passes + t.defrag_moves > 0
+        || t.preempt_wasted > 0.0
+        || t.migration_time > 0.0;
+    if !any {
+        return Vec::new();
+    }
+    vec![
+        format!(
+            "PREEMPT {label} preemptions={} wasted-work={} migrations={} migration-time={}",
+            t.preemptions,
+            fmt_secs(t.preempt_wasted),
+            t.migrations,
+            fmt_secs(t.migration_time)
+        ),
+        format!(
+            "PREEMPT {label} defrag-passes={} defrag-moves={}",
+            t.defrag_passes, t.defrag_moves
+        ),
+    ]
+}
+
 /// Print decision telemetry — **stderr only**, never stdout: report rows
 /// (`SWEEP`/`TABLE1`/...) carry no wall-clock or observer state, so
 /// stdout stays byte-identical whether or not anyone observes.
@@ -186,6 +220,9 @@ pub fn print_policy_telemetry(label: &str, t: &DecisionTelemetry) {
         eprintln!("{line}");
     }
     for line in faults_telemetry_lines(label, t) {
+        eprintln!("{line}");
+    }
+    for line in disruption_telemetry_lines(label, t) {
         eprintln!("{line}");
     }
 }
@@ -259,6 +296,10 @@ mod tests {
                 util_cdf: vec![(0.0, 0.1), (1.0, 0.9)],
                 avg_util: 0.5,
                 avg_queue_delay: 3.0,
+                avg_preemptions: 0.0,
+                avg_wasted_work: 0.0,
+                avg_migration_time: 0.0,
+                avg_useful_util: 0.5,
             },
         };
         let line = sweep_row_json(&row);
@@ -275,6 +316,23 @@ mod tests {
         // The determinism contract: no timing or thread info in rows.
         assert!(!line.contains("thread"));
         assert!(!line.contains("wall"));
+        // Disruption-free rows carry no disruption keys at all (their
+        // bytes predate the preemption feature and must stay put).
+        assert!(parsed.get("preemptions").is_none());
+        assert!(parsed.get("useful_util").is_none());
+
+        // A row with disruption grows the gated keys.
+        let mut disrupted = row.clone();
+        disrupted.summary.avg_preemptions = 2.5;
+        disrupted.summary.avg_wasted_work = 8192.0;
+        disrupted.summary.avg_migration_time = 60.0;
+        disrupted.summary.avg_useful_util = 0.4;
+        let line = sweep_row_json(&disrupted);
+        let parsed = Json::parse(&line).expect("disrupted row must be valid JSON");
+        assert_eq!(parsed.get("preemptions").unwrap().as_f64(), Some(2.5));
+        assert_eq!(parsed.get("wasted_work_s").unwrap().as_f64(), Some(8192.0));
+        assert_eq!(parsed.get("migration_s").unwrap().as_f64(), Some(60.0));
+        assert_eq!(parsed.get("useful_util").unwrap().as_f64(), Some(0.4));
     }
 
     #[test]
@@ -360,5 +418,30 @@ mod tests {
         assert!(lines.iter().all(|l| l.starts_with("FAULTS RFold (4^3)")));
         assert!(lines[0].contains("node-failures=4") && lines[0].contains("jobs-killed=5"));
         assert!(lines[1].contains("jobs-stalled=2") && lines[1].contains("stall-time=10s"));
+    }
+
+    #[test]
+    fn preempt_lines_appear_only_when_disruption_happened() {
+        let quiet = DecisionTelemetry::default();
+        assert!(
+            disruption_telemetry_lines("RFold (4^3)", &quiet).is_empty(),
+            "preemption-free runs must emit no PREEMPT section"
+        );
+        let t = DecisionTelemetry {
+            preemptions: 3,
+            preempt_wasted: 4096.0,
+            migrations: 2,
+            migration_time: 60.0,
+            defrag_passes: 1,
+            defrag_moves: 4,
+            ..Default::default()
+        };
+        let lines = disruption_telemetry_lines("PreemptRFold (4^3)", &t);
+        assert_eq!(lines.len(), 2);
+        assert!(lines
+            .iter()
+            .all(|l| l.starts_with("PREEMPT PreemptRFold (4^3)")));
+        assert!(lines[0].contains("preemptions=3") && lines[0].contains("migrations=2"));
+        assert!(lines[1].contains("defrag-passes=1") && lines[1].contains("defrag-moves=4"));
     }
 }

@@ -32,6 +32,7 @@ use super::score::{NativeScorer, PlanScorer};
 use crate::shape::fold::{enumerate_variants, rotations_only, FoldKind, Variant};
 use crate::shape::JobShape;
 use crate::topology::cluster::{ClusterState, ClusterTopo};
+use crate::trace::scenarios::PreemptMode;
 
 /// One placement question: "where does this job go *right now*?".
 ///
@@ -135,6 +136,116 @@ impl PlacementDecision {
             PlacementDecision::Infeasible { .. } => "infeasible",
             PlacementDecision::NoCapacity { .. } => "no-capacity",
         }
+    }
+}
+
+/// Scheduler-visible snapshot of one job for preemption decisions: the
+/// incoming queue head and every currently running job are described in
+/// this shape, so [`select_victims`] and [`PlacementPolicy::decide`] can
+/// rank them without touching engine internals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunningJob {
+    /// Job id.
+    pub job: u64,
+    /// Scheduling class ([`crate::trace::JobSpec::priority`]): higher
+    /// preempts lower.
+    pub priority: u8,
+    /// Nodes the job occupies (running) or needs (incoming).
+    pub size: usize,
+    /// Remaining contention-free work (s): full duration minus
+    /// checkpointed progress for the incoming head, duration minus
+    /// elapsed useful work for running jobs.
+    pub remaining: f64,
+    /// Trace arrival time (s).
+    pub arrival: f64,
+}
+
+/// The full decision surface of the scheduling loop — the reference
+/// RFold `SchedDecision` (ADMIT / REJECT / PREEMPT / RECONFIGURE) plus
+/// the FIFO engine's Queue. Returned by [`PlacementPolicy::decide`];
+/// the engine pattern-matches on this instead of on the policy.
+#[derive(Debug)]
+pub enum SchedAction {
+    /// Place the job now on existing topology (no OCS programming).
+    Admit { plan: Plan, stats: DecisionStats },
+    /// Place the job now, programming OCS entries for it.
+    Reconfigure { plan: Plan, stats: DecisionStats },
+    /// Keep the job at the head of the FIFO queue (capacity-blocked).
+    Queue { stats: DecisionStats },
+    /// Drop the job: its shape can never be placed on this topology.
+    Reject { stats: DecisionStats },
+    /// Evict `victims` (currently running jobs, to be checkpointed and
+    /// re-queued) to make room, then retry the head.
+    Preempt {
+        victims: Vec<u64>,
+        stats: DecisionStats,
+    },
+}
+
+impl SchedAction {
+    /// Stable lowercase tag for reports and tests.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedAction::Admit { .. } => "admit",
+            SchedAction::Reconfigure { .. } => "reconfigure",
+            SchedAction::Queue { .. } => "queue",
+            SchedAction::Reject { .. } => "reject",
+            SchedAction::Preempt { .. } => "preempt",
+        }
+    }
+}
+
+/// Deterministic victim selection shared by the default
+/// [`PlacementPolicy::decide`] and any preemptive policy that wants the
+/// stock discipline. Returns the ids to evict, or an empty vector when
+/// no admissible victim set frees enough nodes (the action then degrades
+/// to Queue).
+///
+/// * [`PreemptMode::Priority`]: strictly-lower-priority jobs are
+///   candidates; equal-priority jobs only when they hold more remaining
+///   work than the incoming head (an SRTF tie-break, so single-class
+///   traces still preempt). Ordered lowest priority first, then most
+///   remaining work, then highest id — a total order, so equal-priority
+///   victim choice is reproducible byte-for-byte.
+/// * [`PreemptMode::Srtf`]: jobs with more remaining work than the
+///   incoming head, most remaining first, then highest id.
+pub fn select_victims(
+    incoming: &RunningJob,
+    running: &[RunningJob],
+    mode: PreemptMode,
+) -> Vec<u64> {
+    let mut candidates: Vec<&RunningJob> = running
+        .iter()
+        .filter(|r| r.job != incoming.job)
+        .filter(|r| match mode {
+            PreemptMode::Priority => {
+                r.priority < incoming.priority
+                    || (r.priority == incoming.priority && r.remaining > incoming.remaining)
+            }
+            PreemptMode::Srtf => r.remaining > incoming.remaining,
+        })
+        .collect();
+    candidates.sort_by(|a, b| match mode {
+        PreemptMode::Priority => a
+            .priority
+            .cmp(&b.priority)
+            .then(b.remaining.total_cmp(&a.remaining))
+            .then(b.job.cmp(&a.job)),
+        PreemptMode::Srtf => b.remaining.total_cmp(&a.remaining).then(b.job.cmp(&a.job)),
+    });
+    let mut victims = Vec::new();
+    let mut freed = 0usize;
+    for c in candidates {
+        if freed >= incoming.size {
+            break;
+        }
+        victims.push(c.job);
+        freed += c.size;
+    }
+    if freed >= incoming.size {
+        victims
+    } else {
+        Vec::new()
     }
 }
 
@@ -318,6 +429,55 @@ pub trait PlacementPolicy {
         }
     }
 
+    /// Full scheduling decision for the queue head: the reference
+    /// ADMIT / REJECT / PREEMPT / RECONFIGURE surface plus Queue. The
+    /// default implementation wraps [`plan`](PlacementPolicy::plan) and
+    /// reproduces today's FIFO semantics exactly — Placed becomes
+    /// Admit/Reconfigure (by whether the plan programs OCS entries),
+    /// Infeasible becomes Reject, NoCapacity becomes Queue — unless a
+    /// preemption discipline is supplied, in which case a capacity-blocked
+    /// head may instead name victims via [`select_victims`]. Policies
+    /// override this to implement custom disciplines; `running` holds a
+    /// deterministic snapshot of every running job.
+    fn decide(
+        &mut self,
+        req: &PlacementRequest<'_>,
+        incoming: &RunningJob,
+        running: &[RunningJob],
+        preempt: Option<PreemptMode>,
+    ) -> SchedAction {
+        match self.plan(req) {
+            PlacementDecision::Placed { plan, stats } => {
+                if plan.ocs_entries() > 0 {
+                    SchedAction::Reconfigure { plan, stats }
+                } else {
+                    SchedAction::Admit { plan, stats }
+                }
+            }
+            PlacementDecision::Infeasible { stats } => SchedAction::Reject { stats },
+            PlacementDecision::NoCapacity { stats } => match preempt {
+                Some(mode) => {
+                    let victims = select_victims(incoming, running, mode);
+                    if victims.is_empty() {
+                        SchedAction::Queue { stats }
+                    } else {
+                        SchedAction::Preempt { victims, stats }
+                    }
+                }
+                None => SchedAction::Queue { stats },
+            },
+        }
+    }
+
+    /// `true` for policies that preempt even without a `--with preempt=`
+    /// knob (they choose their own discipline inside
+    /// [`decide`](PlacementPolicy::decide)). The engine only builds the
+    /// running-job snapshot when this or the knob is set, so the six
+    /// non-preemptive built-ins pay nothing.
+    fn preemptive(&self) -> bool {
+        false
+    }
+
     /// Can the job be placed on an *empty* cluster of this topology?
     /// (FIFO admission drops shape-incompatible jobs, §4.) Memoized per
     /// `(topology, shape)` in the [`PolicyCore`].
@@ -465,6 +625,96 @@ mod tests {
             std::rc::Rc::ptr_eq(&live, &again),
             "the throwaway empty-cluster probe must not evict the live index"
         );
+    }
+
+    fn rj(job: u64, priority: u8, size: usize, remaining: f64) -> RunningJob {
+        RunningJob {
+            job,
+            priority,
+            size,
+            remaining,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn victim_selection_is_deterministic_under_equal_priorities() {
+        // Single-class traces: longest remaining work first, highest id
+        // breaks exact ties — a total order, so repeated selection is
+        // byte-identical.
+        let incoming = rj(10, 0, 8, 100.0);
+        let running = vec![rj(1, 0, 4, 500.0), rj(2, 0, 4, 500.0), rj(3, 0, 4, 50.0)];
+        let v = select_victims(&incoming, &running, PreemptMode::Priority);
+        assert_eq!(v, vec![2, 1], "remaining desc, then id desc");
+        assert_eq!(select_victims(&incoming, &running, PreemptMode::Priority), v);
+        assert_eq!(select_victims(&incoming, &running, PreemptMode::Srtf), v);
+    }
+
+    #[test]
+    fn victim_selection_respects_classes_and_capacity() {
+        // Lower classes are evicted before longer-running peers.
+        let incoming = rj(9, 2, 4, 10.0);
+        let running = vec![rj(1, 0, 4, 5.0), rj(2, 1, 4, 500.0)];
+        assert_eq!(
+            select_victims(&incoming, &running, PreemptMode::Priority),
+            vec![1]
+        );
+        // An inadmissible or insufficient victim set degrades to empty
+        // (the engine then queues instead of evicting pointlessly).
+        let big = rj(9, 2, 64, 10.0);
+        assert!(select_victims(&big, &running, PreemptMode::Priority).is_empty());
+        // SRTF never evicts jobs with less remaining work than the head.
+        let long_head = rj(9, 0, 4, 1000.0);
+        assert!(select_victims(&long_head, &running, PreemptMode::Srtf).is_empty());
+    }
+
+    #[test]
+    fn default_decide_maps_plan_outcomes_and_preempts_only_with_a_mode() {
+        let mut p = FirstFit::new();
+        let mut busy = ClusterState::new(ClusterTopo::static_4096());
+        let full = rj(2, 0, 4096, 1000.0);
+        let action = p.decide(
+            &PlacementRequest::new(2, JobShape::new(16, 16, 16), &busy),
+            &full,
+            &[],
+            None,
+        );
+        assert_eq!(action.label(), "admit", "static plans program no OCS");
+        let SchedAction::Admit { plan, .. } = action else {
+            unreachable!()
+        };
+        plan.commit(&mut busy).unwrap();
+
+        // Capacity-blocked head: Queue without a discipline, Preempt with
+        // one (the long-running full-cluster job is the victim).
+        let head = rj(3, 0, 8, 10.0);
+        let q = p.decide(
+            &PlacementRequest::new(3, JobShape::new(2, 2, 2), &busy),
+            &head,
+            &[full],
+            None,
+        );
+        assert_eq!(q.label(), "queue");
+        let pre = p.decide(
+            &PlacementRequest::new(3, JobShape::new(2, 2, 2), &busy),
+            &head,
+            &[full],
+            Some(PreemptMode::Priority),
+        );
+        let SchedAction::Preempt { victims, .. } = pre else {
+            panic!("expected Preempt, got {}", pre.label());
+        };
+        assert_eq!(victims, vec![2]);
+
+        // A never-placeable shape is rejected outright.
+        let r = p.decide(
+            &PlacementRequest::new(4, JobShape::new(4, 4, 32), &busy),
+            &rj(4, 0, 512, 1.0),
+            &[],
+            None,
+        );
+        assert_eq!(r.label(), "reject");
+        assert!(!p.preemptive(), "built-ins do not self-preempt");
     }
 
     #[test]

@@ -32,7 +32,8 @@ pub mod score;
 pub mod static_place;
 
 pub use api::{
-    Attempt, DecisionStats, PlacementDecision, PlacementPolicy, PlacementRequest, PolicyCore,
+    select_victims, Attempt, DecisionStats, PlacementDecision, PlacementPolicy, PlacementRequest,
+    PolicyCore, RunningJob, SchedAction,
 };
 pub use index::{PlacementIndex, ReconfigIndex};
 pub use plan::{OcsChainPlan, Plan};

@@ -11,7 +11,10 @@
 //! names so existing configs, sweep rows, and golden snapshots keep their
 //! exact bytes.
 
-use super::api::{Attempt, DecisionStats, PlacementPolicy, PolicyCore};
+use super::api::{
+    select_victims, Attempt, DecisionStats, PlacementPolicy, PlacementRequest, PolicyCore,
+    RunningJob, SchedAction,
+};
 use super::best_effort;
 use super::hilbert;
 use super::plan::Plan;
@@ -204,6 +207,81 @@ impl PlacementPolicy for RFold {
 
     fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
         reconfig_attempt(&mut self.core, cluster, job, shape, true)
+    }
+}
+
+/// RFold's search with an always-on preemption discipline
+/// (`preempt-rfold`): identical placement plans, but a capacity-blocked
+/// head names eviction victims even without a `--with preempt=` knob —
+/// priority classes when the engine supplies a mode, SRTF otherwise.
+/// The seventh built-in, and the in-tree demonstration that a policy can
+/// own the whole ADMIT/QUEUE/PREEMPT/RECONFIGURE surface by overriding
+/// [`PlacementPolicy::decide`].
+pub struct PreemptRFold {
+    core: PolicyCore,
+}
+
+impl PreemptRFold {
+    pub fn new() -> PreemptRFold {
+        let mut core = PolicyCore::new();
+        core.offset_search = true;
+        PreemptRFold { core }
+    }
+}
+
+impl Default for PreemptRFold {
+    fn default() -> Self {
+        PreemptRFold::new()
+    }
+}
+
+impl PlacementPolicy for PreemptRFold {
+    fn name(&self) -> &'static str {
+        "PreemptRFold"
+    }
+
+    fn core(&mut self) -> &mut PolicyCore {
+        &mut self.core
+    }
+
+    fn attempt(&mut self, cluster: &ClusterState, job: u64, shape: JobShape) -> Attempt {
+        reconfig_attempt(&mut self.core, cluster, job, shape, true)
+    }
+
+    fn preemptive(&self) -> bool {
+        true
+    }
+
+    fn decide(
+        &mut self,
+        req: &PlacementRequest<'_>,
+        incoming: &RunningJob,
+        running: &[RunningJob],
+        preempt: Option<crate::trace::scenarios::PreemptMode>,
+    ) -> SchedAction {
+        use super::api::PlacementDecision;
+        use crate::trace::scenarios::PreemptMode;
+        match self.plan(req) {
+            PlacementDecision::Placed { plan, stats } => {
+                if plan.ocs_entries() > 0 {
+                    SchedAction::Reconfigure { plan, stats }
+                } else {
+                    SchedAction::Admit { plan, stats }
+                }
+            }
+            PlacementDecision::Infeasible { stats } => SchedAction::Reject { stats },
+            PlacementDecision::NoCapacity { stats } => {
+                // The knob (when present) picks the discipline; the
+                // policy's own default is SRTF.
+                let mode = preempt.unwrap_or(PreemptMode::Srtf);
+                let victims = select_victims(incoming, running, mode);
+                if victims.is_empty() {
+                    SchedAction::Queue { stats }
+                } else {
+                    SchedAction::Preempt { victims, stats }
+                }
+            }
+        }
     }
 }
 
@@ -502,6 +580,52 @@ mod tests {
         assert!(Hilbert::new().scattered());
         assert!(!FirstFit::new().scattered());
         assert!(!RFold::new().scattered());
+        assert!(!PreemptRFold::new().scattered());
+    }
+
+    #[test]
+    fn preempt_rfold_places_like_rfold_and_preempts_without_a_knob() {
+        // Identical plans to RFold (same search, same offset knob)…
+        let c = reconfig_c(4);
+        let mut pr = PreemptRFold::new();
+        let mut rf = RFold::new();
+        let a = pr.place_now(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+        let b = rf.place_now(&c, 1, JobShape::new(4, 8, 2)).unwrap();
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.cubes, b.cubes);
+        assert!(pr.preemptive() && !rf.preemptive());
+
+        // …but a capacity-blocked head falls back to SRTF victims with
+        // no engine-supplied discipline at all.
+        let mut busy = reconfig_c(4);
+        pr.place_now(&busy, 2, JobShape::new(16, 16, 16))
+            .unwrap()
+            .commit(&mut busy)
+            .unwrap();
+        let hog = RunningJob {
+            job: 2,
+            priority: 0,
+            size: 4096,
+            remaining: 900.0,
+            arrival: 0.0,
+        };
+        let head = RunningJob {
+            job: 3,
+            priority: 0,
+            size: 8,
+            remaining: 10.0,
+            arrival: 5.0,
+        };
+        let action = pr.decide(
+            &PlacementRequest::new(3, JobShape::new(2, 2, 2), &busy),
+            &head,
+            &[hog],
+            None,
+        );
+        let SchedAction::Preempt { victims, .. } = action else {
+            panic!("expected Preempt, got {}", action.label());
+        };
+        assert_eq!(victims, vec![2]);
     }
 
     #[test]

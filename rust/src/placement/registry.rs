@@ -11,7 +11,7 @@
 //! Adding a policy takes one type implementing
 //! [`PlacementPolicy`](crate::placement::PlacementPolicy) plus one
 //! [`PolicyRegistry::register`] call — `tests/policy_registry.rs`
-//! demonstrates a seventh policy registered entirely from outside the
+//! demonstrates an extra policy registered entirely from outside the
 //! crate.
 
 use std::fmt;
@@ -117,7 +117,9 @@ impl fmt::Debug for PolicyHandle {
 /// `PolicyKind` shim and the experiment cell tables can reference them
 /// without a registry lookup.
 pub mod builtins {
-    use super::super::policies::{BestEffort, FirstFit, Folding, Hilbert, RFold, Reconfig};
+    use super::super::policies::{
+        BestEffort, FirstFit, Folding, Hilbert, PreemptRFold, RFold, Reconfig,
+    };
     use super::{PlacementPolicy, PolicyHandle};
 
     fn make_first_fit() -> Box<dyn PlacementPolicy> {
@@ -137,6 +139,9 @@ pub mod builtins {
     }
     fn make_hilbert() -> Box<dyn PlacementPolicy> {
         Box::new(Hilbert::new())
+    }
+    fn make_preempt_rfold() -> Box<dyn PlacementPolicy> {
+        Box::new(PreemptRFold::new())
     }
 
     /// First-Fit with rotations in a static torus.
@@ -182,14 +187,25 @@ pub mod builtins {
         make_hilbert,
     );
 
+    /// RFold's search with an always-on preemption discipline.
+    pub const PREEMPT_RFOLD: PolicyHandle = PolicyHandle::new(
+        "preempt-rfold",
+        "PreemptRFold",
+        &["prfold"],
+        true,
+        true,
+        make_preempt_rfold,
+    );
+
     /// All built-ins in stable reporting order.
-    pub const ALL: [PolicyHandle; 6] = [
+    pub const ALL: [PolicyHandle; 7] = [
         FIRST_FIT,
         FOLDING,
         RECONFIG,
         RFOLD,
         BEST_EFFORT,
         HILBERT,
+        PREEMPT_RFOLD,
     ];
 }
 
@@ -208,7 +224,7 @@ impl PolicyRegistry {
         }
     }
 
-    /// A registry pre-seeded with the six built-ins.
+    /// A registry pre-seeded with the seven built-ins.
     pub fn with_builtins() -> PolicyRegistry {
         let reg = PolicyRegistry::new();
         for h in builtins::ALL {
@@ -330,7 +346,7 @@ mod tests {
     #[test]
     fn builtins_resolve_by_key_and_alias() {
         let reg = PolicyRegistry::with_builtins();
-        assert_eq!(reg.len(), 6);
+        assert_eq!(reg.len(), 7);
         for h in builtins::ALL {
             assert_eq!(reg.resolve(h.key()), Some(h), "{}", h.key());
             for a in h.aliases() {

@@ -1,9 +1,17 @@
 //! The discrete-event simulation engine.
 //!
-//! Admission is FIFO with head-of-line blocking (paper §4): "an
-//! unscheduled job will block all subsequent jobs. If a job cannot be
-//! scheduled because of its incompatible shape, the scheduler removes it
-//! from the system and proceeds to the next."
+//! Admission is a scheduler decision loop over the FIFO queue head: the
+//! policy's [`PlacementPolicy::decide`] returns a [`SchedAction`] —
+//! Admit / Reconfigure / Queue / Reject / Preempt — and the engine acts
+//! on it. With no preemption knobs this degenerates to the paper's §4
+//! FIFO semantics exactly: "an unscheduled job will block all subsequent
+//! jobs. If a job cannot be scheduled because of its incompatible shape,
+//! the scheduler removes it from the system and proceeds to the next."
+//! With `--with preempt=priority|srtf[,migration-cost=..,defrag=idle,
+//! checkpoint=..]` the engine additionally evicts running jobs for a
+//! blocked head (checkpoint-restart with a configurable migration
+//! surcharge) and compacts the cluster when the head is
+//! capacity-blocked.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
@@ -11,7 +19,7 @@ use std::time::Instant;
 
 use crate::placement::best_effort;
 use crate::placement::{
-    PlacementDecision, PlacementPolicy, PlacementRequest, PolicyHandle,
+    PlacementDecision, PlacementPolicy, PlacementRequest, PolicyHandle, RunningJob, SchedAction,
 };
 use crate::sim::contention::{effective_duration, ContentionModel};
 use crate::sim::observer::SchedulerObserver;
@@ -31,6 +39,34 @@ const FAULT_STREAM: u64 = 0xFA;
 /// realistic MTBF is killed before finishing with near certainty and the
 /// simulation would requeue it forever.
 const MAX_KILL_RETRIES: u32 = 3;
+
+/// A job preempted this often becomes immune to further preemption (it is
+/// excluded from the victim snapshot) — a starvation guard. Unlike the
+/// fault-kill cap it never drops the job: preemption is a scheduling
+/// choice, not an external failure.
+const MAX_PREEMPTIONS: u32 = 3;
+
+/// Why a running job is being evicted — one mechanism, two triggers.
+#[derive(Clone, Copy, Debug)]
+enum EvictReason {
+    /// A fault landed on one of its nodes (PR-6 `kill_job` semantics:
+    /// FIFO-ordered requeue, retry cap, drop on exhaustion).
+    Fault,
+    /// A preemptive scheduling decision evicted it for a blocked head
+    /// (requeued at the tail, never dropped, starvation-capped).
+    Preempt { for_job: u64 },
+}
+
+/// Execution record of a running job, kept only when a disruption knob
+/// (preempt / defrag / checkpoint) is active: enough to convert elapsed
+/// wall-clock into useful base-duration work at eviction time.
+#[derive(Clone, Copy, Debug)]
+struct RunInfo {
+    /// Effective (stretched) wall-clock duration of this attempt.
+    eff: f64,
+    /// Remaining base duration this attempt started with.
+    base: f64,
+}
 
 /// Simulation configuration. The policy is a registry handle resolved
 /// once at config-build time; the engine instantiates it per run.
@@ -93,6 +129,21 @@ pub struct RunResult {
     pub dropped: usize,
     /// Wall-clock span of the run (first arrival → last completion).
     pub makespan: f64,
+    /// Evictions made by preemptive scheduling decisions (not fault
+    /// kills). 0 whenever preemption is disabled.
+    pub preemptions: usize,
+    /// Node-seconds of evicted-then-rerun work: wall-clock a victim spent
+    /// running beyond its last credited checkpoint, times its node count.
+    /// Accumulated by both preemptions and (when checkpointing is on)
+    /// fault kills; exactly 0.0 when no disruption knob is active.
+    pub wasted_work: f64,
+    /// Total restart surcharge (s) charged through `migration-cost=`.
+    pub migration_time: f64,
+    /// Utilization with wasted work removed: `mean − wasted /(nodes ×
+    /// window)`, clamped at 0 — the number preempting policies are judged
+    /// on, so eviction churn cannot inflate the metric. Equals
+    /// `utilization.mean()` bit-for-bit when `wasted_work == 0`.
+    pub useful_util: f64,
 }
 
 impl RunResult {
@@ -225,6 +276,34 @@ pub struct Simulation {
     /// on a loaded one, and the policy's own feasibility cache would
     /// repeat the verdict anyway.
     infeasible_shapes: HashSet<crate::shape::JobShape>,
+    /// `cfg.modifiers.has_disruption() || policy.preemptive()`,
+    /// precomputed: gates every piece of preemption/checkpoint
+    /// bookkeeping so knob-free runs of non-preemptive policies stay
+    /// byte-identical to (and as allocation-free as) the plain FIFO
+    /// engine.
+    disruption: bool,
+    /// Execution record per running job (only when `disruption`).
+    run_info: HashMap<u64, RunInfo>,
+    /// Remaining base duration of jobs evicted with checkpointed
+    /// progress; absent means "full duration".
+    remaining_base: HashMap<u64, f64>,
+    /// Jobs whose next placement owes the `migration-cost=` surcharge.
+    migration_due: HashSet<u64>,
+    /// Preemptions suffered per job, for the starvation cap.
+    preempt_count: HashMap<u64, u32>,
+    /// Head job that already got one eviction round without managing to
+    /// place: a second consecutive Preempt for it degrades to Queue, so a
+    /// geometry-blocked (rather than capacity-blocked) head cannot churn
+    /// through the whole running set. Cleared by any successful placement
+    /// or genuine completion.
+    preempt_round: Option<u64>,
+    /// Head job for which an idle-time defrag pass already ran (one
+    /// compaction attempt per blocked head, not one per drain call).
+    defrag_tried: Option<u64>,
+    /// Disruption accounting for [`RunResult`].
+    preemptions: usize,
+    wasted_work: f64,
+    migration_time: f64,
 }
 
 /// f64 ordered wrapper for the event heap (times are never NaN).
@@ -263,6 +342,7 @@ impl Simulation {
         let mut policy = cfg.policy.instantiate();
         policy.core().fold_dims_enabled = cfg.fold_dims_enabled;
         let ext = cluster.topo().phys_ext();
+        let disruption = cfg.modifiers.has_disruption() || policy.preemptive();
         Simulation {
             cfg,
             cluster,
@@ -289,6 +369,16 @@ impl Simulation {
             job_now: 0.0,
             head_block: None,
             infeasible_shapes: HashSet::new(),
+            disruption,
+            run_info: HashMap::new(),
+            remaining_base: HashMap::new(),
+            migration_due: HashSet::new(),
+            preempt_count: HashMap::new(),
+            preempt_round: None,
+            defrag_tried: None,
+            preemptions: 0,
+            wasted_work: 0.0,
+            migration_time: 0.0,
         }
     }
 
@@ -343,39 +433,164 @@ impl Simulation {
         self.infeasible_shapes.clear();
     }
 
-    /// Kill a running job (fault landed on one of its nodes): release its
-    /// allocation, invalidate its in-flight completion event via the
-    /// incarnation bump, and requeue it in FIFO (arrival) order — or drop
-    /// it outright once it exhausted [`MAX_KILL_RETRIES`].
-    fn kill_job(&mut self, job: u64) {
-        if self.cluster.release(job).is_none() {
-            return; // not running (already completed or never placed)
-        }
+    /// Evict a running job — one mechanism, two triggers. Both release
+    /// the allocation, invalidate the in-flight completion event via the
+    /// incarnation bump, and (when a disruption knob is active) convert
+    /// the attempt's elapsed wall-clock into checkpointed progress plus
+    /// wasted work. They differ in the aftermath: a `Fault` requeues in
+    /// FIFO (arrival) order and drops the job once it exhausts
+    /// [`MAX_KILL_RETRIES`]; a `Preempt` requeues at the *tail* (behind
+    /// the head it yielded to — re-inserting ahead of the blocked head
+    /// would evict-and-requeue forever) and never drops.
+    ///
+    /// Returns `false` if the job was not running.
+    fn evict_job(&mut self, job: u64, why: EvictReason) -> bool {
+        let Some(alloc) = self.cluster.release(job) else {
+            return false; // not running (already completed or never placed)
+        };
         if let Some(rings) = self.be_rings.remove(&job) {
             self.contention.remove_job(&rings);
         }
-        self.started.remove(&job);
+        let start = self
+            .started
+            .remove(&job)
+            .expect("running job has a start time");
         self.finish_at.remove(&job);
+        let mut wasted = 0.0;
+        if self.disruption {
+            // Credit progress up to the last whole checkpoint interval
+            // (in *base*-duration terms); everything past it re-runs.
+            let info = self
+                .run_info
+                .remove(&job)
+                .expect("disruption runs record every placement");
+            let elapsed = self.now - start;
+            let progress = info.base * (elapsed / info.eff).min(1.0);
+            let c = self.cfg.modifiers.checkpoint;
+            let credited = if c > 0.0 {
+                ((progress / c).floor() * c).clamp(0.0, info.base)
+            } else {
+                0.0
+            };
+            self.remaining_base.insert(job, info.base - credited);
+            let credited_wall = if info.base > 0.0 {
+                credited * info.eff / info.base
+            } else {
+                0.0
+            };
+            wasted = (elapsed - credited_wall).max(0.0) * alloc.nodes.len() as f64;
+            self.wasted_work += wasted;
+            self.migration_due.insert(job);
+        }
         *self.incarnation.entry(job).or_insert(0) += 1;
         self.scheduled -= 1;
         self.clear_fault_memos();
-        for o in &mut self.observers {
-            o.on_job_killed(self.now, job);
+        match why {
+            EvictReason::Fault => {
+                for o in &mut self.observers {
+                    o.on_job_killed(self.now, job);
+                }
+                let kills = self.kill_count.entry(job).or_insert(0);
+                *kills += 1;
+                if *kills > MAX_KILL_RETRIES {
+                    self.outcomes.push((job, JobOutcome::Dropped));
+                    self.dropped += 1;
+                    return true;
+                }
+                // Requeue where FIFO order dictates: trace indices are
+                // arrival-ordered, so a sorted insert restores
+                // (arrival, id) order even when several kills interleave
+                // with a partially drained queue.
+                let idx = self.idx_of[&job];
+                let pos = self.queue.partition_point(|&q| q < idx);
+                self.queue.insert(pos, idx);
+            }
+            EvictReason::Preempt { for_job } => {
+                self.preemptions += 1;
+                *self.preempt_count.entry(job).or_insert(0) += 1;
+                for o in &mut self.observers {
+                    o.on_preempt(self.now, job, for_job, wasted);
+                }
+                self.queue.push_back(self.idx_of[&job]);
+            }
         }
-        let kills = self.kill_count.entry(job).or_insert(0);
-        *kills += 1;
-        if *kills > MAX_KILL_RETRIES {
-            self.outcomes.push((job, JobOutcome::Dropped));
-            self.dropped += 1;
-            return;
+        true
+    }
+
+    /// Deterministic snapshot of preemptable running jobs, for
+    /// [`PlacementPolicy::decide`]. Job-id sorted (`HashMap` iteration
+    /// order must never reach a scheduling decision); jobs at the
+    /// [`MAX_PREEMPTIONS`] starvation cap are excluded, so the policy
+    /// cannot churn them further.
+    fn running_snapshot(&self, trace: &[JobSpec]) -> Vec<RunningJob> {
+        let mut ids: Vec<u64> = self.started.keys().copied().collect();
+        ids.sort_unstable();
+        ids.into_iter()
+            .filter(|id| self.preempt_count.get(id).copied().unwrap_or(0) < MAX_PREEMPTIONS)
+            .filter_map(|id| {
+                let &idx = self.idx_of.get(&id)?;
+                let info = self.run_info.get(&id)?;
+                let start = self.started[&id];
+                let remaining = (info.base
+                    - info.base * ((self.now - start) / info.eff).min(1.0))
+                .max(0.0);
+                Some(RunningJob {
+                    job: id,
+                    priority: trace[idx].priority,
+                    size: trace[idx].shape.size(),
+                    remaining,
+                    arrival: trace[idx].arrival,
+                })
+            })
+            .collect()
+    }
+
+    /// Idle-time defragmentation (`--with defrag=idle`): re-fold running
+    /// jobs one at a time toward the policy's preferred placement so a
+    /// capacity-blocked head may fit without evicting anyone. Each job is
+    /// released, re-planned against the compacted cluster, and either
+    /// recommitted in its new spot or restored *exactly* (whole-cluster
+    /// snapshot, so OCS reservations survive — `commit` alone would not
+    /// re-reserve them). The move is modeled as hitless: completion
+    /// events and accrued progress are untouched. Returns jobs moved.
+    fn defrag_pass(&mut self, trace: &[JobSpec]) -> usize {
+        let mut ids: Vec<u64> = self.cluster.live_allocations().map(|a| a.job).collect();
+        ids.sort_unstable();
+        let mut moved = 0;
+        for id in ids {
+            let Some(&idx) = self.idx_of.get(&id) else {
+                continue;
+            };
+            let snapshot = self.cluster.clone();
+            let Some(old) = self.cluster.release(id) else {
+                continue;
+            };
+            match self.policy.place_now(&self.cluster, id, trace[idx].shape) {
+                Some(plan) if plan.commit(&mut self.cluster).is_ok() => {
+                    let new_nodes = self
+                        .cluster
+                        .allocation(id)
+                        .map(|a| a.nodes.clone())
+                        .unwrap_or_default();
+                    if new_nodes != old.nodes {
+                        moved += 1;
+                    }
+                }
+                _ => {
+                    // Restore the exact pre-release state (nodes, OCS
+                    // reservations, epoch) — a failed relocation must
+                    // never strand a running job.
+                    self.cluster = snapshot;
+                }
+            }
         }
-        // Requeue where FIFO order dictates: trace indices are
-        // arrival-ordered, so a sorted insert restores (arrival, id)
-        // order even when several kills interleave with a partially
-        // drained queue.
-        let idx = self.idx_of[&job];
-        let pos = self.queue.partition_point(|&q| q < idx);
-        self.queue.insert(pos, idx);
+        if moved > 0 {
+            self.clear_fault_memos();
+            for o in &mut self.observers {
+                o.on_defrag(self.now, moved);
+            }
+        }
+        moved
     }
 
     /// One fault event: schedule the chain's next fault (while work is
@@ -395,7 +610,7 @@ impl Simulation {
         let is_link = self.fault_rng.chance(fm.link_fraction);
         let node = self.fault_rng.below(self.cluster.num_nodes());
         if let Some(victim) = self.cluster.job_on_node(node) {
-            self.kill_job(victim);
+            self.evict_job(victim, EvictReason::Fault);
         }
         if is_link {
             // Transient: the job is gone, the capacity survives.
@@ -442,41 +657,106 @@ impl Simulation {
         }
     }
 
-    /// Try to schedule from the head of the FIFO queue.
+    /// The scheduler decision loop over the head of the FIFO queue: ask
+    /// the policy to [`decide`](PlacementPolicy::decide), then act —
+    /// place (Admit/Reconfigure), drop (Reject), block (Queue), or evict
+    /// victims and retry (Preempt). With no preemption knob and a
+    /// non-preemptive policy this is byte-identical to the plain FIFO
+    /// admit-or-queue loop: `decide` defaults to wrapping `plan`, the
+    /// running-job snapshot is never built, and no extra state is
+    /// touched.
     fn drain_queue(&mut self, trace: &[JobSpec]) {
         while let Some(&idx) = self.queue.front() {
             let job = trace[idx];
             if self.head_block == Some((job.id, self.cluster.epoch())) {
                 break; // occupancy unchanged since this head last failed
             }
+            let preempt_mode = self.cfg.modifiers.preempt;
+            let preempt_enabled = preempt_mode.is_some() || self.policy.preemptive();
             // The decision wall-clock is observer-only diagnostics; skip
             // the timer entirely when nobody listens.
             let t0 = (!self.observers.is_empty()).then(Instant::now);
-            let decision = if self.infeasible_shapes.contains(&job.shape) {
+            let action = if self.infeasible_shapes.contains(&job.shape) {
                 // A shape already judged never-placeable on this
                 // (topology, fold_dims) run drops on a map lookup — the
                 // synthesized decision keeps the observer stream (and its
                 // decisions = placed + infeasible + no_capacity
                 // invariant) intact, with zero search counters.
-                PlacementDecision::Infeasible {
+                SchedAction::Reject {
                     stats: Default::default(),
                 }
             } else {
-                self.policy.plan(&PlacementRequest {
+                let incoming = RunningJob {
                     job: job.id,
-                    shape: job.shape,
+                    priority: job.priority,
+                    size: job.shape.size(),
+                    remaining: self
+                        .remaining_base
+                        .get(&job.id)
+                        .copied()
+                        .unwrap_or(job.duration),
                     arrival: job.arrival,
-                    cluster: &self.cluster,
-                })
+                };
+                // The snapshot costs a sort of the running set; only
+                // preemptive configurations can act on it, so only they
+                // pay for it.
+                let running = if preempt_enabled {
+                    self.running_snapshot(trace)
+                } else {
+                    Vec::new()
+                };
+                self.policy.decide(
+                    &PlacementRequest {
+                        job: job.id,
+                        shape: job.shape,
+                        arrival: job.arrival,
+                        cluster: &self.cluster,
+                    },
+                    &incoming,
+                    &running,
+                    preempt_mode,
+                )
+            };
+            // Observers keep seeing the three-way PlacementDecision view
+            // (their `decisions = placed + infeasible + no_capacity`
+            // invariant predates SchedAction); a Preempt surfaces as the
+            // NoCapacity it resolved, plus its own on_preempt events.
+            let (view, victims) = match action {
+                SchedAction::Admit { plan, stats } | SchedAction::Reconfigure { plan, stats } => {
+                    (PlacementDecision::Placed { plan, stats }, Vec::new())
+                }
+                SchedAction::Reject { stats } => {
+                    (PlacementDecision::Infeasible { stats }, Vec::new())
+                }
+                SchedAction::Queue { stats } => {
+                    (PlacementDecision::NoCapacity { stats }, Vec::new())
+                }
+                SchedAction::Preempt { victims, stats } => {
+                    (PlacementDecision::NoCapacity { stats }, victims)
+                }
             };
             if let Some(t0) = t0 {
                 let wall = t0.elapsed();
                 for o in &mut self.observers {
-                    o.on_decision(self.now, job.id, &decision, wall);
+                    o.on_decision(self.now, job.id, &view, wall);
                 }
             }
-            match decision {
-                PlacementDecision::Placed { plan, .. } => {
+            enum Resolved {
+                Place(crate::placement::Plan),
+                Drop,
+                Block,
+                Evict(Vec<u64>),
+            }
+            let resolved = match view {
+                PlacementDecision::Placed { plan, .. } => Resolved::Place(plan),
+                PlacementDecision::Infeasible { .. } => Resolved::Drop,
+                PlacementDecision::NoCapacity { .. } if !victims.is_empty() => {
+                    Resolved::Evict(victims)
+                }
+                PlacementDecision::NoCapacity { .. } => Resolved::Block,
+            };
+            match resolved {
+                Resolved::Place(plan) => {
                     // Commit and schedule completion.
                     let mult = if self.policy.scattered() {
                         let rings = best_effort::ring_members(&self.cluster, &plan);
@@ -500,7 +780,14 @@ impl Simulation {
                         .expect("just committed")
                         .rings
                         .clone();
-                    let mut eff = effective_duration(job.duration, job.comm_frac, &rings, mult);
+                    // Checkpoint-restart: a previously evicted job resumes
+                    // from its remaining base duration, not from scratch.
+                    let base = self
+                        .remaining_base
+                        .get(&job.id)
+                        .copied()
+                        .unwrap_or(job.duration);
+                    let mut eff = effective_duration(base, job.comm_frac, &rings, mult);
                     // Modifier shaping. Every branch below draws from (or
                     // touches) fault state only when its modifier is
                     // active, so the default set runs this arm with zero
@@ -511,6 +798,19 @@ impl Simulation {
                         // Multiplicative slowdown in [1.25, 2.0): a
                         // straggling worker gates the whole ring.
                         eff *= 1.25 + 0.75 * self.fault_rng.f64();
+                    }
+                    if self.migration_due.remove(&job.id) {
+                        // First placement after an eviction pays the
+                        // restart surcharge (checkpoint restore + weight
+                        // redistribution), once.
+                        let mc = mods.migration_cost;
+                        if mc > 0.0 {
+                            eff += mc;
+                            self.migration_time += mc;
+                            for o in &mut self.observers {
+                                o.on_migration(self.now, job.id, mc);
+                            }
+                        }
                     }
                     if mods.ocs_latency > 0.0 {
                         if ocs_entries > 0 {
@@ -523,13 +823,18 @@ impl Simulation {
                         }
                         self.finish_at.insert(job.id, self.now + eff);
                     }
+                    if self.disruption {
+                        self.run_info.insert(job.id, RunInfo { eff, base });
+                    }
+                    self.preempt_round = None;
+                    self.defrag_tried = None;
                     self.started.insert(job.id, self.now);
                     let inc = self.incarnation_of(job.id);
                     self.push_event(self.now + eff, EventSlot::Completion(job.id, inc));
                     self.queue.pop_front();
                     self.scheduled += 1;
                 }
-                PlacementDecision::Infeasible { .. } => {
+                Resolved::Drop => {
                     // Shape incompatible: remove and move on (§4), and
                     // memoize so later jobs with the same shape skip the
                     // search entirely.
@@ -537,14 +842,51 @@ impl Simulation {
                     self.outcomes.push((job.id, JobOutcome::Dropped));
                     self.dropped += 1;
                     self.queue.pop_front();
+                    self.preempt_round = None;
+                    self.defrag_tried = None;
                 }
-                PlacementDecision::NoCapacity { .. } => {
+                Resolved::Block => {
+                    // Before conceding, a capacity-blocked head may try
+                    // one idle-time defragmentation pass: compact the
+                    // running jobs and re-plan. (Scattered policies place
+                    // anywhere — compaction is meaningless for them.)
+                    if self.cfg.modifiers.defrag
+                        && !self.policy.scattered()
+                        && self.defrag_tried != Some(job.id)
+                    {
+                        self.defrag_tried = Some(job.id);
+                        if self.defrag_pass(trace) > 0 {
+                            continue; // occupancy changed: retry the head
+                        }
+                    }
                     // Head blocks the queue until resources free up;
                     // memoize against the occupancy epoch so arrival
                     // storms don't re-run the search — the next release
                     // moves the epoch and wakes the head up.
                     self.head_block = Some((job.id, self.cluster.epoch()));
                     break;
+                }
+                Resolved::Evict(victims) => {
+                    // One eviction round per blocked head: if the last
+                    // round freed nodes but the head *still* cannot place
+                    // (geometry, not capacity), queue instead of churning
+                    // through more victims.
+                    if self.preempt_round == Some(job.id) {
+                        self.head_block = Some((job.id, self.cluster.epoch()));
+                        break;
+                    }
+                    self.preempt_round = Some(job.id);
+                    let mut evicted = 0;
+                    for v in victims {
+                        if self.evict_job(v, EvictReason::Preempt { for_job: job.id }) {
+                            evicted += 1;
+                        }
+                    }
+                    if evicted == 0 {
+                        self.head_block = Some((job.id, self.cluster.epoch()));
+                        break;
+                    }
+                    // Retry the head against the freed cluster.
                 }
             }
         }
@@ -565,8 +907,12 @@ impl Simulation {
             self.push_event(j.arrival, EventSlot::Arrival(idx));
         }
         self.arrivals_pending = trace.len();
-        if let Some(fm) = self.cfg.modifiers.failures {
+        if self.cfg.modifiers.failures.is_some() || self.disruption {
+            // Both eviction triggers requeue through the id → trace-index
+            // map; preemption additionally reads it for victim snapshots.
             self.idx_of = trace.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+        }
+        if let Some(fm) = self.cfg.modifiers.failures {
             let gap = self.fault_rng.exponential(fm.mtbf);
             self.push_event(gap, EventSlot::Fault);
         }
@@ -625,6 +971,14 @@ impl Simulation {
                         .remove(&id)
                         .expect("completing job has a start time");
                     self.finish_at.remove(&id);
+                    // Real progress: the next blocked head earns a fresh
+                    // eviction round.
+                    self.preempt_round = None;
+                    if self.disruption {
+                        self.run_info.remove(&id);
+                        self.remaining_base.remove(&id);
+                        self.migration_due.remove(&id);
+                    }
                     for o in &mut self.observers {
                         o.on_complete(self.now, id, start, self.now);
                     }
@@ -666,6 +1020,21 @@ impl Simulation {
         }
         debug_assert_eq!(self.cluster.busy_count(), self.cluster.failed_count());
         debug_assert!(self.cluster.check_consistency().is_ok());
+        let mean = self.util.mean();
+        // Useful utilization discounts wasted node-seconds over the same
+        // measurement window the raw integral used. Bit-for-bit equal to
+        // the raw mean whenever nothing was wasted.
+        let useful_util = if self.wasted_work > 0.0 {
+            let window: f64 = self.util.samples().iter().map(|&(_, w)| w).sum();
+            let n = self.cluster.num_nodes();
+            if window > 0.0 && n > 0 {
+                (mean - self.wasted_work / (n as f64 * window)).max(0.0)
+            } else {
+                mean
+            }
+        } else {
+            mean
+        };
         RunResult {
             policy: self.cfg.policy.name(),
             outcomes: self.outcomes,
@@ -673,6 +1042,10 @@ impl Simulation {
             scheduled: self.scheduled,
             dropped: self.dropped,
             makespan: self.job_now,
+            preemptions: self.preemptions,
+            wasted_work: self.wasted_work,
+            migration_time: self.migration_time,
+            useful_util,
         }
     }
 }
@@ -692,6 +1065,7 @@ mod tests {
             duration,
             shape,
             comm_frac: 0.0, // isolate scheduling effects
+            priority: 0,
         }
     }
 
@@ -876,6 +1250,7 @@ mod tests {
             duration: 100.0,
             shape: JobShape::new(6, 1, 1),
             comm_frac: 0.5,
+            priority: 0,
         }];
         let r = run(PolicyKind::FirstFit, ClusterTopo::static_4096(), &trace);
         let jcts = r.jcts(&trace);
@@ -1137,6 +1512,162 @@ mod tests {
             plain.utilization.mean().to_bits(),
             explicit.utilization.mean().to_bits()
         );
+    }
+
+    fn pjob(id: u64, arrival: f64, duration: f64, shape: JobShape, priority: u8) -> JobSpec {
+        JobSpec {
+            priority,
+            ..job(id, arrival, duration, shape)
+        }
+    }
+
+    /// Background class-0 job hogging the whole cluster, then an urgent
+    /// class-1 arrival — the canonical two-class preemption scenario
+    /// shared by the priority / checkpoint / migration tests below.
+    fn two_class_trace() -> Vec<JobSpec> {
+        vec![
+            job(0, 0.0, 1000.0, JobShape::new(16, 16, 16)),
+            pjob(1, 10.0, 10.0, JobShape::new(2, 2, 2), 1),
+        ]
+    }
+
+    fn run_with(mods: &str, trace: &[JobSpec]) -> RunResult {
+        let mut cfg = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse(mods).unwrap();
+        Simulation::new(cfg).run(trace)
+    }
+
+    #[test]
+    fn priority_preemption_unblocks_high_priority_head() {
+        let trace = two_class_trace();
+        // Without preemption the urgent job waits the full 1000s.
+        let fifo = run_with("", &trace);
+        assert_eq!(fifo.jcts(&trace), vec![1000.0, 1000.0]);
+        assert_eq!(fifo.preemptions, 0);
+
+        // With `preempt=priority` the class-1 head evicts the class-0
+        // hog at t=10, runs immediately, and the hog restarts from
+        // scratch (no checkpointing) once the cluster frees at t=20.
+        let pre = run_with("preempt=priority", &trace);
+        assert_eq!(pre.scheduled, 2, "preemption never drops the victim");
+        assert_eq!(pre.jcts(&trace), vec![1020.0, 10.0]);
+        assert_eq!(pre.preemptions, 1);
+        // The victim's 10 un-checkpointed seconds on 4096 nodes re-run.
+        assert_eq!(pre.wasted_work, 10.0 * 4096.0);
+        // The measurement window [0,10] was fully busy with work that was
+        // then thrown away: useful utilization collapses to exactly 0.
+        assert_eq!(pre.utilization.mean(), 1.0);
+        assert_eq!(pre.useful_util, 0.0);
+    }
+
+    #[test]
+    fn checkpoint_restart_resumes_partial_work() {
+        let trace = two_class_trace();
+        // checkpoint=3s: the victim's 10 elapsed seconds credit 3 whole
+        // intervals (9s); only 1s of progress is lost. Restart at t=20
+        // with 991s remaining → finish 1011.
+        let r = run_with("preempt=priority,checkpoint=3s", &trace);
+        assert_eq!(r.jcts(&trace), vec![1011.0, 10.0]);
+        assert_eq!(r.wasted_work, 1.0 * 4096.0);
+        assert!((r.useful_util - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migration_cost_charged_once_on_restart() {
+        let trace = two_class_trace();
+        // The evicted hog pays the 30s restart surcharge exactly once, on
+        // its first post-eviction placement; the urgent job never
+        // migrated and pays nothing.
+        let r = run_with("preempt=priority,migration-cost=30s", &trace);
+        assert_eq!(r.jcts(&trace), vec![1050.0, 10.0]);
+        assert_eq!(r.migration_time, 30.0);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn defrag_compacts_fragmented_cluster() {
+        // Three quarter-cluster slabs; the middle one finishes first,
+        // splitting the free space into two non-adjacent 1024-node holes.
+        // A half-cluster job then needs 2048 *contiguous* nodes: without
+        // defrag it waits for job 0 (t=100); with `defrag=idle` the
+        // blocked head triggers a compaction pass that slides job 2 into
+        // the hole, and the head starts at t=12.
+        let trace = vec![
+            job(0, 0.0, 100.0, JobShape::new(16, 16, 4)),
+            job(1, 1.0, 10.0, JobShape::new(16, 16, 4)),
+            job(2, 2.0, 100.0, JobShape::new(16, 16, 4)),
+            job(3, 12.0, 10.0, JobShape::new(16, 16, 8)),
+        ];
+        let plain = run_with("", &trace);
+        assert_eq!(plain.scheduled, 4);
+        assert_eq!(plain.jcts(&trace)[3], 98.0, "head waits for job 0");
+
+        let defrag = run_with("defrag=idle", &trace);
+        assert_eq!(defrag.scheduled, 4, "defrag must never strand a job");
+        assert_eq!(defrag.jcts(&trace)[3], 10.0, "compaction unblocks the head");
+        assert_eq!(defrag.preemptions, 0, "defrag moves, it does not evict");
+        // The moved job's completion is untouched (hitless relocation).
+        assert_eq!(defrag.jcts(&trace)[2], plain.jcts(&trace)[2]);
+    }
+
+    #[test]
+    fn fault_only_runs_carry_no_disruption_accounting() {
+        // `--with failures=…` without any preemption/checkpoint knob must
+        // leave every disruption field at its zero value and keep
+        // useful_util bit-identical to the raw mean — the gate that keeps
+        // pre-existing failure-row bytes untouched.
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 60,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        let mut cfg = SimConfig::new(ClusterTopo::reconfigurable_4096(4), PolicyKind::RFold);
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse("failures=philly").unwrap();
+        let r = Simulation::new(cfg).run(&trace);
+        assert_eq!(r.preemptions, 0);
+        assert_eq!(r.wasted_work, 0.0);
+        assert_eq!(r.migration_time, 0.0);
+        assert_eq!(r.useful_util.to_bits(), r.utilization.mean().to_bits());
+    }
+
+    #[test]
+    fn preemptive_runs_are_deterministic() {
+        // The full disruption surface at once — faults, priority
+        // preemption, migration cost, idle defrag, checkpointing — twice,
+        // bit-for-bit.
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 60,
+            ..Default::default()
+        };
+        let mut trace = crate::trace::gen::generate(&tc);
+        for (i, j) in trace.iter_mut().enumerate() {
+            j.priority = (i % 3) as u8;
+        }
+        let mk = || {
+            let mut cfg = SimConfig::new(ClusterTopo::reconfigurable_4096(4), PolicyKind::RFold);
+            cfg.drain = true;
+            cfg.modifiers = ModifierSet::parse(
+                "failures=philly,preempt=priority,migration-cost=30s,defrag=idle,checkpoint=10m",
+            )
+            .unwrap();
+            Simulation::new(cfg).run(&trace)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.wasted_work.to_bits(), b.wasted_work.to_bits());
+        assert_eq!(a.migration_time.to_bits(), b.migration_time.to_bits());
+        assert_eq!(a.useful_util.to_bits(), b.useful_util.to_bits());
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.jcts(&trace)), bits(&b.jcts(&trace)));
+        // Every job still resolves to exactly one outcome.
+        let mut ids: Vec<u64> = a.outcomes.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len());
     }
 
     #[test]

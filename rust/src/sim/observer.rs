@@ -66,6 +66,24 @@ pub trait SchedulerObserver {
     fn on_stall(&mut self, t: f64, job: u64, delay: f64) {
         let _ = (t, job, delay);
     }
+
+    /// `victim` was evicted by a preemptive scheduling decision to make
+    /// room for `for_job`; `wasted` node-seconds of its work beyond the
+    /// last credited checkpoint will re-run.
+    fn on_preempt(&mut self, t: f64, victim: u64, for_job: u64, wasted: f64) {
+        let _ = (t, victim, for_job, wasted);
+    }
+
+    /// An idle-time defragmentation pass relocated `moved` running jobs.
+    fn on_defrag(&mut self, t: f64, moved: usize) {
+        let _ = (t, moved);
+    }
+
+    /// A restarting (previously evicted) job was charged `cost` seconds
+    /// of migration surcharge on its new placement.
+    fn on_migration(&mut self, t: f64, job: u64, cost: f64) {
+        let _ = (t, job, cost);
+    }
 }
 
 /// Aggregated per-policy decision telemetry: what the scheduler tried and
@@ -98,6 +116,17 @@ pub struct DecisionTelemetry {
     pub jobs_stalled: u64,
     /// Total stall time injected by OCS reconfigurations (s).
     pub stall_time: f64,
+    /// Disruption counters (all zero without preemption/defrag knobs;
+    /// rendered as the stderr-only `PREEMPT` section).
+    pub preemptions: u64,
+    /// Node-seconds of work thrown away by evictions.
+    pub preempt_wasted: f64,
+    pub migrations: u64,
+    /// Total migration surcharge charged (s).
+    pub migration_time: f64,
+    /// Defrag passes that moved at least one job, and the moves made.
+    pub defrag_passes: u64,
+    pub defrag_moves: u64,
 }
 
 impl DecisionTelemetry {
@@ -162,6 +191,21 @@ impl SchedulerObserver for DecisionTelemetry {
         self.jobs_stalled += 1;
         self.stall_time += delay;
     }
+
+    fn on_preempt(&mut self, _t: f64, _victim: u64, _for_job: u64, wasted: f64) {
+        self.preemptions += 1;
+        self.preempt_wasted += wasted;
+    }
+
+    fn on_defrag(&mut self, _t: f64, moved: usize) {
+        self.defrag_passes += 1;
+        self.defrag_moves += moved as u64;
+    }
+
+    fn on_migration(&mut self, _t: f64, _job: u64, cost: f64) {
+        self.migrations += 1;
+        self.migration_time += cost;
+    }
 }
 
 /// Shared telemetry handle: clone one half into the simulation as a boxed
@@ -213,6 +257,18 @@ impl SchedulerObserver for SharedTelemetry {
 
     fn on_stall(&mut self, t: f64, job: u64, delay: f64) {
         self.0.borrow_mut().on_stall(t, job, delay);
+    }
+
+    fn on_preempt(&mut self, t: f64, victim: u64, for_job: u64, wasted: f64) {
+        self.0.borrow_mut().on_preempt(t, victim, for_job, wasted);
+    }
+
+    fn on_defrag(&mut self, t: f64, moved: usize) {
+        self.0.borrow_mut().on_defrag(t, moved);
+    }
+
+    fn on_migration(&mut self, t: f64, job: u64, cost: f64) {
+        self.0.borrow_mut().on_migration(t, job, cost);
     }
 }
 
@@ -280,5 +336,22 @@ mod tests {
         assert_eq!(snap.jobs_killed, 1);
         assert_eq!(snap.jobs_stalled, 2);
         assert_eq!(snap.stall_time, 4.0);
+    }
+
+    #[test]
+    fn disruption_hooks_accumulate_counters() {
+        let shared = SharedTelemetry::new();
+        let mut boxed: Box<dyn SchedulerObserver> = Box::new(shared.clone());
+        boxed.on_preempt(1.0, 3, 9, 4096.0);
+        boxed.on_preempt(2.0, 4, 9, 512.0);
+        boxed.on_migration(3.0, 3, 30.0);
+        boxed.on_defrag(4.0, 2);
+        let snap = shared.snapshot();
+        assert_eq!(snap.preemptions, 2);
+        assert_eq!(snap.preempt_wasted, 4608.0);
+        assert_eq!(snap.migrations, 1);
+        assert_eq!(snap.migration_time, 30.0);
+        assert_eq!(snap.defrag_passes, 1);
+        assert_eq!(snap.defrag_moves, 2);
     }
 }

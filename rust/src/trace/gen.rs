@@ -348,6 +348,9 @@ pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
             duration,
             shape,
             comm_frac,
+            // Synthetic jobs all share the default class (no RNG draw),
+            // so traces are byte-identical to pre-priority generators.
+            priority: 0,
         });
         id += 1;
     }

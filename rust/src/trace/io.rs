@@ -1,5 +1,8 @@
-//! Trace CSV I/O: `id,arrival,duration,a,b,c,comm_frac` — a drop-in slot
-//! for real (e.g. Philly-derived) traces.
+//! Trace CSV I/O: `id,arrival,duration,a,b,c,comm_frac[,priority]` — a
+//! drop-in slot for real (e.g. Philly-derived) traces. The `priority`
+//! column is optional on read (absent → class 0) and written only when
+//! some job actually carries a non-default class, so priority-free traces
+//! round-trip byte-identically to the 7-column format.
 
 use std::io::{BufRead, Write};
 use std::path::Path;
@@ -10,14 +13,23 @@ use crate::shape::JobShape;
 /// Serialize a trace to CSV (with header).
 pub fn write_csv(path: &Path, trace: &[JobSpec]) -> std::io::Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "id,arrival,duration,a,b,c,comm_frac")?;
+    let with_priority = trace.iter().any(|j| j.priority != 0);
+    if with_priority {
+        writeln!(f, "id,arrival,duration,a,b,c,comm_frac,priority")?;
+    } else {
+        writeln!(f, "id,arrival,duration,a,b,c,comm_frac")?;
+    }
     for j in trace {
         let d = j.shape.dims();
-        writeln!(
+        write!(
             f,
             "{},{:.3},{:.3},{},{},{},{:.4}",
             j.id, j.arrival, j.duration, d.0[0], d.0[1], d.0[2], j.comm_frac
         )?;
+        if with_priority {
+            write!(f, ",{}", j.priority)?;
+        }
+        writeln!(f)?;
     }
     Ok(())
 }
@@ -32,10 +44,14 @@ pub fn read_csv(path: &Path) -> std::io::Result<Vec<JobSpec>> {
             continue;
         }
         let cols: Vec<&str> = line.trim().split(',').collect();
-        if cols.len() != 7 {
+        if cols.len() != 7 && cols.len() != 8 {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
-                format!("line {}: expected 7 columns, got {}", lineno + 1, cols.len()),
+                format!(
+                    "line {}: expected 7 or 8 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                ),
             ));
         }
         let parse_err = |what: &str| {
@@ -54,6 +70,10 @@ pub fn read_csv(path: &Path) -> std::io::Result<Vec<JobSpec>> {
                 cols[5].parse().map_err(|_| parse_err("c"))?,
             ),
             comm_frac: cols[6].parse().map_err(|_| parse_err("comm_frac"))?,
+            priority: match cols.get(7) {
+                Some(p) => p.parse().map_err(|_| parse_err("priority"))?,
+                None => 0,
+            },
         });
     }
     Ok(out)
@@ -85,6 +105,31 @@ mod tests {
         let tmp = std::env::temp_dir().join("rfold_trace_bad.csv");
         std::fs::write(&tmp, "id,arrival\n1,2\n").unwrap();
         assert!(read_csv(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn priority_column_roundtrips_and_defaults() {
+        let mut trace = generate(&TraceConfig { num_jobs: 6, ..Default::default() });
+        // Priority-free traces stay on the legacy 7-column format.
+        let tmp = std::env::temp_dir().join("rfold_trace_prio_free.csv");
+        write_csv(&tmp, &trace).unwrap();
+        let head = std::fs::read_to_string(&tmp).unwrap();
+        assert!(head.starts_with("id,arrival,duration,a,b,c,comm_frac\n"));
+        assert!(read_csv(&tmp).unwrap().iter().all(|j| j.priority == 0));
+        std::fs::remove_file(&tmp).ok();
+
+        // A trace with classes writes and reads back the 8th column.
+        trace[2].priority = 3;
+        trace[4].priority = 1;
+        let tmp = std::env::temp_dir().join("rfold_trace_prio.csv");
+        write_csv(&tmp, &trace).unwrap();
+        let head = std::fs::read_to_string(&tmp).unwrap();
+        assert!(head.starts_with("id,arrival,duration,a,b,c,comm_frac,priority\n"));
+        let back = read_csv(&tmp).unwrap();
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.priority, b.priority);
+        }
         std::fs::remove_file(&tmp).ok();
     }
 }

@@ -30,6 +30,11 @@ pub struct JobSpec {
     /// Fraction of step time spent in communication (drives the placement
     /// sensitivity of JCT; sampled per job like the mixed workloads of §2).
     pub comm_frac: f64,
+    /// Scheduling class for preemptive policies: higher values preempt
+    /// lower ones. 0 (the default for every synthetic generator) keeps
+    /// all jobs in one class, where preemption falls back to
+    /// remaining-work ordering.
+    pub priority: u8,
 }
 
 impl JobSpec {

@@ -245,11 +245,46 @@ impl FailureModel {
     }
 }
 
-/// The parsed `--with` modifier set: composable fault-injection knobs
-/// applied on top of any scenario or trace file. Parsed once at the CLI
-/// boundary into this typed form; its [`fingerprint`](Self::fingerprint)
-/// is the canonical string that flows into sweep cache keys and the pool
-/// wire protocol.
+/// Victim-selection discipline for preemptive scheduling (`--with
+/// preempt=priority|srtf`). Either mode turns the engine's NoCapacity
+/// queueing into a PREEMPT decision when suitable victims exist.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Evict strictly-lower-priority jobs first; equal-priority ties fall
+    /// back to longest-remaining-work (so preemption still engages on
+    /// traces where every job shares the default class).
+    Priority,
+    /// Shortest-remaining-time-first: evict the jobs with the most
+    /// remaining work to let short jobs through (Tiresias-style).
+    Srtf,
+}
+
+impl PreemptMode {
+    /// Stable CLI / fingerprint name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptMode::Priority => "priority",
+            PreemptMode::Srtf => "srtf",
+        }
+    }
+
+    /// Parse a `preempt=` value.
+    pub fn parse(v: &str) -> Result<PreemptMode, String> {
+        match v {
+            "priority" => Ok(PreemptMode::Priority),
+            "srtf" => Ok(PreemptMode::Srtf),
+            other => Err(format!(
+                "unknown preempt mode '{other}'; known: priority, srtf"
+            )),
+        }
+    }
+}
+
+/// The parsed `--with` modifier set: composable fault-injection and
+/// preemption knobs applied on top of any scenario or trace file. Parsed
+/// once at the CLI boundary into this typed form; its
+/// [`fingerprint`](Self::fingerprint) is the canonical string that flows
+/// into sweep cache keys and the pool wire protocol.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ModifierSet {
     /// Node/link failure injection; `None` disables it.
@@ -261,6 +296,21 @@ pub struct ModifierSet {
     /// Probability a placed job is a straggler and runs 1.25–2× slower.
     /// 0 disables it.
     pub straggler_rate: f64,
+    /// Preemptive scheduling discipline; `None` keeps the FIFO
+    /// admit-or-queue loop byte-identical to the seed engine.
+    pub preempt: Option<PreemptMode>,
+    /// Restart surcharge (s) a job pays on its first placement after an
+    /// eviction — checkpoint reload plus re-placement traffic. 0 disables
+    /// it.
+    pub migration_cost: f64,
+    /// Idle-time defragmentation: when the queue head is
+    /// NoCapacity-blocked, try re-folding every running job onto a
+    /// compacted layout once before giving up.
+    pub defrag: bool,
+    /// Checkpoint interval (s of *useful work*): evicted and fault-killed
+    /// jobs resume from the last completed interval instead of from
+    /// scratch. 0 means no checkpoints (full rerun).
+    pub checkpoint: f64,
     /// Base seed of the failure RNG stream; mixed per trial via
     /// [`for_trial`](Self::for_trial) so every trial sees an independent
     /// fault realization.
@@ -273,6 +323,10 @@ impl Default for ModifierSet {
             failures: None,
             ocs_latency: 0.0,
             straggler_rate: 0.0,
+            preempt: None,
+            migration_cost: 0.0,
+            defrag: false,
+            checkpoint: 0.0,
             fault_seed: DEFAULT_FAULT_SEED,
         }
     }
@@ -280,7 +334,9 @@ impl Default for ModifierSet {
 
 /// One-line list of valid modifiers, appended to every parse error.
 const VALID_MODIFIERS: &str = "valid modifiers: failures=philly|exp:<mtbf>:<repair>:<link-frac>, \
-     ocs-latency=<duration, e.g. 500ms|5s|2m|1h>, stragglers=<rate in [0,1]>, seed=<u64>";
+     ocs-latency=<duration, e.g. 500ms|5s|2m|1h>, stragglers=<rate in [0,1]>, \
+     preempt=priority|srtf, migration-cost=<duration>, defrag=idle|off, \
+     checkpoint=<duration>, seed=<u64>";
 
 /// Parse a duration with an optional `ms`/`s`/`m`/`h` suffix (bare
 /// numbers are seconds) into seconds.
@@ -334,6 +390,26 @@ impl ModifierSet {
                     }
                     out.straggler_rate = rate;
                 }
+                "preempt" => out.preempt = Some(PreemptMode::parse(value)?),
+                "migration-cost" => {
+                    out.migration_cost =
+                        parse_duration(value).map_err(|e| format!("migration-cost: {e}"))?;
+                }
+                "defrag" => {
+                    out.defrag = match value {
+                        "idle" => true,
+                        "off" => false,
+                        other => {
+                            return Err(format!(
+                                "unknown defrag mode '{other}'; known: idle, off"
+                            ));
+                        }
+                    };
+                }
+                "checkpoint" => {
+                    out.checkpoint =
+                        parse_duration(value).map_err(|e| format!("checkpoint: {e}"))?;
+                }
                 "seed" => {
                     out.fault_seed = value
                         .parse()
@@ -359,6 +435,14 @@ impl ModifierSet {
         self.failures.is_some()
     }
 
+    /// True when any eviction path beyond fault kills is enabled —
+    /// preemption, idle-time defragmentation, or checkpointed restarts.
+    /// Gates the engine's disruption bookkeeping so runs without these
+    /// knobs stay byte-identical to the seed engine.
+    pub fn has_disruption(&self) -> bool {
+        self.preempt.is_some() || self.defrag || self.checkpoint > 0.0
+    }
+
     /// Canonical string form: parseable back via [`parse`](Self::parse)
     /// (`parse(fingerprint()) == self`), empty for the default set, and
     /// stable across processes — the sweep cache-key and wire-protocol
@@ -381,6 +465,18 @@ impl ModifierSet {
         }
         if self.straggler_rate > 0.0 {
             parts.push(format!("stragglers={}", self.straggler_rate));
+        }
+        if let Some(mode) = self.preempt {
+            parts.push(format!("preempt={}", mode.name()));
+        }
+        if self.migration_cost > 0.0 {
+            parts.push(format!("migration-cost={}s", self.migration_cost));
+        }
+        if self.defrag {
+            parts.push("defrag=idle".to_string());
+        }
+        if self.checkpoint > 0.0 {
+            parts.push(format!("checkpoint={}s", self.checkpoint));
         }
         if self.fault_seed != DEFAULT_FAULT_SEED {
             parts.push(format!("seed={}", self.fault_seed));
@@ -445,6 +541,7 @@ pub fn jobs_content_hash(jobs: &[JobSpec]) -> u64 {
         eat(d.0[1] as u64);
         eat(d.0[2] as u64);
         eat(j.comm_frac.to_bits());
+        eat(j.priority as u64);
     }
     h
 }
@@ -731,6 +828,43 @@ mod tests {
     }
 
     #[test]
+    fn preempt_modifiers_parse_and_default_off() {
+        let m = ModifierSet::parse("preempt=priority,migration-cost=30s,defrag=idle").unwrap();
+        assert_eq!(m.preempt, Some(PreemptMode::Priority));
+        assert_eq!(m.migration_cost, 30.0);
+        assert!(m.defrag);
+        assert_eq!(m.checkpoint, 0.0);
+        assert!(!m.is_empty());
+        assert!(m.has_disruption());
+        assert!(!m.has_faults(), "preemption alone injects no faults");
+
+        let s = ModifierSet::parse("preempt=srtf,checkpoint=10m").unwrap();
+        assert_eq!(s.preempt, Some(PreemptMode::Srtf));
+        assert_eq!(s.checkpoint, 600.0);
+
+        // `defrag=off` is the explicit spelling of the default.
+        assert!(!ModifierSet::parse("defrag=off").unwrap().defrag);
+        assert!(ModifierSet::parse("defrag=off").unwrap().is_empty());
+
+        // The default set leaves every disruption path disabled.
+        let d = ModifierSet::default();
+        assert_eq!(d.preempt, None);
+        assert!(!d.has_disruption());
+    }
+
+    #[test]
+    fn preempt_modifiers_reject_bad_values() {
+        let err = ModifierSet::parse("preempt=fifo").unwrap_err();
+        assert!(err.contains("unknown preempt mode 'fifo'"), "{err}");
+        let err = ModifierSet::parse("defrag=always").unwrap_err();
+        assert!(err.contains("unknown defrag mode 'always'"), "{err}");
+        let err = ModifierSet::parse("migration-cost=5x").unwrap_err();
+        assert!(err.contains("malformed duration"), "{err}");
+        let err = ModifierSet::parse("checkpoint=-1s").unwrap_err();
+        assert!(err.contains("finite and >= 0"), "{err}");
+    }
+
+    #[test]
     fn modifier_fingerprint_roundtrips_and_is_canonical() {
         for spec in [
             "",
@@ -739,6 +873,9 @@ mod tests {
             "ocs-latency=500ms",
             "stragglers=0.25,seed=77",
             "failures=exp:100:50:0.5,ocs-latency=2m",
+            "preempt=priority,migration-cost=30s,defrag=idle",
+            "preempt=srtf,checkpoint=10m,seed=5",
+            "failures=philly,preempt=priority,checkpoint=1h",
         ] {
             let m = ModifierSet::parse(spec).unwrap();
             let fp = m.fingerprint();

@@ -1,9 +1,9 @@
 //! Acceptance suite for the open placement-policy API:
 //!
-//! * a **seventh policy** defined entirely in this file — its own module
-//!   plus exactly one `PolicyRegistry::register` line — runs end-to-end
-//!   through the unmodified engine, demonstrating that adding a policy
-//!   requires no edits anywhere else;
+//! * an **external policy** defined entirely in this file — its own
+//!   module plus exactly one `PolicyRegistry::register` line — runs
+//!   end-to-end through the unmodified engine, demonstrating that adding
+//!   a policy requires no edits anywhere else;
 //! * a **smoke matrix**: every registered policy runs a small trace on
 //!   both topology families, and every decision is `Placed` or a
 //!   structured rejection — never a panic;
@@ -21,7 +21,7 @@ use rfold::sim::{SharedTelemetry, SimConfig, Simulation};
 use rfold::topology::cluster::{ClusterState, ClusterTopo};
 use rfold::trace::gen::{generate, TraceConfig};
 
-/// The seventh policy, self-contained: accepts only tiny jobs (≤ 8 XPUs)
+/// The external policy, self-contained: accepts only tiny jobs (≤ 8 XPUs)
 /// and scatters them best-effort. Deliberately minimal — the point is the
 /// integration surface, not the scheduling quality.
 mod tiny_only {
@@ -82,7 +82,7 @@ fn small_trace(seed: u64) -> Vec<rfold::trace::JobSpec> {
 }
 
 #[test]
-fn seventh_policy_runs_end_to_end_without_engine_edits() {
+fn external_policy_runs_end_to_end_without_engine_edits() {
     ensure_registered();
     let handle = PolicyRegistry::global()
         .resolve("tiny-only")
@@ -163,7 +163,7 @@ fn parse_name_roundtrip_over_all_registry_entries() {
     ensure_registered();
     let reg = PolicyRegistry::global();
     let handles = reg.handles();
-    assert!(handles.len() >= 7, "six builtins + the test-only policy");
+    assert!(handles.len() >= 8, "seven builtins + the test-only policy");
 
     let mut keys = std::collections::BTreeSet::new();
     let mut displays = std::collections::BTreeSet::new();
@@ -181,9 +181,14 @@ fn parse_name_roundtrip_over_all_registry_entries() {
         assert!(displays.insert(h.name()), "duplicate display {}", h.name());
     }
 
-    // The deprecated shim agrees with the registry for every builtin.
+    // The deprecated shim agrees with the registry for every builtin it
+    // predates; `preempt-rfold` arrived after the enum was frozen and is
+    // deliberately absent from it.
     for h in builtins::ALL {
-        let kind = rfold::placement::PolicyKind::parse(h.key()).expect("builtin parses");
+        let Some(kind) = rfold::placement::PolicyKind::parse(h.key()) else {
+            assert_eq!(h.key(), "preempt-rfold", "only post-shim builtins may miss the enum");
+            continue;
+        };
         assert_eq!(kind.handle(), h);
         assert_eq!(kind.name(), h.name());
     }

@@ -1,0 +1,291 @@
+//! Preemption/defragmentation determinism contracts (the PR-7 suite):
+//!
+//! * a preemptive sweep (`--with preempt=...,defrag=idle,...`) must emit
+//!   SWEEP rows byte-identical across worker counts AND between local and
+//!   TCP-pool execution — eviction, checkpoint credit, and migration
+//!   surcharges are pure functions of the trial seed;
+//! * priority classes must survive the pool wire (the optional eighth
+//!   job-array element) bit-exactly;
+//! * rows without preemption knobs must carry no disruption keys at all —
+//!   the preemption machinery is invisible until switched on;
+//! * each preemption knob combination must occupy its own result-cache
+//!   key, so a preemptive trial can never be served a non-preemptive
+//!   twin's bytes (or vice versa);
+//! * defragmentation must never strand a job: every trace entry ends with
+//!   exactly one outcome, moved jobs keep their completion events;
+//! * on a head-of-line-blocked two-class trace, priority preemption must
+//!   improve JCR over the FIFO twin (the paper's multi-tenant motivation).
+
+use rfold::metrics::report;
+use rfold::placement::builtins;
+use rfold::shape::JobShape;
+use rfold::sim::experiments as exp;
+use rfold::sim::sweep::{self, ResultCache, SweepConfig};
+use rfold::sim::{SimConfig, Simulation};
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace::gen::{generate, TraceConfig};
+use rfold::trace::scenarios::{ModifierSet, Scenario, Workload};
+use rfold::trace::JobSpec;
+
+/// One static + one reconfigurable cell: crosses the contiguous and
+/// folding placement paths without long runtimes.
+fn cells() -> Vec<exp::Cell> {
+    exp::table1_cells()
+        .into_iter()
+        .filter(|c| matches!(c.label, "Folding (16^3)" | "RFold (4^3)"))
+        .collect()
+}
+
+/// The full disruption stack, layered over fault injection: preemption
+/// (SRTF tie-break on the single-class synthetic trace), checkpointed
+/// restarts, migration surcharge, and idle-time defragmentation.
+fn mods() -> ModifierSet {
+    ModifierSet::parse(
+        "failures=philly,preempt=priority,migration-cost=30s,defrag=idle,checkpoint=10m",
+    )
+    .unwrap()
+}
+
+fn rows_json(workers: usize, m: ModifierSet) -> Vec<String> {
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let rows = sweep::run_grid_with(
+        &cells(),
+        &workloads,
+        3,
+        40,
+        5,
+        m,
+        &ResultCache::new(),
+        &sweep::LocalExecutor::new(workers),
+    );
+    rows.iter().map(report::sweep_row_json).collect()
+}
+
+/// A trace whose head fills the whole cluster for 10000 s, a small
+/// high-priority job arriving early, and a late straggler that stretches
+/// the horizon far enough for the evicted blocker to restart and finish:
+/// the canonical preemption beneficiary. Under FIFO only the blocker
+/// completes; with `preempt=priority` the small job runs immediately and
+/// the blocker still completes after its restart.
+fn two_class_jobs() -> Vec<JobSpec> {
+    vec![
+        JobSpec {
+            id: 0,
+            arrival: 0.0,
+            duration: 10_000.0,
+            shape: JobShape::new(16, 16, 16),
+            comm_frac: 0.3,
+            priority: 0,
+        },
+        JobSpec {
+            id: 1,
+            arrival: 10.0,
+            duration: 10.0,
+            shape: JobShape::new(2, 2, 2),
+            comm_frac: 0.3,
+            priority: 1,
+        },
+        JobSpec {
+            id: 2,
+            arrival: 200.0,
+            duration: 1.0,
+            shape: JobShape::new(1, 1, 1),
+            comm_frac: 0.3,
+            priority: 1,
+        },
+    ]
+}
+
+#[test]
+fn preemptive_rows_byte_identical_across_worker_counts() {
+    let one = rows_json(1, mods());
+    let eight = rows_json(8, mods());
+    assert_eq!(one.len(), eight.len());
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(
+            a, b,
+            "preemptive sweep row differs between --workers 1 and --workers 8"
+        );
+    }
+}
+
+#[test]
+fn preemptive_rows_byte_identical_local_vs_pool() {
+    let addr = rfold::coordinator::pool::spawn_worker().expect("spawn worker");
+    let pool = rfold::coordinator::pool::PoolExecutor::new(vec![addr.to_string()]);
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let grid = |executor: &dyn sweep::TrialExecutor| -> Vec<String> {
+        sweep::run_grid_with(
+            &cells(),
+            &workloads,
+            2,
+            30,
+            5,
+            mods(),
+            &ResultCache::new(),
+            executor,
+        )
+        .iter()
+        .map(report::sweep_row_json)
+        .collect()
+    };
+    let local = grid(&sweep::LocalExecutor::new(1));
+    let pooled = grid(&pool);
+    assert_eq!(local, pooled, "pool must reproduce preemptive rows byte-exactly");
+    let stats = pool.stats();
+    assert_eq!(
+        stats.leader_fallback, 0,
+        "the worker must have served the preemptive items itself"
+    );
+}
+
+#[test]
+fn priority_classes_cross_the_pool_wire() {
+    // A CSV workload with real priority classes ships its job list inline;
+    // the optional eighth wire element must reach the worker bit-exactly
+    // or priority preemption would silently degrade to FIFO remotely.
+    let addr = rfold::coordinator::pool::spawn_worker().expect("spawn worker");
+    let pool = rfold::coordinator::pool::PoolExecutor::new(vec![addr.to_string()]);
+    let workloads = [Workload::from_jobs("two-class".into(), two_class_jobs())];
+    let m = ModifierSet::parse("preempt=priority").unwrap();
+    let grid = |executor: &dyn sweep::TrialExecutor| -> Vec<String> {
+        sweep::run_grid_with(
+            &cells(),
+            &workloads,
+            2,
+            9,
+            5,
+            m,
+            &ResultCache::new(),
+            executor,
+        )
+        .iter()
+        .map(report::sweep_row_json)
+        .collect()
+    };
+    let local = grid(&sweep::LocalExecutor::new(1));
+    let pooled = grid(&pool);
+    assert_eq!(local, pooled, "priority classes must survive the wire");
+    assert_eq!(pool.stats().leader_fallback, 0);
+}
+
+#[test]
+fn preempt_free_rows_carry_no_disruption_keys() {
+    // Fault injection alone is not "disruption" in the preemption sense:
+    // its rows (and plain rows) must not grow new JSON keys, keeping them
+    // byte-compatible with every pre-preemption consumer.
+    for m in [
+        ModifierSet::default(),
+        ModifierSet::parse("failures=philly").unwrap(),
+    ] {
+        for row in rows_json(2, m) {
+            assert!(
+                !row.contains("\"preemptions\"") && !row.contains("\"wasted_work_s\""),
+                "knob-free row grew disruption keys: {row}"
+            );
+        }
+    }
+}
+
+#[test]
+fn preempt_knobs_occupy_distinct_cache_keys() {
+    // The same cell swept with different preemption knobs must miss the
+    // cache each time — a migration-cost change that silently replayed
+    // the cheap twin's bytes would corrupt every comparison.
+    let cell = cells()[0];
+    let cache = ResultCache::new();
+    let run = |spec: Option<&str>| {
+        let mut cfg = SweepConfig::new(2, 30, 7);
+        cfg.workers = 1;
+        cfg.modifiers = spec.map_or_else(ModifierSet::default, |s| {
+            ModifierSet::parse(s).unwrap()
+        });
+        sweep::run_trials_with(cell, &cfg, &cache)
+    };
+    run(None);
+    assert_eq!(cache.misses(), 2);
+    run(Some("preempt=priority"));
+    assert_eq!(cache.misses(), 4, "preemptive trials must not hit plain entries");
+    run(Some("preempt=priority,migration-cost=30s"));
+    assert_eq!(cache.misses(), 6, "the migration cost must be part of the key");
+    run(Some("preempt=priority,migration-cost=30s,defrag=idle,checkpoint=10m"));
+    assert_eq!(cache.misses(), 8, "defrag/checkpoint must be part of the key");
+    // Replaying any of the four is all hits.
+    run(Some("preempt=priority"));
+    assert_eq!(cache.misses(), 8);
+}
+
+#[test]
+fn defrag_never_strands_jobs() {
+    // Defragmentation relocates live jobs between completion events; a
+    // botched move would lose a completion and leave a job with no
+    // outcome. Every trace entry must finish with exactly one outcome on
+    // both topology families, with preemption churning the queue too.
+    let trace = generate(&TraceConfig {
+        num_jobs: 60,
+        seed: 11,
+        ..Default::default()
+    });
+    let m = ModifierSet::parse("preempt=srtf,defrag=idle").unwrap();
+    for (policy, topo) in [
+        (builtins::FIRST_FIT, ClusterTopo::static_4096()),
+        (builtins::RFOLD, ClusterTopo::reconfigurable_4096(4)),
+    ] {
+        let mut sc = SimConfig::new(topo, policy);
+        sc.modifiers = m.for_trial(11);
+        let r = Simulation::new(sc).run(&trace);
+        assert_eq!(
+            r.outcomes.len(),
+            trace.len(),
+            "{}: every job needs exactly one outcome",
+            r.policy
+        );
+        let mut ids: Vec<u64> = r.outcomes.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "{}: duplicated outcome", r.policy);
+    }
+}
+
+#[test]
+fn priority_preemption_improves_jcr_on_a_blocked_trace() {
+    // The acceptance trade: on a head-of-line-blocked two-class trace the
+    // preemptive twin completes the high-priority burst the FIFO engine
+    // strands behind the 10000-second blocker.
+    let workload = Workload::from_jobs("two-class".into(), two_class_jobs());
+    let row = |m: ModifierSet| {
+        let rows = sweep::run_grid_with(
+            &cells()[..1], // Folding (16^3)
+            &[workload.clone()],
+            2,
+            9,
+            5,
+            m,
+            &ResultCache::new(),
+            &sweep::LocalExecutor::new(1),
+        );
+        assert_eq!(rows.len(), 1);
+        rows.into_iter().next().unwrap()
+    };
+    let fifo = row(ModifierSet::default());
+    let preempt = row(ModifierSet::parse("preempt=priority").unwrap());
+    assert!(
+        preempt.summary.avg_jcr_pct > fifo.summary.avg_jcr_pct,
+        "preemption must improve JCR: {} vs {}",
+        preempt.summary.avg_jcr_pct,
+        fifo.summary.avg_jcr_pct
+    );
+    assert!(preempt.summary.avg_preemptions > 0.0, "preemption must fire");
+    let json = report::sweep_row_json(&preempt);
+    assert!(
+        json.contains("\"preemptions\"") && json.contains("\"useful_util\""),
+        "disrupted row must carry the accounting keys: {json}"
+    );
+}
+
+#[test]
+fn preemptive_runs_are_reproducible_end_to_end() {
+    // Same grid, fresh caches, different worker counts: byte-identical
+    // rows — the `--with preempt=...` acceptance path in miniature.
+    assert_eq!(rows_json(4, mods()), rows_json(2, mods()));
+}
