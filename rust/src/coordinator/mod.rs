@@ -10,10 +10,17 @@
 //! * [`replay`] — feeds a trace file to the leader in (scaled) real time.
 //! * [`pool`] — the distributed sweep plane: `rfold worker` trial daemons
 //!   plus the leader-side TCP pool executor behind `rfold sweep --pool`.
+//! * [`serve`] — the always-on scheduling service: the deterministic
+//!   virtual-clock engine behind `SUBMIT`/`STATUS`/`DRAIN`/`SNAPSHOT`
+//!   line commands, plus the `rfold submit` trace-replay client.
+//! * [`snapshot`] — versioned, checksummed serialization of a live
+//!   service (`rfold serve --restore` resumes byte-identically).
 
 pub mod leader;
 pub mod pool;
 pub mod replay;
+pub mod serve;
 pub mod server;
+pub mod snapshot;
 
 pub use leader::{Leader, LeaderHandle, LeaderStats};

@@ -38,7 +38,7 @@
 //! Per-worker statistics are reported on stderr only (see
 //! `metrics::report::print_pool_telemetry`).
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -108,7 +108,9 @@ fn need_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
         .ok_or_else(|| format!("field '{key}' is not a string"))
 }
 
-fn topo_json(topo: ClusterTopo) -> Json {
+/// Wire form of a topology — shared by the pool protocol and the service
+/// snapshot envelope (`coordinator::snapshot`).
+pub fn topo_json(topo: ClusterTopo) -> Json {
     match topo {
         ClusterTopo::Static { ext } => obj(vec![
             ("kind", Json::Str("static".into())),
@@ -128,7 +130,8 @@ fn topo_json(topo: ClusterTopo) -> Json {
     }
 }
 
-fn parse_topo(j: &Json) -> Result<ClusterTopo, String> {
+/// Decode [`topo_json`] output; structured errors, never a panic.
+pub fn parse_topo(j: &Json) -> Result<ClusterTopo, String> {
     // Geometry values must be >= 1: a zero extent/dim/side would panic
     // downstream constructors (`JobShape::new`, grid math) on the worker
     // thread instead of producing the contractual `ERR` reply.
@@ -163,7 +166,9 @@ fn parse_topo(j: &Json) -> Result<ClusterTopo, String> {
     }
 }
 
-fn job_json(j: &JobSpec) -> Json {
+/// Wire form of one job: the compact 7/8-array also accepted by
+/// `SUBMIT` in service mode and stored in snapshot envelopes.
+pub fn job_json(j: &JobSpec) -> Json {
     let d = j.shape.dims();
     let mut a = vec![
         Json::u64_str(j.id),
@@ -183,7 +188,8 @@ fn job_json(j: &JobSpec) -> Json {
     Json::Arr(a)
 }
 
-fn parse_job(j: &Json) -> Result<JobSpec, String> {
+/// Decode [`job_json`] output; structured errors, never a panic.
+pub fn parse_job(j: &Json) -> Result<JobSpec, String> {
     let a = j
         .as_arr()
         .filter(|a| a.len() == 7 || a.len() == 8)
@@ -575,6 +581,9 @@ pub struct PoolExecutor {
     /// is how a multi-core worker box gets saturated without listing its
     /// address N times.
     connections: usize,
+    /// Unanswered `TRIAL`s kept in flight per connection
+    /// (`--pool-pipeline`; default 1 = strict request/reply).
+    pipeline: usize,
     read_timeout: Duration,
     stats: Mutex<PoolStats>,
 }
@@ -602,9 +611,23 @@ impl PoolExecutor {
         PoolExecutor {
             addrs,
             connections: 1,
+            pipeline: 1,
             read_timeout: POOL_READ_TIMEOUT,
             stats: Mutex::new(PoolStats::default()),
         }
+    }
+
+    /// Keep `k` unanswered `TRIAL`s in flight per connection (the CLI's
+    /// `--pool-pipeline`; default 1, 0 is clamped to 1). Workers process
+    /// requests strictly in order, so replies pair with requests FIFO and
+    /// rows stay byte-identical for any `k` — pipelining only hides the
+    /// network round-trip between a reply and the next request, which
+    /// dominates on grids of many short trials. Keep `k` modest (≤ a few
+    /// dozen): every in-flight item must fit in the socket buffers, and a
+    /// dying connection re-queues all of them at once.
+    pub fn with_pipeline(mut self, k: usize) -> PoolExecutor {
+        self.pipeline = k.max(1);
+        self
     }
 
     /// Open `n` connections per worker host (the CLI's
@@ -691,17 +714,38 @@ impl PoolExecutor {
         // rejects everything (version skew, garbage speaker) is abandoned
         // rather than fed the whole grid one failure at a time.
         let mut consecutive_errs = 0usize;
-        while let Some(i) = next(host) {
-            let it = &items[i];
-            if writeln!(out, "TRIAL {}", encode_work_item(it)).is_err() {
-                fail(i, host, false);
-                stats.died = true;
-                break;
+        // Request window: indices written but not yet answered, oldest
+        // first. The worker serializes trials per connection and replies
+        // in request order, so reply k pairs with `inflight[0]` at the
+        // time of the read — FIFO matching, no tagging needed. With
+        // `--pool-pipeline 1` this degenerates to the strict
+        // write-one/read-one loop (window never exceeds one item).
+        let mut inflight: VecDeque<usize> = VecDeque::new();
+        // When the connection dies, every unanswered in-flight item is
+        // failed as a transient death (retryable anywhere) alongside the
+        // item that triggered the failure.
+        'conn: loop {
+            while inflight.len() < self.pipeline {
+                let Some(i) = next(host) else { break };
+                if writeln!(out, "TRIAL {}", encode_work_item(&items[i])).is_err() {
+                    fail(i, host, false);
+                    for j in inflight.drain(..) {
+                        fail(j, host, false);
+                    }
+                    stats.died = true;
+                    break 'conn;
+                }
+                inflight.push_back(i);
             }
+            let Some(i) = inflight.pop_front() else { break };
+            let it = &items[i];
             let mut line = String::new();
             match reader.read_line(&mut line) {
                 Ok(0) | Err(_) => {
                     fail(i, host, false);
+                    for j in inflight.drain(..) {
+                        fail(j, host, false);
+                    }
                     stats.died = true;
                     break;
                 }
@@ -721,6 +765,9 @@ impl PoolExecutor {
                     Err(e) => {
                         eprintln!("pool: {addr}: undecodable RESULT ({e}); dropping connection");
                         fail(i, host, false);
+                        for j in inflight.drain(..) {
+                            fail(j, host, false);
+                        }
                         stats.died = true;
                         break;
                     }
@@ -733,6 +780,9 @@ impl PoolExecutor {
                 consecutive_errs += 1;
                 if consecutive_errs >= 3 {
                     eprintln!("pool: {addr}: 3 consecutive failures; dropping connection");
+                    for j in inflight.drain(..) {
+                        fail(j, host, false);
+                    }
                     stats.died = true;
                     break;
                 }

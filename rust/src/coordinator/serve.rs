@@ -1,0 +1,656 @@
+//! `rfold serve` — the always-on scheduling service.
+//!
+//! The batch simulator becomes a daemon: one service thread owns a
+//! [`Simulation`] stepped incrementally by the engine's streaming API
+//! (`advance_before` / `submit` / `drain` / `finalize`), and any number
+//! of TCP connections feed it line commands through an mpsc channel
+//! (the policy box is `!Send`, so the engine never leaves its thread).
+//!
+//! Protocol (one command per line, same line/JSON framing as the pool
+//! worker; job arrays are [`pool::job_json`] bytes):
+//! ```text
+//! SUBMIT {job-json}   → OK {json} | REJECT {json} | ERR <msg>
+//! STATUS              → STATUS {json}
+//! STATUS <id>         → JOB {json} | ERR <msg>
+//! DRAIN               → ROW {json} lines, then DRAIN-OK rows=<n>
+//! SNAPSHOT <path>     → SNAPSHOT-OK <path> | ERR <msg>
+//! SHUTDOWN            → BYE (service thread exits)
+//! QUIT                → closes this connection only
+//! ```
+//!
+//! Determinism bridge: the engine runs on a *virtual* clock driven
+//! entirely by job arrival stamps — wall-clock pacing (the client's
+//! `--speedup`) changes when bytes move, never what they say. A drained
+//! service's `ROW` lines are byte-identical to `rfold simulate --rows`
+//! on the accepted trace, and [`snapshot`](crate::coordinator::snapshot)
+//! /kill/restore preserves those bytes exactly.
+//!
+//! Admission control: `SUBMIT` is rejected (structured `REJECT`, not a
+//! protocol error) while the engine queue holds `queue_cap` jobs — the
+//! bounded-queue backpressure of a real intake. Rejected jobs never
+//! enter the trace, so acceptance *is* the determinism boundary.
+//! Arrivals must be non-decreasing: the engine cannot schedule the past.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Sender};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::pool;
+use crate::coordinator::server;
+use crate::coordinator::snapshot::{self, ServiceMeta, ServiceSnapshot};
+use crate::metrics::report;
+use crate::sim::engine::RunResult;
+use crate::sim::observer::DecisionLatency;
+use crate::sim::{SimConfig, Simulation};
+use crate::trace::JobSpec;
+use crate::util::json::Json;
+use crate::util::stats::percentile_of;
+
+/// Default admission-control queue cap (`rfold serve --queue-cap`).
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// One request to the service thread; every command carries its own
+/// reply channel, so replies cannot cross between connections.
+enum SvcCmd {
+    Submit(JobSpec, Sender<String>),
+    Status(Sender<String>),
+    JobStatus(u64, Sender<String>),
+    Drain(Sender<String>),
+    Snapshot(String, Sender<String>),
+    Shutdown(Sender<String>),
+}
+
+/// Cloneable client half of the service: connection threads (and tests)
+/// send commands and block on the per-command reply.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<SvcCmd>,
+}
+
+impl ServiceHandle {
+    fn request(&self, make: impl FnOnce(Sender<String>) -> SvcCmd) -> String {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self.tx.send(make(reply_tx)).is_err() {
+            return "ERR service unavailable (shut down?)".into();
+        }
+        reply_rx
+            .recv()
+            .unwrap_or_else(|_| "ERR service unavailable (shut down?)".into())
+    }
+}
+
+/// The engine side: everything the service thread owns.
+struct Service {
+    cfg: SimConfig,
+    /// `None` after `DRAIN` consumed the engine.
+    sim: Option<Simulation>,
+    /// Accepted jobs in submission order — the live trace.
+    jobs: Vec<JobSpec>,
+    /// Accepted ids, for duplicate detection.
+    ids: HashSet<u64>,
+    /// Max arrival of any submission *seen* (accepted or rejected).
+    /// Rejected jobs advance the virtual clock too (`advance_before`
+    /// runs before the admission decision), so ordering must be
+    /// enforced against this, not against the last accepted arrival —
+    /// otherwise a post-rejection submission could ask the engine to
+    /// schedule the past and diverge from the batch bytes.
+    horizon: f64,
+    queue_cap: usize,
+    submitted: usize,
+    admitted: usize,
+    rejected: usize,
+    latency: DecisionLatency,
+    /// Final result, kept for post-drain `STATUS`.
+    result: Option<RunResult>,
+}
+
+impl Service {
+    fn submit(&mut self, job: JobSpec) -> String {
+        let Some(sim) = self.sim.as_mut() else {
+            return "ERR service is drained; no further submissions".into();
+        };
+        if self.ids.contains(&job.id) {
+            return format!("ERR duplicate job id {}", job.id);
+        }
+        if job.arrival < self.horizon {
+            return format!(
+                "ERR arrival {} precedes a prior submission's arrival {} (stream must be time-ordered)",
+                job.arrival, self.horizon
+            );
+        }
+        self.horizon = job.arrival;
+        self.submitted += 1;
+        // Deliver everything due strictly before this arrival, then make
+        // the admission decision against the *current* queue — exactly
+        // the state a batch run would see at this point of the trace.
+        sim.advance_before(&self.jobs, job.arrival);
+        if sim.queue_depth() >= self.queue_cap {
+            self.rejected += 1;
+            return format!(
+                "REJECT {}",
+                jobj(vec![
+                    ("id", Json::u64_str(job.id)),
+                    ("queue", Json::Num(sim.queue_depth() as f64)),
+                    ("queue_cap", Json::Num(self.queue_cap as f64)),
+                ])
+            );
+        }
+        self.admitted += 1;
+        self.ids.insert(job.id);
+        self.jobs.push(job);
+        sim.submit(&self.jobs, self.jobs.len() - 1);
+        format!(
+            "OK {}",
+            jobj(vec![
+                ("id", Json::u64_str(job.id)),
+                ("queue", Json::Num(sim.queue_depth() as f64)),
+                ("running", Json::Num(sim.running_count() as f64)),
+            ])
+        )
+    }
+
+    fn status(&self) -> String {
+        let us = self.latency.samples();
+        let mut fields = vec![
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("drained", Json::Bool(self.sim.is_none())),
+            ("queue_cap", Json::Num(self.queue_cap as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("submitted", Json::Num(self.submitted as f64)),
+        ];
+        if !us.is_empty() {
+            fields.push(("decision_p50_us", Json::Num(percentile_of(&us, 0.50))));
+            fields.push(("decision_p99_us", Json::Num(percentile_of(&us, 0.99))));
+            fields.push(("decisions", Json::Num(us.len() as f64)));
+        }
+        match (&self.sim, &self.result) {
+            (Some(sim), _) => {
+                fields.push(("completed", Json::Num(sim.completed_count() as f64)));
+                fields.push(("dropped", Json::Num(sim.dropped_count() as f64)));
+                fields.push(("now", Json::Num(sim.now())));
+                fields.push(("queue", Json::Num(sim.queue_depth() as f64)));
+                fields.push(("running", Json::Num(sim.running_count() as f64)));
+                fields.push(("util", Json::Num(sim.cluster_utilization())));
+            }
+            (None, Some(r)) => {
+                fields.push(("completed", Json::Num(r.scheduled as f64)));
+                fields.push(("dropped", Json::Num(r.dropped as f64)));
+                fields.push(("makespan", Json::Num(r.makespan)));
+            }
+            (None, None) => {}
+        }
+        format!("STATUS {}", jobj(fields))
+    }
+
+    fn job_status(&self, id: u64) -> String {
+        if !self.ids.contains(&id) {
+            return format!("ERR unknown job {id}");
+        }
+        let status = match &self.sim {
+            Some(sim) => sim.job_status(&self.jobs, id),
+            None => match &self.result {
+                Some(r) => r
+                    .outcomes
+                    .iter()
+                    .rev()
+                    .find(|(jid, _)| *jid == id)
+                    .map(|(_, o)| match o {
+                        crate::sim::engine::JobOutcome::Completed { .. } => "completed",
+                        crate::sim::engine::JobOutcome::Dropped => "dropped",
+                        crate::sim::engine::JobOutcome::NotScheduled => "not-scheduled",
+                    })
+                    .unwrap_or("unknown"),
+                None => "unknown",
+            },
+        };
+        format!(
+            "JOB {}",
+            jobj(vec![
+                ("id", Json::u64_str(id)),
+                ("status", Json::Str(status.to_string())),
+            ])
+        )
+    }
+
+    fn drain(&mut self) -> String {
+        let Some(mut sim) = self.sim.take() else {
+            return "ERR already drained".into();
+        };
+        sim.drain(&self.jobs);
+        let result = sim.finalize(&self.jobs);
+        let rows = report::outcome_rows(&result, &self.jobs);
+        report::print_service_telemetry(
+            self.submitted,
+            self.admitted,
+            self.rejected,
+            &self.latency.samples(),
+        );
+        self.result = Some(result);
+        let mut reply = rows.join("\n");
+        if !reply.is_empty() {
+            reply.push('\n');
+        }
+        reply.push_str(&format!("DRAIN-OK rows={}", rows.len()));
+        reply
+    }
+
+    fn snapshot(&self, path: &str) -> String {
+        let Some(sim) = self.sim.as_ref() else {
+            return "ERR already drained; nothing to snapshot".into();
+        };
+        let meta = ServiceMeta {
+            cfg: &self.cfg,
+            jobs: &self.jobs,
+            queue_cap: self.queue_cap,
+            submitted: self.submitted,
+            admitted: self.admitted,
+            rejected: self.rejected,
+        };
+        match snapshot::save(path, sim, &meta) {
+            Ok(()) => format!("SNAPSHOT-OK {path}"),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+}
+
+/// Build a snapshot-style JSON object (sorted keys via BTreeMap).
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Start the service thread. The engine (and its `!Send` policy box) is
+/// instantiated *inside* the thread; `restore` resumes from a decoded
+/// snapshot instead of an empty cluster. Returns the command handle and
+/// the thread's join handle (the daemon's lifetime: joins when a
+/// `SHUTDOWN` arrives or every handle is dropped).
+pub fn spawn_service(
+    cfg: SimConfig,
+    queue_cap: usize,
+    restore: Option<ServiceSnapshot>,
+) -> (ServiceHandle, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<SvcCmd>();
+    let join = thread::spawn(move || {
+        let latency = DecisionLatency::new();
+        let mut svc = match restore {
+            None => Service {
+                cfg,
+                sim: Some(Simulation::new(cfg).with_observer(Box::new(latency.clone()))),
+                jobs: Vec::new(),
+                ids: HashSet::new(),
+                horizon: f64::NEG_INFINITY,
+                queue_cap: queue_cap.max(1),
+                submitted: 0,
+                admitted: 0,
+                rejected: 0,
+                latency,
+                result: None,
+            },
+            Some(snap) => {
+                let sim = match Simulation::restore(snap.cfg, &snap.engine) {
+                    Ok(sim) => sim.with_observer(Box::new(latency.clone())),
+                    Err(e) => {
+                        // Refuse to serve from a bad snapshot: every
+                        // command gets the unavailable error once the
+                        // channel closes.
+                        eprintln!("serve: restore failed: {e}");
+                        return;
+                    }
+                };
+                let ids = snap.jobs.iter().map(|j| j.id).collect();
+                // The exact pre-kill horizon isn't persisted; the last
+                // processed event time is a safe floor (every earlier
+                // submission advanced the clock at most that far).
+                let horizon = snap
+                    .jobs
+                    .last()
+                    .map_or(f64::NEG_INFINITY, |j| j.arrival)
+                    .max(sim.now());
+                Service {
+                    cfg: snap.cfg,
+                    sim: Some(sim),
+                    jobs: snap.jobs,
+                    ids,
+                    horizon,
+                    queue_cap: snap.queue_cap.max(1),
+                    submitted: snap.submitted,
+                    admitted: snap.admitted,
+                    rejected: snap.rejected,
+                    latency,
+                    result: None,
+                }
+            }
+        };
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                SvcCmd::Submit(job, reply) => {
+                    let _ = reply.send(svc.submit(job));
+                }
+                SvcCmd::Status(reply) => {
+                    let _ = reply.send(svc.status());
+                }
+                SvcCmd::JobStatus(id, reply) => {
+                    let _ = reply.send(svc.job_status(id));
+                }
+                SvcCmd::Drain(reply) => {
+                    let _ = reply.send(svc.drain());
+                }
+                SvcCmd::Snapshot(path, reply) => {
+                    let _ = reply.send(svc.snapshot(&path));
+                }
+                SvcCmd::Shutdown(reply) => {
+                    let _ = reply.send("BYE".into());
+                    break;
+                }
+            }
+        }
+    });
+    (ServiceHandle { tx }, join)
+}
+
+/// Parse and execute one protocol line; `None` closes the connection.
+pub fn dispatch(line: &str, handle: &ServiceHandle) -> Option<String> {
+    if line.is_empty() {
+        return Some(String::new());
+    }
+    if line == "QUIT" {
+        return None;
+    }
+    let (verb, rest) = line.split_once(' ').unwrap_or((line, ""));
+    let rest = rest.trim();
+    match verb {
+        "SUBMIT" => {
+            // Parse errors are this connection's problem, not the
+            // service's: reply ERR without consuming a submission slot
+            // and keep the connection alive.
+            let job = match Json::parse(rest) {
+                Ok(j) => match pool::parse_job(&j) {
+                    Ok(job) => job,
+                    Err(e) => return Some(format!("ERR bad job: {e}")),
+                },
+                Err(e) => return Some(format!("ERR bad job json: {e}")),
+            };
+            Some(handle.request(|r| SvcCmd::Submit(job, r)))
+        }
+        "STATUS" => {
+            if rest.is_empty() {
+                Some(handle.request(SvcCmd::Status))
+            } else {
+                match rest.parse::<u64>() {
+                    Ok(id) => Some(handle.request(|r| SvcCmd::JobStatus(id, r))),
+                    Err(_) => Some(format!("ERR bad job id '{rest}'")),
+                }
+            }
+        }
+        "DRAIN" => Some(handle.request(SvcCmd::Drain)),
+        "SNAPSHOT" => {
+            if rest.is_empty() {
+                Some("ERR usage: SNAPSHOT <path>".into())
+            } else {
+                Some(handle.request(|r| SvcCmd::Snapshot(rest.to_string(), r)))
+            }
+        }
+        "SHUTDOWN" => Some(handle.request(SvcCmd::Shutdown)),
+        _ => Some(
+            "ERR unknown command (SUBMIT/STATUS/DRAIN/SNAPSHOT/SHUTDOWN/QUIT)".into(),
+        ),
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:0` in tests), start the service and a
+/// detached accept loop, and return the bound address plus handles.
+/// Each connection gets its own thread running the shared
+/// [`server::serve_lines`] framing, all multiplexed onto the single
+/// service thread.
+pub fn spawn_server_on(
+    addr: &str,
+    cfg: SimConfig,
+    queue_cap: usize,
+    restore: Option<ServiceSnapshot>,
+) -> std::io::Result<(SocketAddr, ServiceHandle, JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let (handle, join) = spawn_service(cfg, queue_cap, restore);
+    let accept_handle = handle.clone();
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let conn_handle = accept_handle.clone();
+            thread::spawn(move || {
+                let _ = server::serve_lines(stream, |line| dispatch(line, &conn_handle));
+            });
+        }
+    });
+    Ok((local, handle, join))
+}
+
+/// `rfold serve` entry point: serve until a `SHUTDOWN` command stops the
+/// service thread (connections opened after that get
+/// "ERR service unavailable" and the process exits).
+pub fn serve(
+    addr: &str,
+    cfg: SimConfig,
+    queue_cap: usize,
+    restore: Option<ServiceSnapshot>,
+) -> std::io::Result<()> {
+    let (local, _handle, join) = spawn_server_on(addr, cfg, queue_cap, restore)?;
+    eprintln!("rfold serve listening on {local} (queue-cap {queue_cap})");
+    join.join()
+        .map_err(|_| std::io::Error::other("service thread panicked"))?;
+    eprintln!("rfold serve: shut down");
+    Ok(())
+}
+
+/// Outcome of one [`submit_trace`] replay.
+#[derive(Debug, Default)]
+pub struct SubmitSummary {
+    /// Jobs the daemon accepted (`OK`).
+    pub accepted: usize,
+    /// Jobs refused by admission control (`REJECT`).
+    pub rejected: usize,
+    /// Protocol errors (`ERR` replies).
+    pub errors: usize,
+    /// `ROW` lines streamed back by `DRAIN` (empty unless `drain`).
+    pub rows: Vec<String>,
+}
+
+/// `rfold submit`: replay `jobs` into a live daemon at `addr`, pacing
+/// inter-arrival gaps by wall-clock `gap / speedup` (0 or non-finite
+/// speedup replays as fast as the socket allows — pacing shapes *when*
+/// bytes are sent, never their content). With `drain`, issue `DRAIN`
+/// after the last job and collect the `ROW` lines.
+pub fn submit_trace(
+    addr: &str,
+    jobs: &[JobSpec],
+    speedup: f64,
+    drain: bool,
+) -> std::io::Result<SubmitSummary> {
+    let stream = TcpStream::connect(addr)?;
+    let mut out = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut summary = SubmitSummary::default();
+    let mut prev = f64::NAN;
+    let mut line = String::new();
+    for job in jobs {
+        if speedup.is_finite() && speedup > 0.0 && prev.is_finite() {
+            let dt = (job.arrival - prev).max(0.0) / speedup;
+            if dt > 0.0 {
+                thread::sleep(Duration::from_secs_f64(dt));
+            }
+        }
+        prev = job.arrival;
+        writeln!(out, "SUBMIT {}", pool::job_json(job))?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::other("daemon closed the connection"));
+        }
+        let reply = line.trim();
+        if reply.starts_with("OK") {
+            summary.accepted += 1;
+        } else if reply.starts_with("REJECT") {
+            summary.rejected += 1;
+        } else {
+            summary.errors += 1;
+            eprintln!("submit: job {}: {reply}", job.id);
+        }
+    }
+    if drain {
+        writeln!(out, "DRAIN")?;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::other(
+                    "daemon closed the connection mid-drain",
+                ));
+            }
+            let reply = line.trim();
+            if let Some(row) = reply.strip_prefix("ROW ") {
+                summary.rows.push(format!("ROW {row}"));
+            } else if reply.starts_with("DRAIN-OK") {
+                break;
+            } else {
+                summary.errors += 1;
+                eprintln!("submit: drain: {reply}");
+                break;
+            }
+        }
+    }
+    let _ = writeln!(out, "QUIT");
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PolicyKind;
+    use crate::shape::JobShape;
+    use crate::topology::cluster::ClusterTopo;
+
+    fn cfg() -> SimConfig {
+        let mut cfg = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+        cfg.drain = true;
+        cfg
+    }
+
+    fn jsub(id: u64, arrival: f64) -> JobSpec {
+        JobSpec {
+            id,
+            arrival,
+            duration: 10.0,
+            shape: JobShape::new(2, 2, 2),
+            comm_frac: 0.1,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn dispatch_submit_status_drain_shutdown() {
+        let (handle, join) = spawn_service(cfg(), 8, None);
+        let r = dispatch(
+            &format!("SUBMIT {}", pool::job_json(&jsub(0, 0.0))),
+            &handle,
+        )
+        .unwrap();
+        assert!(r.starts_with("OK "), "{r}");
+        let r = dispatch("STATUS", &handle).unwrap();
+        assert!(r.starts_with("STATUS "), "{r}");
+        let j = Json::parse(r.strip_prefix("STATUS ").unwrap()).unwrap();
+        assert_eq!(j.get("admitted").and_then(Json::as_usize), Some(1));
+        let r = dispatch("STATUS 0", &handle).unwrap();
+        assert!(r.contains("running"), "one small job runs immediately: {r}");
+        let r = dispatch("STATUS 99", &handle).unwrap();
+        assert!(r.starts_with("ERR unknown job"), "{r}");
+        let r = dispatch("DRAIN", &handle).unwrap();
+        assert!(r.contains("ROW ") && r.ends_with("DRAIN-OK rows=1"), "{r}");
+        // Post-drain submissions are refused, STATUS still answers.
+        let r = dispatch(
+            &format!("SUBMIT {}", pool::job_json(&jsub(1, 1.0))),
+            &handle,
+        )
+        .unwrap();
+        assert!(r.starts_with("ERR service is drained"), "{r}");
+        let r = dispatch("DRAIN", &handle).unwrap();
+        assert!(r.starts_with("ERR already drained"), "{r}");
+        let r = dispatch("STATUS", &handle).unwrap();
+        assert!(r.contains("\"drained\":true"), "{r}");
+        assert_eq!(dispatch("SHUTDOWN", &handle), Some("BYE".into()));
+        join.join().unwrap();
+        let r = dispatch("STATUS", &handle).unwrap();
+        assert!(r.starts_with("ERR service unavailable"), "{r}");
+    }
+
+    #[test]
+    fn dispatch_rejects_malformed_and_out_of_order() {
+        let (handle, join) = spawn_service(cfg(), 8, None);
+        let r = dispatch("SUBMIT not-json", &handle).unwrap();
+        assert!(r.starts_with("ERR bad job json"), "{r}");
+        let r = dispatch("SUBMIT [1,2]", &handle).unwrap();
+        assert!(r.starts_with("ERR bad job"), "{r}");
+        let r = dispatch("NOPE", &handle).unwrap();
+        assert!(r.starts_with("ERR unknown command"), "{r}");
+        let r = dispatch("STATUS abc", &handle).unwrap();
+        assert!(r.starts_with("ERR bad job id"), "{r}");
+        let r = dispatch("SNAPSHOT", &handle).unwrap();
+        assert!(r.starts_with("ERR usage"), "{r}");
+        assert_eq!(dispatch("", &handle), Some(String::new()));
+        assert_eq!(dispatch("QUIT", &handle), None);
+        // Time must not run backwards, and ids are unique.
+        let ok = dispatch(
+            &format!("SUBMIT {}", pool::job_json(&jsub(5, 50.0))),
+            &handle,
+        )
+        .unwrap();
+        assert!(ok.starts_with("OK "), "{ok}");
+        let r = dispatch(
+            &format!("SUBMIT {}", pool::job_json(&jsub(6, 40.0))),
+            &handle,
+        )
+        .unwrap();
+        assert!(r.starts_with("ERR arrival"), "{r}");
+        let r = dispatch(
+            &format!("SUBMIT {}", pool::job_json(&jsub(5, 60.0))),
+            &handle,
+        )
+        .unwrap();
+        assert!(r.starts_with("ERR duplicate job id"), "{r}");
+        // Malformed and refused submissions consumed no admission slot.
+        let st = dispatch("STATUS", &handle).unwrap();
+        let j = Json::parse(st.strip_prefix("STATUS ").unwrap()).unwrap();
+        assert_eq!(j.get("submitted").and_then(Json::as_usize), Some(1));
+        let _ = dispatch("SHUTDOWN", &handle);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn queue_cap_rejects_structurally() {
+        // Cap 1 on a cluster-filling stream: job 0 runs, job 1 queues,
+        // job 2 must be REJECTed (queue is at cap), never entering the
+        // engine.
+        let (handle, join) = spawn_service(cfg(), 1, None);
+        let big = |id: u64, arrival: f64| JobSpec {
+            shape: JobShape::new(16, 16, 16),
+            duration: 1000.0,
+            ..jsub(id, arrival)
+        };
+        for (i, expect) in [(0u64, "OK "), (1, "OK "), (2, "REJECT ")] {
+            let r = dispatch(
+                &format!("SUBMIT {}", pool::job_json(&big(i, i as f64))),
+                &handle,
+            )
+            .unwrap();
+            assert!(r.starts_with(expect), "job {i}: {r}");
+        }
+        let st = dispatch("STATUS", &handle).unwrap();
+        let j = Json::parse(st.strip_prefix("STATUS ").unwrap()).unwrap();
+        assert_eq!(j.get("submitted").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("admitted").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("rejected").and_then(Json::as_usize), Some(1));
+        // The drain result covers exactly the accepted jobs.
+        let r = dispatch("DRAIN", &handle).unwrap();
+        assert!(r.ends_with("DRAIN-OK rows=2"), "{r}");
+        let _ = dispatch("SHUTDOWN", &handle);
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,304 @@
+//! Versioned, checksummed service snapshots — crash recovery for
+//! `rfold serve`.
+//!
+//! A snapshot file is two lines:
+//!
+//! ```text
+//! RFOLD-SNAPSHOT v1 <fnv1a-64 of the body, 16 hex digits>
+//! {one-line JSON body}
+//! ```
+//!
+//! The body carries the full service state: the engine's dynamic state
+//! ([`Simulation::snapshot_state`]), the accepted-job ledger (the trace
+//! the engine's indices point into), the configuration needed to rebuild
+//! [`SimConfig`] (topology, policy registry key, modifier fingerprint),
+//! and the admission counters. `rfold serve --restore PATH` resumes such
+//! that completion rows are byte-identical to an uninterrupted run —
+//! [`decode`] re-verifies the checksum and version before anything is
+//! instantiated, so a truncated or hand-edited file fails loudly instead
+//! of resuming a subtly different cluster.
+//!
+//! Wire-form reuse, not reinvention: jobs and topologies are encoded
+//! with the pool protocol's [`pool::job_json`]/[`pool::topo_json`], so a
+//! snapshot's job rows are the same bytes a worker would accept.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::pool;
+use crate::placement::PolicyRegistry;
+use crate::sim::{SimConfig, Simulation};
+use crate::trace::scenarios::ModifierSet;
+use crate::trace::JobSpec;
+use crate::util::json::Json;
+
+/// Current snapshot format version. Bump on any body-layout change;
+/// [`decode`] refuses other versions rather than guessing.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Magic prefix of the header line.
+const MAGIC: &str = "RFOLD-SNAPSHOT";
+
+/// FNV-1a 64-bit checksum of the body line. Not cryptographic — it
+/// guards against truncation and accidental edits, the failure modes a
+/// crash-recovery file actually meets.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x100_0000_01b3;
+    bytes
+        .iter()
+        .fold(OFFSET, |h, &b| (h ^ b as u64).wrapping_mul(PRIME))
+}
+
+/// Everything a daemon needs to resume: decoded configuration, the
+/// accepted-job ledger, the raw engine state, and the admission
+/// counters.
+pub struct ServiceSnapshot {
+    /// Rebuilt configuration (always `drain: true` — service mode drains
+    /// on request, not at a workload horizon).
+    pub cfg: SimConfig,
+    /// Accepted jobs in submission order — the trace whose indices the
+    /// engine state refers to.
+    pub jobs: Vec<JobSpec>,
+    /// Engine state for [`Simulation::restore`].
+    pub engine: Json,
+    /// Admission-control queue cap the daemon ran with.
+    pub queue_cap: usize,
+    /// `SUBMIT`s seen (admitted + rejected, excluding protocol errors).
+    pub submitted: usize,
+    /// `SUBMIT`s accepted into the engine.
+    pub admitted: usize,
+    /// `SUBMIT`s refused by admission control.
+    pub rejected: usize,
+}
+
+/// Serialize a running service's state to the two-line file form.
+pub fn encode(sim: &Simulation, meta: &ServiceMeta) -> String {
+    let mut service = BTreeMap::new();
+    service.insert(
+        "jobs".to_string(),
+        Json::Arr(meta.jobs.iter().map(pool::job_json).collect()),
+    );
+    service.insert("topo".to_string(), pool::topo_json(meta.cfg.topo));
+    service.insert(
+        "policy".to_string(),
+        Json::Str(meta.cfg.policy.key().to_string()),
+    );
+    service.insert(
+        "mods".to_string(),
+        Json::Str(meta.cfg.modifiers.fingerprint()),
+    );
+    service.insert("queue_cap".to_string(), Json::Num(meta.queue_cap as f64));
+    service.insert("submitted".to_string(), Json::Num(meta.submitted as f64));
+    service.insert("admitted".to_string(), Json::Num(meta.admitted as f64));
+    service.insert("rejected".to_string(), Json::Num(meta.rejected as f64));
+    let mut body = BTreeMap::new();
+    body.insert("version".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+    body.insert("engine".to_string(), sim.snapshot_state());
+    body.insert("service".to_string(), Json::Obj(service));
+    let body = Json::Obj(body).to_string();
+    format!("{MAGIC} v{SNAPSHOT_VERSION} {:016x}\n{body}\n", fnv1a(body.as_bytes()))
+}
+
+/// The service-level half of a snapshot (everything but the live
+/// engine), borrowed from the serve loop at snapshot time.
+pub struct ServiceMeta<'a> {
+    pub cfg: &'a SimConfig,
+    pub jobs: &'a [JobSpec],
+    pub queue_cap: usize,
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+}
+
+/// Parse and verify the two-line file form. Checks magic, version, and
+/// checksum before touching the body; resolves the policy against the
+/// global registry and re-parses the modifier fingerprint, so the
+/// returned [`SimConfig`] is exactly the one the daemon ran with.
+pub fn decode(text: &str) -> Result<ServiceSnapshot, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("snapshot: empty file")?;
+    let body = lines.next().ok_or("snapshot: missing body line")?;
+    let mut parts = header.split_whitespace();
+    if parts.next() != Some(MAGIC) {
+        return Err(format!("snapshot: bad magic (expected '{MAGIC} ...')"));
+    }
+    let version = parts.next().ok_or("snapshot: header missing version")?;
+    if version != format!("v{SNAPSHOT_VERSION}") {
+        return Err(format!(
+            "snapshot: unsupported version '{version}' (this build reads v{SNAPSHOT_VERSION})"
+        ));
+    }
+    let sum = parts.next().ok_or("snapshot: header missing checksum")?;
+    let sum = u64::from_str_radix(sum, 16)
+        .map_err(|_| format!("snapshot: malformed checksum '{sum}'"))?;
+    let actual = fnv1a(body.as_bytes());
+    if sum != actual {
+        return Err(format!(
+            "snapshot: checksum mismatch (header {sum:016x}, body {actual:016x}) — truncated or edited file"
+        ));
+    }
+    let j = Json::parse(body).map_err(|e| format!("snapshot: body is not JSON: {e}"))?;
+    let ver = j
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or("snapshot: body missing 'version'")?;
+    if ver != SNAPSHOT_VERSION as f64 {
+        return Err(format!("snapshot: body version {ver} != header v{SNAPSHOT_VERSION}"));
+    }
+    let engine = j.get("engine").ok_or("snapshot: body missing 'engine'")?.clone();
+    let service = j.get("service").ok_or("snapshot: body missing 'service'")?;
+    let topo = pool::parse_topo(
+        service.get("topo").ok_or("snapshot: service missing 'topo'")?,
+    )
+    .map_err(|e| format!("snapshot: topo: {e}"))?;
+    let policy_key = service
+        .get("policy")
+        .and_then(Json::as_str)
+        .ok_or("snapshot: service missing 'policy'")?;
+    let policy = PolicyRegistry::global()
+        .resolve(policy_key)
+        .ok_or_else(|| format!("snapshot: unknown policy '{policy_key}'"))?;
+    let mods = service
+        .get("mods")
+        .and_then(Json::as_str)
+        .ok_or("snapshot: service missing 'mods'")?;
+    let modifiers =
+        ModifierSet::parse(mods).map_err(|e| format!("snapshot: mods: {e}"))?;
+    let num = |key: &str| -> Result<usize, String> {
+        service
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("snapshot: service missing '{key}'"))
+    };
+    let jobs = service
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .ok_or("snapshot: service missing 'jobs'")?
+        .iter()
+        .map(|job| pool::parse_job(job).map_err(|e| format!("snapshot: job: {e}")))
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut cfg = SimConfig::new(topo, policy);
+    cfg.drain = true;
+    cfg.modifiers = modifiers;
+    Ok(ServiceSnapshot {
+        cfg,
+        jobs,
+        engine,
+        queue_cap: num("queue_cap")?,
+        submitted: num("submitted")?,
+        admitted: num("admitted")?,
+        rejected: num("rejected")?,
+    })
+}
+
+/// Write a snapshot file (atomically enough for crash recovery: write
+/// to `path.tmp`, then rename — a crash mid-write never clobbers the
+/// previous good snapshot).
+pub fn save(path: &str, sim: &Simulation, meta: &ServiceMeta) -> Result<(), String> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, encode(sim, meta))
+        .map_err(|e| format!("snapshot: cannot write {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("snapshot: cannot rename {tmp} -> {path}: {e}"))
+}
+
+/// Read and [`decode`] a snapshot file.
+pub fn load(path: &str) -> Result<ServiceSnapshot, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("snapshot: cannot read {path}: {e}"))?;
+    decode(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PolicyKind;
+    use crate::shape::JobShape;
+    use crate::topology::cluster::ClusterTopo;
+
+    fn sample() -> (SimConfig, Vec<JobSpec>, Simulation) {
+        let mut cfg = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse("preempt=priority,checkpoint=3s").unwrap();
+        let jobs: Vec<JobSpec> = (0..4)
+            .map(|id| JobSpec {
+                id,
+                arrival: id as f64 * 5.0,
+                duration: 50.0,
+                shape: JobShape::new(4, 4, 4),
+                comm_frac: 0.2,
+                priority: (id % 2) as u8,
+            })
+            .collect();
+        let mut sim = Simulation::new(cfg);
+        for idx in 0..jobs.len() {
+            sim.advance_before(&jobs, jobs[idx].arrival);
+            sim.submit(&jobs, idx);
+        }
+        (cfg, jobs, sim)
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let (cfg, jobs, sim) = sample();
+        let meta = ServiceMeta {
+            cfg: &cfg,
+            jobs: &jobs,
+            queue_cap: 64,
+            submitted: 6,
+            admitted: 4,
+            rejected: 2,
+        };
+        let text = encode(&sim, &meta);
+        assert!(text.starts_with("RFOLD-SNAPSHOT v1 "));
+        assert_eq!(text.lines().count(), 2);
+        let snap = decode(&text).expect("round trip");
+        assert_eq!(snap.jobs, jobs);
+        assert_eq!(snap.queue_cap, 64);
+        assert_eq!(snap.submitted, 6);
+        assert_eq!(snap.admitted, 4);
+        assert_eq!(snap.rejected, 2);
+        assert_eq!(snap.cfg.modifiers, cfg.modifiers);
+        assert_eq!(snap.cfg.policy.key(), cfg.policy.key());
+        // The engine state restores into a working simulation.
+        let restored = Simulation::restore(snap.cfg, &snap.engine).expect("restore");
+        assert_eq!(restored.queue_depth() + restored.running_count(), 4);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let (cfg, jobs, sim) = sample();
+        let meta = ServiceMeta {
+            cfg: &cfg,
+            jobs: &jobs,
+            queue_cap: 64,
+            submitted: 4,
+            admitted: 4,
+            rejected: 0,
+        };
+        let good = encode(&sim, &meta);
+
+        let err = decode("").unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+
+        let err = decode("NOT-A-SNAPSHOT v1 00\n{}\n").unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+
+        let wrong_ver = good.replacen("v1", "v999", 1);
+        let err = decode(&wrong_ver).unwrap_err();
+        assert!(err.contains("unsupported version"), "{err}");
+
+        // Flip one body byte: the checksum must catch it.
+        let mut lines: Vec<&str> = good.lines().collect();
+        let tampered_body = lines[1].replacen("queue_cap\":64", "queue_cap\":65", 1);
+        assert_ne!(tampered_body, lines[1], "tamper target must exist");
+        lines[1] = &tampered_body;
+        let err = decode(&format!("{}\n{}\n", lines[0], lines[1])).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // Truncation (body line missing) fails before any parsing.
+        let header_only = good.lines().next().unwrap();
+        let err = decode(header_only).unwrap_err();
+        assert!(err.contains("missing body"), "{err}");
+    }
+}

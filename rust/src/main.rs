@@ -13,6 +13,7 @@
 //!                [--with preempt=priority,...]         preemption / defrag knobs
 //!                [--pool h1:p,h2:p]                    fan out to rfold workers
 //!                [--pool-connections N]                N connections per worker host
+//!                [--pool-pipeline K]                   K in-flight trials per connection
 //! rfold worker   [--listen A]                          TCP trial worker daemon
 //! rfold motivation                                     §3.1 contention study
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
@@ -20,8 +21,11 @@
 //! rfold simulate --policy P [--cube N|--static] ...    one cell, detailed
 //!                [--trace-file F]                       replay a CSV trace instead
 //! rfold trace-gen --out FILE [--jobs J] [--seed S]     write a CSV trace
-//! rfold serve [--addr A] [--policy P] [--cube N]       TCP leader
-//! rfold replay --trace FILE [--policy P] [--cube N]    replay CSV live
+//! rfold serve [--addr A] [--policy P] [--cube N]       always-on scheduling service
+//!             [--queue-cap N] [--restore SNAPSHOT]     (SUBMIT/STATUS/DRAIN/SNAPSHOT)
+//! rfold submit --trace FILE [--addr A]                 replay a CSV into a live
+//!              [--speedup X] [--drain]                 `rfold serve` daemon
+//! rfold replay --trace FILE [--policy P] [--cube N]    replay CSV live (leader demo)
 //! rfold scorer-check [--plans K]                       XLA vs native scorer
 //! ```
 //!
@@ -46,7 +50,7 @@ use rfold::util::Pcg64;
 
 fn main() {
     let cmd = std::env::args().nth(1).unwrap_or_default();
-    let args = Args::from_env(2, &["static", "folds", "quiet", "xla"]);
+    let args = Args::from_env(2, &["static", "folds", "quiet", "xla", "rows", "drain"]);
     match cmd.as_str() {
         "table1" => table1(&args),
         "fig3" => fig3(&args),
@@ -59,6 +63,7 @@ fn main() {
         "trace-gen" => trace_gen(&args),
         "worker" => worker(&args),
         "serve" => serve(&args),
+        "submit" => submit(&args),
         "replay" => replay(&args),
         "scorer-check" => scorer_check(&args),
         "workload-stats" => workload_stats(&args),
@@ -77,7 +82,7 @@ fn main() {
 
 fn usage() -> &'static str {
     "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
-     trace-gen|worker|serve|replay|scorer-check|all> [options]\n\
+     trace-gen|worker|serve|submit|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
      scenario modifiers (sweep/simulate): --with failures=philly|exp:MTBF:REPAIR:LINKFRAC,\
      ocs-latency=5s,stragglers=0.05,seed=U64,preempt=priority|srtf,migration-cost=30s,\
@@ -87,9 +92,16 @@ fn usage() -> &'static str {
      --pool host1:port,host2:port (distributed; workers run `rfold worker`) \
      --pool-connections N (connections per worker host; one connection = one busy \
      remote core, default 1) \
+     --pool-pipeline K (in-flight trials per connection, default 1; hides RTT on \
+     high-latency links, byte-identical output for any K) \
      --pool-timeout S (per-trial reply timeout, default 600, 0 = none)\n\
      worker options: --listen A (default 127.0.0.1:7171)\n\
-     simulate options: --trace-file F (replay a recorded CSV trace)\n\
+     simulate options: --trace-file F (replay a recorded CSV trace) \
+     --rows (print one ROW {json} per job outcome — the service-mode determinism bridge)\n\
+     serve options:  --addr A (default 127.0.0.1:7070) --queue-cap N (default 1024) \
+     --restore SNAPSHOT (resume from a `SNAPSHOT <path>` file)\n\
+     submit options: --trace F --addr A --speedup X (0 = no pacing, default) \
+     --drain (issue DRAIN after the last job and print the ROW lines)\n\
      policies resolve by registry name (rfold, firstfit, folding, reconfig, \
      besteffort, hilbert, preempt-rfold, ...)"
 }
@@ -254,6 +266,7 @@ fn sweep_cmd(args: &Args) {
             Box::new(
                 rfold::coordinator::pool::PoolExecutor::new(addrs)
                     .with_connections(args.get_usize("pool-connections", 1))
+                    .with_pipeline(args.get_usize("pool-pipeline", 1))
                     .with_read_timeout(std::time::Duration::from_secs(
                         args.get_u64("pool-timeout", 600),
                     )),
@@ -428,6 +441,14 @@ fn simulate(args: &Args) {
             s.avg_util,
             report::fmt_secs(s.avg_queue_delay),
         );
+        // `--rows`: the per-job outcome encoding shared with service-mode
+        // DRAIN — `rfold submit --drain` against a daemon fed the same
+        // trace must produce these exact bytes.
+        if args.flag("rows") {
+            for row in report::outcome_rows(&r, &t) {
+                println!("{row}");
+            }
+        }
         report::print_policy_telemetry(policy.name(), &telemetry.snapshot());
         return;
     }
@@ -464,9 +485,14 @@ fn simulate(args: &Args) {
     let t = trace::gen::generate(&tc);
     let mut sc = SimConfig::new(topo, policy);
     sc.modifiers = modifiers.for_trial(sweep::trial_seed(seed, 0));
-    Simulation::new(sc)
+    let r = Simulation::new(sc)
         .with_observer(Box::new(telemetry.clone()))
         .run(&t);
+    if args.flag("rows") {
+        for row in report::outcome_rows(&r, &t) {
+            println!("{row}");
+        }
+    }
     report::print_policy_telemetry(
         &format!("{} trial-0", policy.name()),
         &telemetry.snapshot(),
@@ -495,13 +521,66 @@ fn worker(args: &Args) {
     rfold::coordinator::pool::serve_worker(&addr).expect("worker serve");
 }
 
+/// `rfold serve`: the always-on scheduling service — the deterministic
+/// virtual-clock engine behind a `SUBMIT`/`STATUS`/`DRAIN`/`SNAPSHOT`
+/// line-protocol front end. (The wall-clock leader demo that used to own
+/// this verb is still exercised by `rfold replay`.)
 fn serve(args: &Args) {
     let addr = args.get_str("addr", "127.0.0.1:7070").to_string();
+    let queue_cap = args
+        .get_usize("queue-cap", rfold::coordinator::serve::DEFAULT_QUEUE_CAP)
+        .max(1);
+    let restore = match args.get("restore") {
+        None => None,
+        Some(path) => match rfold::coordinator::snapshot::load(path) {
+            Ok(snap) => {
+                eprintln!(
+                    "serve: restoring {} accepted job(s) from {path}",
+                    snap.jobs.len()
+                );
+                Some(snap)
+            }
+            Err(e) => {
+                eprintln!("--restore: {e}");
+                std::process::exit(2);
+            }
+        },
+    };
+    // With --restore, topology/policy/modifiers/queue-cap all come from
+    // the snapshot (that is the point: resume exactly what was running);
+    // the flags below configure a fresh service only.
     let policy = parse_policy(args, builtins::RFOLD);
     let topo = parse_topo(args);
-    let scale = args.get_f64("time-scale", 1.0);
-    let (handle, _join) = rfold::coordinator::leader::Leader::new(topo, policy, scale).spawn();
-    rfold::coordinator::server::serve(&addr, handle).expect("serve");
+    let mut cfg = SimConfig::new(topo, policy);
+    cfg.modifiers = parse_with(args).for_trial(args.get_u64("seed", 1));
+    rfold::coordinator::serve::serve(&addr, cfg, queue_cap, restore).expect("serve");
+}
+
+/// `rfold submit`: replay a recorded CSV trace into a live `rfold serve`
+/// daemon, pacing inter-arrival gaps at wall-clock `gap / speedup`
+/// (`--speedup 0`, the default, replays as fast as the socket allows —
+/// pacing never changes the engine's virtual-clock results, only how
+/// long the soak takes).
+fn submit(args: &Args) {
+    let addr = args.get_str("addr", "127.0.0.1:7070").to_string();
+    let path = args.get_str("trace", "trace.csv").to_string();
+    let t = trace::io::read_csv(std::path::Path::new(&path)).expect("read trace");
+    let speedup = args.get_f64("speedup", 0.0);
+    let t0 = std::time::Instant::now();
+    let s = rfold::coordinator::serve::submit_trace(&addr, &t, speedup, args.flag("drain"))
+        .expect("submit");
+    for row in &s.rows {
+        println!("{row}");
+    }
+    println!(
+        "SUBMIT-DONE jobs={} accepted={} rejected={} errors={} rows={} wall={:.2}s",
+        t.len(),
+        s.accepted,
+        s.rejected,
+        s.errors,
+        s.rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
 }
 
 fn replay(args: &Args) {

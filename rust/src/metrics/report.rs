@@ -6,9 +6,12 @@ use std::collections::BTreeMap;
 
 use super::CellSummary;
 use crate::coordinator::pool::PoolStats;
+use crate::sim::engine::{JobOutcome, RunResult};
 use crate::sim::observer::DecisionTelemetry;
 use crate::sim::sweep::SweepRow;
+use crate::trace::JobSpec;
 use crate::util::json::Json;
+use crate::util::stats::percentile_of;
 
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
@@ -227,6 +230,79 @@ pub fn print_policy_telemetry(label: &str, t: &DecisionTelemetry) {
     }
 }
 
+/// One `ROW {json}` line per job of a finished run, in job-id order —
+/// the byte-level determinism bridge between batch and service mode:
+/// `rfold simulate --rows` prints these on stdout and a daemon's `DRAIN`
+/// reply streams the identical lines, so `diff` is the oracle. Times are
+/// encoded as f64 bit patterns (`Json::f64_bits`), ids as decimal
+/// strings; keys sort alphabetically inside each object (BTreeMap), so
+/// the bytes are a pure function of the run result.
+pub fn outcome_rows(result: &RunResult, trace: &[JobSpec]) -> Vec<String> {
+    let arrivals: BTreeMap<u64, f64> = trace.iter().map(|j| (j.id, j.arrival)).collect();
+    let mut sorted: Vec<(u64, JobOutcome)> = result.outcomes.clone();
+    sorted.sort_by_key(|r| r.0);
+    sorted
+        .into_iter()
+        .map(|(id, outcome)| {
+            let mut m = BTreeMap::new();
+            m.insert("id".to_string(), Json::u64_str(id));
+            let tag = match outcome {
+                JobOutcome::Completed { start, finish } => {
+                    m.insert("start".to_string(), Json::f64_bits(start));
+                    m.insert("finish".to_string(), Json::f64_bits(finish));
+                    if let Some(&arrival) = arrivals.get(&id) {
+                        m.insert("arrival".to_string(), Json::f64_bits(arrival));
+                        m.insert("jct".to_string(), Json::f64_bits(finish - arrival));
+                    }
+                    "completed"
+                }
+                JobOutcome::Dropped => "dropped",
+                JobOutcome::NotScheduled => "not-scheduled",
+            };
+            m.insert("outcome".to_string(), Json::Str(tag.to_string()));
+            format!("ROW {}", Json::Obj(m))
+        })
+        .collect()
+}
+
+/// Format service-mode counters as machine-greppable `SERVICE` lines:
+/// the admission ledger plus decision-latency percentiles when any
+/// decision was made. Self-consistency (`submitted = admitted +
+/// rejected`) is the soak test's invariant.
+pub fn service_telemetry_lines(
+    submitted: usize,
+    admitted: usize,
+    rejected: usize,
+    decision_us: &[f64],
+) -> Vec<String> {
+    let mut lines = vec![format!(
+        "SERVICE submitted={submitted} admitted={admitted} rejected={rejected}"
+    )];
+    if !decision_us.is_empty() {
+        lines.push(format!(
+            "SERVICE decisions={} decision-p50={:.1}us decision-p99={:.1}us",
+            decision_us.len(),
+            percentile_of(decision_us, 0.50),
+            percentile_of(decision_us, 0.99),
+        ));
+    }
+    lines
+}
+
+/// Print service telemetry — **stderr only**, like every other
+/// introspection channel: DRAIN's stdout-equivalent reply bytes must
+/// stay a pure function of the accepted trace.
+pub fn print_service_telemetry(
+    submitted: usize,
+    admitted: usize,
+    rejected: usize,
+    decision_us: &[f64],
+) {
+    for line in service_telemetry_lines(submitted, admitted, rejected, decision_us) {
+        eprintln!("{line}");
+    }
+}
+
 /// Format distributed-pool telemetry as machine-greppable `POOL` lines:
 /// one per worker connection plus an aggregate retry/fallback line.
 pub fn pool_telemetry_lines(stats: &PoolStats) -> Vec<String> {
@@ -333,6 +409,71 @@ mod tests {
         assert_eq!(parsed.get("wasted_work_s").unwrap().as_f64(), Some(8192.0));
         assert_eq!(parsed.get("migration_s").unwrap().as_f64(), Some(60.0));
         assert_eq!(parsed.get("useful_util").unwrap().as_f64(), Some(0.4));
+    }
+
+    #[test]
+    fn outcome_rows_are_sorted_valid_json() {
+        use crate::shape::JobShape;
+        let result = RunResult {
+            policy: "FirstFit",
+            outcomes: vec![
+                (2, JobOutcome::Dropped),
+                (0, JobOutcome::Completed { start: 1.0, finish: 11.0 }),
+                (1, JobOutcome::NotScheduled),
+            ],
+            utilization: crate::util::stats::WeightedCdf::new(),
+            scheduled: 1,
+            dropped: 1,
+            makespan: 11.0,
+            preemptions: 0,
+            wasted_work: 0.0,
+            migration_time: 0.0,
+            useful_util: 0.0,
+        };
+        let trace: Vec<JobSpec> = (0..3)
+            .map(|id| JobSpec {
+                id,
+                arrival: 0.5,
+                duration: 10.0,
+                shape: JobShape::new(2, 2, 2),
+                comm_frac: 0.1,
+                priority: 0,
+            })
+            .collect();
+        let rows = outcome_rows(&result, &trace);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.starts_with("ROW ")));
+        let parsed: Vec<Json> = rows
+            .iter()
+            .map(|r| Json::parse(&r[4..]).expect("row must be valid JSON"))
+            .collect();
+        // Sorted by id regardless of completion order.
+        let ids: Vec<&str> = parsed
+            .iter()
+            .map(|p| p.get("id").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(ids, ["0", "1", "2"]);
+        assert_eq!(
+            parsed[0].get("outcome").unwrap().as_str(),
+            Some("completed")
+        );
+        assert_eq!(parsed[0].get("jct").unwrap().as_f64_bits(), Some(10.5));
+        // Non-completed rows carry no time keys at all.
+        assert_eq!(parsed[1].get("outcome").unwrap().as_str(), Some("not-scheduled"));
+        assert!(parsed[1].get("start").is_none());
+        assert!(parsed[2].get("finish").is_none());
+    }
+
+    #[test]
+    fn service_lines_gate_latency_on_samples() {
+        let bare = service_telemetry_lines(5, 3, 2, &[]);
+        assert_eq!(bare.len(), 1);
+        assert!(bare[0].contains("submitted=5"));
+        assert!(bare[0].contains("admitted=3") && bare[0].contains("rejected=2"));
+        let timed = service_telemetry_lines(5, 3, 2, &[10.0, 20.0, 30.0]);
+        assert_eq!(timed.len(), 2);
+        assert!(timed[1].contains("decisions=3"));
+        assert!(timed[1].contains("decision-p50=20.0us"));
     }
 
     #[test]

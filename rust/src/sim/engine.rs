@@ -23,9 +23,10 @@ use crate::placement::{
 };
 use crate::sim::contention::{effective_duration, ContentionModel};
 use crate::sim::observer::SchedulerObserver;
-use crate::topology::cluster::{ClusterState, ClusterTopo};
+use crate::topology::cluster::{Allocation, ClusterState, ClusterTopo};
 use crate::trace::scenarios::ModifierSet;
 use crate::trace::JobSpec;
+use crate::util::json::Json;
 use crate::util::stats::WeightedCdf;
 use crate::util::Pcg64;
 
@@ -229,7 +230,13 @@ pub struct Simulation {
     /// Physical ring coordinates per best-effort job (for load removal).
     be_rings: HashMap<u64, Vec<Vec<crate::topology::P3>>>,
     queue: VecDeque<usize>,
-    events: BinaryHeap<Reverse<(OrdF64, u64, EventSlot)>>,
+    /// Pending events keyed `(time, rank, seq)`: rank 0 is an arrival
+    /// (its seq is the trace index, so equal-time arrivals deliver in
+    /// trace order), rank 1 is everything else (seq = push counter).
+    /// Ranking arrivals ahead of same-time completions/faults reproduces
+    /// the batch engine's push-all-arrivals-first ordering even when the
+    /// streaming service stages arrivals one at a time.
+    events: BinaryHeap<Reverse<(OrdF64, u8, u64, EventSlot)>>,
     seq: u64,
     now: f64,
     last_sample_t: f64,
@@ -257,6 +264,11 @@ pub struct Simulation {
     /// Arrivals not yet delivered — part of the "work pending" predicate
     /// that keeps the fault chain alive.
     arrivals_pending: usize,
+    /// Latest staged arrival: the workload horizon. Grows per submission
+    /// in streaming mode; equals the trace maximum after a batch enqueue.
+    horizon: f64,
+    /// Arrivals staged so far; the fault chain arms on the first one.
+    submitted: usize,
     /// Time of the last arrival or genuine completion: the makespan.
     /// Without faults this equals `now` at loop exit; with faults it
     /// excludes trailing repair events from the reported makespan.
@@ -366,6 +378,8 @@ impl Simulation {
             finish_at: HashMap::new(),
             idx_of: HashMap::new(),
             arrivals_pending: 0,
+            horizon: 0.0,
+            submitted: 0,
             job_now: 0.0,
             head_block: None,
             infeasible_shapes: HashSet::new(),
@@ -405,7 +419,7 @@ impl Simulation {
 
     fn push_event(&mut self, t: f64, slot: EventSlot) {
         self.seq += 1;
-        self.events.push(Reverse((OrdF64(t), self.seq, slot)));
+        self.events.push(Reverse((OrdF64(t), 1, self.seq, slot)));
     }
 
     /// Advance the utilization integral up to `t`.
@@ -517,16 +531,37 @@ impl Simulation {
         true
     }
 
+    /// Scheduling class as the decision loop sees it. With
+    /// `--with aging=on`, a job that has suffered [`MAX_PREEMPTIONS`]
+    /// evictions climbs one priority class (saturating) instead of being
+    /// excluded from the victim snapshot — starvation relief that applies
+    /// both when the job is a preemption candidate and when it competes
+    /// as the incoming head. Off (the default), base priority passes
+    /// through untouched, so existing rows keep their exact bytes.
+    fn effective_priority(&self, base: u8, job: u64) -> u8 {
+        if self.cfg.modifiers.aging
+            && self.preempt_count.get(&job).copied().unwrap_or(0) >= MAX_PREEMPTIONS
+        {
+            base.saturating_add(1)
+        } else {
+            base
+        }
+    }
+
     /// Deterministic snapshot of preemptable running jobs, for
     /// [`PlacementPolicy::decide`]. Job-id sorted (`HashMap` iteration
     /// order must never reach a scheduling decision); jobs at the
-    /// [`MAX_PREEMPTIONS`] starvation cap are excluded, so the policy
-    /// cannot churn them further.
+    /// [`MAX_PREEMPTIONS`] starvation cap are excluded so the policy
+    /// cannot churn them further — unless `--with aging=on`, which
+    /// presents them one priority class up instead.
     fn running_snapshot(&self, trace: &[JobSpec]) -> Vec<RunningJob> {
         let mut ids: Vec<u64> = self.started.keys().copied().collect();
         ids.sort_unstable();
         ids.into_iter()
-            .filter(|id| self.preempt_count.get(id).copied().unwrap_or(0) < MAX_PREEMPTIONS)
+            .filter(|id| {
+                self.cfg.modifiers.aging
+                    || self.preempt_count.get(id).copied().unwrap_or(0) < MAX_PREEMPTIONS
+            })
             .filter_map(|id| {
                 let &idx = self.idx_of.get(&id)?;
                 let info = self.run_info.get(&id)?;
@@ -536,7 +571,7 @@ impl Simulation {
                 .max(0.0);
                 Some(RunningJob {
                     job: id,
-                    priority: trace[idx].priority,
+                    priority: self.effective_priority(trace[idx].priority, id),
                     size: trace[idx].shape.size(),
                     remaining,
                     arrival: trace[idx].arrival,
@@ -688,7 +723,7 @@ impl Simulation {
             } else {
                 let incoming = RunningJob {
                     job: job.id,
-                    priority: job.priority,
+                    priority: self.effective_priority(job.priority, job.id),
                     size: job.shape.size(),
                     remaining: self
                         .remaining_base
@@ -892,40 +927,65 @@ impl Simulation {
         }
     }
 
-    /// Run a whole trace and report.
-    ///
-    /// The workload horizon is the last arrival time: jobs not scheduled
-    /// by then count against JCR (`NotScheduled`) — scheduling is frozen
-    /// at the horizon and already-running jobs drain to completion. This
-    /// matches the paper's reading of JCR where coarse-grained
-    /// reconfiguration loses jobs to queueing (Reconfig 8³ < Folding 16³
-    /// in Table 1), not only to shape incompatibility.
-    pub fn run(mut self, trace: &[JobSpec]) -> RunResult {
-        let horizon = trace.iter().map(|j| j.arrival).fold(0.0f64, f64::max);
-        let freeze = !self.cfg.drain && horizon > 0.0;
-        for (idx, j) in trace.iter().enumerate() {
-            self.push_event(j.arrival, EventSlot::Arrival(idx));
+    /// Stage one trace arrival into the event heap without delivering
+    /// anything. Arrival events carry rank 0 and the trace index as their
+    /// tie-break, so equal-time arrivals deliver in trace order and ahead
+    /// of same-time completions/faults — the order the batch engine got
+    /// by pushing the whole trace before its first pop. The first staged
+    /// arrival arms the fault chain, which keeps the fault stream's draw
+    /// positions identical to the batch prologue.
+    fn enqueue_arrival(&mut self, trace: &[JobSpec], idx: usize) {
+        if self.submitted == 0 {
+            if let Some(fm) = self.cfg.modifiers.failures {
+                let gap = self.fault_rng.exponential(fm.mtbf);
+                self.push_event(gap, EventSlot::Fault);
+            }
         }
-        self.arrivals_pending = trace.len();
+        let job = &trace[idx];
+        self.events.push(Reverse((
+            OrdF64(job.arrival),
+            0,
+            idx as u64,
+            EventSlot::Arrival(idx),
+        )));
+        self.arrivals_pending += 1;
+        self.horizon = self.horizon.max(job.arrival);
         if self.cfg.modifiers.failures.is_some() || self.disruption {
             // Both eviction triggers requeue through the id → trace-index
             // map; preemption additionally reads it for victim snapshots.
-            self.idx_of = trace.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+            self.idx_of.insert(job.id, idx);
         }
-        if let Some(fm) = self.cfg.modifiers.failures {
-            let gap = self.fault_rng.exponential(fm.mtbf);
-            self.push_event(gap, EventSlot::Fault);
-        }
-        // Utilization is measured over the workload window [0, last
-        // arrival] — the drain tail after submissions stop would otherwise
-        // dilute every policy's numbers (Figure 4 semantics). A degenerate
-        // trace whose arrivals all land at t=0 has a zero-width window, so
-        // the window extends to the *first completion*: between t=0 and
-        // that event the occupancy is constant, making the integral the
-        // point-in-time utilization of the loaded cluster instead of an
-        // empty measurement — and never the diluted full-drain integral.
-        let mut util_end = if horizon > 0.0 { horizon } else { f64::INFINITY };
-        while let Some(Reverse((OrdF64(t), _, slot))) = self.events.pop() {
+        self.submitted += 1;
+    }
+
+    /// Deliver pending events in `(time, rank, seq)` order: every event
+    /// with key `<= bound` (the whole heap for `None`), running the batch
+    /// engine's event-loop body per event. `freeze` and
+    /// `util_end`/`extend` carry `run`'s horizon-freeze and
+    /// measurement-window semantics; `external_arrival` tells the fault
+    /// chain that an arrival not yet in the heap is pending (the
+    /// streaming admission peek), keeping its liveness predicate — and
+    /// therefore its RNG draw sequence — identical to a batch run over
+    /// the same accepted trace.
+    fn pump_until(
+        &mut self,
+        trace: &[JobSpec],
+        bound: Option<(f64, u8, u64)>,
+        freeze: bool,
+        util_end: &mut f64,
+        extend: bool,
+        external_arrival: bool,
+    ) {
+        loop {
+            let Some(&Reverse((OrdF64(t), rank, seq, slot))) = self.events.peek() else {
+                break;
+            };
+            if let Some((bt, brank, bseq)) = bound {
+                if (OrdF64(t), rank, seq) > (OrdF64(bt), brank, bseq) {
+                    break;
+                }
+            }
+            self.events.pop();
             if let EventSlot::Completion(id, inc) = slot {
                 // A fault kill bumped the incarnation: this event belongs
                 // to a dead attempt. Filter *before* the zero-horizon
@@ -943,10 +1003,10 @@ impl Simulation {
                     }
                 }
             }
-            if util_end.is_infinite() && matches!(slot, EventSlot::Completion(..)) {
-                util_end = t;
+            if extend && util_end.is_infinite() && matches!(slot, EventSlot::Completion(..)) {
+                *util_end = t;
             }
-            self.sample_util(t.min(util_end));
+            self.sample_util(t.min(*util_end));
             self.now = t;
             match slot {
                 EventSlot::Arrival(idx) => {
@@ -996,8 +1056,9 @@ impl Simulation {
                     // queue the scheduler may still drain. A frozen
                     // queue past the horizon is *not* pending work, or
                     // the chain would self-perpetuate forever.
-                    let queue_live = !freeze || self.now <= horizon;
-                    let pending = self.arrivals_pending > 0
+                    let queue_live = !freeze || self.now <= self.horizon;
+                    let pending = external_arrival
+                        || self.arrivals_pending > 0
                         || !self.started.is_empty()
                         || (!self.queue.is_empty() && queue_live);
                     self.handle_fault(pending);
@@ -1010,11 +1071,74 @@ impl Simulation {
                     }
                 }
             }
-            if !freeze || self.now <= horizon {
+            if !freeze || self.now <= self.horizon {
                 self.drain_queue(trace);
             }
         }
-        // Anything still queued never got scheduled within the horizon.
+    }
+
+    /// Service-mode streaming submission: stage arrival `idx` (arrival
+    /// times must be non-decreasing across calls — the service enforces
+    /// this) and advance the simulation through every event up to and
+    /// including the arrival itself. Same-time completions and faults
+    /// rank after the arrival and stay pending, which keeps a streamed
+    /// run byte-identical to a batch [`run`](Self::run) over the same
+    /// trace.
+    pub fn submit(&mut self, trace: &[JobSpec], idx: usize) {
+        let arrival = trace[idx].arrival;
+        self.enqueue_arrival(trace, idx);
+        // Every event pumped here has `t <= arrival <=` the final
+        // horizon, so the measurement clamp can never engage; the
+        // degenerate all-arrivals-at-0 window is resolved by `drain`.
+        let mut util_end = f64::INFINITY;
+        self.pump_until(
+            trace,
+            Some((arrival, 0, idx as u64)),
+            false,
+            &mut util_end,
+            false,
+            false,
+        );
+    }
+
+    /// Advance through every event strictly before time `t` without
+    /// staging an arrival — the admission-control peek: queue depth and
+    /// cluster state afterwards reflect the instant a candidate arriving
+    /// at `t` would see. `t` must be `>=` every previously staged
+    /// arrival. The candidate counts as a pending arrival for fault-chain
+    /// liveness whether or not it is subsequently accepted, so an
+    /// accepted stream stays byte-identical to its batch run.
+    pub fn advance_before(&mut self, trace: &[JobSpec], t: f64) {
+        let mut util_end = f64::INFINITY;
+        self.pump_until(trace, Some((t, 0, 0)), false, &mut util_end, false, true);
+    }
+
+    /// Deliver every remaining event — the batch engine's main loop once
+    /// the whole trace is staged. Freezing and the utilization window
+    /// follow the staged horizon exactly as the monolithic `run` did.
+    ///
+    /// Utilization is measured over the workload window [0, last
+    /// arrival] — the drain tail after submissions stop would otherwise
+    /// dilute every policy's numbers (Figure 4 semantics). A degenerate
+    /// trace whose arrivals all land at t=0 has a zero-width window, so
+    /// the window extends to the *first completion*: between t=0 and
+    /// that event the occupancy is constant, making the integral the
+    /// point-in-time utilization of the loaded cluster instead of an
+    /// empty measurement — and never the diluted full-drain integral.
+    pub fn drain(&mut self, trace: &[JobSpec]) {
+        let freeze = !self.cfg.drain && self.horizon > 0.0;
+        let mut util_end = if self.horizon > 0.0 {
+            self.horizon
+        } else {
+            f64::INFINITY
+        };
+        self.pump_until(trace, None, freeze, &mut util_end, true, false);
+    }
+
+    /// Close out a drained run: anything still queued never got scheduled
+    /// within the horizon, the cluster must be empty (modulo failed
+    /// nodes), and the utilization integral folds into a [`RunResult`].
+    pub fn finalize(mut self, trace: &[JobSpec]) -> RunResult {
         for idx in std::mem::take(&mut self.queue) {
             self.outcomes.push((trace[idx].id, JobOutcome::NotScheduled));
         }
@@ -1048,6 +1172,676 @@ impl Simulation {
             useful_util,
         }
     }
+
+    /// Run a whole trace and report.
+    ///
+    /// The workload horizon is the last arrival time: jobs not scheduled
+    /// by then count against JCR (`NotScheduled`) — scheduling is frozen
+    /// at the horizon and already-running jobs drain to completion. This
+    /// matches the paper's reading of JCR where coarse-grained
+    /// reconfiguration loses jobs to queueing (Reconfig 8³ < Folding 16³
+    /// in Table 1), not only to shape incompatibility.
+    ///
+    /// Equivalent to staging every arrival via [`submit`](Self::submit)
+    /// and then [`drain`](Self::drain) + [`finalize`](Self::finalize) —
+    /// the streaming service's path — but stages everything up front
+    /// without intermediate pumping, so unsorted traces run too.
+    pub fn run(mut self, trace: &[JobSpec]) -> RunResult {
+        if trace.is_empty() {
+            // The batch prologue armed the fault chain even for an empty
+            // trace (one fault fires into an idle cluster, then the chain
+            // dies); keep that byte-exact rather than special-casing it
+            // away.
+            if let Some(fm) = self.cfg.modifiers.failures {
+                let gap = self.fault_rng.exponential(fm.mtbf);
+                self.push_event(gap, EventSlot::Fault);
+            }
+        }
+        for idx in 0..trace.len() {
+            self.enqueue_arrival(trace, idx);
+        }
+        self.drain(trace);
+        self.finalize(trace)
+    }
+
+    /// Simulation clock: the time of the last delivered event.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Jobs waiting in the FIFO queue right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Jobs currently running on the cluster.
+    pub fn running_count(&self) -> usize {
+        self.started.len()
+    }
+
+    /// Jobs that ran to completion so far.
+    pub fn completed_count(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|(_, o)| matches!(o, JobOutcome::Completed { .. }))
+            .count()
+    }
+
+    /// Jobs dropped so far (infeasible shape or fault-retry exhaustion).
+    pub fn dropped_count(&self) -> usize {
+        self.dropped
+    }
+
+    /// Instantaneous cluster utilization (busy over non-failed nodes).
+    pub fn cluster_utilization(&self) -> f64 {
+        self.cluster.utilization()
+    }
+
+    /// Service-mode status of a submitted job.
+    pub fn job_status(&self, trace: &[JobSpec], id: u64) -> &'static str {
+        if let Some((_, o)) = self.outcomes.iter().rev().find(|(jid, _)| *jid == id) {
+            return match o {
+                JobOutcome::Completed { .. } => "completed",
+                JobOutcome::Dropped => "dropped",
+                JobOutcome::NotScheduled => "not-scheduled",
+            };
+        }
+        if self.started.contains_key(&id) {
+            return "running";
+        }
+        if self.queue.iter().any(|&idx| trace[idx].id == id) {
+            return "queued";
+        }
+        "unknown"
+    }
+}
+
+/// Snapshot/restore: every dynamic field that influences future
+/// scheduling decisions or result bytes, serialized deterministically
+/// (maps in sorted key order, floats as bit patterns, u64 ids as decimal
+/// strings — JSON numbers only carry 53 exact bits). Performance memos
+/// (`head_block`, `infeasible_shapes`, policy caches, placement indices)
+/// are deliberately absent: they are epoch-keyed or monotone, so a cold
+/// restart re-derives identical decisions, and the restored cluster gets
+/// fresh epochs anyway.
+impl Simulation {
+    /// Serialize the engine's dynamic state. Restoring via
+    /// [`restore`](Self::restore) and continuing yields completion rows
+    /// byte-identical to the uninterrupted run.
+    pub fn snapshot_state(&self) -> Json {
+        fn num(v: usize) -> Json {
+            Json::Num(v as f64)
+        }
+        fn pairs<V, F: Fn(&V) -> Vec<Json>>(m: &HashMap<u64, V>, f: F) -> Json {
+            let mut ks: Vec<u64> = m.keys().copied().collect();
+            ks.sort_unstable();
+            Json::Arr(
+                ks.into_iter()
+                    .map(|k| {
+                        let mut row = vec![Json::u64_str(k)];
+                        row.extend(f(&m[&k]));
+                        Json::Arr(row)
+                    })
+                    .collect(),
+            )
+        }
+        fn opt_id(v: Option<u64>) -> Json {
+            match v {
+                Some(id) => Json::u64_str(id),
+                None => Json::Null,
+            }
+        }
+        let mut evs: Vec<(OrdF64, u8, u64, EventSlot)> =
+            self.events.iter().map(|r| r.0).collect();
+        evs.sort_unstable();
+        let events: Vec<Json> = evs
+            .into_iter()
+            .map(|(OrdF64(t), rank, seq, slot)| {
+                let slot = match slot {
+                    EventSlot::Arrival(idx) => {
+                        Json::Arr(vec![Json::Str("arrival".into()), num(idx)])
+                    }
+                    EventSlot::Completion(id, inc) => Json::Arr(vec![
+                        Json::Str("completion".into()),
+                        Json::u64_str(id),
+                        Json::Num(inc as f64),
+                    ]),
+                    EventSlot::Fault => Json::Arr(vec![Json::Str("fault".into())]),
+                    EventSlot::NodeRepair(node) => {
+                        Json::Arr(vec![Json::Str("repair".into()), num(node)])
+                    }
+                };
+                Json::Arr(vec![
+                    Json::f64_bits(t),
+                    Json::Num(rank as f64),
+                    Json::u64_str(seq),
+                    slot,
+                ])
+            })
+            .collect();
+        let failed: Vec<Json> = (0..self.cluster.num_nodes())
+            .filter(|&n| self.cluster.is_failed(n))
+            .map(num)
+            .collect();
+        let mut alloc_ids: Vec<u64> = self.cluster.live_allocations().map(|a| a.job).collect();
+        alloc_ids.sort_unstable();
+        let allocs: Vec<Json> = alloc_ids
+            .iter()
+            .map(|id| {
+                let a = self.cluster.allocation(*id).expect("live allocation");
+                jmap(vec![
+                    ("cubes", Json::Arr(a.cubes.iter().map(|&c| num(c)).collect())),
+                    ("job", Json::u64_str(a.job)),
+                    ("nodes", Json::Arr(a.nodes.iter().map(|&n| num(n)).collect())),
+                    ("ocs_entries", num(a.ocs_entries)),
+                    (
+                        "placed_ext",
+                        Json::Arr(vec![
+                            num(a.placed_ext.0[0]),
+                            num(a.placed_ext.0[1]),
+                            num(a.placed_ext.0[2]),
+                        ]),
+                    ),
+                    (
+                        "rings",
+                        Json::Arr(
+                            a.rings
+                                .iter()
+                                .map(|&(len, closed)| {
+                                    Json::Arr(vec![num(len), Json::Bool(closed)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let ocs: Vec<Json> = self
+            .cluster
+            .ocs()
+            .map(|ocs| {
+                ocs.dump_entries()
+                    .into_iter()
+                    .map(|(k, owner, next)| {
+                        Json::Arr(vec![
+                            num(k.axis),
+                            num(k.i),
+                            num(k.j),
+                            num(k.cube),
+                            Json::u64_str(owner),
+                            match next {
+                                Some(c) => num(c),
+                                None => Json::Null,
+                            },
+                        ])
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut be_ids: Vec<u64> = self.be_rings.keys().copied().collect();
+        be_ids.sort_unstable();
+        let be_rings: Vec<Json> = be_ids
+            .iter()
+            .map(|id| {
+                let rings = &self.be_rings[id];
+                Json::Arr(vec![
+                    Json::u64_str(*id),
+                    Json::Arr(
+                        rings
+                            .iter()
+                            .map(|ring| {
+                                Json::Arr(
+                                    ring.iter()
+                                        .map(|p| {
+                                            Json::Arr(vec![
+                                                num(p.0[0]),
+                                                num(p.0[1]),
+                                                num(p.0[2]),
+                                            ])
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ])
+            })
+            .collect();
+        let outcomes: Vec<Json> = self
+            .outcomes
+            .iter()
+            .map(|(id, o)| match o {
+                JobOutcome::Completed { start, finish } => Json::Arr(vec![
+                    Json::u64_str(*id),
+                    Json::Str("completed".into()),
+                    Json::f64_bits(*start),
+                    Json::f64_bits(*finish),
+                ]),
+                JobOutcome::Dropped => {
+                    Json::Arr(vec![Json::u64_str(*id), Json::Str("dropped".into())])
+                }
+                JobOutcome::NotScheduled => {
+                    Json::Arr(vec![Json::u64_str(*id), Json::Str("not-scheduled".into())])
+                }
+            })
+            .collect();
+        let (rstate, rinc) = self.fault_rng.raw_state();
+        let fault_rng = Json::Arr(vec![
+            Json::u64_str((rstate >> 64) as u64),
+            Json::u64_str(rstate as u64),
+            Json::u64_str((rinc >> 64) as u64),
+            Json::u64_str(rinc as u64),
+        ]);
+        let util: Vec<Json> = self
+            .util
+            .samples()
+            .iter()
+            .map(|&(v, w)| Json::Arr(vec![Json::f64_bits(v), Json::f64_bits(w)]))
+            .collect();
+        let mut migration_due: Vec<u64> = self.migration_due.iter().copied().collect();
+        migration_due.sort_unstable();
+        jmap(vec![
+            ("arrivals_pending", num(self.arrivals_pending)),
+            ("be_rings", Json::Arr(be_rings)),
+            (
+                "cluster",
+                jmap(vec![
+                    ("allocs", Json::Arr(allocs)),
+                    ("failed", Json::Arr(failed)),
+                    ("ocs", Json::Arr(ocs)),
+                ]),
+            ),
+            ("defrag_tried", opt_id(self.defrag_tried)),
+            ("dropped", num(self.dropped)),
+            ("events", Json::Arr(events)),
+            ("fault_rng", fault_rng),
+            (
+                "finish_at",
+                pairs(&self.finish_at, |&v| vec![Json::f64_bits(v)]),
+            ),
+            ("horizon", Json::f64_bits(self.horizon)),
+            ("idx_of", pairs(&self.idx_of, |&v| vec![num(v)])),
+            (
+                "incarnation",
+                pairs(&self.incarnation, |&v| vec![Json::Num(v as f64)]),
+            ),
+            ("job_now", Json::f64_bits(self.job_now)),
+            (
+                "kill_count",
+                pairs(&self.kill_count, |&v| vec![Json::Num(v as f64)]),
+            ),
+            ("last_sample_t", Json::f64_bits(self.last_sample_t)),
+            (
+                "migration_due",
+                Json::Arr(migration_due.into_iter().map(Json::u64_str).collect()),
+            ),
+            ("migration_time", Json::f64_bits(self.migration_time)),
+            ("now", Json::f64_bits(self.now)),
+            ("outcomes", Json::Arr(outcomes)),
+            (
+                "preempt_count",
+                pairs(&self.preempt_count, |&v| vec![Json::Num(v as f64)]),
+            ),
+            ("preempt_round", opt_id(self.preempt_round)),
+            ("preemptions", num(self.preemptions)),
+            (
+                "queue",
+                Json::Arr(self.queue.iter().map(|&i| num(i)).collect()),
+            ),
+            (
+                "remaining_base",
+                pairs(&self.remaining_base, |&v| vec![Json::f64_bits(v)]),
+            ),
+            (
+                "run_info",
+                pairs(&self.run_info, |ri| {
+                    vec![Json::f64_bits(ri.eff), Json::f64_bits(ri.base)]
+                }),
+            ),
+            ("scheduled", num(self.scheduled)),
+            ("seq", Json::u64_str(self.seq)),
+            (
+                "started",
+                pairs(&self.started, |&v| vec![Json::f64_bits(v)]),
+            ),
+            ("submitted", num(self.submitted)),
+            ("util", Json::Arr(util)),
+            ("wasted_work", Json::f64_bits(self.wasted_work)),
+        ])
+    }
+
+    /// Rebuild a simulation from [`snapshot_state`](Self::snapshot_state)
+    /// output. `cfg` must be the configuration of the snapshotted run —
+    /// the service-level envelope (`coordinator::snapshot`) carries and
+    /// re-checks it; the engine snapshot holds dynamic state only. The
+    /// restored engine continues byte-identically: policy caches and
+    /// feasibility memos start cold, but both are decision-invariant.
+    pub fn restore(cfg: SimConfig, state: &Json) -> Result<Simulation, String> {
+        let mut sim = Simulation::new(cfg);
+        // Cluster: failed nodes first (they must be unoccupied), then
+        // allocations (node occupancy + cube-free counters), then the raw
+        // OCS circuits (plain `commit` does not re-reserve entries).
+        let cluster = sget(state, "cluster")?;
+        for node in sarr(cluster, "failed")? {
+            let node = snum(node, "cluster.failed")?;
+            if node >= sim.cluster.num_nodes() || !sim.cluster.fail_node(node) {
+                return Err(snap_err("cluster.failed"));
+            }
+        }
+        for a in sarr(cluster, "allocs")? {
+            let job = sid(sget(a, "job")?, "alloc.job")?;
+            let nodes = sarr(a, "nodes")?
+                .iter()
+                .map(|n| snum(n, "alloc.nodes"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let cubes = sarr(a, "cubes")?
+                .iter()
+                .map(|c| snum(c, "alloc.cubes"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let ocs_entries = snum(sget(a, "ocs_entries")?, "alloc.ocs_entries")?;
+            let mut rings = Vec::new();
+            for r in sarr(a, "rings")? {
+                let row = r.as_arr().ok_or_else(|| snap_err("alloc.rings"))?;
+                let len = snum(
+                    row.first().ok_or_else(|| snap_err("alloc.rings"))?,
+                    "alloc.rings",
+                )?;
+                let closed = match row.get(1) {
+                    Some(Json::Bool(b)) => *b,
+                    _ => return Err(snap_err("alloc.rings")),
+                };
+                rings.push((len, closed));
+            }
+            let ext = sarr(a, "placed_ext")?;
+            if ext.len() != 3 {
+                return Err(snap_err("alloc.placed_ext"));
+            }
+            let placed_ext = crate::topology::P3::new(
+                snum(&ext[0], "alloc.placed_ext")?,
+                snum(&ext[1], "alloc.placed_ext")?,
+                snum(&ext[2], "alloc.placed_ext")?,
+            );
+            sim.cluster.commit(Allocation {
+                job,
+                nodes,
+                cubes,
+                ocs_entries,
+                rings,
+                placed_ext,
+            });
+        }
+        let ocs_dump = sarr(cluster, "ocs")?;
+        if !ocs_dump.is_empty() {
+            let Some(ocs) = sim.cluster.ocs_mut() else {
+                return Err(snap_err("cluster.ocs (topology has no OCS)"));
+            };
+            for e in ocs_dump {
+                let row = e.as_arr().ok_or_else(|| snap_err("cluster.ocs"))?;
+                if row.len() != 6 {
+                    return Err(snap_err("cluster.ocs"));
+                }
+                let key = crate::topology::ocs::PortKey {
+                    axis: snum(&row[0], "ocs.axis")?,
+                    i: snum(&row[1], "ocs.i")?,
+                    j: snum(&row[2], "ocs.j")?,
+                    cube: snum(&row[3], "ocs.cube")?,
+                };
+                let owner = sid(&row[4], "ocs.owner")?;
+                let next = match &row[5] {
+                    Json::Null => None,
+                    other => Some(snum(other, "ocs.next")?),
+                };
+                ocs.restore_entry(key, owner, next);
+            }
+        }
+        // Best-effort ring loads restore by replay: per-cable loads are
+        // integer unit sums, so replay order cannot perturb them.
+        for row in sarr(state, "be_rings")? {
+            let row = row.as_arr().ok_or_else(|| snap_err("be_rings"))?;
+            if row.len() != 2 {
+                return Err(snap_err("be_rings"));
+            }
+            let id = sid(&row[0], "be_rings.id")?;
+            let mut rings: Vec<Vec<crate::topology::P3>> = Vec::new();
+            for ring in row[1].as_arr().ok_or_else(|| snap_err("be_rings"))? {
+                let mut members = Vec::new();
+                for p in ring.as_arr().ok_or_else(|| snap_err("be_rings"))? {
+                    let p = p.as_arr().ok_or_else(|| snap_err("be_rings"))?;
+                    if p.len() != 3 {
+                        return Err(snap_err("be_rings"));
+                    }
+                    members.push(crate::topology::P3::new(
+                        snum(&p[0], "be_rings")?,
+                        snum(&p[1], "be_rings")?,
+                        snum(&p[2], "be_rings")?,
+                    ));
+                }
+                rings.push(members);
+            }
+            let _ = sim.contention.add_job(&rings);
+            sim.be_rings.insert(id, rings);
+        }
+        // Queue, running set, and the per-job bookkeeping maps.
+        sim.queue = sarr(state, "queue")?
+            .iter()
+            .map(|n| snum(n, "queue"))
+            .collect::<Result<VecDeque<_>, _>>()?;
+        for (id, v) in spairs(sarr(state, "started")?, "started", |rest| {
+            sbits(rest.first().ok_or_else(|| snap_err("started"))?, "started")
+        })? {
+            sim.started.insert(id, v);
+        }
+        for (id, v) in spairs(sarr(state, "incarnation")?, "incarnation", |rest| {
+            snum(
+                rest.first().ok_or_else(|| snap_err("incarnation"))?,
+                "incarnation",
+            )
+        })? {
+            sim.incarnation.insert(id, v as u32);
+        }
+        for (id, v) in spairs(sarr(state, "kill_count")?, "kill_count", |rest| {
+            snum(
+                rest.first().ok_or_else(|| snap_err("kill_count"))?,
+                "kill_count",
+            )
+        })? {
+            sim.kill_count.insert(id, v as u32);
+        }
+        for (id, v) in spairs(sarr(state, "finish_at")?, "finish_at", |rest| {
+            sbits(
+                rest.first().ok_or_else(|| snap_err("finish_at"))?,
+                "finish_at",
+            )
+        })? {
+            sim.finish_at.insert(id, v);
+        }
+        for (id, v) in spairs(sarr(state, "idx_of")?, "idx_of", |rest| {
+            snum(rest.first().ok_or_else(|| snap_err("idx_of"))?, "idx_of")
+        })? {
+            sim.idx_of.insert(id, v);
+        }
+        for (id, v) in spairs(sarr(state, "run_info")?, "run_info", |rest| {
+            if rest.len() != 2 {
+                return Err(snap_err("run_info"));
+            }
+            Ok(RunInfo {
+                eff: sbits(&rest[0], "run_info.eff")?,
+                base: sbits(&rest[1], "run_info.base")?,
+            })
+        })? {
+            sim.run_info.insert(id, v);
+        }
+        for (id, v) in spairs(sarr(state, "remaining_base")?, "remaining_base", |rest| {
+            sbits(
+                rest.first().ok_or_else(|| snap_err("remaining_base"))?,
+                "remaining_base",
+            )
+        })? {
+            sim.remaining_base.insert(id, v);
+        }
+        for (id, v) in spairs(sarr(state, "preempt_count")?, "preempt_count", |rest| {
+            snum(
+                rest.first().ok_or_else(|| snap_err("preempt_count"))?,
+                "preempt_count",
+            )
+        })? {
+            sim.preempt_count.insert(id, v as u32);
+        }
+        for id in sarr(state, "migration_due")? {
+            sim.migration_due.insert(sid(id, "migration_due")?);
+        }
+        sim.preempt_round = sopt_id(sget(state, "preempt_round")?, "preempt_round")?;
+        sim.defrag_tried = sopt_id(sget(state, "defrag_tried")?, "defrag_tried")?;
+        // Outcomes (insertion order preserved), utilization integral,
+        // fault RNG stream position, scalars.
+        for row in sarr(state, "outcomes")? {
+            let row = row.as_arr().ok_or_else(|| snap_err("outcomes"))?;
+            let id = sid(row.first().ok_or_else(|| snap_err("outcomes"))?, "outcomes")?;
+            let tag = row
+                .get(1)
+                .and_then(Json::as_str)
+                .ok_or_else(|| snap_err("outcomes"))?;
+            let outcome = match tag {
+                "completed" => JobOutcome::Completed {
+                    start: sbits(
+                        row.get(2).ok_or_else(|| snap_err("outcomes"))?,
+                        "outcomes.start",
+                    )?,
+                    finish: sbits(
+                        row.get(3).ok_or_else(|| snap_err("outcomes"))?,
+                        "outcomes.finish",
+                    )?,
+                },
+                "dropped" => JobOutcome::Dropped,
+                "not-scheduled" => JobOutcome::NotScheduled,
+                _ => return Err(snap_err("outcomes")),
+            };
+            sim.outcomes.push((id, outcome));
+        }
+        let mut samples = Vec::new();
+        for s in sarr(state, "util")? {
+            let s = s.as_arr().ok_or_else(|| snap_err("util"))?;
+            if s.len() != 2 {
+                return Err(snap_err("util"));
+            }
+            samples.push((sbits(&s[0], "util")?, sbits(&s[1], "util")?));
+        }
+        sim.util = WeightedCdf::from_samples(samples);
+        let fr = sarr(state, "fault_rng")?;
+        if fr.len() != 4 {
+            return Err(snap_err("fault_rng"));
+        }
+        let rstate =
+            ((sid(&fr[0], "fault_rng")? as u128) << 64) | sid(&fr[1], "fault_rng")? as u128;
+        let rinc = ((sid(&fr[2], "fault_rng")? as u128) << 64) | sid(&fr[3], "fault_rng")? as u128;
+        sim.fault_rng = Pcg64::from_raw_state(rstate, rinc);
+        sim.now = sbits(sget(state, "now")?, "now")?;
+        sim.last_sample_t = sbits(sget(state, "last_sample_t")?, "last_sample_t")?;
+        sim.job_now = sbits(sget(state, "job_now")?, "job_now")?;
+        sim.horizon = sbits(sget(state, "horizon")?, "horizon")?;
+        sim.wasted_work = sbits(sget(state, "wasted_work")?, "wasted_work")?;
+        sim.migration_time = sbits(sget(state, "migration_time")?, "migration_time")?;
+        sim.arrivals_pending = snum(sget(state, "arrivals_pending")?, "arrivals_pending")?;
+        sim.submitted = snum(sget(state, "submitted")?, "submitted")?;
+        sim.scheduled = snum(sget(state, "scheduled")?, "scheduled")?;
+        sim.dropped = snum(sget(state, "dropped")?, "dropped")?;
+        sim.preemptions = snum(sget(state, "preemptions")?, "preemptions")?;
+        // Events last: raw `(t, rank, seq)` keys preserved, plus the push
+        // counter so future pushes keep globally unique rank-1 keys.
+        for row in sarr(state, "events")? {
+            let row = row.as_arr().ok_or_else(|| snap_err("events"))?;
+            if row.len() != 4 {
+                return Err(snap_err("events"));
+            }
+            let t = sbits(&row[0], "events.t")?;
+            let rank = snum(&row[1], "events.rank")? as u8;
+            let seq = sid(&row[2], "events.seq")?;
+            let slot = row[3].as_arr().ok_or_else(|| snap_err("events.slot"))?;
+            let tag = slot
+                .first()
+                .and_then(Json::as_str)
+                .ok_or_else(|| snap_err("events.slot"))?;
+            let slot = match tag {
+                "arrival" => EventSlot::Arrival(snum(
+                    slot.get(1).ok_or_else(|| snap_err("events.arrival"))?,
+                    "events.arrival",
+                )?),
+                "completion" => EventSlot::Completion(
+                    sid(
+                        slot.get(1).ok_or_else(|| snap_err("events.completion"))?,
+                        "events.completion",
+                    )?,
+                    snum(
+                        slot.get(2).ok_or_else(|| snap_err("events.completion"))?,
+                        "events.completion",
+                    )? as u32,
+                ),
+                "fault" => EventSlot::Fault,
+                "repair" => EventSlot::NodeRepair(snum(
+                    slot.get(1).ok_or_else(|| snap_err("events.repair"))?,
+                    "events.repair",
+                )?),
+                _ => return Err(snap_err("events.slot")),
+            };
+            sim.events.push(Reverse((OrdF64(t), rank, seq, slot)));
+        }
+        sim.seq = sid(sget(state, "seq")?, "seq")?;
+        Ok(sim)
+    }
+}
+
+/// Build a snapshot object from `(key, value)` pairs.
+fn jmap(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn snap_err(what: &str) -> String {
+    format!("snapshot: malformed or missing '{what}'")
+}
+
+fn sget<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| snap_err(key))
+}
+
+fn sarr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    sget(j, key)?.as_arr().ok_or_else(|| snap_err(key))
+}
+
+fn sbits(j: &Json, what: &str) -> Result<f64, String> {
+    j.as_f64_bits().ok_or_else(|| snap_err(what))
+}
+
+fn snum(j: &Json, what: &str) -> Result<usize, String> {
+    j.as_usize().ok_or_else(|| snap_err(what))
+}
+
+fn sid(j: &Json, what: &str) -> Result<u64, String> {
+    j.as_u64_str().ok_or_else(|| snap_err(what))
+}
+
+fn sopt_id(j: &Json, what: &str) -> Result<Option<u64>, String> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(sid(other, what)?)),
+    }
+}
+
+/// Decode `[id, v...]` rows of a sorted u64-keyed map dump.
+fn spairs<V, F: Fn(&[Json]) -> Result<V, String>>(
+    rows: &[Json],
+    what: &str,
+    f: F,
+) -> Result<Vec<(u64, V)>, String> {
+    rows.iter()
+        .map(|row| {
+            let row = row.as_arr().ok_or_else(|| snap_err(what))?;
+            let id = row
+                .first()
+                .and_then(Json::as_u64_str)
+                .ok_or_else(|| snap_err(what))?;
+            Ok((id, f(&row[1..])?))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -1455,6 +2249,117 @@ mod tests {
         assert!(t.repairs <= t.node_failures, "a repair needs a failure");
     }
 
+    /// Run `trace` through the streaming API (per-job `submit` with an
+    /// `advance_before` admission peek, then `drain` + `finalize`) —
+    /// the service loop's exact call sequence.
+    fn run_streamed(mut cfg: SimConfig, trace: &[JobSpec]) -> RunResult {
+        cfg.drain = true;
+        let mut sim = Simulation::new(cfg);
+        for idx in 0..trace.len() {
+            sim.advance_before(trace, trace[idx].arrival);
+            sim.submit(trace, idx);
+        }
+        sim.drain(trace);
+        sim.finalize(trace)
+    }
+
+    fn assert_results_bit_equal(a: &RunResult, b: &RunResult, trace: &[JobSpec]) {
+        assert_eq!(a.outcomes, b.outcomes);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.jcts(trace)), bits(&b.jcts(trace)));
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(
+            a.utilization.mean().to_bits(),
+            b.utilization.mean().to_bits()
+        );
+        assert_eq!(a.useful_util.to_bits(), b.useful_util.to_bits());
+        assert_eq!(a.wasted_work.to_bits(), b.wasted_work.to_bits());
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.scheduled, b.scheduled);
+        assert_eq!(a.dropped, b.dropped);
+    }
+
+    #[test]
+    fn streamed_submission_matches_batch_run() {
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 60,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        for mods in ["", "failures=philly,ocs-latency=5s,stragglers=0.05"] {
+            let mut cfg =
+                SimConfig::new(ClusterTopo::reconfigurable_4096(4), PolicyKind::RFold);
+            cfg.drain = true;
+            cfg.modifiers = ModifierSet::parse(mods).unwrap();
+            let batch = Simulation::new(cfg).run(&trace);
+            let streamed = run_streamed(cfg, &trace);
+            assert_results_bit_equal(&batch, &streamed, &trace);
+        }
+    }
+
+    #[test]
+    fn streamed_preemptive_run_matches_batch() {
+        let trace = two_class_trace();
+        let mut cfg = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+        cfg.drain = true;
+        cfg.modifiers =
+            ModifierSet::parse("preempt=priority,checkpoint=3s,migration-cost=30s").unwrap();
+        let batch = Simulation::new(cfg).run(&trace);
+        let streamed = run_streamed(cfg, &trace);
+        assert_results_bit_equal(&batch, &streamed, &trace);
+    }
+
+    #[test]
+    fn snapshot_restore_mid_run_reproduces_batch_bytes() {
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 60,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        for mods in ["", "failures=philly,ocs-latency=5s,stragglers=0.05"] {
+            let mut cfg =
+                SimConfig::new(ClusterTopo::reconfigurable_4096(4), PolicyKind::RFold);
+            cfg.drain = true;
+            cfg.modifiers = ModifierSet::parse(mods).unwrap();
+            let batch = Simulation::new(cfg).run(&trace);
+
+            // Stream half the trace, snapshot through a JSON text round
+            // trip (the persistence path), abandon the original engine,
+            // and finish the run on the restored one.
+            let mut sim = Simulation::new(cfg);
+            for idx in 0..30 {
+                sim.advance_before(&trace, trace[idx].arrival);
+                sim.submit(&trace, idx);
+            }
+            let wire = sim.snapshot_state().to_string();
+            drop(sim);
+            let state = Json::parse(&wire).expect("snapshot must re-parse");
+            let mut sim = Simulation::restore(cfg, &state).expect("restore");
+            for idx in 30..trace.len() {
+                sim.advance_before(&trace, trace[idx].arrival);
+                sim.submit(&trace, idx);
+            }
+            sim.drain(&trace);
+            let restored = sim.finalize(&trace);
+            assert_results_bit_equal(&batch, &restored, &trace);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_malformed_snapshots() {
+        let cfg = SimConfig::new(ClusterTopo::static_4096(), PolicyKind::FirstFit);
+        let err = Simulation::restore(cfg, &Json::parse("{}").unwrap()).unwrap_err();
+        assert!(err.contains("snapshot"), "{err}");
+        let mut sim = Simulation::new(cfg);
+        let trace = vec![job(0, 0.0, 10.0, JobShape::new(2, 2, 2))];
+        sim.submit(&trace, 0);
+        let mut state = sim.snapshot_state().to_string();
+        state = state.replace("\"queue\"", "\"not-the-queue\"");
+        let err =
+            Simulation::restore(cfg, &Json::parse(&state).unwrap()).unwrap_err();
+        assert!(err.contains("queue"), "{err}");
+    }
+
     #[test]
     fn fault_runs_are_deterministic() {
         let tc = crate::trace::gen::TraceConfig {
@@ -1583,6 +2488,41 @@ mod tests {
         assert_eq!(r.jcts(&trace), vec![1050.0, 10.0]);
         assert_eq!(r.migration_time, 30.0);
         assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn aging_promotes_exhausted_victim_instead_of_excluding_it() {
+        // A cluster-filling class-0 hog is preempted MAX_PREEMPTIONS (3)
+        // times by short class-1 arrivals; a class-2 job then arrives at
+        // t=70. Without aging the hog is immune (excluded from the victim
+        // snapshot) and the class-2 job waits ~1000s behind it; with
+        // `aging=on` the hog is presented one class up (priority 1),
+        // which still yields to the class-2 head — a fourth eviction.
+        let trace = vec![
+            job(0, 0.0, 1000.0, JobShape::new(16, 16, 16)),
+            pjob(1, 10.0, 10.0, JobShape::new(2, 2, 2), 1),
+            pjob(2, 30.0, 10.0, JobShape::new(2, 2, 2), 1),
+            pjob(3, 50.0, 10.0, JobShape::new(2, 2, 2), 1),
+            pjob(4, 70.0, 10.0, JobShape::new(2, 2, 2), 2),
+        ];
+        // Immunity path: 3 evictions, restart at t=60, finish 1060; the
+        // class-2 job runs only after the hog completes.
+        let off = run_with("preempt=priority", &trace);
+        assert_eq!(off.preemptions, 3, "starvation guard caps evictions");
+        assert_eq!(off.jcts(&trace), vec![1060.0, 10.0, 10.0, 10.0, 1000.0]);
+
+        // Aging path: a fourth eviction at t=70, restart at t=80.
+        let aged = run_with("preempt=priority,aging=on", &trace);
+        assert_eq!(aged.preemptions, 4, "aged victim is evictable again");
+        assert_eq!(aged.jcts(&trace), vec![1080.0, 10.0, 10.0, 10.0, 10.0]);
+        assert_eq!(aged.scheduled, 5, "aging never drops the victim");
+
+        // The aged class (1) still outranks an equal-class head: class-1
+        // arrivals cannot evict the promoted hog, so rows with only
+        // class-0/1 traffic keep their no-aging bytes.
+        let peer = run_with("preempt=priority,aging=on", &two_class_trace());
+        let base = run_with("preempt=priority", &two_class_trace());
+        assert_eq!(peer.jcts(&two_class_trace()), base.jcts(&two_class_trace()));
     }
 
     #[test]

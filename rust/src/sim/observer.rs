@@ -272,6 +272,31 @@ impl SchedulerObserver for SharedTelemetry {
     }
 }
 
+/// Per-decision wall-clock latency collector for service telemetry:
+/// records every `decide` call's duration in microseconds so the serve
+/// loop can report p50/p99 decision latency over the daemon's lifetime.
+/// Same `Rc` split as [`SharedTelemetry`]: one clone goes into the
+/// engine as a boxed observer, the other stays with the service thread.
+#[derive(Clone, Default)]
+pub struct DecisionLatency(Rc<RefCell<Vec<f64>>>);
+
+impl DecisionLatency {
+    pub fn new() -> DecisionLatency {
+        DecisionLatency::default()
+    }
+
+    /// All decision latencies recorded so far, in call order (µs).
+    pub fn samples(&self) -> Vec<f64> {
+        self.0.borrow().clone()
+    }
+}
+
+impl SchedulerObserver for DecisionLatency {
+    fn on_decision(&mut self, _t: f64, _job: u64, _decision: &PlacementDecision, wall: Duration) {
+        self.0.borrow_mut().push(wall.as_secs_f64() * 1e6);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

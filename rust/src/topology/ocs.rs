@@ -191,6 +191,41 @@ impl OcsState {
         }
         true
     }
+
+    /// Every entry that deviates from the pristine state (reserved by a
+    /// job, or rewired away from wrap-around), as
+    /// `(key, owner, next_cube)` rows in ascending [`PortKey`] order.
+    /// Feeding the dump to [`restore_entry`](Self::restore_entry) on a
+    /// fresh plant of the same grid reproduces this state exactly.
+    pub fn dump_entries(&self) -> Vec<(PortKey, u64, Option<usize>)> {
+        let mut out = Vec::new();
+        for axis in 0..3 {
+            for i in 0..self.grid.n {
+                for j in 0..self.grid.n {
+                    let pos = self.pos_index(i, j);
+                    for cube in 0..self.grid.num_cubes() {
+                        let owner = self.owner[axis][pos][cube];
+                        let next = self.next[axis][pos][cube];
+                        if owner != NO_OWNER || next != Some(cube) {
+                            out.push((PortKey { axis, i, j, cube }, owner, next));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Overwrite one entry's owner and destination verbatim — the
+    /// snapshot-restore path. Bypasses the reservation checks of
+    /// [`reserve_path`](Self::reserve_path): callers replay a
+    /// [`dump_entries`](Self::dump_entries) capture, which satisfied the
+    /// crossbar invariants when taken.
+    pub fn restore_entry(&mut self, key: PortKey, owner: u64, next: Option<usize>) {
+        let pos = self.pos_index(key.i, key.j);
+        self.owner[key.axis][pos][key.cube] = owner;
+        self.next[key.axis][pos][key.cube] = next;
+    }
 }
 
 /// OCS reservation failures.
@@ -282,6 +317,24 @@ mod tests {
         assert_eq!(o.rewired_entries(), 0);
         assert_eq!(o.reserved_entries(), 0);
         assert!(o.check_invariants());
+    }
+
+    #[test]
+    fn dump_restore_round_trips() {
+        let mut o = ocs();
+        o.reserve_path(2, 1, 1, &[0, 3, 5], true, 7).unwrap();
+        o.reserve_path(0, 2, 2, &[1, 4, 6], false, 9).unwrap();
+        o.reserve_path(1, 2, 3, &[6], true, 42).unwrap();
+        let dump = o.dump_entries();
+        assert!(dump.windows(2).all(|w| w[0].0 < w[1].0), "dump unsorted");
+        let mut fresh = ocs();
+        for &(key, owner, next) in &dump {
+            fresh.restore_entry(key, owner, next);
+        }
+        assert_eq!(fresh.dump_entries(), dump);
+        assert!(fresh.check_invariants());
+        assert_eq!(fresh.reserved_entries(), o.reserved_entries());
+        assert_eq!(fresh.rewired_entries(), o.rewired_entries());
     }
 
     #[test]

@@ -311,6 +311,12 @@ pub struct ModifierSet {
     /// jobs resume from the last completed interval instead of from
     /// scratch. 0 means no checkpoints (full rerun).
     pub checkpoint: f64,
+    /// Priority aging: a job preempted `MAX_PREEMPTIONS` times climbs one
+    /// priority class (+1, higher = more urgent) instead of becoming
+    /// immune to preemption — the starvation guard turns into escalating
+    /// protection rather than a hard exclusion, so a hot head can still
+    /// claim the cluster from a many-times-preempted victim one class up.
+    pub aging: bool,
     /// Base seed of the failure RNG stream; mixed per trial via
     /// [`for_trial`](Self::for_trial) so every trial sees an independent
     /// fault realization.
@@ -327,6 +333,7 @@ impl Default for ModifierSet {
             migration_cost: 0.0,
             defrag: false,
             checkpoint: 0.0,
+            aging: false,
             fault_seed: DEFAULT_FAULT_SEED,
         }
     }
@@ -336,7 +343,7 @@ impl Default for ModifierSet {
 const VALID_MODIFIERS: &str = "valid modifiers: failures=philly|exp:<mtbf>:<repair>:<link-frac>, \
      ocs-latency=<duration, e.g. 500ms|5s|2m|1h>, stragglers=<rate in [0,1]>, \
      preempt=priority|srtf, migration-cost=<duration>, defrag=idle|off, \
-     checkpoint=<duration>, seed=<u64>";
+     checkpoint=<duration>, aging=on|off, seed=<u64>";
 
 /// Parse a duration with an optional `ms`/`s`/`m`/`h` suffix (bare
 /// numbers are seconds) into seconds.
@@ -410,6 +417,17 @@ impl ModifierSet {
                     out.checkpoint =
                         parse_duration(value).map_err(|e| format!("checkpoint: {e}"))?;
                 }
+                "aging" => {
+                    out.aging = match value {
+                        "on" => true,
+                        "off" => false,
+                        other => {
+                            return Err(format!(
+                                "unknown aging mode '{other}'; known: on, off"
+                            ));
+                        }
+                    };
+                }
                 "seed" => {
                     out.fault_seed = value
                         .parse()
@@ -477,6 +495,9 @@ impl ModifierSet {
         }
         if self.checkpoint > 0.0 {
             parts.push(format!("checkpoint={}s", self.checkpoint));
+        }
+        if self.aging {
+            parts.push("aging=on".to_string());
         }
         if self.fault_seed != DEFAULT_FAULT_SEED {
             parts.push(format!("seed={}", self.fault_seed));
@@ -846,6 +867,15 @@ mod tests {
         assert!(!ModifierSet::parse("defrag=off").unwrap().defrag);
         assert!(ModifierSet::parse("defrag=off").unwrap().is_empty());
 
+        // Aging is a preemption-shaping knob, not a disruption source: it
+        // only changes which victims a preemptive head may take, so on its
+        // own it must not flip the disruption bookkeeping on.
+        let a = ModifierSet::parse("aging=on").unwrap();
+        assert!(a.aging && !a.has_disruption() && !a.is_empty());
+        assert!(ModifierSet::parse("aging=off").unwrap().is_empty());
+        let err = ModifierSet::parse("aging=maybe").unwrap_err();
+        assert!(err.contains("unknown aging mode 'maybe'"), "{err}");
+
         // The default set leaves every disruption path disabled.
         let d = ModifierSet::default();
         assert_eq!(d.preempt, None);
@@ -876,6 +906,8 @@ mod tests {
             "preempt=priority,migration-cost=30s,defrag=idle",
             "preempt=srtf,checkpoint=10m,seed=5",
             "failures=philly,preempt=priority,checkpoint=1h",
+            "preempt=priority,aging=on",
+            "failures=philly,preempt=srtf,aging=on,seed=9",
         ] {
             let m = ModifierSet::parse(spec).unwrap();
             let fp = m.fingerprint();

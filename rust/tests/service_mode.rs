@@ -1,0 +1,241 @@
+//! Service-mode determinism bridge and soak tests.
+//!
+//! The contract under test: `rfold serve` is the *same scheduler* as
+//! `rfold simulate`, not a lookalike. A trace replayed into a live
+//! daemon (any wall-clock pacing) and drained must produce `ROW` lines
+//! byte-identical to a closed-loop batch run of the accepted jobs, and
+//! a snapshot→kill→restore cycle mid-run must lose no accepted job and
+//! reproduce those exact bytes.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use rfold::coordinator::pool;
+use rfold::coordinator::serve::{spawn_server_on, submit_trace};
+use rfold::coordinator::snapshot;
+use rfold::metrics::report;
+use rfold::placement::builtins;
+use rfold::shape::JobShape;
+use rfold::sim::{SimConfig, Simulation};
+use rfold::topology::cluster::ClusterTopo;
+use rfold::trace::scenarios::ModifierSet;
+use rfold::trace::{self, JobSpec};
+use rfold::util::json::Json;
+
+fn synthetic_trace(jobs: usize, seed: u64) -> Vec<JobSpec> {
+    trace::gen::generate(&trace::gen::TraceConfig {
+        num_jobs: jobs,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// The reference bytes: a closed-loop batch run's outcome rows.
+fn batch_rows(cfg: SimConfig, t: &[JobSpec]) -> Vec<String> {
+    let r = Simulation::new(cfg).run(t);
+    report::outcome_rows(&r, t)
+}
+
+/// A raw line-protocol client, for the commands `submit_trace` doesn't
+/// issue (SNAPSHOT, SHUTDOWN, malformed input).
+struct Client {
+    out: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        Client {
+            out: stream.try_clone().expect("clone"),
+            reader: BufReader::new(stream),
+        }
+    }
+
+    fn cmd(&mut self, line: &str) -> String {
+        writeln!(self.out, "{line}").expect("write");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read");
+        assert!(!reply.is_empty(), "daemon closed on: {line}");
+        reply.trim().to_string()
+    }
+}
+
+fn status_field(status: &str, key: &str) -> usize {
+    let j = Json::parse(status.strip_prefix("STATUS ").expect("STATUS prefix"))
+        .expect("status json");
+    j.get(key)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("no usize field '{key}' in {status}"))
+}
+
+#[test]
+fn streamed_replay_matches_batch_rows() {
+    // Plain and fault-injected: the daemon must match batch bytes even
+    // when the engine is drawing from the fault RNG between arrivals.
+    for mods in ["", "failures=philly,ocs-latency=5s,stragglers=0.05"] {
+        let mut cfg =
+            SimConfig::new(ClusterTopo::reconfigurable_4096(4), builtins::RFOLD);
+        cfg.modifiers = ModifierSet::parse(mods).expect("mods").for_trial(7);
+        let t = synthetic_trace(60, 11);
+        let expect = batch_rows(cfg, &t);
+
+        let (addr, _handle, join) =
+            spawn_server_on("127.0.0.1:0", cfg, 1024, None).expect("bind");
+        let s = submit_trace(&addr.to_string(), &t, 0.0, true).expect("submit");
+        assert_eq!(s.accepted, t.len(), "mods '{mods}': every job admitted");
+        assert_eq!(s.rejected, 0, "mods '{mods}'");
+        assert_eq!(s.errors, 0, "mods '{mods}'");
+        assert_eq!(s.rows, expect, "mods '{mods}': daemon bytes != batch bytes");
+
+        assert_eq!(Client::connect(addr).cmd("SHUTDOWN"), "BYE");
+        join.join().expect("service thread");
+    }
+}
+
+#[test]
+fn snapshot_kill_restore_preserves_bytes() {
+    let mut cfg = SimConfig::new(ClusterTopo::static_4096(), builtins::FIRST_FIT);
+    cfg.modifiers = ModifierSet::parse("preempt=priority,checkpoint=3s,migration-cost=30s")
+        .expect("mods")
+        .for_trial(3);
+    let t = synthetic_trace(60, 3);
+    let expect = batch_rows(cfg, &t);
+    let snap_path = std::env::temp_dir()
+        .join(format!("rfold-service-snap-{}.txt", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+
+    // First daemon: accept half the trace, snapshot, die.
+    let (addr, _handle, join) =
+        spawn_server_on("127.0.0.1:0", cfg, 1024, None).expect("bind");
+    let s = submit_trace(&addr.to_string(), &t[..30], 0.0, false).expect("submit");
+    assert_eq!((s.accepted, s.rejected, s.errors), (30, 0, 0));
+    let mut c = Client::connect(addr);
+    let reply = c.cmd(&format!("SNAPSHOT {snap_path}"));
+    assert!(reply.starts_with("SNAPSHOT-OK"), "{reply}");
+    let status = c.cmd("STATUS");
+    assert_eq!(status_field(&status, "admitted"), 30);
+    assert_eq!(c.cmd("SHUTDOWN"), "BYE");
+    join.join().expect("service thread");
+
+    // Second daemon: restore, finish the trace, drain.
+    let snap = snapshot::load(&snap_path).expect("load snapshot");
+    assert_eq!(snap.jobs.len(), 30);
+    assert_eq!(snap.submitted, 30);
+    let (addr2, _handle2, join2) =
+        spawn_server_on("127.0.0.1:0", cfg, 1024, Some(snap)).expect("bind");
+    let s = submit_trace(&addr2.to_string(), &t[30..], 0.0, true).expect("submit");
+    assert_eq!((s.accepted, s.rejected, s.errors), (30, 0, 0));
+    assert_eq!(
+        s.rows, expect,
+        "restore lost or perturbed state: drained bytes != uninterrupted batch bytes"
+    );
+    assert_eq!(Client::connect(addr2).cmd("SHUTDOWN"), "BYE");
+    join2.join().expect("service thread");
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+#[test]
+fn malformed_submit_keeps_connection_serving() {
+    let cfg = SimConfig::new(ClusterTopo::static_4096(), builtins::FIRST_FIT);
+    let (addr, _handle, join) =
+        spawn_server_on("127.0.0.1:0", cfg, 1024, None).expect("bind");
+    let mut c = Client::connect(addr);
+    // Garbage, wrong JSON shape, unknown verb: all ERR, none fatal.
+    assert!(c.cmd("SUBMIT {not json").starts_with("ERR bad job json"));
+    assert!(c.cmd("SUBMIT [1,2,3]").starts_with("ERR bad job"));
+    assert!(c.cmd("FROBNICATE").starts_with("ERR unknown command"));
+    // The same connection still schedules real work.
+    let job = JobSpec {
+        id: 0,
+        arrival: 0.0,
+        duration: 10.0,
+        shape: JobShape::new(2, 2, 2),
+        comm_frac: 0.1,
+        priority: 0,
+    };
+    assert!(c.cmd(&format!("SUBMIT {}", pool::job_json(&job))).starts_with("OK "));
+    let status = c.cmd("STATUS");
+    assert_eq!(status_field(&status, "submitted"), 1, "garbage counted: {status}");
+    assert_eq!(status_field(&status, "admitted"), 1);
+    assert_eq!(c.cmd("SHUTDOWN"), "BYE");
+    join.join().expect("service thread");
+}
+
+#[test]
+fn queue_cap_rejects_over_tcp() {
+    let cfg = SimConfig::new(ClusterTopo::static_4096(), builtins::FIRST_FIT);
+    let (addr, _handle, join) =
+        spawn_server_on("127.0.0.1:0", cfg, 1, None).expect("bind");
+    let mut c = Client::connect(addr);
+    let big = |id: u64| JobSpec {
+        id,
+        arrival: id as f64,
+        duration: 1000.0,
+        shape: JobShape::new(16, 16, 16),
+        comm_frac: 0.1,
+        priority: 0,
+    };
+    // Job 0 fills the cluster, job 1 queues (cap reached), job 2 bounces.
+    assert!(c.cmd(&format!("SUBMIT {}", pool::job_json(&big(0)))).starts_with("OK "));
+    assert!(c.cmd(&format!("SUBMIT {}", pool::job_json(&big(1)))).starts_with("OK "));
+    let reply = c.cmd(&format!("SUBMIT {}", pool::job_json(&big(2))));
+    assert!(reply.starts_with("REJECT "), "{reply}");
+    let j = Json::parse(reply.strip_prefix("REJECT ").unwrap()).expect("reject json");
+    assert_eq!(j.get("queue_cap").and_then(Json::as_usize), Some(1));
+    // The drain covers exactly the two accepted jobs.
+    let drain_rows: Vec<String> = {
+        writeln!(c.out, "DRAIN").expect("write");
+        let mut rows = Vec::new();
+        loop {
+            let mut line = String::new();
+            c.reader.read_line(&mut line).expect("read");
+            let line = line.trim().to_string();
+            if line.starts_with("DRAIN-OK") {
+                assert_eq!(line, "DRAIN-OK rows=2");
+                break;
+            }
+            rows.push(line);
+        }
+        rows
+    };
+    assert_eq!(drain_rows.len(), 2);
+    assert!(drain_rows.iter().all(|r| r.starts_with("ROW ")));
+    assert_eq!(c.cmd("SHUTDOWN"), "BYE");
+    join.join().expect("service thread");
+}
+
+/// The CI soak: replay the recorded Philly sample into a live daemon at
+/// high speedup and check the daemon's telemetry is self-consistent.
+#[test]
+fn philly_soak_is_self_consistent() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/philly_sample.csv");
+    let t = trace::io::read_csv(&path).expect("read philly sample");
+    assert!(!t.is_empty());
+    let mut cfg = SimConfig::new(ClusterTopo::reconfigurable_4096(4), builtins::RFOLD);
+    cfg.modifiers = ModifierSet::parse("").expect("mods").for_trial(1);
+    let expect = batch_rows(cfg, &t);
+
+    let (addr, _handle, join) =
+        spawn_server_on("127.0.0.1:0", cfg, 1024, None).expect("bind");
+    // A real (finite) speedup exercises the pacing path; 1e9x compresses
+    // the sample's hours of arrivals into microseconds of wall clock.
+    let s = submit_trace(&addr.to_string(), &t, 1e9, true).expect("submit");
+    assert_eq!(s.accepted + s.rejected, t.len(), "every job got a verdict");
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.rows.len(), s.accepted, "one row per accepted job");
+    assert_eq!(s.rows, expect, "soak bytes != batch bytes");
+
+    let mut c = Client::connect(addr);
+    let status = c.cmd("STATUS");
+    assert_eq!(status_field(&status, "submitted"), t.len());
+    assert_eq!(
+        status_field(&status, "admitted") + status_field(&status, "rejected"),
+        t.len()
+    );
+    assert!(status.contains("\"drained\":true"), "{status}");
+    assert_eq!(c.cmd("SHUTDOWN"), "BYE");
+    join.join().expect("service thread");
+}
