@@ -1,0 +1,103 @@
+//! Scale curve: decision latency and memory as the static torus grows
+//! from the paper's 16³ toward a 64k-node machine (8³ → 16×16×256).
+//!
+//! Each extent runs the same workload through the FIFO engine (FirstFit,
+//! so the cost measured is the topology/placement substrate, not policy
+//! search), times a fresh `OccupancySums` build against a single-flip
+//! incremental refresh, and records a peak-RSS proxy read from
+//! `/proc/self/status` (`VmHWM`, kB; 0 where procfs is unavailable).
+//! The RSS rows reuse the `ns_per_iter` JSON field to carry kB — the
+//! name says so — because CI's perf-trajectory tooling reads one fixed
+//! schema.
+//!
+//! `BENCH_SMOKE=1` truncates iteration counts; `BENCH_JSON=<path>`
+//! (CI uses `BENCH_scale.json`) writes machine-readable rows.
+
+use rfold::placement::builtins;
+use rfold::placement::static_place::OccupancySums;
+use rfold::sim::engine::{SimConfig, Simulation};
+use rfold::topology::cluster::{ClusterState, ClusterTopo};
+use rfold::topology::P3;
+use rfold::util::bench::{bench, section, smoke_iters, write_json_env, BenchResult};
+
+const EXTENTS: [[usize; 3]; 4] = [[8, 8, 8], [16, 16, 16], [16, 16, 64], [16, 16, 256]];
+const JOBS: usize = 96;
+
+/// Peak resident set size in kB (`VmHWM`), or 0.0 off-Linux.
+fn peak_rss_kb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0.0)
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    // One trace for every extent: the curve is "same workload, growing
+    // machine". Shapes a small torus cannot fit are dropped by the
+    // engine's infeasible-shape path, which is itself part of the cost.
+    let trace = rfold::trace::gen::generate(&rfold::trace::gen::TraceConfig {
+        num_jobs: JOBS,
+        ..Default::default()
+    });
+
+    for ext in EXTENTS {
+        let label = format!("{}x{}x{}", ext[0], ext[1], ext[2]);
+        let topo = ClusterTopo::Static { ext: P3(ext) };
+        section(&format!("static torus {label} ({} nodes)", topo.num_xpus()));
+
+        let r = bench(
+            &format!("sim {JOBS} jobs FirstFit {label}"),
+            smoke_iters(1),
+            smoke_iters(3),
+            || {
+                Simulation::new(SimConfig::new(topo, builtins::FIRST_FIT))
+                    .run(&trace)
+                    .scheduled
+            },
+        );
+        eprintln!(
+            "  ({} ns/decision over {JOBS} jobs)",
+            (r.mean_ns / JOBS as f64).round()
+        );
+        results.push(r);
+
+        let cluster = ClusterState::new(topo);
+        results.push(bench(
+            &format!("OccupancySums fresh build {label}"),
+            smoke_iters(3),
+            smoke_iters(20),
+            || OccupancySums::build(&cluster),
+        ));
+        // The incremental path a release/commit actually pays: one node
+        // flips, only the suffix region past it refreshes. A trailing
+        // node is the common case (new jobs pack low, release high);
+        // the fresh-build row above is the worst case (node 0 flips).
+        let mut sums = OccupancySums::build(&cluster);
+        let last = cluster.num_nodes() - 1;
+        results.push(bench(
+            &format!("OccupancySums apply_flips trailing node {label}"),
+            smoke_iters(3),
+            smoke_iters(20),
+            || sums.apply_flips(&cluster, &[(last, true)]),
+        ));
+
+        let rss = peak_rss_kb();
+        let rss_row = BenchResult {
+            name: format!("peak_rss_kb after {label}"),
+            iters: 1,
+            mean_ns: rss,
+            p50_ns: rss,
+            p99_ns: rss,
+        };
+        rss_row.print();
+        results.push(rss_row);
+    }
+
+    write_json_env(&results);
+}

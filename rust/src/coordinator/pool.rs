@@ -38,7 +38,7 @@
 //! Per-worker statistics are reported on stderr only (see
 //! `metrics::report::print_pool_telemetry`).
 
-use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -231,6 +231,30 @@ fn workload_json(w: &Workload) -> Json {
     }
 }
 
+/// Delta form of [`workload_json`] (`--pool-delta`): a CSV job list whose
+/// content hash is already in `sent` travels as a `csv-ref` — name plus
+/// FNV-1a content hash — instead of the full inline list; the first
+/// occurrence records the hash and ships inline as usual. The receiving
+/// connection resolves refs against the traces it decoded earlier
+/// ([`CsvCache`]), so a grid of many trials over one recorded trace pays
+/// the job-list bytes once per connection, not once per trial. Synthetic
+/// workloads are untouched (they already travel as a name).
+fn workload_json_delta(w: &Workload, sent: &mut HashSet<u64>) -> Json {
+    if let Workload::Csv {
+        name, content_hash, ..
+    } = w
+    {
+        if !sent.insert(*content_hash) {
+            return obj(vec![
+                ("kind", Json::Str("csv-ref".into())),
+                ("name", Json::Str(name.clone())),
+                ("hash", Json::u64_str(*content_hash)),
+            ]);
+        }
+    }
+    workload_json(w)
+}
+
 fn parse_workload(j: &Json) -> Result<Workload, String> {
     match need_str(j, "kind")? {
         "synthetic" => {
@@ -255,10 +279,23 @@ fn parse_workload(j: &Json) -> Result<Workload, String> {
 /// only when non-empty — a modifier-free item's wire bytes are exactly
 /// what older workers expect.
 pub fn encode_work_item(item: &WorkItem) -> String {
+    encode_item_with(item, workload_json(&item.cfg.workload))
+}
+
+/// [`encode_work_item`] with the `csv-ref` delta encoding: repeated CSV
+/// job lists on one connection travel by content hash (`--pool-delta`).
+/// `sent_csv` is the connection's sent-hash set — it must live as long as
+/// the connection, and must start empty on a fresh one (the peer's
+/// [`CsvCache`] is per-connection too).
+pub fn encode_work_item_delta(item: &WorkItem, sent_csv: &mut HashSet<u64>) -> String {
+    encode_item_with(item, workload_json_delta(&item.cfg.workload, sent_csv))
+}
+
+fn encode_item_with(item: &WorkItem, workload: Json) -> String {
     let mut pairs = vec![
         ("policy", Json::Str(item.cell.policy.key().into())),
         ("topo", topo_json(item.cell.topo)),
-        ("workload", workload_json(&item.cfg.workload)),
+        ("workload", workload),
         ("jobs", Json::Num(item.cfg.jobs_per_run as f64)),
         ("seed", Json::u64_str(item.seed())),
         (
@@ -308,10 +345,26 @@ impl RemoteWorkItem {
     }
 }
 
+/// Per-connection CSV trace cache for the `csv-ref` delta encoding:
+/// content hash → the workload received inline earlier on the same
+/// connection (clones share the `Arc<[JobSpec]>` job list). A fresh
+/// connection starts empty, mirroring the leader's sent-hash set.
+pub type CsvCache = HashMap<u64, Workload>;
+
+/// Decode a `TRIAL` body with no connection cache: `csv-ref` items are
+/// rejected (the stateless path — exactly what a pre-delta worker does).
+pub fn decode_work_item(body: &str) -> Result<RemoteWorkItem, String> {
+    decode_work_item_cached(body, &mut CsvCache::new())
+}
+
 /// Decode a `TRIAL` body. The policy is resolved through the global
 /// registry — an unknown key means leader and worker binaries disagree,
-/// reported as a wire error rather than a panic.
-pub fn decode_work_item(body: &str) -> Result<RemoteWorkItem, String> {
+/// reported as a wire error rather than a panic. An inline CSV workload
+/// is recorded in `cache` under its content hash; a `csv-ref` workload
+/// resolves against it, and a miss (leader bug, or a ref sent to a fresh
+/// connection) is a wire error — the `ERR` reply routes the item to
+/// another host or the leader fallback, never a silent wrong trace.
+pub fn decode_work_item_cached(body: &str, cache: &mut CsvCache) -> Result<RemoteWorkItem, String> {
     let j = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
     let key = need_str(&j, "policy")?;
     let policy = PolicyRegistry::global().resolve(key).ok_or_else(|| {
@@ -341,10 +394,27 @@ pub fn decode_work_item(body: &str) -> Result<RemoteWorkItem, String> {
             ModifierSet::parse(s).map_err(|e| format!("bad 'mods': {e}"))?
         }
     };
+    let wj = need(&j, "workload")?;
+    let workload = match need_str(wj, "kind")? {
+        "csv-ref" => {
+            let hash = need_u64(wj, "hash")?;
+            cache
+                .get(&hash)
+                .cloned()
+                .ok_or_else(|| format!("csv-ref {hash:016x}: trace not in connection cache"))?
+        }
+        _ => {
+            let w = parse_workload(wj)?;
+            if let Workload::Csv { content_hash, .. } = &w {
+                cache.insert(*content_hash, w.clone());
+            }
+            w
+        }
+    };
     Ok(RemoteWorkItem {
         policy,
         topo: parse_topo(need(&j, "topo")?)?,
-        workload: parse_workload(need(&j, "workload")?)?,
+        workload,
         jobs_per_run: need_usize(&j, "jobs")?,
         seed: need_u64(&j, "seed")?,
         fold_dims,
@@ -466,8 +536,17 @@ pub fn decode_run_result(body: &str, policy: PolicyHandle) -> Result<RunResult, 
 // Worker daemon
 // ---------------------------------------------------------------------------
 
-/// Execute one protocol line; `None` means close the connection.
+/// Execute one protocol line statelessly (`csv-ref` items are rejected);
+/// `None` means close the connection. Kept for compatibility and tests —
+/// the worker daemon serves connections through
+/// [`worker_dispatch_cached`] so the delta encoding works.
 pub fn worker_dispatch(line: &str) -> Option<String> {
+    worker_dispatch_cached(line, &mut CsvCache::new())
+}
+
+/// Execute one protocol line against a per-connection [`CsvCache`];
+/// `None` means close the connection.
+pub fn worker_dispatch_cached(line: &str, cache: &mut CsvCache) -> Option<String> {
     if line.is_empty() {
         return Some(String::new());
     }
@@ -478,7 +557,7 @@ pub fn worker_dispatch(line: &str) -> Option<String> {
         return Some("PONG".into());
     }
     if let Some(body) = line.strip_prefix("TRIAL ") {
-        return Some(match decode_work_item(body) {
+        return Some(match decode_work_item_cached(body, cache) {
             Ok(item) => format!("RESULT {}", encode_run_result(&item.run())),
             Err(e) => format!("ERR {e}"),
         });
@@ -490,8 +569,13 @@ pub fn worker_dispatch(line: &str) -> Option<String> {
 /// (`coordinator::server::serve_lines`): a non-UTF-8 line earns an `ERR`
 /// reply and the connection keeps serving — a flaky peer must not take a
 /// pool worker down; genuine I/O errors close the connection quietly.
+/// The CSV trace cache lives exactly as long as the connection, matching
+/// the leader's per-connection sent-hash set.
 fn handle_worker_conn(stream: TcpStream) {
-    let _ = super::server::serve_lines(stream, worker_dispatch);
+    let mut cache = CsvCache::new();
+    let _ = super::server::serve_lines(stream, move |line: &str| {
+        worker_dispatch_cached(line, &mut cache)
+    });
 }
 
 /// Serve trials on an already-bound listener (blocking). Each connection
@@ -584,6 +668,10 @@ pub struct PoolExecutor {
     /// Unanswered `TRIAL`s kept in flight per connection
     /// (`--pool-pipeline`; default 1 = strict request/reply).
     pipeline: usize,
+    /// `--pool-delta`: send repeated CSV job lists as `csv-ref` content
+    /// hashes after the first inline transfer on each connection. Off by
+    /// default — the inline encoding is what pre-delta workers accept.
+    csv_delta: bool,
     read_timeout: Duration,
     stats: Mutex<PoolStats>,
 }
@@ -612,9 +700,21 @@ impl PoolExecutor {
             addrs,
             connections: 1,
             pipeline: 1,
+            csv_delta: false,
             read_timeout: POOL_READ_TIMEOUT,
             stats: Mutex::new(PoolStats::default()),
         }
+    }
+
+    /// Enable the `csv-ref` delta encoding (the CLI's `--pool-delta`):
+    /// after the first trial ships a CSV job list inline, later trials on
+    /// the same connection reference it by content hash. Workers predating
+    /// the encoding answer refs with `ERR`, so the item retries elsewhere
+    /// or falls back to the leader — rows stay byte-identical either way,
+    /// which is why this is opt-in rather than sniffed.
+    pub fn with_csv_delta(mut self, on: bool) -> PoolExecutor {
+        self.csv_delta = on;
+        self
     }
 
     /// Keep `k` unanswered `TRIAL`s in flight per connection (the CLI's
@@ -714,6 +814,10 @@ impl PoolExecutor {
         // rejects everything (version skew, garbage speaker) is abandoned
         // rather than fed the whole grid one failure at a time.
         let mut consecutive_errs = 0usize;
+        // Hashes of CSV job lists already shipped inline on *this*
+        // connection (`--pool-delta`); the peer's decode cache has the
+        // same per-connection lifetime by construction.
+        let mut sent_csv: HashSet<u64> = HashSet::new();
         // Request window: indices written but not yet answered, oldest
         // first. The worker serializes trials per connection and replies
         // in request order, so reply k pairs with `inflight[0]` at the
@@ -727,7 +831,12 @@ impl PoolExecutor {
         'conn: loop {
             while inflight.len() < self.pipeline {
                 let Some(i) = next(host) else { break };
-                if writeln!(out, "TRIAL {}", encode_work_item(&items[i])).is_err() {
+                let body = if self.csv_delta {
+                    encode_work_item_delta(&items[i], &mut sent_csv)
+                } else {
+                    encode_work_item(&items[i])
+                };
+                if writeln!(out, "TRIAL {body}").is_err() {
                     fail(i, host, false);
                     for j in inflight.drain(..) {
                         fail(j, host, false);
@@ -1127,6 +1236,77 @@ mod tests {
         let bad = wire.replace("philly", "weird-model");
         let err = decode_work_item(&bad).unwrap_err();
         assert!(err.contains("bad 'mods'"), "{err}");
+    }
+
+    #[test]
+    fn csv_delta_refs_repeated_traces_by_hash() {
+        let jobs = generate(&TraceConfig {
+            num_jobs: 5,
+            seed: 11,
+            ..Default::default()
+        });
+        let it = item(Workload::from_jobs("delta-test".into(), jobs));
+        let mut sent = HashSet::new();
+        let first = encode_work_item_delta(&it, &mut sent);
+        let second = encode_work_item_delta(&it, &mut sent);
+        assert!(first.contains("\"trace\""), "first send ships inline");
+        assert!(second.contains("csv-ref"), "repeat sends a reference");
+        assert!(second.len() < first.len(), "the ref is the savings");
+        // One connection-lifetime cache resolves the ref to the exact
+        // trace the inline send delivered.
+        let mut cache = CsvCache::new();
+        let a = decode_work_item_cached(&first, &mut cache).unwrap();
+        let b = decode_work_item_cached(&second, &mut cache).unwrap();
+        assert_eq!(a.workload.cache_key(), b.workload.cache_key());
+        assert_eq!(&a.workload.trace(0, 0)[..], &b.workload.trace(0, 0)[..]);
+        // Synthetic workloads never delta-encode: same bytes every time.
+        let sy = item(Workload::Synthetic(Scenario::PaperDefault));
+        let mut sent2 = HashSet::new();
+        assert_eq!(
+            encode_work_item_delta(&sy, &mut sent2),
+            encode_work_item(&sy)
+        );
+        assert_eq!(
+            encode_work_item_delta(&sy, &mut sent2),
+            encode_work_item(&sy)
+        );
+    }
+
+    #[test]
+    fn csv_ref_against_a_cold_cache_is_a_wire_error() {
+        let jobs = generate(&TraceConfig {
+            num_jobs: 4,
+            seed: 12,
+            ..Default::default()
+        });
+        let it = item(Workload::from_jobs("cold".into(), jobs));
+        let mut sent = HashSet::new();
+        let _inline = encode_work_item_delta(&it, &mut sent);
+        let reference = encode_work_item_delta(&it, &mut sent);
+        // The stateless decode path — effectively what a pre-delta worker
+        // does — must reject the ref, not fabricate a trace.
+        let err = decode_work_item(&reference).unwrap_err();
+        assert!(err.contains("csv-ref"), "{err}");
+        let reply = worker_dispatch(&format!("TRIAL {reference}")).unwrap();
+        assert!(reply.starts_with("ERR"), "{reply}");
+    }
+
+    #[test]
+    fn cached_dispatch_answers_refs_identically_to_inline() {
+        let jobs = generate(&TraceConfig {
+            num_jobs: 6,
+            seed: 13,
+            ..Default::default()
+        });
+        let it = item(Workload::from_jobs("conn".into(), jobs));
+        let mut sent = HashSet::new();
+        let inline_line = format!("TRIAL {}", encode_work_item_delta(&it, &mut sent));
+        let ref_line = format!("TRIAL {}", encode_work_item_delta(&it, &mut sent));
+        let mut cache = CsvCache::new();
+        let r1 = worker_dispatch_cached(&inline_line, &mut cache).unwrap();
+        let r2 = worker_dispatch_cached(&ref_line, &mut cache).unwrap();
+        assert!(r1.starts_with("RESULT "), "{r1}");
+        assert_eq!(r1, r2, "a ref trial must produce the inline trial's bytes");
     }
 
     #[test]

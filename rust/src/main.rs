@@ -50,7 +50,10 @@ use rfold::util::Pcg64;
 
 fn main() {
     let cmd = std::env::args().nth(1).unwrap_or_default();
-    let args = Args::from_env(2, &["static", "folds", "quiet", "xla", "rows", "drain"]);
+    let args = Args::from_env(
+        2,
+        &["static", "folds", "quiet", "xla", "rows", "drain", "pool-delta"],
+    );
     match cmd.as_str() {
         "table1" => table1(&args),
         "fig3" => fig3(&args),
@@ -94,7 +97,9 @@ fn usage() -> &'static str {
      remote core, default 1) \
      --pool-pipeline K (in-flight trials per connection, default 1; hides RTT on \
      high-latency links, byte-identical output for any K) \
-     --pool-timeout S (per-trial reply timeout, default 600, 0 = none)\n\
+     --pool-timeout S (per-trial reply timeout, default 600, 0 = none) \
+     --pool-delta (send repeated CSV job lists by content hash; needs new workers) \
+     --cache-bytes N (resident result-cache bound, default 268435456)\n\
      worker options: --listen A (default 127.0.0.1:7171)\n\
      simulate options: --trace-file F (replay a recorded CSV trace) \
      --rows (print one ROW {json} per job outcome — the service-mode determinism bridge)\n\
@@ -267,12 +272,29 @@ fn sweep_cmd(args: &Args) {
                 rfold::coordinator::pool::PoolExecutor::new(addrs)
                     .with_connections(args.get_usize("pool-connections", 1))
                     .with_pipeline(args.get_usize("pool-pipeline", 1))
+                    .with_csv_delta(args.flag("pool-delta"))
                     .with_read_timeout(std::time::Duration::from_secs(
                         args.get_u64("pool-timeout", 600),
                     )),
             )
         }
         None => Box::new(sweep::LocalExecutor::new(workers)),
+    };
+    // `--cache-bytes` bounds the resident result cache. At the default
+    // the process-global cache is kept (so `rfold all` subcommands share
+    // trials); any other value gets a sweep-local cache with that exact
+    // bound. Eviction policy is unchanged: oldest unpinned half first.
+    let cache_bytes = args.get_usize("cache-bytes", sweep::MAX_RESIDENT_BYTES);
+    if cache_bytes == 0 {
+        eprintln!("--cache-bytes must be >= 1");
+        std::process::exit(2);
+    }
+    let local_cache;
+    let cache = if cache_bytes == sweep::MAX_RESIDENT_BYTES {
+        sweep::ResultCache::global()
+    } else {
+        local_cache = sweep::ResultCache::with_capacity(cache_bytes);
+        &local_cache
     };
     let rows = sweep::run_grid_with(
         &cells,
@@ -281,7 +303,7 @@ fn sweep_cmd(args: &Args) {
         jobs,
         seed,
         modifiers,
-        sweep::ResultCache::global(),
+        cache,
         executor.as_ref(),
     );
     report::print_sweep(&rows);

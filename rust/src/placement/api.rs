@@ -339,22 +339,34 @@ impl PolicyCore {
         }
     }
 
-    /// The spatial index for `cluster`'s current occupancy, built at most
-    /// once per epoch: a cached index whose epoch matches is returned
-    /// as-is; anything else (stale epoch, different cluster, first call)
-    /// triggers one O(V) rebuild. Epochs are globally unique per
-    /// occupancy state, so a matching epoch *proves* the bitmap is the
-    /// one the index was built from — including across the empty-cluster
-    /// feasibility probes interleaved by [`PlacementPolicy::feasible_ever`].
+    /// The spatial index for `cluster`'s current occupancy: a cached
+    /// index whose epoch matches is returned as-is; a stale one is
+    /// delta-advanced in place by replaying the cluster's occupancy
+    /// journal ([`PlacementIndex::advance`] — cost proportional to the
+    /// nodes that actually flipped, not O(V)); only when the journal no
+    /// longer covers the cached epoch (or on the first call / a
+    /// different cluster's history) does a full O(V) rebuild run.
+    /// Epochs are globally unique per occupancy state, so a matching
+    /// epoch *proves* the bitmap is the one the index reflects —
+    /// including across the empty-cluster feasibility probes interleaved
+    /// by [`PlacementPolicy::feasible_ever`].
     pub fn placement_index(&mut self, cluster: &ClusterState) -> Rc<PlacementIndex> {
-        match &self.index {
-            Some(idx) if idx.epoch() == cluster.epoch() => idx.clone(),
-            _ => {
-                let idx = Rc::new(PlacementIndex::build(cluster));
-                self.index = Some(idx.clone());
-                idx
+        if let Some(idx) = self.index.as_mut() {
+            if idx.epoch() == cluster.epoch() {
+                return idx.clone();
+            }
+            // Between scheduling events the core is the sole owner of
+            // the Rc (probe-time clones are short-lived), so the index
+            // can usually catch up in place instead of reallocating.
+            if let Some(live) = Rc::get_mut(idx) {
+                if live.advance(cluster) {
+                    return idx.clone();
+                }
             }
         }
+        let idx = Rc::new(PlacementIndex::build(cluster));
+        self.index = Some(idx.clone());
+        idx
     }
 
     /// Largest dimension a placed shape may have on this topology.
@@ -625,6 +637,39 @@ mod tests {
             std::rc::Rc::ptr_eq(&live, &again),
             "the throwaway empty-cluster probe must not evict the live index"
         );
+    }
+
+    #[test]
+    fn stale_index_advances_in_place_when_sole_owner() {
+        let mut core = PolicyCore::new();
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let first = core.placement_index(&c);
+        let raw = std::rc::Rc::as_ptr(&first);
+        drop(first); // the core is now the sole owner
+        let mut p = Reconfig::new();
+        p.place_now(&c, 1, crate::shape::JobShape::new(4, 4, 4))
+            .unwrap()
+            .commit(&mut c)
+            .unwrap();
+        let adv = core.placement_index(&c);
+        assert_eq!(
+            std::rc::Rc::as_ptr(&adv),
+            raw,
+            "journaled churn must delta-advance the cached index in place"
+        );
+        assert_eq!(adv.epoch(), c.epoch());
+        // The advanced index answers exactly like a cold build.
+        let fresh = PlacementIndex::build(&c);
+        for cube in 0..4 {
+            for off in [[0, 0, 0], [1, 1, 1], [0, 2, 0]] {
+                let off = crate::topology::P3(off);
+                let e = crate::topology::P3([2, 2, 2]);
+                assert_eq!(
+                    adv.reconfig().is_box_free(cube, off, e),
+                    fresh.reconfig().is_box_free(cube, off, e)
+                );
+            }
+        }
     }
 
     fn rj(job: u64, priority: u8, size: usize, remaining: f64) -> RunningJob {

@@ -64,42 +64,77 @@ impl ReconfigIndex {
         };
         let n = grid.n;
         let num_cubes = grid.num_cubes();
+        let mut index = ReconfigIndex {
+            n,
+            num_cubes,
+            sums: vec![0u32; num_cubes * (n + 1) * (n + 1) * (n + 1)],
+            cubes_by_fill: Vec::new(),
+        };
+        for cube in 0..num_cubes {
+            index.rebuild_cube(cluster, cube);
+        }
+        index.refresh_fill_order(cluster);
+        index
+    }
+
+    /// Recompute one cube's `(n+1)³` summed table from the busy bitmap.
+    /// A cube is tiny (a 4³ cube is 125 table entries), so touched cubes
+    /// are rebuilt whole rather than by sub-region.
+    fn rebuild_cube(&mut self, cluster: &ClusterState, cube: usize) {
+        let n = self.n;
         let vol = n * n * n;
         let s = n + 1;
         let tsize = s * s * s;
         let idx = |x: usize, y: usize, z: usize| (x * s + y) * s + z;
-        let mut sums = vec![0u32; num_cubes * tsize];
-        for cube in 0..num_cubes {
-            let t = &mut sums[cube * tsize..(cube + 1) * tsize];
-            for x in 0..n {
-                for y in 0..n {
-                    for z in 0..n {
-                        // Cube-local linear order matches the global node
-                        // numbering: node = cube·n³ + local.index_in(n³).
-                        let node = cube * vol + (x * n + y) * n + z;
-                        let busy = !cluster.is_free(node);
-                        t[idx(x + 1, y + 1, z + 1)] = busy as u32
-                            + t[idx(x, y + 1, z + 1)]
-                            + t[idx(x + 1, y, z + 1)]
-                            + t[idx(x + 1, y + 1, z)]
-                            - t[idx(x, y, z + 1)]
-                            - t[idx(x, y + 1, z)]
-                            - t[idx(x + 1, y, z)]
-                            + t[idx(x, y, z)];
-                    }
+        let t = &mut self.sums[cube * tsize..(cube + 1) * tsize];
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    // Cube-local linear order matches the global node
+                    // numbering: node = cube·n³ + local.index_in(n³).
+                    let node = cube * vol + (x * n + y) * n + z;
+                    let busy = !cluster.is_free(node);
+                    t[idx(x + 1, y + 1, z + 1)] = busy as u32
+                        + t[idx(x, y + 1, z + 1)]
+                        + t[idx(x + 1, y, z + 1)]
+                        + t[idx(x + 1, y + 1, z)]
+                        - t[idx(x, y, z + 1)]
+                        - t[idx(x, y + 1, z)]
+                        - t[idx(x + 1, y, z)]
+                        + t[idx(x, y, z)];
                 }
             }
         }
-        let mut cubes_by_fill: Vec<usize> = (0..num_cubes)
+    }
+
+    /// Recompute the candidate-cube list with exactly the fresh-build
+    /// expression (filter free > 0, stable sort by free count, ties in
+    /// cube-id order) so incremental advances stay byte-equivalent.
+    fn refresh_fill_order(&mut self, cluster: &ClusterState) {
+        self.cubes_by_fill = (0..self.num_cubes)
             .filter(|&c| cluster.cube_free_count(c) > 0)
             .collect();
-        cubes_by_fill.sort_by_key(|&c| cluster.cube_free_count(c));
-        ReconfigIndex {
-            n,
-            num_cubes,
-            sums,
-            cubes_by_fill,
+        self.cubes_by_fill
+            .sort_by_key(|&c| cluster.cube_free_count(c));
+    }
+
+    /// Delta-advance across a batch of busy-bit flips: only the cubes
+    /// containing a flipped node get their summed tables rebuilt, plus
+    /// one O(C log C) candidate-list refresh — the other `C − k` cube
+    /// tables (the overwhelming bulk of the index at 64k nodes) are
+    /// untouched. Bit-identical to a fresh [`build`](Self::build).
+    pub fn apply_flips(&mut self, cluster: &ClusterState, flips: &[(usize, bool)]) {
+        if flips.is_empty() {
+            return;
         }
+        let vol = self.n * self.n * self.n;
+        let mut touched: Vec<usize> = flips.iter().map(|&(node, _)| node / vol).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        for cube in touched {
+            self.rebuild_cube(cluster, cube);
+        }
+        self.refresh_fill_order(cluster);
     }
 
     /// Cube side.
@@ -227,6 +262,30 @@ impl PlacementIndex {
         self.epoch
     }
 
+    /// Try to delta-advance a stale index to the cluster's current epoch
+    /// by replaying the busy-bit flips from the cluster's bounded delta
+    /// journal ([`ClusterState::changes_since`]) — per-commit/release
+    /// cost proportional to the touched region, not O(V). Returns `false`
+    /// (index untouched, still stamped with its old epoch) when the
+    /// journal no longer covers this index's epoch; the caller then pays
+    /// the full [`build`](Self::build). On success the index is
+    /// bit-identical to a fresh build at the new epoch, so the PR-5 epoch
+    /// contract is unchanged: a matching epoch still proves validity.
+    pub fn advance(&mut self, cluster: &ClusterState) -> bool {
+        if self.epoch == cluster.epoch() {
+            return true;
+        }
+        let Some(flips) = cluster.changes_since(self.epoch) else {
+            return false;
+        };
+        match &mut self.kind {
+            IndexKind::Static(s) => s.apply_flips(cluster, &flips),
+            IndexKind::Reconfig(r) => r.apply_flips(cluster, &flips),
+        }
+        self.epoch = cluster.epoch();
+        true
+    }
+
     /// The static-torus prefix table. Panics on reconfigurable indices —
     /// policies gate on topology family before touching the index.
     pub fn static_sums(&self) -> &OccupancySums {
@@ -325,6 +384,25 @@ mod tests {
         let i1 = PlacementIndex::build(&c);
         assert_eq!(i1.epoch(), c.epoch());
         assert!(!i1.static_sums().box_free(P3([0, 0, 0]), P3([1, 1, 1])));
+    }
+
+    #[test]
+    fn advance_replays_the_delta_journal_or_declines() {
+        let mut c = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        let mut idx = PlacementIndex::build(&c);
+        assert!(idx.advance(&c), "current epoch advances trivially");
+        occupy(&mut c, 1, vec![0, 1, 70, 200]);
+        occupy(&mut c, 2, vec![5, 6]);
+        c.release(1);
+        assert!(idx.advance(&c), "journaled churn must replay");
+        assert_eq!(idx.epoch(), c.epoch());
+        let fresh = ReconfigIndex::build(&c);
+        assert_eq!(idx.reconfig().sums, fresh.sums);
+        assert_eq!(idx.reconfig().cubes_by_fill, fresh.cubes_by_fill);
+        // A foreign cluster's journal cannot cover this index's epoch.
+        let other = ClusterState::new(ClusterTopo::reconfigurable_4096(4));
+        assert!(!idx.advance(&other), "unknown history must force a rebuild");
+        assert_ne!(idx.epoch(), other.epoch(), "a declined advance leaves the stamp");
     }
 
     #[test]

@@ -22,13 +22,32 @@ impl OccupancySums {
             ClusterTopo::Static { ext } => ext,
             _ => panic!("OccupancySums requires a static topology"),
         };
+        let (sx, sy, sz) = (ext.0[0] + 1, ext.0[1] + 1, ext.0[2] + 1);
+        let mut sums = OccupancySums {
+            ext,
+            s: vec![0u32; sx * sy * sz],
+        };
+        // Entries with any zero coordinate are the all-zero border the
+        // fresh vec already provides; everything else is one refresh of
+        // the full region.
+        sums.refresh_region(cluster, P3([0, 0, 0]));
+        sums
+    }
+
+    /// Re-derive every prefix entry whose covered box can have changed
+    /// given that no busy bit below `lo` (component-wise) flipped: the
+    /// entries `(X,Y,Z)` with `X > lo.x ∧ Y > lo.y ∧ Z > lo.z`, in
+    /// ascending order so each recurrence reads already-correct
+    /// neighbours (the rest of the table is untouched and still valid).
+    fn refresh_region(&mut self, cluster: &ClusterState, lo: P3) {
+        let ext = self.ext;
         let (nx, ny, nz) = (ext.0[0], ext.0[1], ext.0[2]);
-        let (sx, sy, sz) = (nx + 1, ny + 1, nz + 1);
+        let (sy, sz) = (ny + 1, nz + 1);
         let idx = |x: usize, y: usize, z: usize| (x * sy + y) * sz + z;
-        let mut s = vec![0u32; sx * sy * sz];
-        for x in 0..nx {
-            for y in 0..ny {
-                for z in 0..nz {
+        let s = &mut self.s;
+        for x in lo.0[0]..nx {
+            for y in lo.0[1]..ny {
+                for z in lo.0[2]..nz {
                     let busy = !cluster.is_free(P3([x, y, z]).index_in(ext));
                     s[idx(x + 1, y + 1, z + 1)] = busy as u32
                         + s[idx(x, y + 1, z + 1)]
@@ -41,7 +60,26 @@ impl OccupancySums {
                 }
             }
         }
-        OccupancySums { ext, s }
+    }
+
+    /// Delta-advance the table across a batch of busy-bit flips (node
+    /// ids whose state changed since this table was built), reading the
+    /// post-flip occupancy from `cluster`. Only the suffix region past
+    /// the flips' minimum corner is recomputed — a release high up the
+    /// torus costs a corner sliver, never the full O(V) sweep — and the
+    /// result is bit-identical to a fresh [`build`](Self::build).
+    pub fn apply_flips(&mut self, cluster: &ClusterState, flips: &[(usize, bool)]) {
+        if flips.is_empty() {
+            return;
+        }
+        let mut lo = self.ext;
+        for &(node, _) in flips {
+            let p = P3::from_index(node, self.ext);
+            for a in 0..3 {
+                lo.0[a] = lo.0[a].min(p.0[a]);
+            }
+        }
+        self.refresh_region(cluster, lo);
     }
 
     #[inline]
@@ -320,6 +358,40 @@ mod tests {
         // Degenerate extents reject in both paths.
         assert_eq!(sums.find_first_box(P3([0, 4, 4])), None);
         assert_eq!(sums.find_first_box(P3([17, 1, 1])), None);
+    }
+
+    #[test]
+    fn applied_flips_match_fresh_build_under_churn() {
+        let mut c = static_cluster();
+        let mut sums = OccupancySums::build(&c);
+        let mut rng = crate::util::Pcg64::seeded(123);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..60u64 {
+            if live.is_empty() || rng.chance(0.6) {
+                let mut nodes: Vec<usize> = (0..rng.range(1, 40))
+                    .map(|_| rng.below(4096))
+                    .filter(|&n| c.is_free(n))
+                    .collect();
+                nodes.sort_unstable();
+                nodes.dedup();
+                if nodes.is_empty() {
+                    continue;
+                }
+                let flips: Vec<(usize, bool)> =
+                    nodes.iter().map(|&n| (n, true)).collect();
+                occupy(&mut c, step, nodes);
+                live.push(step);
+                sums.apply_flips(&c, &flips);
+            } else {
+                let job = live.swap_remove(rng.below(live.len()));
+                let alloc = c.release(job).unwrap();
+                let flips: Vec<(usize, bool)> =
+                    alloc.nodes.iter().map(|&n| (n, false)).collect();
+                sums.apply_flips(&c, &flips);
+            }
+            let fresh = OccupancySums::build(&c);
+            assert_eq!(sums.s, fresh.s, "delta table drifted at step {step}");
+        }
     }
 
     #[test]

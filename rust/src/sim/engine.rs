@@ -13,8 +13,7 @@
 //! surcharge) and compacts the cluster when the head is
 //! capacity-blocked.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use crate::placement::best_effort;
@@ -22,6 +21,7 @@ use crate::placement::{
     PlacementDecision, PlacementPolicy, PlacementRequest, PolicyHandle, RunningJob, SchedAction,
 };
 use crate::sim::contention::{effective_duration, ContentionModel};
+use crate::sim::event_heap::{EventHeap, EventSlot, OrdF64};
 use crate::sim::observer::SchedulerObserver;
 use crate::topology::cluster::{Allocation, ClusterState, ClusterTopo};
 use crate::trace::scenarios::ModifierSet;
@@ -235,8 +235,11 @@ pub struct Simulation {
     /// trace order), rank 1 is everything else (seq = push counter).
     /// Ranking arrivals ahead of same-time completions/faults reproduces
     /// the batch engine's push-all-arrivals-first ordering even when the
-    /// streaming service stages arrivals one at a time.
-    events: BinaryHeap<Reverse<(OrdF64, u8, u64, EventSlot)>>,
+    /// streaming service stages arrivals one at a time. Keys are unique,
+    /// so the indexed heap ([`EventHeap`]) pops the exact sequence the
+    /// previous `BinaryHeap<Reverse<_>>` did, while letting evictions
+    /// delete a dead attempt's completion event in place.
+    events: EventHeap,
     seq: u64,
     now: f64,
     last_sample_t: f64,
@@ -318,36 +321,6 @@ pub struct Simulation {
     migration_time: f64,
 }
 
-/// f64 ordered wrapper for the event heap (times are never NaN).
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct OrdF64(f64);
-
-impl Eq for OrdF64 {}
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("event times are finite")
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum EventSlot {
-    Arrival(usize),
-    /// `(job id, incarnation)`: a completion is only honored if the job's
-    /// incarnation still matches — a fault-kill bumps the incarnation, so
-    /// the dead attempt's completion event becomes a stale no-op instead
-    /// of a phantom completion.
-    Completion(u64, u32),
-    /// The next failure of the MTBF chain (node chosen when it fires).
-    Fault,
-    /// A failed node comes back.
-    NodeRepair(usize),
-}
-
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Simulation {
         let cluster = ClusterState::new(cfg.topo);
@@ -363,7 +336,7 @@ impl Simulation {
             contention: ContentionModel::new(ext),
             be_rings: HashMap::new(),
             queue: VecDeque::new(),
-            events: BinaryHeap::new(),
+            events: EventHeap::new(),
             seq: 0,
             now: 0.0,
             last_sample_t: 0.0,
@@ -419,7 +392,7 @@ impl Simulation {
 
     fn push_event(&mut self, t: f64, slot: EventSlot) {
         self.seq += 1;
-        self.events.push(Reverse((OrdF64(t), 1, self.seq, slot)));
+        self.events.push((OrdF64(t), 1, self.seq, slot));
     }
 
     /// Advance the utilization integral up to `t`.
@@ -497,6 +470,11 @@ impl Simulation {
             self.migration_due.insert(job);
         }
         *self.incarnation.entry(job).or_insert(0) += 1;
+        // The dead attempt's completion event is deleted in place (the
+        // incarnation filter at pop time remains as defence in depth).
+        // None only mid-dispatch of the job's own completion, which no
+        // eviction path reaches.
+        let _ = self.events.remove_completion(job);
         self.scheduled -= 1;
         self.clear_fault_memos();
         match why {
@@ -942,12 +920,8 @@ impl Simulation {
             }
         }
         let job = &trace[idx];
-        self.events.push(Reverse((
-            OrdF64(job.arrival),
-            0,
-            idx as u64,
-            EventSlot::Arrival(idx),
-        )));
+        self.events
+            .push((OrdF64(job.arrival), 0, idx as u64, EventSlot::Arrival(idx)));
         self.arrivals_pending += 1;
         self.horizon = self.horizon.max(job.arrival);
         if self.cfg.modifiers.failures.is_some() || self.disruption {
@@ -977,7 +951,7 @@ impl Simulation {
         external_arrival: bool,
     ) {
         loop {
-            let Some(&Reverse((OrdF64(t), rank, seq, slot))) = self.events.peek() else {
+            let Some(&(OrdF64(t), rank, seq, slot)) = self.events.peek() else {
                 break;
             };
             if let Some((bt, brank, bseq)) = bound {
@@ -1291,10 +1265,9 @@ impl Simulation {
                 None => Json::Null,
             }
         }
-        let mut evs: Vec<(OrdF64, u8, u64, EventSlot)> =
-            self.events.iter().map(|r| r.0).collect();
-        evs.sort_unstable();
-        let events: Vec<Json> = evs
+        let events: Vec<Json> = self
+            .events
+            .sorted()
             .into_iter()
             .map(|(OrdF64(t), rank, seq, slot)| {
                 let slot = match slot {
@@ -1319,10 +1292,7 @@ impl Simulation {
                 ])
             })
             .collect();
-        let failed: Vec<Json> = (0..self.cluster.num_nodes())
-            .filter(|&n| self.cluster.is_failed(n))
-            .map(num)
-            .collect();
+        let failed: Vec<Json> = self.cluster.failed_nodes().map(num).collect();
         let mut alloc_ids: Vec<u64> = self.cluster.live_allocations().map(|a| a.job).collect();
         alloc_ids.sort_unstable();
         let allocs: Vec<Json> = alloc_ids
@@ -1783,7 +1753,7 @@ impl Simulation {
                 )?),
                 _ => return Err(snap_err("events.slot")),
             };
-            sim.events.push(Reverse((OrdF64(t), rank, seq, slot)));
+            sim.events.push((OrdF64(t), rank, seq, slot));
         }
         sim.seq = sid(sget(state, "seq")?, "seq")?;
         Ok(sim)

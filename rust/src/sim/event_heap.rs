@@ -1,0 +1,292 @@
+//! Indexed binary min-heap for the engine's event queue.
+//!
+//! The engine orders events by the explicit key `(time, rank, seq)`
+//! (PR-8): rank 0 is an arrival (seq = trace index), rank 1 is
+//! everything else (seq = push counter), so every live key is unique
+//! and pop order is a pure function of the keys. That makes this heap a
+//! bytes-invariant drop-in for the previous
+//! `BinaryHeap<Reverse<EventKey>>` — any correct min-heap pops the same
+//! sequence — while adding what a plain `BinaryHeap` cannot do:
+//!
+//! * **in-place removal** — an eviction deletes the dead attempt's
+//!   completion event via a job-id position map instead of leaving it
+//!   to be lazily filtered at pop time (the incarnation filter stays as
+//!   defence in depth), so a heavily preempted 64k-node run does not
+//!   accumulate a heap full of stale entries;
+//! * **sorted dump** — snapshots read the pending set in ascending key
+//!   order with one clone + sort, no per-event `Reverse` unwrapping.
+//!
+//! Invariant: at most one pending completion event per job id. The
+//! engine maintains this structurally — the finish-time re-arm pops
+//! before it re-pushes, and an eviction removes the old attempt's event
+//! before any re-placement schedules a new one.
+
+use std::collections::HashMap;
+
+/// f64 ordered wrapper for event keys (times are never NaN).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("event times are finite")
+    }
+}
+
+/// What a pending event does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum EventSlot {
+    Arrival(usize),
+    /// `(job id, incarnation)`: a completion is only honored if the job's
+    /// incarnation still matches — a fault-kill bumps the incarnation, so
+    /// the dead attempt's completion event becomes a stale no-op instead
+    /// of a phantom completion.
+    Completion(u64, u32),
+    /// The next failure of the MTBF chain (node chosen when it fires).
+    Fault,
+    /// A failed node comes back.
+    NodeRepair(usize),
+}
+
+/// Full event key: `(time, rank, seq, payload)`, popped in ascending
+/// order. The payload participates in `Ord` only as a formality — live
+/// `(time, rank, seq)` prefixes are unique.
+pub(crate) type EventKey = (OrdF64, u8, u64, EventSlot);
+
+/// The indexed min-heap. `completion_pos` tracks the heap index of each
+/// pending completion event by job id; every swap keeps it current, so
+/// removal is O(log n) with no scan.
+pub(crate) struct EventHeap {
+    heap: Vec<EventKey>,
+    completion_pos: HashMap<u64, usize>,
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap {
+            heap: Vec::new(),
+            completion_pos: HashMap::new(),
+        }
+    }
+
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[cfg(test)]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The minimum key, i.e. the next event to fire.
+    pub fn peek(&self) -> Option<&EventKey> {
+        self.heap.first()
+    }
+
+    pub fn push(&mut self, key: EventKey) {
+        debug_assert!(
+            !matches!(key.3, EventSlot::Completion(id, _) if self.completion_pos.contains_key(&id)),
+            "one pending completion event per job"
+        );
+        self.heap.push(key);
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    pub fn pop(&mut self) -> Option<EventKey> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let key = self.heap.pop().expect("non-empty");
+        self.untrack(&key);
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        Some(key)
+    }
+
+    /// Delete the pending completion event of `job` in place, wherever
+    /// it sits in the heap. Returns the removed key, or `None` if no
+    /// completion for that job is pending.
+    pub fn remove_completion(&mut self, job: u64) -> Option<EventKey> {
+        let i = self.completion_pos.remove(&job)?;
+        let last = self.heap.len() - 1;
+        self.heap.swap(i, last);
+        let key = self.heap.pop().expect("tracked index implies non-empty");
+        debug_assert!(matches!(key.3, EventSlot::Completion(id, _) if id == job));
+        if i < self.heap.len() {
+            // The element moved into the hole can be out of order in
+            // either direction relative to its new neighbourhood.
+            let j = self.sift_up(i);
+            if j == i {
+                self.sift_down(i);
+            }
+        }
+        Some(key)
+    }
+
+    /// The pending events in ascending key order — the snapshot dump.
+    pub fn sorted(&self) -> Vec<EventKey> {
+        let mut evs = self.heap.clone();
+        evs.sort_unstable();
+        evs
+    }
+
+    /// Record the position of the element now at `i` (completions only).
+    #[inline]
+    fn track(&mut self, i: usize) {
+        if let EventSlot::Completion(id, _) = self.heap[i].3 {
+            self.completion_pos.insert(id, i);
+        }
+    }
+
+    #[inline]
+    fn untrack(&mut self, key: &EventKey) {
+        if let EventSlot::Completion(id, _) = key.3 {
+            self.completion_pos.remove(&id);
+        }
+    }
+
+    /// Bubble `i` toward the root; returns the final index.
+    fn sift_up(&mut self, mut i: usize) -> usize {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.heap[i] < self.heap[p] {
+                self.heap.swap(i, p);
+                self.track(i);
+                i = p;
+            } else {
+                break;
+            }
+        }
+        self.track(i);
+        i
+    }
+
+    /// Push `i` toward the leaves; returns the final index.
+    fn sift_down(&mut self, mut i: usize) -> usize {
+        loop {
+            let l = 2 * i + 1;
+            if l >= self.heap.len() {
+                break;
+            }
+            let r = l + 1;
+            let c = if r < self.heap.len() && self.heap[r] < self.heap[l] {
+                r
+            } else {
+                l
+            };
+            if self.heap[c] < self.heap[i] {
+                self.heap.swap(i, c);
+                self.track(i);
+                i = c;
+            } else {
+                break;
+            }
+        }
+        self.track(i);
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, expect};
+    use crate::util::Pcg64;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Random key stream with the engine's uniqueness discipline: rank-1
+    /// seqs strictly increase, rank-0 (arrival) seqs are distinct trace
+    /// indices, and at most one pending completion per job id.
+    fn random_key(rng: &mut Pcg64, seq: &mut u64, pending_jobs: &mut Vec<u64>) -> EventKey {
+        *seq += 1;
+        let t = OrdF64((rng.below(50) as f64) * 0.25);
+        match rng.below(4) {
+            0 => (t, 0, *seq, EventSlot::Arrival(*seq as usize)),
+            1 => {
+                let job = 1000 + *seq;
+                pending_jobs.push(job);
+                (t, 1, *seq, EventSlot::Completion(job, rng.below(3) as u32))
+            }
+            2 => (t, 1, *seq, EventSlot::Fault),
+            _ => (t, 1, *seq, EventSlot::NodeRepair(rng.below(64))),
+        }
+    }
+
+    #[test]
+    fn prop_pop_sequence_matches_the_old_binary_heap() {
+        // The exact structure the engine used before the swap: pops must
+        // be byte-for-byte the same sequence on any recorded event log.
+        check("indexed heap vs BinaryHeap<Reverse<_>>", 40, |rng| {
+            let mut ours = EventHeap::new();
+            let mut old: BinaryHeap<Reverse<EventKey>> = BinaryHeap::new();
+            let (mut seq, mut jobs) = (0u64, Vec::new());
+            for _ in 0..rng.range(1, 120) {
+                let key = random_key(rng, &mut seq, &mut jobs);
+                ours.push(key);
+                old.push(Reverse(key));
+            }
+            // Interleave pops with fresh pushes, as the engine does.
+            while !ours.is_empty() {
+                expect(ours.peek() == old.peek().map(|r| &r.0), "peek drift")?;
+                expect(ours.pop() == old.pop().map(|r| r.0), "pop drift")?;
+                if rng.chance(0.2) {
+                    let key = random_key(rng, &mut seq, &mut jobs);
+                    ours.push(key);
+                    old.push(Reverse(key));
+                }
+            }
+            expect(old.is_empty(), "old heap has leftovers")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_removal_deletes_exactly_the_jobs_event() {
+        check("in-place completion removal", 40, |rng| {
+            let mut heap = EventHeap::new();
+            let mut model: Vec<EventKey> = Vec::new();
+            let (mut seq, mut jobs) = (0u64, Vec::new());
+            for _ in 0..rng.range(2, 100) {
+                let key = random_key(rng, &mut seq, &mut jobs);
+                heap.push(key);
+                model.push(key);
+            }
+            // Remove a random subset of pending completions in place.
+            while !jobs.is_empty() && rng.chance(0.7) {
+                let job = jobs.swap_remove(rng.below(jobs.len()));
+                let removed = heap.remove_completion(job);
+                let at = model
+                    .iter()
+                    .position(|k| matches!(k.3, EventSlot::Completion(j, _) if j == job));
+                expect(
+                    removed == at.map(|i| model.swap_remove(i)),
+                    "removal mismatch",
+                )?;
+                expect(
+                    heap.remove_completion(job).is_none(),
+                    "double removal must be a no-op",
+                )?;
+            }
+            expect(heap.len() == model.len(), "length drift")?;
+            // Survivors drain in exactly sorted-model order.
+            model.sort_unstable();
+            expect(heap.sorted() == model, "sorted dump mismatch")?;
+            for want in model {
+                expect(heap.pop() == Some(want), "post-removal pop drift")?;
+            }
+            expect(heap.pop().is_none(), "heap must drain")?;
+            Ok(())
+        });
+    }
+}

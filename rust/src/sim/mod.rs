@@ -4,6 +4,7 @@
 
 pub mod contention;
 pub mod engine;
+pub(crate) mod event_heap;
 pub mod experiments;
 pub mod observer;
 pub mod sweep;

@@ -1,9 +1,10 @@
 //! Cluster occupancy state: nodes, allocations, and the OCS plant.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::coords::{CubeGrid, P3};
+use super::nodeset::NodeSet;
 use super::ocs::OcsState;
 
 /// Process-wide epoch source. Epochs are *globally* unique, not
@@ -92,26 +93,50 @@ pub struct Allocation {
     pub placed_ext: P3,
 }
 
+/// Upper bound on flipped-node records the occupancy-delta journal
+/// retains. Large enough to span the bursts of small commits/releases a
+/// scheduler produces between index probes; small enough that a cloned
+/// `ClusterState` (defrag snapshots, sweeps) carries at most a few tens
+/// of KiB of history.
+const DELTA_JOURNAL_NODES: usize = 4096;
+
+/// One epoch transition in the occupancy-delta journal: the nodes whose
+/// busy bit flipped between `from_epoch` and `to_epoch`, with the state
+/// they flipped *to*. Consecutive records chain (`to_epoch` of one is
+/// `from_epoch` of the next), so replaying a suffix of the journal turns
+/// an index built at any journaled epoch into the current one.
+#[derive(Clone, Debug)]
+struct OccupancyDelta {
+    from_epoch: u64,
+    to_epoch: u64,
+    flips: Vec<(u32, bool)>,
+}
+
 /// Mutable cluster state: occupancy, live allocations, OCS plant.
 #[derive(Clone, Debug)]
 pub struct ClusterState {
     topo: ClusterTopo,
-    busy: Vec<bool>,
+    /// Packed busy bitmap (a failed node is also busy).
+    busy: NodeSet,
     /// Free-XPU count per cube (single entry for static topologies).
     cube_free: Vec<usize>,
     ocs: Option<OcsState>,
     allocs: HashMap<u64, Allocation>,
-    busy_count: usize,
     /// Nodes down for repair (fault injection). A failed node is also
     /// `busy` — placement policies need no failure awareness, they simply
     /// cannot use it — but belongs to no allocation.
-    failed: Vec<bool>,
-    failed_count: usize,
+    failed: NodeSet,
     /// Occupancy version: a fresh globally-unique value on construction
-    /// and after every [`ClusterState::commit`] / [`ClusterState::release`].
+    /// and after every [`commit`](Self::commit) / [`release`](Self::release)
+    /// / [`fail_node`](Self::fail_node) / [`repair_node`](Self::repair_node).
     /// Spatial indices built against one epoch (`placement::index`) stay
     /// valid exactly while the epoch is unchanged.
     epoch: u64,
+    /// Bounded journal of recent epoch transitions, oldest first, for
+    /// incremental index maintenance (see [`changes_since`](Self::changes_since)).
+    deltas: VecDeque<OccupancyDelta>,
+    /// Total flips across `deltas`, for the journal size bound.
+    delta_nodes: usize,
 }
 
 impl ClusterState {
@@ -126,15 +151,59 @@ impl ClusterState {
         };
         ClusterState {
             topo,
-            busy: vec![false; n_nodes],
+            busy: NodeSet::new(n_nodes),
             cube_free,
             ocs,
             allocs: HashMap::new(),
-            busy_count: 0,
-            failed: vec![false; n_nodes],
-            failed_count: 0,
+            failed: NodeSet::new(n_nodes),
             epoch: next_epoch(),
+            deltas: VecDeque::new(),
+            delta_nodes: 0,
         }
+    }
+
+    /// Move to a fresh epoch, journaling which busy bits flipped (and to
+    /// what) in the transition. A transition too large to journal without
+    /// blowing the bound clears the history instead — contiguity of the
+    /// chain is what makes replay sound, so a gap must evict everything
+    /// before it.
+    fn bump_epoch(&mut self, flips: Vec<(u32, bool)>) {
+        let from = self.epoch;
+        self.epoch = next_epoch();
+        if flips.len() > DELTA_JOURNAL_NODES {
+            self.deltas.clear();
+            self.delta_nodes = 0;
+            return;
+        }
+        self.delta_nodes += flips.len();
+        self.deltas.push_back(OccupancyDelta {
+            from_epoch: from,
+            to_epoch: self.epoch,
+            flips,
+        });
+        while self.delta_nodes > DELTA_JOURNAL_NODES {
+            let old = self.deltas.pop_front().expect("journal non-empty over budget");
+            self.delta_nodes -= old.flips.len();
+        }
+    }
+
+    /// The busy-bit flips that turn the occupancy as of `epoch` into the
+    /// current occupancy, in application order — `Some(vec![])` when
+    /// `epoch` is current, `None` when `epoch` has aged out of the
+    /// bounded journal (or never belonged to this cluster's history) and
+    /// the caller must rebuild from scratch. Sound across clones: epochs
+    /// are globally unique, so a foreign epoch can appear in this journal
+    /// only via shared snapshot history, where the occupancy matched.
+    pub fn changes_since(&self, epoch: u64) -> Option<Vec<(usize, bool)>> {
+        if epoch == self.epoch {
+            return Some(Vec::new());
+        }
+        let start = self.deltas.iter().position(|d| d.from_epoch == epoch)?;
+        let mut out = Vec::new();
+        for d in self.deltas.iter().skip(start) {
+            out.extend(d.flips.iter().map(|&(n, b)| (n as usize, b)));
+        }
+        Some(out)
     }
 
     /// Cube index of a node (0 for static topologies).
@@ -152,19 +221,20 @@ impl ClusterState {
     /// constant once nodes fail, so epoch-keyed caches must refresh.
     /// Returns `false` (and changes nothing) if the node is already down.
     pub fn fail_node(&mut self, node: usize) -> bool {
-        if self.failed[node] {
+        if self.failed.contains(node) {
             return false;
         }
-        debug_assert!(!self.busy[node], "kill the occupant before failing node {node}");
-        if self.busy[node] {
+        debug_assert!(
+            !self.busy.contains(node),
+            "kill the occupant before failing node {node}"
+        );
+        if self.busy.contains(node) {
             return false;
         }
-        self.failed[node] = true;
-        self.busy[node] = true;
-        self.busy_count += 1;
-        self.failed_count += 1;
+        self.failed.insert(node);
+        self.busy.insert(node);
         self.cube_free[self.cube_of(node)] -= 1;
-        self.epoch = next_epoch();
+        self.bump_epoch(vec![(node as u32, true)]);
         true
     }
 
@@ -172,25 +242,30 @@ impl ClusterState {
     /// reappeared; head-of-line blocks may clear). Returns `false` if the
     /// node was not down.
     pub fn repair_node(&mut self, node: usize) -> bool {
-        if !self.failed[node] {
+        if !self.failed.contains(node) {
             return false;
         }
-        self.failed[node] = false;
-        self.busy[node] = false;
-        self.busy_count -= 1;
-        self.failed_count -= 1;
+        self.failed.remove(node);
+        self.busy.remove(node);
         self.cube_free[self.cube_of(node)] += 1;
-        self.epoch = next_epoch();
+        self.bump_epoch(vec![(node as u32, false)]);
         true
     }
 
     #[inline]
     pub fn is_failed(&self, node: usize) -> bool {
-        self.failed[node]
+        self.failed.contains(node)
     }
 
     pub fn failed_count(&self) -> usize {
-        self.failed_count
+        self.failed.count()
+    }
+
+    /// Ascending ids of nodes currently down for repair — a word-level
+    /// scan of the packed failed set, for snapshot serialization and
+    /// telemetry (no O(V) per-node probe loop).
+    pub fn failed_nodes(&self) -> impl Iterator<Item = usize> + '_ {
+        self.failed.iter_ones()
     }
 
     /// The job whose allocation contains `node`, if any. Linear in the
@@ -227,15 +302,23 @@ impl ClusterState {
 
     #[inline]
     pub fn is_free(&self, node: usize) -> bool {
-        !self.busy[node]
+        !self.busy.contains(node)
     }
 
     pub fn busy_count(&self) -> usize {
-        self.busy_count
+        self.busy.count()
     }
 
     pub fn free_count(&self) -> usize {
-        self.busy.len() - self.busy_count
+        self.busy.len() - self.busy.count()
+    }
+
+    /// Maximal runs of consecutive free node ids as `(start, length)`,
+    /// ascending — scanned word-by-word over the packed occupancy, for
+    /// policies and telemetry that want free intervals without an O(V)
+    /// per-node loop.
+    pub fn free_runs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.busy.free_runs()
     }
 
     /// Fraction of *available* (non-failed) nodes doing work. With no
@@ -244,11 +327,11 @@ impl ClusterState {
     /// excluded from both numerator and denominator rather than counted
     /// as "utilized".
     pub fn utilization(&self) -> f64 {
-        let avail = self.busy.len() - self.failed_count;
+        let avail = self.busy.len() - self.failed.count();
         if avail == 0 {
             return 0.0;
         }
-        (self.busy_count - self.failed_count) as f64 / avail as f64
+        (self.busy.count() - self.failed.count()) as f64 / avail as f64
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -285,45 +368,49 @@ impl ClusterState {
     /// (placement policies must never double-book).
     pub fn commit(&mut self, alloc: Allocation) {
         debug_assert!(!self.allocs.contains_key(&alloc.job), "job already placed");
+        let mut flips = Vec::with_capacity(alloc.nodes.len());
         for &n in &alloc.nodes {
-            debug_assert!(!self.busy[n], "node {n} double-booked");
-            self.busy[n] = true;
+            let fresh = self.busy.insert(n);
+            debug_assert!(fresh, "node {n} double-booked");
             if let ClusterTopo::Reconfigurable { grid } = self.topo {
                 self.cube_free[n / (grid.n * grid.n * grid.n)] -= 1;
             } else {
                 self.cube_free[0] -= 1;
             }
+            flips.push((n as u32, true));
         }
-        self.busy_count += alloc.nodes.len();
         self.allocs.insert(alloc.job, alloc);
-        self.epoch = next_epoch();
+        self.bump_epoch(flips);
     }
 
     /// Release a job's nodes and OCS reservations. Returns the allocation
     /// if it existed.
     pub fn release(&mut self, job: u64) -> Option<Allocation> {
         let alloc = self.allocs.remove(&job)?;
+        let mut flips = Vec::with_capacity(alloc.nodes.len());
         for &n in &alloc.nodes {
-            debug_assert!(self.busy[n]);
-            self.busy[n] = false;
+            let was = self.busy.remove(n);
+            debug_assert!(was);
             if let ClusterTopo::Reconfigurable { grid } = self.topo {
                 self.cube_free[n / (grid.n * grid.n * grid.n)] += 1;
             } else {
                 self.cube_free[0] += 1;
             }
+            flips.push((n as u32, false));
         }
-        self.busy_count -= alloc.nodes.len();
         if let Some(ocs) = self.ocs.as_mut() {
             ocs.release_job(job);
         }
-        self.epoch = next_epoch();
+        self.bump_epoch(flips);
         Some(alloc)
     }
 
     /// Snapshot the occupancy as `f32` grids per cube — the layout the
     /// plan-scorer artifact consumes: `[C][N][N][N]` flattened.
     pub fn occupancy_f32(&self) -> Vec<f32> {
-        self.busy.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+        (0..self.busy.len())
+            .map(|n| if self.busy.contains(n) { 1.0 } else { 0.0 })
+            .collect()
     }
 
     /// Physical coordinates of a node in the machine-room frame.
@@ -353,38 +440,39 @@ impl ClusterState {
                 if seen[n] {
                     return Err(format!("node {n} in two allocations"));
                 }
-                if !self.busy[n] {
+                if !self.busy.contains(n) {
                     return Err(format!("allocated node {n} not marked busy"));
                 }
                 seen[n] = true;
                 total += 1;
             }
         }
-        for (n, &f) in self.failed.iter().enumerate() {
-            if f && !self.busy[n] {
+        for n in self.failed.iter_ones() {
+            if !self.busy.contains(n) {
                 return Err(format!("failed node {n} not marked busy"));
             }
-            if f && seen[n] {
+            if seen[n] {
                 return Err(format!("failed node {n} inside an allocation"));
             }
         }
-        if self.failed.iter().filter(|&&f| f).count() != self.failed_count {
-            return Err("failed bitmap disagrees with failed_count".into());
+        if self.failed.recount() != self.failed.count() {
+            return Err("failed word data disagrees with its counter".into());
         }
-        if total + self.failed_count != self.busy_count {
+        if total + self.failed.count() != self.busy.count() {
             return Err(format!(
-                "busy_count {} != allocated total {total} + failed {}",
-                self.busy_count, self.failed_count
+                "busy count {} != allocated total {total} + failed {}",
+                self.busy.count(),
+                self.failed.count()
             ));
         }
-        if self.busy.iter().filter(|&&b| b).count() != self.busy_count {
-            return Err("busy bitmap disagrees with busy_count".into());
+        if self.busy.recount() != self.busy.count() {
+            return Err("busy word data disagrees with its counter".into());
         }
         if let ClusterTopo::Reconfigurable { grid } = self.topo {
             let vol = grid.n * grid.n * grid.n;
             for cube in 0..grid.num_cubes() {
                 let free = (0..vol)
-                    .filter(|&i| !self.busy[cube * vol + i])
+                    .filter(|&i| !self.busy.contains(cube * vol + i))
                     .count();
                 if free != self.cube_free[cube] {
                     return Err(format!("cube {cube} free counter drift"));
@@ -593,5 +681,67 @@ mod tests {
         assert_eq!(occ[5], 1.0);
         assert_eq!(occ[4], 0.0);
         assert_eq!(occ.iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn delta_journal_replays_commit_release_fail_repair() {
+        let mut c = reconfig();
+        let e0 = c.epoch();
+        assert_eq!(c.changes_since(e0), Some(vec![]), "current epoch is a no-op");
+        c.commit(Allocation {
+            job: 1,
+            nodes: vec![2, 3],
+            cubes: vec![0],
+            ocs_entries: 0,
+            rings: vec![],
+            placed_ext: P3([1, 1, 2]),
+        });
+        let e1 = c.epoch();
+        assert_eq!(c.changes_since(e0), Some(vec![(2, true), (3, true)]));
+        c.fail_node(9);
+        c.release(1);
+        c.repair_node(9);
+        assert_eq!(
+            c.changes_since(e0),
+            Some(vec![
+                (2, true),
+                (3, true),
+                (9, true),
+                (2, false),
+                (3, false),
+                (9, false),
+            ]),
+            "suffix replay spans every mutation kind in order"
+        );
+        assert_eq!(
+            c.changes_since(e1),
+            Some(vec![(9, true), (2, false), (3, false), (9, false)])
+        );
+        // An epoch foreign to this cluster's history cannot be replayed.
+        assert_eq!(reconfig().changes_since(e0), None);
+    }
+
+    #[test]
+    fn delta_journal_evicts_aged_epochs() {
+        let mut c = reconfig();
+        let e0 = c.epoch();
+        // More single-node transitions than the journal retains.
+        for j in 0..(DELTA_JOURNAL_NODES as u64 + 10) {
+            let n = (j % 64) as usize;
+            c.commit(Allocation {
+                job: j,
+                nodes: vec![n],
+                cubes: vec![0],
+                ocs_entries: 0,
+                rings: vec![],
+                placed_ext: P3([1, 1, 1]),
+            });
+            c.release(j);
+        }
+        assert_eq!(c.changes_since(e0), None, "aged-out epoch must force a rebuild");
+        assert!(
+            c.changes_since(c.epoch()).is_some(),
+            "the live epoch always replays"
+        );
     }
 }

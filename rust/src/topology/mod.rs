@@ -17,9 +17,11 @@
 
 pub mod cluster;
 pub mod coords;
+pub mod nodeset;
 pub mod ocs;
 pub mod routing;
 
 pub use cluster::{Allocation, ClusterState, ClusterTopo};
 pub use coords::{CubeGrid, P3, AXES};
+pub use nodeset::NodeSet;
 pub use ocs::{OcsState, PortKey};

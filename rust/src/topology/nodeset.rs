@@ -1,0 +1,238 @@
+//! Packed node bitset: one bit per node in `u64` words.
+//!
+//! [`ClusterState`](super::cluster::ClusterState) keeps its `busy` and
+//! `failed` occupancy maps in this type so a 64k-node torus costs 8 KiB
+//! per map instead of 64 KiB of `Vec<bool>`, counting is a word-wise
+//! `count_ones` sweep, and free-interval scans run per word (trailing
+//! zeros) rather than per node. The snapshot serializer, the fault
+//! layer, and `check_consistency` all ride the same representation.
+
+/// Fixed-length set of node ids `0..len`, packed 64 per word, with a
+/// maintained population count (`count` is O(1); `recount` recomputes
+/// it from the words so invariant checks can cross-validate the two).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeSet {
+    words: Vec<u64>,
+    len: usize,
+    ones: usize,
+}
+
+impl NodeSet {
+    /// An empty set over the id universe `0..len`.
+    pub fn new(len: usize) -> NodeSet {
+        NodeSet {
+            words: vec![0; len.div_ceil(64)],
+            len,
+            ones: 0,
+        }
+    }
+
+    /// Size of the id universe (not the number of set bits).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the id universe itself is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of set bits, from the maintained counter: O(1).
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.ones
+    }
+
+    /// Number of set bits recomputed from the words with `count_ones` —
+    /// the ground truth `check_consistency` compares [`count`](Self::count)
+    /// against, so a drifted counter is caught, not masked.
+    pub fn recount(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.len, "node {i} out of range {}", self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Set bit `i`; returns `true` if it was previously clear.
+    #[inline]
+    pub fn insert(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len, "node {i} out of range {}", self.len);
+        let w = &mut self.words[i >> 6];
+        let mask = 1u64 << (i & 63);
+        let fresh = *w & mask == 0;
+        *w |= mask;
+        self.ones += fresh as usize;
+        fresh
+    }
+
+    /// Clear bit `i`; returns `true` if it was previously set.
+    #[inline]
+    pub fn remove(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len, "node {i} out of range {}", self.len);
+        let w = &mut self.words[i >> 6];
+        let mask = 1u64 << (i & 63);
+        let was = *w & mask != 0;
+        *w &= !mask;
+        self.ones -= was as usize;
+        was
+    }
+
+    /// The raw words, low ids in low bits of low words. Bits at or past
+    /// `len` in the final word are always zero.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// First set bit at or after `from`, scanning word-wise.
+    pub fn next_one(&self, from: usize) -> Option<usize> {
+        self.scan(from, |w| w)
+    }
+
+    /// First clear bit at or after `from` (and below `len`).
+    pub fn next_zero(&self, from: usize) -> Option<usize> {
+        self.scan(from, |w| !w)
+    }
+
+    fn scan(&self, from: usize, f: impl Fn(u64) -> u64) -> Option<usize> {
+        if from >= self.len {
+            return None;
+        }
+        let mut w = from >> 6;
+        // Bits below `from` in its own word are masked off.
+        let mut cur = f(self.words[w]) & (!0u64 << (from & 63));
+        loop {
+            if cur != 0 {
+                let i = (w << 6) + cur.trailing_zeros() as usize;
+                return (i < self.len).then_some(i);
+            }
+            w += 1;
+            if w >= self.words.len() {
+                return None;
+            }
+            cur = f(self.words[w]);
+        }
+    }
+
+    /// Ascending ids of the set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        let mut pos = 0usize;
+        std::iter::from_fn(move || {
+            let i = self.next_one(pos)?;
+            pos = i + 1;
+            Some(i)
+        })
+    }
+
+    /// Maximal runs of *clear* bits as `(start, run_length)`, ascending —
+    /// the free-interval view contiguous-placement scans want, produced
+    /// with two word-level skips per run instead of a per-node walk.
+    pub fn free_runs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let mut pos = 0usize;
+        std::iter::from_fn(move || {
+            let start = self.next_zero(pos)?;
+            let end = self.next_one(start).unwrap_or(self.len);
+            pos = end;
+            Some((start, end - start))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, expect};
+    use crate::util::Pcg64;
+
+    fn naive(set: &NodeSet) -> Vec<bool> {
+        (0..set.len()).map(|i| set.contains(i)).collect()
+    }
+
+    fn random_set(rng: &mut Pcg64, len: usize, density_pct: u64) -> NodeSet {
+        let mut s = NodeSet::new(len);
+        for i in 0..len {
+            if rng.below(100) < density_pct as usize {
+                s.insert(i);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn insert_remove_maintain_the_count() {
+        let mut s = NodeSet::new(130); // straddles a word boundary + tail
+        assert!(s.insert(0));
+        assert!(s.insert(64));
+        assert!(s.insert(129));
+        assert!(!s.insert(64), "double insert reports not-fresh");
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.recount(), 3);
+        assert!(s.remove(64));
+        assert!(!s.remove(64), "double remove reports not-present");
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.recount(), 2);
+        assert!(s.contains(0) && s.contains(129) && !s.contains(64));
+    }
+
+    #[test]
+    fn tail_bits_past_len_stay_zero() {
+        let mut s = NodeSet::new(70);
+        for i in 0..70 {
+            s.insert(i);
+        }
+        assert_eq!(s.count(), 70);
+        assert_eq!(s.words()[1] >> 6, 0, "bits past len must stay clear");
+        assert_eq!(s.next_zero(0), None);
+        assert_eq!(s.iter_ones().count(), 70);
+    }
+
+    #[test]
+    fn prop_scans_match_bool_vec_oracle() {
+        check("nodeset scans vs Vec<bool>", 60, |rng| {
+            let len = 1 + rng.below(300);
+            let s = random_set(rng, len, 10 + rng.below(80) as u64);
+            let v = naive(&s);
+            expect(
+                s.count() == v.iter().filter(|&&b| b).count(),
+                "count drift",
+            )?;
+            expect(s.count() == s.recount(), "recount drift")?;
+            let ones: Vec<usize> = s.iter_ones().collect();
+            let oracle_ones: Vec<usize> =
+                (0..len).filter(|&i| v[i]).collect();
+            expect(ones == oracle_ones, "iter_ones mismatch")?;
+            // free_runs must tile exactly the clear positions.
+            let mut free = vec![false; len];
+            for (start, run) in s.free_runs() {
+                expect(run > 0, "empty run emitted")?;
+                for i in start..start + run {
+                    expect(!free[i], "overlapping free runs")?;
+                    free[i] = true;
+                }
+                // Maximality: neighbours of a run are set or out of range.
+                expect(start == 0 || v[start - 1], "run start not maximal")?;
+                expect(
+                    start + run == len || v[start + run],
+                    "run end not maximal",
+                )?;
+            }
+            for i in 0..len {
+                expect(free[i] == !v[i], "free coverage mismatch")?;
+            }
+            // next_one/next_zero from every origin match a linear scan.
+            let probe = rng.below(len);
+            expect(
+                s.next_one(probe) == (probe..len).find(|&i| v[i]),
+                "next_one mismatch",
+            )?;
+            expect(
+                s.next_zero(probe) == (probe..len).find(|&i| !v[i]),
+                "next_zero mismatch",
+            )?;
+            Ok(())
+        });
+    }
+}

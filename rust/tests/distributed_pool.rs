@@ -116,6 +116,50 @@ fn csv_workload_ships_inline_and_matches_local() {
     assert!(pooled[0].contains("\"scenario\":\"wire-trace\""), "{}", pooled[0]);
 }
 
+#[test]
+fn csv_delta_pool_matches_local_bytes() {
+    // `--pool-delta`: the first trial ships the CSV job list inline, every
+    // later trial on the connection references it by content hash. The
+    // worker resolves refs from its per-connection cache, so the rows must
+    // not move by a byte relative to the inline encoding or a local run.
+    let jobs = generate(&TraceConfig {
+        num_jobs: 18,
+        seed: 31,
+        ..Default::default()
+    });
+    let workloads = [Workload::from_jobs("wire-trace".into(), jobs)];
+    let a = pool::spawn_worker().unwrap();
+    let executor = PoolExecutor::new(vec![a.to_string()]).with_csv_delta(true);
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(
+        rows_local(&workloads),
+        pooled,
+        "delta encoding must not change a byte of any row"
+    );
+}
+
+#[test]
+fn csv_delta_survives_a_stateless_peer() {
+    // A peer answering every line through the *stateless* dispatch — the
+    // behavior of a worker predating the delta encoding — accepts inline
+    // CSV trials but rejects `csv-ref` with ERR. The leader must route
+    // rejected items to retry/fallback and still emit local bytes.
+    let legacy = spawn_flaky_worker(usize::MAX);
+    let jobs = generate(&TraceConfig {
+        num_jobs: 14,
+        seed: 32,
+        ..Default::default()
+    });
+    let workloads = [Workload::from_jobs("legacy-trace".into(), jobs)];
+    let executor = PoolExecutor::new(vec![legacy.to_string()]).with_csv_delta(true);
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(
+        rows_local(&workloads),
+        pooled,
+        "old-worker interop: rejected refs must degrade, not corrupt rows"
+    );
+}
+
 /// A worker that honestly serves `limit` trials through the library's own
 /// dispatch, then drops the connection mid-grid.
 fn spawn_flaky_worker(limit: usize) -> SocketAddr {

@@ -192,6 +192,216 @@ fn prop_cached_policy_decides_like_fresh_policy_under_churn() {
     });
 }
 
+/// A random topology from both families, including a non-cubic static
+/// extent so asymmetric strides get exercised.
+fn random_topo(rng: &mut Pcg64) -> ClusterTopo {
+    if rng.chance(0.5) {
+        ClusterTopo::reconfigurable_4096(*rng.choose(&[2usize, 4, 8]))
+    } else {
+        ClusterTopo::Static {
+            ext: *rng.choose(&[P3([16, 16, 16]), P3([8, 8, 32])]),
+        }
+    }
+}
+
+#[test]
+fn prop_packed_occupancy_matches_bool_vec_oracle_under_churn() {
+    // The packed `NodeSet` words behind `ClusterState`, driven through
+    // the public API under commit/release/fail/repair churn, against a
+    // plain `Vec<bool>` mirror — the representation the refactor
+    // replaced. Every accessor the placement and engine layers read must
+    // agree with the mirror at every step.
+    check("packed occupancy == Vec<bool> oracle", 15, |rng| {
+        let mut cluster = ClusterState::new(random_topo(rng));
+        let total = cluster.num_nodes();
+        // The mirror matches the flip semantics: a failed node reads as
+        // busy to every occupancy query until repaired.
+        let mut busy = vec![false; total];
+        let mut failed = vec![false; total];
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..30u64 {
+            match rng.below(4) {
+                0 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    let alloc = cluster.release(id).expect("live job releases");
+                    for n in alloc.nodes {
+                        busy[n] = false;
+                    }
+                }
+                1 => {
+                    let n = rng.below(total);
+                    if !busy[n] {
+                        expect(cluster.fail_node(n), "a free node must fail")?;
+                        expect(!cluster.fail_node(n), "double fail is a no-op")?;
+                        busy[n] = true;
+                        failed[n] = true;
+                    }
+                }
+                2 if failed.iter().any(|&b| b) => {
+                    let down: Vec<usize> = (0..total).filter(|&n| failed[n]).collect();
+                    let n = down[rng.below(down.len())];
+                    expect(cluster.repair_node(n), "a down node must repair")?;
+                    expect(!cluster.repair_node(n), "double repair is a no-op")?;
+                    busy[n] = false;
+                    failed[n] = false;
+                }
+                _ => {
+                    let mut nodes: Vec<usize> = (0..rng.range(1, 150))
+                        .map(|_| rng.below(total))
+                        .filter(|&n| cluster.is_free(n))
+                        .collect();
+                    nodes.sort_unstable();
+                    nodes.dedup();
+                    if nodes.is_empty() {
+                        continue;
+                    }
+                    for &n in &nodes {
+                        busy[n] = true;
+                    }
+                    cluster.commit(Allocation {
+                        job: step,
+                        nodes,
+                        cubes: vec![],
+                        ocs_entries: 0,
+                        rings: vec![],
+                        placed_ext: P3([1, 1, 1]),
+                    });
+                    live.push(step);
+                }
+            }
+            let ones = busy.iter().filter(|&&b| b).count();
+            expect(cluster.busy_count() == ones, "busy_count vs mirror")?;
+            expect(cluster.free_count() == total - ones, "free_count vs mirror")?;
+            expect(
+                cluster.failed_count() == failed.iter().filter(|&&b| b).count(),
+                "failed_count vs mirror",
+            )?;
+            for _ in 0..50 {
+                let n = rng.below(total);
+                expect(cluster.is_free(n) == !busy[n], "is_free vs mirror")?;
+                expect(cluster.is_failed(n) == failed[n], "is_failed vs mirror")?;
+            }
+            let down: Vec<usize> = (0..total).filter(|&n| failed[n]).collect();
+            expect(
+                cluster.failed_nodes().collect::<Vec<_>>() == down,
+                "failed_nodes iterator vs mirror",
+            )?;
+            // free_runs must tile exactly the maximal zero runs.
+            let mut runs = Vec::new();
+            let mut i = 0;
+            while i < total {
+                if busy[i] {
+                    i += 1;
+                    continue;
+                }
+                let start = i;
+                while i < total && !busy[i] {
+                    i += 1;
+                }
+                runs.push((start, i - start));
+            }
+            expect(
+                cluster.free_runs().collect::<Vec<_>>() == runs,
+                "free_runs vs mirror",
+            )?;
+            cluster.check_consistency()?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_advanced_index_matches_fresh_rebuild_under_churn() {
+    // The incremental path: one long-lived PlacementIndex advanced via
+    // the cluster's delta journal after every mutation, against a fresh
+    // O(V) rebuild — the PR-5 oracle. Every public query must agree, on
+    // both topology families, through commit/release/fail/repair churn.
+    check("advanced index == fresh rebuild", 12, |rng| {
+        let mut cluster = ClusterState::new(random_topo(rng));
+        let total = cluster.num_nodes();
+        let mut idx = PlacementIndex::build(&cluster);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..18u64 {
+            match rng.below(4) {
+                0 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    cluster.release(id);
+                }
+                1 => {
+                    let n = rng.below(total);
+                    if cluster.is_free(n) {
+                        cluster.fail_node(n);
+                    }
+                }
+                2 if cluster.failed_count() > 0 => {
+                    let down: Vec<usize> = cluster.failed_nodes().collect();
+                    cluster.repair_node(down[rng.below(down.len())]);
+                }
+                _ => {
+                    commit_random_nodes(&mut cluster, rng, step);
+                    live.push(step);
+                }
+            }
+            // Single-step churn always fits the delta journal, so the
+            // advance must succeed and land on the live epoch.
+            expect(idx.advance(&cluster), "journal must cover one step")?;
+            expect(idx.epoch() == cluster.epoch(), "advanced stamp is live")?;
+            let fresh = PlacementIndex::build(&cluster);
+            match cluster.topo() {
+                ClusterTopo::Reconfigurable { grid } => {
+                    let n = grid.n;
+                    for _ in 0..40 {
+                        let cube = rng.below(fresh.reconfig().num_cubes());
+                        let off = P3([rng.below(n + 1), rng.below(n + 1), rng.below(n + 1)]);
+                        let e = P3([
+                            rng.range(1, n + 2),
+                            rng.range(1, n + 2),
+                            rng.range(1, n + 2),
+                        ]);
+                        expect(
+                            idx.reconfig().is_box_free(cube, off, e)
+                                == fresh.reconfig().is_box_free(cube, off, e),
+                            "advanced box query must equal the fresh rebuild",
+                        )?;
+                    }
+                    expect(
+                        idx.reconfig().candidate_cubes() == fresh.reconfig().candidate_cubes(),
+                        "advanced candidate order must equal the fresh rebuild",
+                    )?;
+                }
+                ClusterTopo::Static { ext } => {
+                    expect(
+                        idx.static_sums().free_count() == fresh.static_sums().free_count(),
+                        "advanced free count must equal the fresh rebuild",
+                    )?;
+                    for _ in 0..40 {
+                        let anchor = P3([
+                            rng.below(ext.0[0]),
+                            rng.below(ext.0[1]),
+                            rng.below(ext.0[2]),
+                        ]);
+                        let e = P3([rng.range(1, 6), rng.range(1, 6), rng.range(1, 6)]);
+                        expect(
+                            idx.static_sums().box_free(anchor, e)
+                                == fresh.static_sums().box_free(anchor, e),
+                            "advanced box query must equal the fresh rebuild",
+                        )?;
+                    }
+                    for _ in 0..10 {
+                        let e = P3([rng.range(1, 9), rng.range(1, 9), rng.range(1, 9)]);
+                        expect(
+                            idx.static_sums().find_first_box(e)
+                                == fresh.static_sums().find_first_box(e),
+                            "advanced first-fit scan must equal the fresh rebuild",
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn placement_index_epoch_tracks_cluster() {
     // Deterministic regression for epoch invalidation: a stale index is

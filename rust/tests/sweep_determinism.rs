@@ -150,6 +150,48 @@ fn cached_replay_is_byte_identical_to_cold_run() {
 }
 
 #[test]
+fn scale_smoke_row_at_64k_nodes_stays_deterministic() {
+    // The 16x16x256 torus (65,536 nodes) — the extent the packed-word /
+    // incremental-index scale refactor targets. A tiny grid on it must
+    // flow through the whole sweep pipeline and land on the same row
+    // bytes regardless of worker count: the determinism lock at the
+    // scale ceiling, kept cheap (2 runs × 25 jobs) so it rides in CI.
+    use rfold::placement::builtins;
+    use rfold::topology::cluster::ClusterTopo;
+    use rfold::topology::P3;
+
+    let cells = [exp::Cell {
+        policy: builtins::FIRST_FIT,
+        topo: ClusterTopo::Static {
+            ext: P3([16, 16, 256]),
+        },
+        label: "FirstFit (16x16x256)",
+    }];
+    let rows = |workers: usize| -> Vec<String> {
+        sweep::run_grid(
+            &cells,
+            &wl(&[Scenario::PaperDefault]),
+            2,
+            25,
+            13,
+            workers,
+            &ResultCache::new(),
+        )
+        .iter()
+        .map(report::sweep_row_json)
+        .collect()
+    };
+    let one = rows(1);
+    assert_eq!(one.len(), 1);
+    assert!(
+        one[0].contains("16x16x256"),
+        "row must carry the scale label: {}",
+        one[0]
+    );
+    assert_eq!(one, rows(4), "64k-node row differs across worker counts");
+}
+
+#[test]
 fn all_scenarios_flow_through_the_grid() {
     // Every named scenario must survive the full pipeline and emit a row
     // whose JSON carries its name (acceptance criterion of the sweep PR).
