@@ -1,0 +1,98 @@
+#!/usr/bin/env bash
+# Chaos soak for the crash-safe service mode: replay the recorded Philly
+# sample into `rfold serve --wal --snapshot-every`, SIGKILL the daemon
+# twice mid-replay, restore each time from the snapshot directory + WAL
+# suffix, and assert the final DRAIN rows and STATUS are byte-identical
+# to an uninterrupted daemon fed the same trace.
+#
+# Run from the crate root (rust/): BIN=target/release/rfold scripts/chaos_soak.sh
+set -euo pipefail
+
+BIN=${BIN:-target/release/rfold}
+TRACE=${TRACE:-tests/data/philly_sample.csv}
+REF_ADDR=127.0.0.1:17410
+DIR=$(mktemp -d)
+PIDS=()
+cleanup() {
+    for p in "${PIDS[@]:-}"; do kill -9 "$p" 2>/dev/null || true; done
+    rm -rf "$DIR"
+}
+trap cleanup EXIT
+
+# Split the sample into three chunks, each keeping the CSV header: the
+# kill points sit between chunks, i.e. mid-way through the replay.
+header=$(head -1 "$TRACE")
+tail -n +2 "$TRACE" >"$DIR/body.csv"
+total=$(wc -l <"$DIR/body.csv")
+a=$((total / 3))
+b=$((2 * total / 3))
+{ echo "$header"; head -n "$a" "$DIR/body.csv"; } >"$DIR/chunk1.csv"
+{ echo "$header"; sed -n "$((a + 1)),${b}p" "$DIR/body.csv"; } >"$DIR/chunk2.csv"
+{ echo "$header"; tail -n +"$((b + 1))" "$DIR/body.csv"; } >"$DIR/chunk3.csv"
+
+wait_up() { # $1 = host:port
+    local hp=$1 i
+    for i in $(seq 100); do
+        if (exec 3<>"/dev/tcp/${hp%:*}/${hp#*:}") 2>/dev/null; then
+            return 0
+        fi
+        sleep 0.1
+    done
+    echo "chaos: daemon on $hp never came up" >&2
+    return 1
+}
+
+status_of() { # $1 = host:port → STATUS minus wall-clock latency fields
+    local hp=$1
+    exec 3<>"/dev/tcp/${hp%:*}/${hp#*:}"
+    printf 'STATUS\n' >&3
+    head -1 <&3 | sed -E 's/"decision_(p50|p99)_us":[^,}]*,?//g; s/"decisions":[^,}]*,?//g'
+    exec 3>&- 3<&- || true
+}
+
+# --- Reference: one uninterrupted daemon over the whole trace. ---------
+"$BIN" serve --addr $REF_ADDR 2>"$DIR/ref.log" &
+PIDS+=($!)
+wait_up $REF_ADDR
+"$BIN" submit --trace "$TRACE" --addr $REF_ADDR --drain | grep '^ROW ' >"$DIR/ref.rows"
+status_of $REF_ADDR >"$DIR/ref.status"
+
+# --- Chaos: three daemon generations sharing one WAL + snapshot dir. ---
+WAL="$DIR/arrivals.wal"
+SNAPS="$DIR/snaps"
+gen=0
+for chunk in chunk1 chunk2 chunk3; do
+    gen=$((gen + 1))
+    addr=127.0.0.1:$((17410 + gen))
+    restore=()
+    if [ "$gen" -gt 1 ]; then
+        restore=(--restore "$SNAPS")
+    fi
+    "$BIN" serve --addr "$addr" --wal "$WAL" \
+        --snapshot-every 30m --snapshot-dir "$SNAPS" --snapshot-keep 3 \
+        "${restore[@]}" 2>"$DIR/gen$gen.log" &
+    pid=$!
+    PIDS+=($pid)
+    wait_up "$addr"
+    if [ "$chunk" = chunk3 ]; then
+        "$BIN" submit --trace "$DIR/$chunk.csv" --addr "$addr" --drain |
+            grep '^ROW ' >"$DIR/chaos.rows"
+        status_of "$addr" >"$DIR/chaos.status"
+    else
+        "$BIN" submit --trace "$DIR/$chunk.csv" --addr "$addr"
+        kill -9 "$pid" # SIGKILL mid-replay: only the WAL has the tail
+        wait "$pid" 2>/dev/null || true
+    fi
+done
+
+# --- The contract: zero accepted jobs lost, bytes identical. -----------
+diff -u "$DIR/ref.rows" "$DIR/chaos.rows" || {
+    echo "chaos: DRAIN rows diverged after SIGKILL + restore" >&2
+    exit 1
+}
+diff -u "$DIR/ref.status" "$DIR/chaos.status" || {
+    echo "chaos: STATUS diverged after SIGKILL + restore" >&2
+    exit 1
+}
+rows=$(wc -l <"$DIR/chaos.rows")
+echo "chaos: OK — $rows rows byte-identical across 2 SIGKILLs ($(grep -c '^J ' "$WAL") journaled jobs)"

@@ -15,6 +15,9 @@
 //!   line commands, plus the `rfold submit` trace-replay client.
 //! * [`snapshot`] — versioned, checksummed serialization of a live
 //!   service (`rfold serve --restore` resumes byte-identically).
+//! * [`wal`] — the write-ahead arrival journal (`rfold serve --wal`):
+//!   accepted submissions are fsynced before the ACK, so a `kill -9`
+//!   loses zero acknowledged jobs.
 
 pub mod leader;
 pub mod pool;
@@ -22,5 +25,6 @@ pub mod replay;
 pub mod serve;
 pub mod server;
 pub mod snapshot;
+pub mod wal;
 
 pub use leader::{Leader, LeaderHandle, LeaderStats};

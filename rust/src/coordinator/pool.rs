@@ -35,7 +35,15 @@
 //! worker (`ERR` replies), or left over after all connections are gone,
 //! is simulated by the leader itself. The grid therefore always
 //! completes, and always with the exact bytes a local run would produce.
-//! Per-worker statistics are reported on stderr only (see
+//!
+//! The pool also *self-heals*: each host carries a circuit breaker
+//! ([`BREAKER_STRIKES`] consecutive failures open it, with exponential
+//! cool-off capped at [`BREAKER_MAX_BACKOFF`]), and a host whose breaker
+//! is open is probed with background `PING` heartbeats — a `PONG` closes
+//! the breaker and the host's connections re-join the grid, so a worker
+//! that restarts mid-sweep gets its capacity back instead of being
+//! written off. Health only moves *where* an item runs, never its bytes.
+//! Per-worker and per-host statistics are reported on stderr only (see
 //! `metrics::report::print_pool_telemetry`).
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
@@ -43,7 +51,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::metrics::report;
 use crate::placement::{PolicyHandle, PolicyRegistry};
@@ -629,10 +637,26 @@ pub struct WorkerStats {
     pub died: bool,
 }
 
+/// Per-host circuit-breaker telemetry (stderr reporting only — never part
+/// of any row). One entry per `--pool` address, shared by all of the
+/// host's connections.
+#[derive(Clone, Debug)]
+pub struct HostStats {
+    pub addr: String,
+    /// Times the host's breaker opened: [`BREAKER_STRIKES`] consecutive
+    /// communication failures, or a failed half-open probe.
+    pub trips: u64,
+    /// Times the breaker closed again — a half-open `PING` answered
+    /// `PONG`, or a reconnect that went on to serve trials.
+    pub recoveries: u64,
+}
+
 /// Aggregate telemetry of one [`PoolExecutor::execute`] call.
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
     pub workers: Vec<WorkerStats>,
+    /// Per-host breaker trips/recoveries (one entry per pool address).
+    pub hosts: Vec<HostStats>,
     /// Items re-queued after a connection failure.
     pub retried: usize,
     /// Items the leader simulated itself (all workers dead or rejecting).
@@ -651,6 +675,156 @@ const POOL_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 /// other failure. Grids whose single trial legitimately exceeds this
 /// raise it via [`PoolExecutor::with_read_timeout`] (`--pool-timeout`).
 pub const POOL_READ_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Consecutive communication failures (connect refusals, deaths, dropped
+/// connections) that trip a host's circuit breaker.
+pub const BREAKER_STRIKES: u32 = 3;
+
+/// First open-state cool-off; doubles on every consecutive trip up to
+/// [`BREAKER_MAX_BACKOFF`]. Tests shrink it via
+/// [`PoolExecutor::with_breaker_backoff`].
+pub const BREAKER_BASE_BACKOFF: Duration = Duration::from_secs(1);
+
+/// Cool-off growth cap (1s → 2s → 4s → … → 60s).
+pub const BREAKER_MAX_BACKOFF: Duration = Duration::from_secs(60);
+
+/// Reconnect attempts per connection slot, the initial connect included.
+/// A transiently crashed worker gets picked back up through the breaker;
+/// a permanently dead one stops costing probes after a few tries so its
+/// leftovers reach the leader fallback instead of stalling the join.
+const MAX_CONN_ATTEMPTS: usize = 4;
+
+/// Failed half-open probes a single connection thread tolerates before it
+/// gives up on the host for the rest of the grid.
+const MAX_PROBE_FAILURES: usize = 2;
+
+/// Circuit-breaker position for one host.
+enum BreakerState {
+    /// Healthy: connections proceed normally.
+    Closed,
+    /// Tripped: no connection attempts until `until`; then the first
+    /// thread to ask becomes the half-open probe.
+    Open { until: Instant },
+    /// One probe is in flight; everyone else waits for its verdict.
+    HalfOpen,
+}
+
+/// What a connection thread that wants to talk to a host should do now.
+enum Gate {
+    /// Breaker closed — connect and pull trials.
+    Proceed,
+    /// Breaker just moved open → half-open and elected *this* caller as
+    /// the probe: send `PING`, report the verdict.
+    Probe,
+    /// Breaker open (or a sibling is probing): back off this long, then
+    /// ask again.
+    Wait(Duration),
+}
+
+/// Shared health of one worker host — the circuit breaker plus its
+/// telemetry counters. All of a host's connections consult the same
+/// instance (under a mutex), so strikes accumulate across siblings and a
+/// single probe speaks for the whole host.
+struct HostHealth {
+    state: BreakerState,
+    /// Consecutive failures since the last success.
+    strikes: u32,
+    /// Cool-off the *next* trip will impose (doubles per trip, capped).
+    backoff: Duration,
+    trips: u64,
+    recoveries: u64,
+}
+
+impl HostHealth {
+    fn new(base: Duration) -> HostHealth {
+        HostHealth {
+            state: BreakerState::Closed,
+            strikes: 0,
+            backoff: base,
+            trips: 0,
+            recoveries: 0,
+        }
+    }
+
+    /// A connection served trials (or a probe got its `PONG`): reset the
+    /// strike count and the backoff ladder, close the breaker. Counts a
+    /// recovery if the breaker was open or half-open.
+    fn on_success(&mut self, base: Duration) {
+        self.strikes = 0;
+        self.backoff = base;
+        if !matches!(self.state, BreakerState::Closed) {
+            self.recoveries += 1;
+        }
+        self.state = BreakerState::Closed;
+    }
+
+    /// A connection to this host failed (connect refusal, death, drop).
+    /// Trips the breaker on the [`BREAKER_STRIKES`]th consecutive strike;
+    /// a failure while half-open re-trips immediately (the probe spoke
+    /// for the host).
+    fn on_failure(&mut self, now: Instant) {
+        self.strikes += 1;
+        match self.state {
+            BreakerState::Closed if self.strikes >= BREAKER_STRIKES => self.trip(now),
+            BreakerState::HalfOpen => self.trip(now),
+            _ => {}
+        }
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.trips += 1;
+        self.state = BreakerState::Open {
+            until: now + self.backoff,
+        };
+        self.backoff = (self.backoff * 2).min(BREAKER_MAX_BACKOFF);
+    }
+
+    /// Admission decision for a connection thread. Exactly one caller is
+    /// handed [`Gate::Probe`] when an open breaker's cool-off expires —
+    /// the transition to half-open happens here, under the caller's lock.
+    fn gate(&mut self, now: Instant) -> Gate {
+        match self.state {
+            BreakerState::Closed => Gate::Proceed,
+            BreakerState::HalfOpen => Gate::Wait(Duration::from_millis(50)),
+            BreakerState::Open { until } => {
+                if now >= until {
+                    self.state = BreakerState::HalfOpen;
+                    Gate::Probe
+                } else {
+                    Gate::Wait(until - now)
+                }
+            }
+        }
+    }
+}
+
+/// The half-open heartbeat: connect, send `PING`, require `PONG`. Cheap
+/// (no trial state), bounded by [`POOL_CONNECT_TIMEOUT`] plus a short
+/// read timeout, and safe to aim at any protocol-speaking worker.
+fn probe_worker(addr: &str) -> bool {
+    let Ok(stream) = connect_worker(addr) else {
+        return false;
+    };
+    if stream
+        .set_read_timeout(Some(POOL_CONNECT_TIMEOUT))
+        .is_err()
+    {
+        return false;
+    }
+    let Ok(mut out) = stream.try_clone() else {
+        return false;
+    };
+    if writeln!(out, "PING").is_err() {
+        return false;
+    }
+    let mut line = String::new();
+    let ok = matches!(BufReader::new(stream).read_line(&mut line), Ok(n) if n > 0)
+        && line.trim() == "PONG";
+    if ok {
+        let _ = writeln!(out, "QUIT");
+    }
+    ok
+}
 
 /// The TCP-pool [`TrialExecutor`]: [`connections`](PoolExecutor::with_connections)
 /// connections (and threads) per worker address, all pulling from the
@@ -673,6 +847,9 @@ pub struct PoolExecutor {
     /// default — the inline encoding is what pre-delta workers accept.
     csv_delta: bool,
     read_timeout: Duration,
+    /// First breaker cool-off ([`BREAKER_BASE_BACKOFF`] by default;
+    /// tests shrink it so half-open probes happen in milliseconds).
+    breaker_base: Duration,
     stats: Mutex<PoolStats>,
 }
 
@@ -702,8 +879,17 @@ impl PoolExecutor {
             pipeline: 1,
             csv_delta: false,
             read_timeout: POOL_READ_TIMEOUT,
+            breaker_base: BREAKER_BASE_BACKOFF,
             stats: Mutex::new(PoolStats::default()),
         }
+    }
+
+    /// Override the first breaker cool-off (doubles per trip up to
+    /// [`BREAKER_MAX_BACKOFF`]). Zero is clamped to 1ms so an open
+    /// breaker always yields the CPU before probing.
+    pub fn with_breaker_backoff(mut self, base: Duration) -> PoolExecutor {
+        self.breaker_base = base.max(Duration::from_millis(1));
+        self
     }
 
     /// Enable the `csv-ref` delta encoding (the CLI's `--pool-delta`):
@@ -763,6 +949,93 @@ impl PoolExecutor {
         self.stats.lock().unwrap().clone()
     }
 
+    /// One connection slot's lifecycle: consult the host's circuit
+    /// breaker, then drive a connection ([`PoolExecutor::drive_conn`])
+    /// until the queue drains. On a death the breaker takes a strike and
+    /// — while work this host could take remains — the slot reconnects
+    /// through it, acting as the background `PING` heartbeat when
+    /// elected as the half-open probe. Bounded by [`MAX_CONN_ATTEMPTS`]
+    /// drive attempts and [`MAX_PROBE_FAILURES`] failed probes, so a
+    /// permanently dead host hands its leftovers to the leader fallback
+    /// instead of stalling the join. Returns completed
+    /// `(item index, output)` pairs.
+    #[allow(clippy::too_many_arguments)]
+    fn run_conn(
+        &self,
+        conn: (&str, usize),
+        items: &[WorkItem],
+        next: &(dyn Fn(usize) -> Option<usize> + Sync),
+        fail: &(dyn Fn(usize, usize, bool) + Sync),
+        progress: &(dyn Fn(&WorkItem) + Sync),
+        work_remains: &(dyn Fn(usize) -> bool + Sync),
+        health: &Mutex<HostHealth>,
+        stats: &mut WorkerStats,
+    ) -> Vec<(usize, Arc<TrialOutput>)> {
+        let (addr, host) = conn;
+        let mut got = Vec::new();
+        let mut probe_failures = 0usize;
+        for attempt in 0..MAX_CONN_ATTEMPTS {
+            // Breaker gate: wait out an open breaker (bailing once the
+            // grid holds nothing this host could serve), probing when
+            // elected.
+            loop {
+                if !work_remains(host) {
+                    return got;
+                }
+                let g = health.lock().unwrap().gate(Instant::now());
+                match g {
+                    Gate::Proceed => break,
+                    Gate::Probe => {
+                        if probe_worker(addr) {
+                            health.lock().unwrap().on_success(self.breaker_base);
+                            eprintln!("pool: {addr}: probe PONG; breaker closed");
+                        } else {
+                            health.lock().unwrap().on_failure(Instant::now());
+                            probe_failures += 1;
+                            eprintln!("pool: {addr}: probe failed; breaker re-opened");
+                            if probe_failures >= MAX_PROBE_FAILURES {
+                                return got;
+                            }
+                        }
+                    }
+                    // Sleep in short slices so the thread notices the
+                    // queue draining underneath it.
+                    Gate::Wait(d) => {
+                        std::thread::sleep(d.min(Duration::from_millis(200)));
+                    }
+                }
+            }
+            if attempt > 0 {
+                // Fresh verdict for the new connection; `connected` and
+                // `completed` keep accumulating across attempts.
+                stats.died = false;
+                eprintln!("pool: {addr}: reconnecting (attempt {})", attempt + 1);
+            }
+            let outs = self.drive_conn((addr, host), items, next, fail, progress, stats);
+            got.extend(outs);
+            if stats.died {
+                let tripped = {
+                    let mut h = health.lock().unwrap();
+                    let before = h.trips;
+                    h.on_failure(Instant::now());
+                    h.trips > before
+                };
+                if tripped {
+                    eprintln!(
+                        "pool: {addr}: breaker opened after {BREAKER_STRIKES} consecutive failures"
+                    );
+                }
+            } else {
+                // Clean drain: the host answered everything it was
+                // offered — reset the strike ladder and close the
+                // breaker (a recovery, if it was open).
+                health.lock().unwrap().on_success(self.breaker_base);
+                return got;
+            }
+        }
+        got
+    }
+
     /// Drive one connection until the queue drains or the connection is
     /// abandoned. `conn` is (connect address, host index); `fail`'s third
     /// argument flags a deterministic remote rejection (`ERR` reply) as
@@ -770,7 +1043,7 @@ impl PoolExecutor {
     /// per *host*, so an item a host refused is never futilely re-sent to
     /// that host's sibling connections. Returns completed
     /// `(item index, output)` pairs.
-    fn run_conn(
+    fn drive_conn(
         &self,
         conn: (&str, usize),
         items: &[WorkItem],
@@ -940,6 +1213,14 @@ impl TrialExecutor for PoolExecutor {
         // exactly as with one connection each.
         let host_failed: Vec<Mutex<HashSet<usize>>> =
             self.addrs.iter().map(|_| Mutex::new(HashSet::new())).collect();
+        // Per-host circuit breakers, shared by each host's connections:
+        // three consecutive strikes open a breaker, a half-open `PING`
+        // probe (after exponential cool-off) closes it again.
+        let health: Vec<Mutex<HostHealth>> = self
+            .addrs
+            .iter()
+            .map(|_| Mutex::new(HostHealth::new(self.breaker_base)))
+            .collect();
         let retried = AtomicUsize::new(0);
 
         // Retried items first (they are blocking a grid slot), then the
@@ -987,6 +1268,20 @@ impl TrialExecutor for PoolExecutor {
             retries.lock().unwrap().push(i);
         };
 
+        // Whether the grid still holds work this host could take — what a
+        // connection waiting on an open breaker checks before sleeping
+        // again, so threads stop waiting (and probing) the moment the
+        // queue drains. Items in flight on *other* connections are
+        // invisible here by design: if one fails later it re-queues, and
+        // surviving connections or the leader fallback absorb it.
+        let work_remains = |host: usize| -> bool {
+            if cursor.load(Ordering::Relaxed) < n {
+                return true;
+            }
+            let exclude = host_failed[host].lock().unwrap();
+            retries.lock().unwrap().iter().any(|i| !exclude.contains(i))
+        };
+
         // The same every-tenth-trial liveness reporting the local backend
         // gives: a healthy multi-hour pooled grid must be distinguishable
         // from a wedged one before any timeout fires. Stderr only.
@@ -997,6 +1292,8 @@ impl TrialExecutor for PoolExecutor {
         let next_ref = &next;
         let fail_ref = &fail;
         let progress_ref = &progress;
+        let work_remains_ref = &work_remains;
+        let health_ref = &health;
         std::thread::scope(|scope| {
             let handles: Vec<_> = conns
                 .iter()
@@ -1015,6 +1312,8 @@ impl TrialExecutor for PoolExecutor {
                             next_ref,
                             fail_ref,
                             progress_ref,
+                            work_remains_ref,
+                            &health_ref[host],
                             &mut stats,
                         );
                         (stats, got)
@@ -1049,8 +1348,22 @@ impl TrialExecutor for PoolExecutor {
             }
         }
 
+        let host_stats: Vec<HostStats> = self
+            .addrs
+            .iter()
+            .zip(&health)
+            .map(|(addr, h)| {
+                let h = h.lock().unwrap();
+                HostStats {
+                    addr: addr.clone(),
+                    trips: h.trips,
+                    recoveries: h.recoveries,
+                }
+            })
+            .collect();
         let stats = PoolStats {
             workers: worker_stats,
+            hosts: host_stats,
             retried: retried.load(Ordering::Relaxed),
             leader_fallback: fallback,
         };
@@ -1324,5 +1637,58 @@ mod tests {
             vec!["a:1".to_string(), "b:2".into(), "c:3".into()]
         );
         assert!(PoolExecutor::parse_pool(" , ").is_empty());
+    }
+
+    #[test]
+    fn breaker_trips_after_strikes_and_recovers_via_probe() {
+        // Pure state-machine walk with synthetic clocks — no sockets, no
+        // sleeping: two strikes stay closed, the third opens the breaker,
+        // exactly one caller is elected as the half-open probe, a failed
+        // probe re-opens with doubled cool-off, a success recovers.
+        let base = Duration::from_millis(10);
+        let mut h = HostHealth::new(base);
+        let t0 = Instant::now();
+        assert!(matches!(h.gate(t0), Gate::Proceed));
+        h.on_failure(t0);
+        h.on_failure(t0);
+        assert!(matches!(h.gate(t0), Gate::Proceed), "two strikes stay closed");
+        h.on_failure(t0);
+        assert_eq!(h.trips, 1, "third consecutive strike trips");
+        match h.gate(t0) {
+            Gate::Wait(d) => assert!(d <= base, "{d:?}"),
+            _ => panic!("open breaker must wait"),
+        }
+        let expired = t0 + base;
+        assert!(matches!(h.gate(expired), Gate::Probe), "first caller probes");
+        assert!(
+            matches!(h.gate(expired), Gate::Wait(_)),
+            "siblings wait while the probe is in flight"
+        );
+        h.on_failure(expired);
+        assert_eq!(h.trips, 2, "failed probe re-trips");
+        match h.gate(expired) {
+            Gate::Wait(d) => assert!(d > base, "cool-off must double: {d:?}"),
+            _ => panic!("re-opened breaker must wait"),
+        }
+        let later = expired + base * 4;
+        assert!(matches!(h.gate(later), Gate::Probe));
+        h.on_success(base);
+        assert_eq!((h.recoveries, h.strikes), (1, 0));
+        assert!(matches!(h.gate(later), Gate::Proceed));
+        // A lone pre-trip failure after recovery does not re-open.
+        h.on_failure(later);
+        assert!(matches!(h.gate(later), Gate::Proceed));
+        assert_eq!(h.trips, 2);
+    }
+
+    #[test]
+    fn breaker_backoff_is_capped() {
+        let mut h = HostHealth::new(Duration::from_secs(40));
+        let t0 = Instant::now();
+        for _ in 0..BREAKER_STRIKES {
+            h.on_failure(t0);
+        }
+        assert_eq!(h.trips, 1);
+        assert_eq!(h.backoff, BREAKER_MAX_BACKOFF, "40s doubles to the 60s cap");
     }
 }

@@ -30,6 +30,14 @@
 //! bounded-queue backpressure of a real intake. Rejected jobs never
 //! enter the trace, so acceptance *is* the determinism boundary.
 //! Arrivals must be non-decreasing: the engine cannot schedule the past.
+//!
+//! Crash safety ([`ServeOptions`]): with `--wal`, every accepted
+//! submission is appended to a fsynced write-ahead journal *before* the
+//! `OK` is sent, and with `--snapshot-every`, the service auto-snapshots
+//! on a virtual-time cadence (atomic write, keep-last-K rotation). A
+//! `kill -9` therefore loses zero acknowledged jobs: restart restores
+//! the newest valid snapshot and re-feeds the WAL suffix through the
+//! exact admission path before the listener answers anything.
 
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
@@ -41,6 +49,7 @@ use std::time::Duration;
 use crate::coordinator::pool;
 use crate::coordinator::server;
 use crate::coordinator::snapshot::{self, ServiceMeta, ServiceSnapshot};
+use crate::coordinator::wal;
 use crate::metrics::report;
 use crate::sim::engine::RunResult;
 use crate::sim::observer::DecisionLatency;
@@ -51,6 +60,42 @@ use crate::util::stats::percentile_of;
 
 /// Default admission-control queue cap (`rfold serve --queue-cap`).
 pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Durability knobs for the service thread (`rfold serve --wal /
+/// --snapshot-every / --snapshot-dir / --snapshot-keep`), plus the WAL
+/// suffix to replay on restart. [`Default`] disables everything — the
+/// pre-existing in-memory daemon.
+#[derive(Clone, Default)]
+pub struct ServeOptions {
+    /// Write-ahead journal path; accepted jobs are fsynced there before
+    /// the `OK` reply. `None` disables journaling.
+    pub wal: Option<String>,
+    /// Journaled jobs to re-submit through the admission path before any
+    /// live command is handled (the WAL suffix past the restored
+    /// snapshot). The writer attaches only *after* replay, so these are
+    /// never re-journaled.
+    pub replay: Vec<JobSpec>,
+    /// Auto-snapshot cadence in *virtual* seconds, measured on accepted
+    /// arrivals; `<= 0` disables.
+    pub snapshot_every: f64,
+    /// Directory for `auto-<seq>.snap` files (defaults to `snapshots`).
+    pub snapshot_dir: Option<String>,
+    /// Keep-last-K rotation for auto-snapshots; `0` keeps all.
+    pub snapshot_keep: usize,
+}
+
+/// The first virtual timestamp at or past which the next auto-snapshot
+/// is due, given the latest accepted arrival `after`.
+fn next_cadence(after: f64, every: f64) -> f64 {
+    if every <= 0.0 {
+        return f64::INFINITY;
+    }
+    if after.is_finite() && after > 0.0 {
+        (after / every).floor() * every + every
+    } else {
+        every
+    }
+}
 
 /// One request to the service thread; every command carries its own
 /// reply channel, so replies cannot cross between connections.
@@ -105,6 +150,18 @@ struct Service {
     latency: DecisionLatency,
     /// Final result, kept for post-drain `STATUS`.
     result: Option<RunResult>,
+    /// Write-ahead journal; accepted submissions are fsynced here before
+    /// the `OK` reply (`None` = journaling off, or replay in progress).
+    wal: Option<wal::WalWriter>,
+    /// Auto-snapshot cadence in virtual seconds (`<= 0` = off).
+    snapshot_every: f64,
+    snapshot_dir: String,
+    /// Keep-last-K rotation bound for auto-snapshots (`0` keeps all).
+    snapshot_keep: usize,
+    /// Virtual time of the next due auto-snapshot (`INFINITY` when off).
+    next_snapshot_at: f64,
+    /// Sequence number of the last auto-snapshot written.
+    snapshot_seq: u64,
 }
 
 impl Service {
@@ -138,18 +195,76 @@ impl Service {
                 ])
             );
         }
+        // Durability before acknowledgement: the accepted arrival reaches
+        // the fsynced journal before the engine sees it or the client
+        // hears `OK` — a `kill -9` past this line loses nothing.
+        if let Some(w) = self.wal.as_mut() {
+            if let Err(e) = w.append(&job) {
+                return format!("ERR {e}");
+            }
+        }
         self.admitted += 1;
         self.ids.insert(job.id);
         self.jobs.push(job);
         sim.submit(&self.jobs, self.jobs.len() - 1);
-        format!(
+        let reply = format!(
             "OK {}",
             jobj(vec![
                 ("id", Json::u64_str(job.id)),
                 ("queue", Json::Num(sim.queue_depth() as f64)),
                 ("running", Json::Num(sim.running_count() as f64)),
             ])
-        )
+        );
+        self.maybe_auto_snapshot();
+        reply
+    }
+
+    /// Write `auto-<seq>.snap` whenever accepted arrivals cross the
+    /// cadence boundary, then rotate old auto-snapshots away. Failures
+    /// are reported on stderr and never fail the submission: durability
+    /// degrades to the WAL alone, it does not take the service down.
+    fn maybe_auto_snapshot(&mut self) {
+        if self.horizon < self.next_snapshot_at {
+            return;
+        }
+        while self.next_snapshot_at <= self.horizon {
+            self.next_snapshot_at += self.snapshot_every;
+        }
+        self.snapshot_seq += 1;
+        let path = format!("{}/auto-{:08}.snap", self.snapshot_dir, self.snapshot_seq);
+        let reply = self.snapshot(&path);
+        if let Some(p) = reply.strip_prefix("SNAPSHOT-OK ") {
+            eprintln!("serve: auto-snapshot {p} at t={}", self.horizon);
+            self.rotate_snapshots();
+        } else {
+            eprintln!("serve: auto-snapshot {path}: {reply}");
+        }
+    }
+
+    /// Delete the oldest `auto-*.snap` files beyond the keep bound.
+    /// Manual `SNAPSHOT <path>` files are never rotated away.
+    fn rotate_snapshots(&self) {
+        if self.snapshot_keep == 0 {
+            return;
+        }
+        let mut autos: Vec<String> = snapshot::list_snapshots(&self.snapshot_dir)
+            .into_iter()
+            .filter(|p| {
+                std::path::Path::new(p)
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("auto-"))
+            })
+            .collect();
+        // `list_snapshots` sorts ascending and auto names are zero-padded,
+        // so the front of the list is the oldest.
+        while autos.len() > self.snapshot_keep {
+            let victim = autos.remove(0);
+            if let Err(e) = std::fs::remove_file(&victim) {
+                eprintln!("serve: snapshot rotation: cannot remove {victim}: {e}");
+                break;
+            }
+        }
     }
 
     fn status(&self) -> String {
@@ -271,8 +386,43 @@ pub fn spawn_service(
     queue_cap: usize,
     restore: Option<ServiceSnapshot>,
 ) -> (ServiceHandle, JoinHandle<()>) {
+    spawn_service_opts(cfg, queue_cap, restore, ServeOptions::default())
+}
+
+/// [`spawn_service`] with durability options: before the command loop
+/// starts, the WAL suffix in `opts.replay` is re-submitted through the
+/// exact admission path, and only then is the journal writer attached
+/// (replayed jobs are already on disk — re-appending would duplicate
+/// them).
+pub fn spawn_service_opts(
+    cfg: SimConfig,
+    queue_cap: usize,
+    restore: Option<ServiceSnapshot>,
+    opts: ServeOptions,
+) -> (ServiceHandle, JoinHandle<()>) {
     let (tx, rx) = mpsc::channel::<SvcCmd>();
     let join = thread::spawn(move || {
+        let ServeOptions {
+            wal: wal_path,
+            replay,
+            snapshot_every,
+            snapshot_dir,
+            snapshot_keep,
+        } = opts;
+        let snapshot_dir = snapshot_dir.unwrap_or_else(|| "snapshots".to_string());
+        let snapshot_seq = snapshot::list_snapshots(&snapshot_dir)
+            .iter()
+            .filter_map(|p| {
+                std::path::Path::new(p)
+                    .file_name()?
+                    .to_str()?
+                    .strip_prefix("auto-")?
+                    .strip_suffix(".snap")?
+                    .parse::<u64>()
+                    .ok()
+            })
+            .max()
+            .unwrap_or(0);
         let latency = DecisionLatency::new();
         let mut svc = match restore {
             None => Service {
@@ -287,6 +437,12 @@ pub fn spawn_service(
                 rejected: 0,
                 latency,
                 result: None,
+                wal: None,
+                snapshot_every,
+                snapshot_dir,
+                snapshot_keep,
+                next_snapshot_at: next_cadence(f64::NEG_INFINITY, snapshot_every),
+                snapshot_seq,
             },
             Some(snap) => {
                 let sim = match Simulation::restore(snap.cfg, &snap.engine) {
@@ -320,9 +476,40 @@ pub fn spawn_service(
                     rejected: snap.rejected,
                     latency,
                     result: None,
+                    wal: None,
+                    snapshot_every,
+                    snapshot_dir,
+                    snapshot_keep,
+                    next_snapshot_at: next_cadence(horizon, snapshot_every),
+                    snapshot_seq,
                 }
             }
         };
+        // Crash recovery: re-feed the journaled suffix through the exact
+        // admission path before any live command is handled. Replayed
+        // jobs were accepted pre-crash with the same cap and ordering,
+        // so determinism re-accepts every one of them.
+        let replayed = replay.len();
+        for job in replay {
+            let r = svc.submit(job);
+            if !r.starts_with("OK") {
+                eprintln!("serve: wal replay: journaled job not re-accepted: {r}");
+            }
+        }
+        if replayed > 0 {
+            eprintln!("serve: replayed {replayed} journaled job(s)");
+        }
+        if let Some(path) = wal_path {
+            match wal::WalWriter::open(&path) {
+                Ok(w) => svc.wal = Some(w),
+                Err(e) => {
+                    // Serving without the promised journal would be a
+                    // silent durability downgrade — refuse instead.
+                    eprintln!("serve: --wal: {e}");
+                    return;
+                }
+            }
+        }
         while let Ok(cmd) = rx.recv() {
             match cmd {
                 SvcCmd::Submit(job, reply) => {
@@ -410,9 +597,24 @@ pub fn spawn_server_on(
     queue_cap: usize,
     restore: Option<ServiceSnapshot>,
 ) -> std::io::Result<(SocketAddr, ServiceHandle, JoinHandle<()>)> {
+    spawn_server_on_opts(addr, cfg, queue_cap, restore, ServeOptions::default())
+}
+
+/// [`spawn_server_on`] with durability options. WAL replay happens on
+/// the service thread before its command loop, and commands queue in
+/// the mpsc channel, so connections accepted during replay are answered
+/// only after recovery completes — no client can observe a half-restored
+/// service.
+pub fn spawn_server_on_opts(
+    addr: &str,
+    cfg: SimConfig,
+    queue_cap: usize,
+    restore: Option<ServiceSnapshot>,
+    opts: ServeOptions,
+) -> std::io::Result<(SocketAddr, ServiceHandle, JoinHandle<()>)> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    let (handle, join) = spawn_service(cfg, queue_cap, restore);
+    let (handle, join) = spawn_service_opts(cfg, queue_cap, restore, opts);
     let accept_handle = handle.clone();
     thread::spawn(move || {
         for stream in listener.incoming() {
@@ -435,8 +637,32 @@ pub fn serve(
     queue_cap: usize,
     restore: Option<ServiceSnapshot>,
 ) -> std::io::Result<()> {
-    let (local, _handle, join) = spawn_server_on(addr, cfg, queue_cap, restore)?;
-    eprintln!("rfold serve listening on {local} (queue-cap {queue_cap})");
+    serve_opts(addr, cfg, queue_cap, restore, ServeOptions::default())
+}
+
+/// [`serve`] with durability options (`--wal` / `--snapshot-every`).
+pub fn serve_opts(
+    addr: &str,
+    cfg: SimConfig,
+    queue_cap: usize,
+    restore: Option<ServiceSnapshot>,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
+    let wal_note = match &opts.wal {
+        Some(p) => format!(", wal {p}"),
+        None => String::new(),
+    };
+    let snap_note = if opts.snapshot_every > 0.0 {
+        format!(
+            ", auto-snapshot every {}s into {}",
+            opts.snapshot_every,
+            opts.snapshot_dir.as_deref().unwrap_or("snapshots")
+        )
+    } else {
+        String::new()
+    };
+    let (local, _handle, join) = spawn_server_on_opts(addr, cfg, queue_cap, restore, opts)?;
+    eprintln!("rfold serve listening on {local} (queue-cap {queue_cap}{wal_note}{snap_note})");
     join.join()
         .map_err(|_| std::io::Error::other("service thread panicked"))?;
     eprintln!("rfold serve: shut down");
@@ -652,5 +878,84 @@ mod tests {
         assert!(r.ends_with("DRAIN-OK rows=2"), "{r}");
         let _ = dispatch("SHUTDOWN", &handle);
         join.join().unwrap();
+    }
+
+    #[test]
+    fn wal_and_auto_snapshots_survive_a_dropped_service() {
+        let dir = std::env::temp_dir().join(format!("rfold_serve_dur_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_s = dir.to_str().unwrap().to_string();
+        let wal_path = format!("{dir_s}/arrivals.wal");
+        let stream = [
+            (0u64, 0.0),
+            (1, 15.0),
+            (2, 40.0),
+            (3, 65.0),
+            (4, 90.0),
+            (5, 95.0),
+        ];
+        let opts = ServeOptions {
+            wal: Some(wal_path.clone()),
+            replay: Vec::new(),
+            snapshot_every: 20.0,
+            snapshot_dir: Some(dir_s.clone()),
+            snapshot_keep: 2,
+        };
+        let (handle, join) = spawn_service_opts(cfg(), 8, None, opts);
+        for (id, arrival) in stream {
+            let r = dispatch(
+                &format!("SUBMIT {}", pool::job_json(&jsub(id, arrival))),
+                &handle,
+            )
+            .unwrap();
+            assert!(r.starts_with("OK "), "job {id}: {r}");
+        }
+        // "kill -9": drop the service without DRAIN or SHUTDOWN. Only the
+        // durable artifacts (WAL + auto-snapshots) survive.
+        drop(handle);
+        join.join().unwrap();
+        // Every ACKed job is journaled.
+        let replayed = wal::replay(&wal_path).unwrap();
+        assert_eq!(replayed.jobs.len(), stream.len());
+        assert!(!replayed.torn);
+        // Cadence 20 over arrivals to 95 snapshots at t=40/65/90 (seq
+        // 1..=3); keep-last-2 rotation leaves exactly seq 2 and 3.
+        let autos: Vec<String> = snapshot::list_snapshots(&dir_s)
+            .into_iter()
+            .filter(|p| p.contains("auto-"))
+            .collect();
+        assert_eq!(autos.len(), 2, "{autos:?}");
+        assert!(autos[1].ends_with("auto-00000003.snap"), "{autos:?}");
+        // Restore the newest snapshot and replay the WAL suffix; the
+        // drain must be byte-identical to an uninterrupted service.
+        let (snap, _) = snapshot::load_newest(&dir_s).unwrap().unwrap();
+        assert!(
+            snap.jobs.len() < stream.len(),
+            "job 5 must live only in the WAL for this test to bite"
+        );
+        let suffix = replayed.jobs[snap.jobs.len()..].to_vec();
+        let opts = ServeOptions {
+            replay: suffix,
+            ..ServeOptions::default()
+        };
+        let (handle, join) = spawn_service_opts(cfg(), 8, Some(snap), opts);
+        let restored = dispatch("DRAIN", &handle).unwrap();
+        let _ = dispatch("SHUTDOWN", &handle);
+        join.join().unwrap();
+        let (handle, join) = spawn_service(cfg(), 8, None);
+        for (id, arrival) in stream {
+            let r = dispatch(
+                &format!("SUBMIT {}", pool::job_json(&jsub(id, arrival))),
+                &handle,
+            )
+            .unwrap();
+            assert!(r.starts_with("OK "), "job {id}: {r}");
+        }
+        let uninterrupted = dispatch("DRAIN", &handle).unwrap();
+        let _ = dispatch("SHUTDOWN", &handle);
+        join.join().unwrap();
+        assert_eq!(restored, uninterrupted);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

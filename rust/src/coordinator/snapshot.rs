@@ -209,6 +209,54 @@ pub fn load(path: &str) -> Result<ServiceSnapshot, String> {
     decode(&text)
 }
 
+/// List the `*.snap` files directly under `dir`, sorted ascending by
+/// file name. Auto-snapshots are named `auto-<zero-padded seq>.snap`, so
+/// lexicographic order *is* age order; manual snapshots sort among them
+/// harmlessly. Missing/unreadable directories list as empty.
+pub fn list_snapshots(dir: &str) -> Vec<String> {
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut out: Vec<String> = rd
+        .flatten()
+        .filter_map(|e| e.path().to_str().map(str::to_string))
+        .filter(|p| p.ends_with(".snap"))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Load the newest *valid* snapshot. `path` may be a single file (loaded
+/// directly) or a directory (candidates tried newest-first, skipping
+/// corrupt ones with a note on stderr — an interrupted rotation must not
+/// strand a recoverable service). `Ok(None)` only for a directory that
+/// holds no `*.snap` files at all; a directory with only corrupt
+/// snapshots is an error, because resuming fresh would silently drop
+/// acknowledged state.
+pub fn load_newest(path: &str) -> Result<Option<(ServiceSnapshot, String)>, String> {
+    if !std::path::Path::new(path).is_dir() {
+        return load(path).map(|s| Some((s, path.to_string())));
+    }
+    let candidates = list_snapshots(path);
+    if candidates.is_empty() {
+        return Ok(None);
+    }
+    let mut last_err = String::new();
+    for cand in candidates.iter().rev() {
+        match load(cand) {
+            Ok(s) => return Ok(Some((s, cand.clone()))),
+            Err(e) => {
+                eprintln!("serve: skipping invalid snapshot {cand}: {e}");
+                last_err = e;
+            }
+        }
+    }
+    Err(format!(
+        "snapshot: no valid *.snap in {path} ({} candidate(s); last error: {last_err})",
+        candidates.len()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +311,44 @@ mod tests {
         // The engine state restores into a working simulation.
         let restored = Simulation::restore(snap.cfg, &snap.engine).expect("restore");
         assert_eq!(restored.queue_depth() + restored.running_count(), 4);
+    }
+
+    #[test]
+    fn load_newest_scans_directories_and_skips_corruption() {
+        let (cfg, jobs, sim) = sample();
+        let meta = ServiceMeta {
+            cfg: &cfg,
+            jobs: &jobs,
+            queue_cap: 8,
+            submitted: 4,
+            admitted: 4,
+            rejected: 0,
+        };
+        let dir = std::env::temp_dir().join(format!("rfold_snapdir_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_s = dir.to_str().unwrap().to_string();
+        // A directory with no snapshots is "nothing to restore", not an error.
+        assert!(load_newest(&dir_s).unwrap().is_none());
+        save(&format!("{dir_s}/auto-00000001.snap"), &sim, &meta).unwrap();
+        save(&format!("{dir_s}/auto-00000002.snap"), &sim, &meta).unwrap();
+        let (snap, picked) = load_newest(&dir_s).unwrap().unwrap();
+        assert!(picked.ends_with("auto-00000002.snap"), "{picked}");
+        assert_eq!(snap.jobs.len(), 4);
+        // Corrupt the newest: the scan falls back to the older valid one.
+        std::fs::write(format!("{dir_s}/auto-00000003.snap"), "garbage").unwrap();
+        let (_, picked) = load_newest(&dir_s).unwrap().unwrap();
+        assert!(picked.ends_with("auto-00000002.snap"), "{picked}");
+        // Only corrupt snapshots: structured error, never a silent fresh start.
+        std::fs::write(format!("{dir_s}/auto-00000001.snap"), "junk").unwrap();
+        std::fs::write(format!("{dir_s}/auto-00000002.snap"), "junk").unwrap();
+        let err = load_newest(&dir_s).unwrap_err();
+        assert!(err.contains("no valid"), "{err}");
+        // A plain file path loads directly.
+        let file = format!("{dir_s}/manual.snap");
+        save(&file, &sim, &meta).unwrap();
+        assert!(load_newest(&file).unwrap().is_some());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

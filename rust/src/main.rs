@@ -14,6 +14,7 @@
 //!                [--pool h1:p,h2:p]                    fan out to rfold workers
 //!                [--pool-connections N]                N connections per worker host
 //!                [--pool-pipeline K]                   K in-flight trials per connection
+//!                [--mtbf-grid 6h,12h,24h]              failure-model ablation (FAULTGRID)
 //! rfold worker   [--listen A]                          TCP trial worker daemon
 //! rfold motivation                                     §3.1 contention study
 //! rfold ablation [--folds] [--runs N] [--jobs J]       cube-size / fold-dim ablations
@@ -22,7 +23,9 @@
 //!                [--trace-file F]                       replay a CSV trace instead
 //! rfold trace-gen --out FILE [--jobs J] [--seed S]     write a CSV trace
 //! rfold serve [--addr A] [--policy P] [--cube N]       always-on scheduling service
-//!             [--queue-cap N] [--restore SNAPSHOT]     (SUBMIT/STATUS/DRAIN/SNAPSHOT)
+//!             [--queue-cap N] [--restore PATH|DIR]     (SUBMIT/STATUS/DRAIN/SNAPSHOT)
+//!             [--wal FILE] [--snapshot-every 1h]       crash safety: fsynced arrival
+//!             [--snapshot-dir D] [--snapshot-keep K]   journal + rotating snapshots
 //! rfold submit --trace FILE [--addr A]                 replay a CSV into a live
 //!              [--speedup X] [--drain]                 `rfold serve` daemon
 //! rfold replay --trace FILE [--policy P] [--cube N]    replay CSV live (leader demo)
@@ -87,7 +90,8 @@ fn usage() -> &'static str {
     "usage: rfold <table1|fig3|fig4|sweep|motivation|ablation|besteffort|simulate|\
      trace-gen|worker|serve|submit|replay|scorer-check|all> [options]\n\
      common options: --runs N --jobs J --seed S --policy P --cube N|--static\n\
-     scenario modifiers (sweep/simulate): --with failures=philly|exp:MTBF:REPAIR:LINKFRAC,\
+     scenario modifiers (sweep/simulate): --with failures=philly|exp:MTBF:REPAIR:LINKFRAC\
+     |corr:MTBF:REPAIR:rack|cube|plane[:CASCADE],\
      ocs-latency=5s,stragglers=0.05,seed=U64,preempt=priority|srtf,migration-cost=30s,\
      defrag=idle,checkpoint=10m (composable, comma-separated)\n\
      sweep options:  --workers W (0=auto; --threads is an alias) \
@@ -99,12 +103,17 @@ fn usage() -> &'static str {
      high-latency links, byte-identical output for any K) \
      --pool-timeout S (per-trial reply timeout, default 600, 0 = none) \
      --pool-delta (send repeated CSV job lists by content hash; needs new workers) \
-     --cache-bytes N (resident result-cache bound, default 268435456)\n\
+     --cache-bytes N (resident result-cache bound, default 268435456) \
+     --mtbf-grid T1,T2,... (failure-model ablation: independent exp: vs correlated \
+     corr: per MTBF, FAULTGRID rows on stdout; sets its own modifiers, so no --with)\n\
      worker options: --listen A (default 127.0.0.1:7171)\n\
      simulate options: --trace-file F (replay a recorded CSV trace) \
      --rows (print one ROW {json} per job outcome — the service-mode determinism bridge)\n\
      serve options:  --addr A (default 127.0.0.1:7070) --queue-cap N (default 1024) \
-     --restore SNAPSHOT (resume from a `SNAPSHOT <path>` file)\n\
+     --restore PATH|DIR (resume from a snapshot file, or the newest valid *.snap in a dir) \
+     --wal FILE (fsync every accepted SUBMIT before the ACK; replayed on restart) \
+     --snapshot-every T (auto-snapshot cadence in virtual time, e.g. 30m, 1h) \
+     --snapshot-dir D (default snapshots) --snapshot-keep K (rotation, default 4)\n\
      submit options: --trace F --addr A --speedup X (0 = no pacing, default) \
      --drain (issue DRAIN after the last job and print the ROW lines)\n\
      policies resolve by registry name (rfold, firstfit, folding, reconfig, \
@@ -238,6 +247,42 @@ fn sweep_cmd(args: &Args) {
     if cells.is_empty() {
         eprintln!("--policies selected no Table-1 cells");
         std::process::exit(2);
+    }
+    // `--mtbf-grid 6h,12h,24h`: the failure-model ablation —
+    // every selected cell at every MTBF under independent vs correlated
+    // failures, as FAULTGRID rows. Its own mode: plain SWEEP rows keep
+    // their exact bytes.
+    if let Some(spec) = args.get("mtbf-grid") {
+        let mut mtbfs = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match rfold::util::cli::parse_duration_secs(part) {
+                Ok(x) if x > 0.0 => mtbfs.push(x),
+                Ok(_) => {
+                    eprintln!("--mtbf-grid: MTBF '{part}' must be > 0");
+                    std::process::exit(2);
+                }
+                Err(e) => {
+                    eprintln!("--mtbf-grid: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        if mtbfs.is_empty() {
+            eprintln!("--mtbf-grid needs a comma-separated duration list (e.g. 6h,12h,24h)");
+            std::process::exit(2);
+        }
+        if !modifiers.is_empty() {
+            eprintln!("--mtbf-grid sets its own failure modifiers; drop --with");
+            std::process::exit(2);
+        }
+        eprintln!(
+            "fault ablation: {} cells x {} MTBFs x 2 models x {runs} runs x {jobs} jobs",
+            cells.len(),
+            mtbfs.len()
+        );
+        let rows = exp::fault_ablation_grid(&cells, &mtbfs, runs, jobs, seed);
+        report::print_fault_ablation(&rows);
+        return;
     }
     let pool = args.get("pool").map(rfold::coordinator::pool::PoolExecutor::parse_pool);
     eprintln!(
@@ -552,21 +597,78 @@ fn serve(args: &Args) {
     let queue_cap = args
         .get_usize("queue-cap", rfold::coordinator::serve::DEFAULT_QUEUE_CAP)
         .max(1);
+    let snapshot_every = match args.get_duration("snapshot-every", 0.0) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.get("snapshot-every").is_some() && snapshot_every <= 0.0 {
+        eprintln!("--snapshot-every: cadence must be > 0 (e.g. 30m, 1h); omit the flag to disable auto-snapshots");
+        std::process::exit(2);
+    }
+    let snapshot_dir = args.get_str("snapshot-dir", "snapshots").to_string();
+    let snapshot_keep = args.get_usize("snapshot-keep", 4);
+    if snapshot_every > 0.0 {
+        if let Err(e) = std::fs::create_dir_all(&snapshot_dir) {
+            eprintln!("--snapshot-dir: cannot create {snapshot_dir}: {e}");
+            std::process::exit(2);
+        }
+    }
+    // --restore accepts a snapshot file or a directory (typically the
+    // --snapshot-dir of the killed daemon): a directory scans for the
+    // newest valid auto-snapshot; holding none at all means "nothing was
+    // ever snapshotted — start fresh and lean on the WAL".
     let restore = match args.get("restore") {
         None => None,
-        Some(path) => match rfold::coordinator::snapshot::load(path) {
-            Ok(snap) => {
+        Some(path) => match rfold::coordinator::snapshot::load_newest(path) {
+            Ok(Some((snap, picked))) => {
                 eprintln!(
-                    "serve: restoring {} accepted job(s) from {path}",
+                    "serve: restoring {} accepted job(s) from {picked}",
                     snap.jobs.len()
                 );
                 Some(snap)
+            }
+            Ok(None) => {
+                eprintln!("serve: {path} holds no snapshots; starting fresh");
+                None
             }
             Err(e) => {
                 eprintln!("--restore: {e}");
                 std::process::exit(2);
             }
         },
+    };
+    // The WAL is both read and written: an existing journal is replayed
+    // (the suffix past the restored snapshot) before the listener
+    // answers, then appended to. A corrupt journal is a structured
+    // refusal — resuming past it would drop acknowledged jobs.
+    let wal_path = args.get("wal").map(str::to_string);
+    let replay = match &wal_path {
+        Some(path) if std::path::Path::new(path).exists() => {
+            match rfold::coordinator::wal::replay(path) {
+                Ok(r) => {
+                    if r.torn {
+                        eprintln!("serve: --wal: dropped a torn final record (crash mid-append; the job was never acknowledged)");
+                    }
+                    let skip = restore.as_ref().map_or(0, |s| s.jobs.len());
+                    if skip > r.jobs.len() {
+                        eprintln!(
+                            "--wal: journal holds {} job(s) but the snapshot already has {skip} — wrong WAL for this snapshot?",
+                            r.jobs.len()
+                        );
+                        std::process::exit(2);
+                    }
+                    r.jobs[skip..].to_vec()
+                }
+                Err(e) => {
+                    eprintln!("--wal: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => Vec::new(),
     };
     // With --restore, topology/policy/modifiers/queue-cap all come from
     // the snapshot (that is the point: resume exactly what was running);
@@ -575,7 +677,14 @@ fn serve(args: &Args) {
     let topo = parse_topo(args);
     let mut cfg = SimConfig::new(topo, policy);
     cfg.modifiers = parse_with(args).for_trial(args.get_u64("seed", 1));
-    rfold::coordinator::serve::serve(&addr, cfg, queue_cap, restore).expect("serve");
+    let opts = rfold::coordinator::serve::ServeOptions {
+        wal: wal_path,
+        replay,
+        snapshot_every,
+        snapshot_dir: Some(snapshot_dir),
+        snapshot_keep,
+    };
+    rfold::coordinator::serve::serve_opts(&addr, cfg, queue_cap, restore, opts).expect("serve");
 }
 
 /// `rfold submit`: replay a recorded CSV trace into a live `rfold serve`

@@ -139,6 +139,42 @@ pub fn print_sweep(rows: &[SweepRow]) {
     }
 }
 
+/// Serialize one failure-model ablation row as a single-line JSON object.
+///
+/// A separate `FAULTGRID` channel rather than extra keys on
+/// [`sweep_row_json`]: plain `SWEEP` rows (including `failures=philly`
+/// ones) must keep their exact bytes, so the ablation grid gets its own
+/// prefix and its own schema, with the failure model spelled out.
+pub fn fault_ablation_row_json(row: &crate::sim::experiments::FaultAblationRow) -> String {
+    let s = &row.summary;
+    let mut m = BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        m.insert(k.to_string(), v);
+    };
+    put("cell", Json::Str(row.label.to_string()));
+    put("policy", Json::Str(row.policy.to_string()));
+    put("model", Json::Str(row.model.to_string()));
+    put("mtbf_s", num(row.mtbf));
+    put("mods", Json::Str(row.mods.clone()));
+    put("runs", Json::Num(s.runs as f64));
+    put("jcr_pct", num(s.avg_jcr_pct));
+    put("jct_p50_s", num(s.jct_p50));
+    put("jct_p90_s", num(s.jct_p90));
+    put("jct_p99_s", num(s.jct_p99));
+    put("util_mean", num(s.avg_util));
+    put("useful_util", num(s.avg_useful_util));
+    Json::Obj(m).to_string()
+}
+
+/// Print the failure-model ablation grid as `FAULTGRID {json}` lines:
+/// JCR/JCT/useful-util vs MTBF per policy, independent vs correlated
+/// side by side (rows come pre-ordered mtbf-major, model-minor).
+pub fn print_fault_ablation(rows: &[crate::sim::experiments::FaultAblationRow]) {
+    for r in rows {
+        println!("FAULTGRID {}", fault_ablation_row_json(r));
+    }
+}
+
 /// Format the scheduler-observer decision telemetry of one run as
 /// machine-greppable `TELEMETRY` lines.
 pub fn policy_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String> {
@@ -177,7 +213,7 @@ pub fn faults_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String>
     if !any {
         return Vec::new();
     }
-    vec![
+    let mut lines = vec![
         format!(
             "FAULTS {label} node-failures={} link-failures={} repairs={} jobs-killed={}",
             t.node_failures, t.link_failures, t.repairs, t.jobs_killed
@@ -187,7 +223,23 @@ pub fn faults_telemetry_lines(label: &str, t: &DecisionTelemetry) -> Vec<String>
             t.jobs_stalled,
             fmt_secs(t.stall_time)
         ),
-    ]
+    ];
+    // Blast-radius histogram, correlated mode only: independent-failure
+    // runs keep their exact pre-domain FAULTS bytes.
+    if t.domain_faults > 0 {
+        let hist: Vec<String> = t
+            .blast_sizes
+            .iter()
+            .map(|(size, count)| format!("{size}:{count}"))
+            .collect();
+        lines.push(format!(
+            "FAULTS {label} domain-faults={} cascades={} blast-sizes=[{}]",
+            t.domain_faults,
+            t.domain_cascades,
+            hist.join(" ")
+        ));
+    }
+    lines
 }
 
 /// Format the preemption/defrag/migration counters as machine-greppable
@@ -323,6 +375,15 @@ pub fn pool_telemetry_lines(stats: &PoolStats) -> Vec<String> {
             )
         })
         .collect();
+    // Circuit-breaker health, one line per host (a host may back several
+    // worker connections): how often the breaker opened and how often a
+    // half-open probe (or clean reconnect) closed it again.
+    for h in &stats.hosts {
+        lines.push(format!(
+            "POOL host={} breaker-trips={} breaker-recoveries={}",
+            h.addr, h.trips, h.recoveries
+        ));
+    }
     lines.push(format!(
         "POOL retried={} leader-fallback={}",
         stats.retried, stats.leader_fallback
@@ -478,7 +539,7 @@ mod tests {
 
     #[test]
     fn pool_telemetry_lines_cover_every_worker_state() {
-        use crate::coordinator::pool::WorkerStats;
+        use crate::coordinator::pool::{HostStats, WorkerStats};
         let stats = PoolStats {
             workers: vec![
                 WorkerStats {
@@ -500,16 +561,30 @@ mod tests {
                     died: true,
                 },
             ],
+            hosts: vec![
+                HostStats {
+                    addr: "10.0.0.2:7171".into(),
+                    trips: 2,
+                    recoveries: 1,
+                },
+            ],
             retried: 2,
             leader_fallback: 1,
         };
         let lines = pool_telemetry_lines(&stats);
-        assert_eq!(lines.len(), 4);
+        assert_eq!(lines.len(), 5);
         assert!(lines.iter().all(|l| l.starts_with("POOL ")));
         assert!(lines[0].contains("items=12") && lines[0].contains("state=ok"));
         assert!(lines[1].contains("state=died"));
         assert!(lines[2].contains("state=unreachable"));
-        assert!(lines[3].contains("retried=2") && lines[3].contains("leader-fallback=1"));
+        assert!(
+            lines[3].contains("host=10.0.0.2:7171")
+                && lines[3].contains("breaker-trips=2")
+                && lines[3].contains("breaker-recoveries=1"),
+            "{}",
+            lines[3]
+        );
+        assert!(lines[4].contains("retried=2") && lines[4].contains("leader-fallback=1"));
     }
 
     #[test]
@@ -555,10 +630,68 @@ mod tests {
             ..Default::default()
         };
         let lines = faults_telemetry_lines("RFold (4^3)", &t);
-        assert_eq!(lines.len(), 2);
+        assert_eq!(lines.len(), 2, "no domain line without correlated faults");
         assert!(lines.iter().all(|l| l.starts_with("FAULTS RFold (4^3)")));
         assert!(lines[0].contains("node-failures=4") && lines[0].contains("jobs-killed=5"));
         assert!(lines[1].contains("jobs-stalled=2") && lines[1].contains("stall-time=10s"));
+    }
+
+    #[test]
+    fn faults_domain_line_carries_the_blast_histogram() {
+        let mut t = DecisionTelemetry {
+            node_failures: 512,
+            repairs: 512,
+            domain_faults: 3,
+            domain_cascades: 1,
+            ..Default::default()
+        };
+        t.blast_sizes.insert(256, 2);
+        t.blast_sizes.insert(512, 1);
+        let lines = faults_telemetry_lines("RFold (4^3)", &t);
+        assert_eq!(lines.len(), 3);
+        assert!(lines[2].contains("domain-faults=3"));
+        assert!(lines[2].contains("cascades=1"));
+        assert!(
+            lines[2].contains("blast-sizes=[256:2 512:1]"),
+            "histogram must be size-sorted: {}",
+            lines[2]
+        );
+    }
+
+    #[test]
+    fn fault_ablation_rows_are_valid_json() {
+        let row = crate::sim::experiments::FaultAblationRow {
+            label: "RFold (4^3)",
+            policy: "RFold",
+            model: "correlated",
+            mtbf: 21_600.0,
+            mods: "failures=corr:21600:3600:rack".to_string(),
+            summary: CellSummary {
+                label: "RFold (4^3)".to_string(),
+                runs: 2,
+                avg_jcr_pct: 97.5,
+                jct_p50: 100.0,
+                jct_p90: 200.0,
+                jct_p99: 300.0,
+                util_cdf: vec![],
+                avg_util: 0.5,
+                avg_queue_delay: 3.0,
+                avg_preemptions: 0.0,
+                avg_wasted_work: 0.0,
+                avg_migration_time: 0.0,
+                avg_useful_util: 0.48,
+            },
+        };
+        let line = fault_ablation_row_json(&row);
+        let parsed = Json::parse(&line).expect("row must be valid JSON");
+        assert_eq!(parsed.get("model").unwrap().as_str(), Some("correlated"));
+        assert_eq!(parsed.get("mtbf_s").unwrap().as_f64(), Some(21_600.0));
+        assert_eq!(parsed.get("jcr_pct").unwrap().as_f64(), Some(97.5));
+        assert_eq!(parsed.get("useful_util").unwrap().as_f64(), Some(0.48));
+        assert_eq!(
+            parsed.get("mods").unwrap().as_str(),
+            Some("failures=corr:21600:3600:rack")
+        );
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Nested failure domains for correlated fault injection.
+//!
+//! Real torus clusters fail in spatially correlated chunks: a rack PSU
+//! takes out an x-column of nodes, an optical-switch incident takes out a
+//! whole OCS cube, a plane failure takes out a z-slice. This module maps
+//! every node of a [`ClusterTopo`] to exactly one domain per
+//! [`DomainScope`], so the engine can fail and repair a sampled domain
+//! atomically (`--with failures=corr:MTBF:REPAIR:SCOPE[:CASCADE]`).
+//!
+//! The mapping is a pure function of `(topology, scope)` — no RNG, no
+//! occupancy — so the fault realization stays byte-deterministic and
+//! occupancy-independent: the engine samples *which* domain fails from
+//! the dedicated fault stream, and this module answers *what nodes* that
+//! domain contains.
+
+use crate::topology::cluster::ClusterTopo;
+use crate::trace::scenarios::DomainScope;
+
+/// The failure-domain decomposition of one topology at one scope.
+///
+/// Domains partition the node id space: every node belongs to exactly
+/// one domain, ids run `0..num_domains()`, and the node list of a domain
+/// is ascending — the engine's kill/repair sweeps stay deterministic by
+/// iterating it in order.
+#[derive(Clone, Copy, Debug)]
+pub struct DomainMap {
+    topo: ClusterTopo,
+    scope: DomainScope,
+}
+
+impl DomainMap {
+    pub fn new(topo: ClusterTopo, scope: DomainScope) -> DomainMap {
+        DomainMap { topo, scope }
+    }
+
+    pub fn scope(&self) -> DomainScope {
+        self.scope
+    }
+
+    /// Number of domains at this scope. Always >= 1.
+    pub fn num_domains(&self) -> usize {
+        match self.scope {
+            // One rack per physical x coordinate.
+            DomainScope::Rack => self.topo.phys_ext().x(),
+            // One domain per OCS cube; a static torus is one big cube
+            // (see `ClusterTopo::cube_side`), so `cube` on a static
+            // topology is a whole-machine blast radius.
+            DomainScope::Cube => match self.topo {
+                ClusterTopo::Static { .. } => 1,
+                ClusterTopo::Reconfigurable { grid } => grid.num_cubes(),
+            },
+            // One plane per physical z coordinate.
+            DomainScope::Plane => self.topo.phys_ext().z(),
+        }
+    }
+
+    /// Nodes of one domain, ascending node id.
+    pub fn nodes_of(&self, domain: usize) -> Vec<usize> {
+        debug_assert!(domain < self.num_domains());
+        match self.scope {
+            DomainScope::Cube => match self.topo {
+                ClusterTopo::Static { ext } => (0..ext.volume()).collect(),
+                ClusterTopo::Reconfigurable { grid } => {
+                    let vol = grid.n * grid.n * grid.n;
+                    (domain * vol..(domain + 1) * vol).collect()
+                }
+            },
+            DomainScope::Rack | DomainScope::Plane => {
+                let axis = if self.scope == DomainScope::Rack { 0 } else { 2 };
+                let total = self.topo.num_xpus();
+                (0..total)
+                    .filter(|&n| self.coord(n, axis) == domain)
+                    .collect()
+            }
+        }
+    }
+
+    /// Domain id of one node.
+    pub fn domain_of(&self, node: usize) -> usize {
+        match self.scope {
+            DomainScope::Cube => match self.topo {
+                ClusterTopo::Static { .. } => 0,
+                ClusterTopo::Reconfigurable { grid } => node / (grid.n * grid.n * grid.n),
+            },
+            DomainScope::Rack => self.coord(node, 0),
+            DomainScope::Plane => self.coord(node, 2),
+        }
+    }
+
+    /// Number of nodes in each domain (uniform: domains partition the
+    /// machine along one axis or the cube decomposition).
+    pub fn domain_size(&self) -> usize {
+        self.topo.num_xpus() / self.num_domains()
+    }
+
+    /// The deterministic cascade neighbour of a domain: the next domain
+    /// id, wrapping — adjacent rack / plane / cube in scan order. Using a
+    /// fixed neighbour (instead of sampling one) keeps a cascade to a
+    /// single extra draw (the coin) on the fault stream.
+    pub fn neighbor(&self, domain: usize) -> usize {
+        (domain + 1) % self.num_domains()
+    }
+
+    /// Physical machine-room coordinate of a node along one axis.
+    fn coord(&self, node: usize, axis: usize) -> usize {
+        match self.topo {
+            ClusterTopo::Static { ext } => {
+                crate::topology::P3::from_index(node, ext).0[axis]
+            }
+            ClusterTopo::Reconfigurable { grid } => {
+                let (cube, local) = grid.split_node(node);
+                grid.cube_coords(cube).0[axis] * grid.n + local.0[axis]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scopes() -> [DomainScope; 3] {
+        [DomainScope::Rack, DomainScope::Cube, DomainScope::Plane]
+    }
+
+    #[test]
+    fn domains_partition_every_topology() {
+        for topo in [
+            ClusterTopo::static_4096(),
+            ClusterTopo::reconfigurable_4096(4),
+            ClusterTopo::reconfigurable_4096(8),
+            ClusterTopo::reconfigurable_4096(2),
+        ] {
+            for scope in scopes() {
+                let map = DomainMap::new(topo, scope);
+                let nd = map.num_domains();
+                assert!(nd >= 1, "{topo:?} {scope:?}");
+                let mut seen = vec![false; topo.num_xpus()];
+                for d in 0..nd {
+                    let nodes = map.nodes_of(d);
+                    assert_eq!(
+                        nodes.len(),
+                        map.domain_size(),
+                        "{topo:?} {scope:?} domain {d} size"
+                    );
+                    assert!(
+                        nodes.windows(2).all(|w| w[0] < w[1]),
+                        "nodes of a domain must ascend"
+                    );
+                    for &n in &nodes {
+                        assert!(!seen[n], "node {n} in two domains ({topo:?} {scope:?})");
+                        seen[n] = true;
+                        assert_eq!(map.domain_of(n), d, "domain_of must invert nodes_of");
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "domains must cover every node");
+            }
+        }
+    }
+
+    #[test]
+    fn rack_is_an_x_column_and_plane_a_z_slice() {
+        let topo = ClusterTopo::reconfigurable_4096(4);
+        let racks = DomainMap::new(topo, DomainScope::Rack);
+        assert_eq!(racks.num_domains(), 16, "16 physical x coordinates");
+        assert_eq!(racks.domain_size(), 256);
+        let planes = DomainMap::new(topo, DomainScope::Plane);
+        assert_eq!(planes.num_domains(), 16);
+        // Node 0 is the machine-room origin: rack 0, plane 0.
+        assert_eq!(racks.domain_of(0), 0);
+        assert_eq!(planes.domain_of(0), 0);
+        // First node of cube 1 sits at physical (0,0,4): rack 0, plane 4.
+        assert_eq!(racks.domain_of(64), 0);
+        assert_eq!(planes.domain_of(64), 4);
+    }
+
+    #[test]
+    fn cube_scope_matches_the_ocs_decomposition() {
+        let topo = ClusterTopo::reconfigurable_4096(4);
+        let map = DomainMap::new(topo, DomainScope::Cube);
+        assert_eq!(map.num_domains(), 64);
+        assert_eq!(map.nodes_of(0), (0..64).collect::<Vec<_>>());
+        assert_eq!(map.domain_of(63), 0);
+        assert_eq!(map.domain_of(64), 1);
+        // Static topologies degenerate to one whole-machine domain.
+        let st = DomainMap::new(ClusterTopo::static_4096(), DomainScope::Cube);
+        assert_eq!(st.num_domains(), 1);
+        assert_eq!(st.domain_size(), 4096);
+    }
+
+    #[test]
+    fn neighbor_wraps_deterministically() {
+        let map = DomainMap::new(ClusterTopo::reconfigurable_4096(4), DomainScope::Rack);
+        assert_eq!(map.neighbor(0), 1);
+        assert_eq!(map.neighbor(15), 0);
+    }
+}

@@ -21,6 +21,7 @@ use crate::placement::{
     PlacementDecision, PlacementPolicy, PlacementRequest, PolicyHandle, RunningJob, SchedAction,
 };
 use crate::sim::contention::{effective_duration, ContentionModel};
+use crate::sim::domains::DomainMap;
 use crate::sim::event_heap::{EventHeap, EventSlot, OrdF64};
 use crate::sim::observer::SchedulerObserver;
 use crate::topology::cluster::{Allocation, ClusterState, ClusterTopo};
@@ -620,6 +621,13 @@ impl Simulation {
             let gap = self.fault_rng.exponential(fm.mtbf);
             self.push_event(self.now + gap, EventSlot::Fault);
         }
+        if let Some(corr) = fm.corr {
+            // Correlated mode replaces the per-node draw with a domain
+            // draw; the chain gap above is shared so swapping
+            // `exp:` ↔ `corr:` keeps the fault *times* comparable.
+            self.handle_domain_fault(fm.mean_repair, corr);
+            return;
+        }
         let is_link = self.fault_rng.chance(fm.link_fraction);
         let node = self.fault_rng.below(self.cluster.num_nodes());
         if let Some(victim) = self.cluster.job_on_node(node) {
@@ -641,6 +649,46 @@ impl Simulation {
         // still consumed so the stream stays occupancy-independent.
         for o in &mut self.observers {
             o.on_fault(self.now, node, false);
+        }
+    }
+
+    /// One correlated fault: an entire sampled domain fails atomically.
+    /// The draw order (domain, cascade coin, repair gap) is fixed and
+    /// every draw is consumed unconditionally — the realization is a pure
+    /// function of the fault stream, independent of policy and occupancy.
+    /// Resident jobs are killed in one ascending-node sweep, and every
+    /// node that actually transitions gets a repair event at the *same*
+    /// instant, so the domain comes back as a unit. Nodes already down
+    /// (an overlapping earlier blast) keep their in-flight repair.
+    fn handle_domain_fault(&mut self, mean_repair: f64, corr: crate::trace::scenarios::CorrFailure) {
+        let map = DomainMap::new(self.cluster.topo(), corr.scope);
+        let domain = self.fault_rng.below(map.num_domains());
+        let cascaded = self.fault_rng.chance(corr.cascade);
+        let repair_gap = self.fault_rng.exponential(mean_repair);
+        let mut nodes = map.nodes_of(domain);
+        let neighbor = map.neighbor(domain);
+        if cascaded && neighbor != domain {
+            nodes.extend(map.nodes_of(neighbor));
+            nodes.sort_unstable();
+        }
+        let mut newly_failed = false;
+        for &node in &nodes {
+            if let Some(victim) = self.cluster.job_on_node(node) {
+                self.evict_job(victim, EvictReason::Fault);
+            }
+            if self.cluster.fail_node(node) {
+                self.push_event(self.now + repair_gap, EventSlot::NodeRepair(node));
+                newly_failed = true;
+            }
+            for o in &mut self.observers {
+                o.on_fault(self.now, node, false);
+            }
+        }
+        if newly_failed {
+            self.clear_fault_memos();
+        }
+        for o in &mut self.observers {
+            o.on_domain_fault(self.now, domain, nodes.len(), cascaded && neighbor != domain);
         }
     }
 
@@ -2189,6 +2237,7 @@ mod tests {
                 mtbf: 200.0,
                 mean_repair: 100.0,
                 link_fraction: 0.3,
+                corr: None,
             }),
             fault_seed: 11,
             ..ModifierSet::default()
@@ -2217,6 +2266,77 @@ mod tests {
             "an MTBF of 200s must fire during a multi-hour trace"
         );
         assert!(t.repairs <= t.node_failures, "a repair needs a failure");
+    }
+
+    #[test]
+    fn correlated_faults_blast_whole_domains() {
+        // `corr:..:cube` on a 4^3-cube machine: every fault event must
+        // take exactly one 64-node cube down (no cascade), with no
+        // transient link flavor, and still leave one outcome per job.
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 40,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        let mut cfg = SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+        );
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse("failures=corr:2000:600:cube").unwrap();
+        let telemetry = SharedTelemetry::new();
+        let r = Simulation::new(cfg)
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&trace);
+        let t = telemetry.snapshot();
+        assert!(t.domain_faults > 0, "a 2000s MTBF must fire during the trace");
+        assert_eq!(
+            t.node_failures,
+            t.domain_faults * 64,
+            "every blast covers one whole 4^3 cube"
+        );
+        assert_eq!(t.link_failures, 0, "correlated faults remove capacity, always");
+        assert_eq!(t.domain_cascades, 0, "cascade defaults to 0");
+        assert_eq!(
+            t.blast_sizes.keys().copied().collect::<Vec<_>>(),
+            vec![64],
+            "uniform cube-sized blasts"
+        );
+        assert!(t.repairs <= t.node_failures, "a repair needs a failure");
+        assert_eq!(r.outcomes.len(), trace.len(), "one outcome per job");
+        let u = r.utilization.mean();
+        assert!((0.0..=1.0).contains(&u), "utilization corrupted: {u}");
+    }
+
+    #[test]
+    fn cascades_double_the_blast_radius() {
+        let tc = crate::trace::gen::TraceConfig {
+            num_jobs: 30,
+            ..Default::default()
+        };
+        let trace = crate::trace::gen::generate(&tc);
+        let mut cfg = SimConfig::new(
+            ClusterTopo::reconfigurable_4096(4),
+            PolicyKind::RFold,
+        );
+        cfg.drain = true;
+        cfg.modifiers = ModifierSet::parse("failures=corr:3000:600:cube:1").unwrap();
+        let telemetry = SharedTelemetry::new();
+        Simulation::new(cfg)
+            .with_observer(Box::new(telemetry.clone()))
+            .run(&trace);
+        let t = telemetry.snapshot();
+        assert!(t.domain_faults > 0);
+        assert_eq!(
+            t.domain_cascades, t.domain_faults,
+            "cascade=1 must spill every blast into the neighbour domain"
+        );
+        assert_eq!(
+            t.blast_sizes.keys().copied().collect::<Vec<_>>(),
+            vec![128],
+            "cube + neighbour cube"
+        );
+        assert_eq!(t.node_failures, t.domain_faults * 128);
     }
 
     /// Run `trace` through the streaming API (per-job `submit` with an
@@ -2256,7 +2376,11 @@ mod tests {
             ..Default::default()
         };
         let trace = crate::trace::gen::generate(&tc);
-        for mods in ["", "failures=philly,ocs-latency=5s,stragglers=0.05"] {
+        for mods in [
+            "",
+            "failures=philly,ocs-latency=5s,stragglers=0.05",
+            "failures=corr:21600:3600:rack:0.3",
+        ] {
             let mut cfg =
                 SimConfig::new(ClusterTopo::reconfigurable_4096(4), PolicyKind::RFold);
             cfg.drain = true;
@@ -2286,7 +2410,11 @@ mod tests {
             ..Default::default()
         };
         let trace = crate::trace::gen::generate(&tc);
-        for mods in ["", "failures=philly,ocs-latency=5s,stragglers=0.05"] {
+        for mods in [
+            "",
+            "failures=philly,ocs-latency=5s,stragglers=0.05",
+            "failures=corr:21600:3600:rack:0.3",
+        ] {
             let mut cfg =
                 SimConfig::new(ClusterTopo::reconfigurable_4096(4), PolicyKind::RFold);
             cfg.drain = true;

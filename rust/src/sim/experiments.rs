@@ -123,6 +123,67 @@ pub fn run_cell_mods(
     sweep::run_cell_sharded(cell, &cfg)
 }
 
+/// One row of the failure-model ablation grid: a (policy, topology) cell
+/// under one failure model at one MTBF. Printed by
+/// `metrics::report::print_fault_ablation` as `FAULTGRID` lines.
+#[derive(Clone, Debug)]
+pub struct FaultAblationRow {
+    /// Cell label (policy + topology).
+    pub label: &'static str,
+    /// Policy name alone, for per-policy grouping.
+    pub policy: &'static str,
+    /// `"independent"` (`exp:`) or `"correlated"` (`corr:`).
+    pub model: &'static str,
+    /// Cluster-wide mean time between failures (s).
+    pub mtbf: f64,
+    /// The full modifier fingerprint that produced the row — enough to
+    /// reproduce it via `--with`.
+    pub mods: String,
+    pub summary: CellSummary,
+}
+
+/// The failure-model ablation grid (PR-6 follow-on): every cell at every
+/// MTBF under independent (`exp:`) and correlated rack-scoped (`corr:`)
+/// failures side by side, with the Philly repair mean and link fraction
+/// held fixed so MTBF is the only moving part between rows. Rows come
+/// back mtbf-major, model-minor, cell-minor — a stable order that diffs
+/// cleanly. Trials run through the shared sweep runner, so repeated cells
+/// hit the process-wide result cache like any other driver.
+pub fn fault_ablation_grid(
+    cells: &[Cell],
+    mtbfs: &[f64],
+    runs: usize,
+    jobs_per_run: usize,
+    base_seed: u64,
+) -> Vec<FaultAblationRow> {
+    let mut rows = Vec::new();
+    for &mtbf in mtbfs {
+        // Both specs share the Philly repair mean; `exp:` keeps the
+        // Philly link fraction, `corr:` is infrastructure-scoped (no
+        // transient link flavor) with a rack blast radius.
+        let specs = [
+            ("independent", format!("failures=exp:{mtbf}:3600:0.25")),
+            ("correlated", format!("failures=corr:{mtbf}:3600:rack")),
+        ];
+        for (model, spec) in specs {
+            let mods = crate::trace::scenarios::ModifierSet::parse(&spec)
+                .expect("ablation specs are well-formed by construction");
+            for &cell in cells {
+                let summary = run_cell_mods(cell, runs, jobs_per_run, base_seed, mods);
+                rows.push(FaultAblationRow {
+                    label: cell.label,
+                    policy: cell.policy.name(),
+                    model,
+                    mtbf,
+                    mods: mods.fingerprint(),
+                    summary,
+                });
+            }
+        }
+    }
+    rows
+}
+
 /// §3.1 motivation experiment on a 2×2 mesh: returns
 /// `(label, modeled slowdown vs baseline)` rows matching the paper's
 /// measured percentages.
@@ -243,6 +304,28 @@ mod tests {
         assert!((val(2) - 1.35).abs() < 0.05, "shared: {}", val(2));
         assert!((val(3) - 1.95).abs() < 0.15, "2x: {}", val(3));
         assert!((val(4) - 2.86).abs() < 0.25, "3x: {}", val(4));
+    }
+
+    #[test]
+    fn fault_ablation_grid_pairs_models_per_mtbf() {
+        let cells = [Cell {
+            policy: builtins::RFOLD,
+            topo: ClusterTopo::reconfigurable_4096(4),
+            label: "RFold (4^3)",
+        }];
+        let rows = fault_ablation_grid(&cells, &[21_600.0, 86_400.0], 1, 20, 11);
+        assert_eq!(rows.len(), 4, "2 MTBFs x 2 models x 1 cell");
+        // mtbf-major, model-minor order; independent first.
+        assert_eq!(rows[0].model, "independent");
+        assert_eq!(rows[1].model, "correlated");
+        assert_eq!(rows[0].mtbf, 21_600.0);
+        assert_eq!(rows[2].mtbf, 86_400.0);
+        assert!(rows.iter().all(|r| r.policy == "RFold"));
+        // The mods fingerprint reproduces the row via --with.
+        assert_eq!(rows[0].mods, "failures=exp:21600:3600:0.25");
+        assert_eq!(rows[1].mods, "failures=corr:21600:3600:rack");
+        // Every run under faults still yields a sane JCR.
+        assert!(rows.iter().all(|r| r.summary.avg_jcr_pct > 0.0));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! sampling, and the calibrated contention model of §3.1.
 
 pub mod contention;
+pub mod domains;
 pub mod engine;
 pub(crate) mod event_heap;
 pub mod experiments;

@@ -12,6 +12,7 @@
 //! (`metrics::report::print_policy_telemetry`).
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Duration;
 
@@ -53,6 +54,14 @@ pub trait SchedulerObserver {
     /// A failed node came back at time `t`.
     fn on_repair(&mut self, t: f64, node: usize) {
         let _ = (t, node);
+    }
+
+    /// A correlated fault (`--with failures=corr:..`) failed an entire
+    /// domain atomically: `size` nodes went down in one blast (the
+    /// cascade neighbour included when `cascaded`). Fires once per fault
+    /// event, after the per-node [`on_fault`](Self::on_fault) calls.
+    fn on_domain_fault(&mut self, t: f64, domain: usize, size: usize, cascaded: bool) {
+        let _ = (t, domain, size, cascaded);
     }
 
     /// A running job was killed by a fault and returned to the queue (or
@@ -114,6 +123,12 @@ pub struct DecisionTelemetry {
     pub repairs: u64,
     pub jobs_killed: u64,
     pub jobs_stalled: u64,
+    /// Correlated-fault counters (`--with failures=corr:..` only):
+    /// domain-level blast events, cascades, and a blast-size histogram
+    /// (nodes taken down per event → occurrences).
+    pub domain_faults: u64,
+    pub domain_cascades: u64,
+    pub blast_sizes: BTreeMap<usize, u64>,
     /// Total stall time injected by OCS reconfigurations (s).
     pub stall_time: f64,
     /// Disruption counters (all zero without preemption/defrag knobs;
@@ -183,6 +198,14 @@ impl SchedulerObserver for DecisionTelemetry {
         self.repairs += 1;
     }
 
+    fn on_domain_fault(&mut self, _t: f64, _domain: usize, size: usize, cascaded: bool) {
+        self.domain_faults += 1;
+        if cascaded {
+            self.domain_cascades += 1;
+        }
+        *self.blast_sizes.entry(size).or_insert(0) += 1;
+    }
+
     fn on_job_killed(&mut self, _t: f64, _job: u64) {
         self.jobs_killed += 1;
     }
@@ -249,6 +272,10 @@ impl SchedulerObserver for SharedTelemetry {
 
     fn on_repair(&mut self, t: f64, node: usize) {
         self.0.borrow_mut().on_repair(t, node);
+    }
+
+    fn on_domain_fault(&mut self, t: f64, domain: usize, size: usize, cascaded: bool) {
+        self.0.borrow_mut().on_domain_fault(t, domain, size, cascaded);
     }
 
     fn on_job_killed(&mut self, t: f64, job: u64) {
@@ -361,6 +388,21 @@ mod tests {
         assert_eq!(snap.jobs_killed, 1);
         assert_eq!(snap.jobs_stalled, 2);
         assert_eq!(snap.stall_time, 4.0);
+        assert_eq!(snap.domain_faults, 0);
+    }
+
+    #[test]
+    fn domain_fault_hook_builds_the_blast_histogram() {
+        let shared = SharedTelemetry::new();
+        let mut boxed: Box<dyn SchedulerObserver> = Box::new(shared.clone());
+        boxed.on_domain_fault(1.0, 3, 256, false);
+        boxed.on_domain_fault(2.0, 7, 512, true);
+        boxed.on_domain_fault(3.0, 3, 256, false);
+        let snap = shared.snapshot();
+        assert_eq!(snap.domain_faults, 3);
+        assert_eq!(snap.domain_cascades, 1);
+        assert_eq!(snap.blast_sizes.get(&256), Some(&2));
+        assert_eq!(snap.blast_sizes.get(&512), Some(&1));
     }
 
     #[test]

@@ -176,6 +176,58 @@ impl Scenario {
 /// modifiers; this seed is the base the per-trial mixing starts from.
 pub const DEFAULT_FAULT_SEED: u64 = 0xFA17;
 
+/// Spatial failure-domain granularity for correlated faults
+/// (`failures=corr:...`). Every node belongs to exactly one domain of
+/// each scope; a correlated fault takes a whole sampled domain down
+/// atomically (see `sim::domains`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DomainScope {
+    /// One machine-room rack: the x-column of nodes sharing a physical
+    /// x coordinate (a PSU/top-of-rack blast radius).
+    Rack,
+    /// One OCS cube of the reconfigurable decomposition (the whole
+    /// machine for static topologies — one switch fronts everything).
+    Cube,
+    /// One z-slice of the machine (an OCS plane failure).
+    Plane,
+}
+
+impl DomainScope {
+    /// Stable CLI / fingerprint name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DomainScope::Rack => "rack",
+            DomainScope::Cube => "cube",
+            DomainScope::Plane => "plane",
+        }
+    }
+
+    /// Parse a `corr:` scope component. Unknown scopes are a structured
+    /// error listing the valid values.
+    pub fn parse(v: &str) -> Result<DomainScope, String> {
+        match v {
+            "rack" => Ok(DomainScope::Rack),
+            "cube" => Ok(DomainScope::Cube),
+            "plane" => Ok(DomainScope::Plane),
+            other => Err(format!(
+                "unknown failure-domain scope '{other}'; known: rack, cube, plane"
+            )),
+        }
+    }
+}
+
+/// Correlated-failure parameters riding on a [`FailureModel`]: the blast
+/// radius of every fault event and an optional cascade to one
+/// neighbouring domain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CorrFailure {
+    /// Which nested domain a fault takes down atomically.
+    pub scope: DomainScope,
+    /// Probability that a domain fault cascades into the next domain of
+    /// the same scope (deterministic neighbour order). 0 disables it.
+    pub cascade: f64,
+}
+
 /// Exponential node/link failure-and-repair model (Philly-style MTBF,
 /// Jeon et al., ATC'19). Times are cluster-wide: one failure somewhere in
 /// the cluster every `mtbf` seconds on average.
@@ -188,6 +240,10 @@ pub struct FailureModel {
     /// Fraction of failures that are link (transient, kill the touching
     /// job but remove no capacity) rather than node failures.
     pub link_fraction: f64,
+    /// Correlated blast radius (`failures=corr:...`): each fault fails an
+    /// entire spatial domain instead of one node. `None` keeps the
+    /// independent per-node model — and its exact byte stream.
+    pub corr: Option<CorrFailure>,
 }
 
 impl FailureModel {
@@ -199,27 +255,30 @@ impl FailureModel {
             mtbf: 21_600.0,
             mean_repair: 3_600.0,
             link_fraction: 0.25,
+            corr: None,
         }
     }
 
-    /// Parse a failure-model value: `philly`, or
+    /// Parse a failure-model value: `philly`,
     /// `exp:<mtbf>:<mean-repair>:<link-fraction>` for explicit
-    /// exponential parameters.
+    /// exponential parameters, or
+    /// `corr:<mtbf>:<mean-repair>:<scope>[:<cascade>]` for correlated
+    /// domain-scoped faults (scope ∈ rack|cube|plane).
     pub fn parse(v: &str) -> Result<FailureModel, String> {
         if v == "philly" {
             return Ok(FailureModel::philly());
         }
+        let field = |s: &str, what: &str| -> Result<f64, String> {
+            s.parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .ok_or_else(|| {
+                    format!("failure-model {what} '{s}' is not a non-negative number")
+                })
+        };
         if let Some(rest) = v.strip_prefix("exp:") {
             let parts: Vec<&str> = rest.split(':').collect();
             if parts.len() == 3 {
-                let field = |s: &str, what: &str| -> Result<f64, String> {
-                    s.parse::<f64>()
-                        .ok()
-                        .filter(|x| x.is_finite() && *x >= 0.0)
-                        .ok_or_else(|| {
-                            format!("failure-model {what} '{s}' is not a non-negative number")
-                        })
-                };
                 let mtbf = field(parts[0], "mtbf")?;
                 if mtbf <= 0.0 {
                     return Err(format!("failure-model mtbf '{}' must be > 0", parts[0]));
@@ -236,11 +295,46 @@ impl FailureModel {
                     mtbf,
                     mean_repair,
                     link_fraction,
+                    corr: None,
+                });
+            }
+        }
+        if let Some(rest) = v.strip_prefix("corr:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() == 3 || parts.len() == 4 {
+                let mtbf = field(parts[0], "mtbf")?;
+                if mtbf <= 0.0 {
+                    return Err(format!("failure-model mtbf '{}' must be > 0", parts[0]));
+                }
+                let mean_repair = field(parts[1], "mean-repair")?;
+                let scope = DomainScope::parse(parts[2])?;
+                let cascade = if parts.len() == 4 {
+                    let c = field(parts[3], "cascade")?;
+                    if c > 1.0 {
+                        return Err(format!(
+                            "failure-model cascade '{}' out of range [0, 1]",
+                            parts[3]
+                        ));
+                    }
+                    c
+                } else {
+                    0.0
+                };
+                return Ok(FailureModel {
+                    mtbf,
+                    mean_repair,
+                    // Correlated faults are infrastructure-scoped: every
+                    // event removes capacity; there is no transient link
+                    // flavor.
+                    link_fraction: 0.0,
+                    corr: Some(CorrFailure { scope, cascade }),
                 });
             }
         }
         Err(format!(
-            "unknown failure model '{v}'; known: philly, exp:<mtbf>:<mean-repair>:<link-fraction>"
+            "unknown failure model '{v}'; known: philly, \
+             exp:<mtbf>:<mean-repair>:<link-fraction>, \
+             corr:<mtbf>:<mean-repair>:<rack|cube|plane>[:<cascade>]"
         ))
     }
 }
@@ -340,7 +434,8 @@ impl Default for ModifierSet {
 }
 
 /// One-line list of valid modifiers, appended to every parse error.
-const VALID_MODIFIERS: &str = "valid modifiers: failures=philly|exp:<mtbf>:<repair>:<link-frac>, \
+const VALID_MODIFIERS: &str = "valid modifiers: failures=philly|exp:<mtbf>:<repair>:<link-frac>\
+     |corr:<mtbf>:<repair>:<rack|cube|plane>[:<cascade>], \
      ocs-latency=<duration, e.g. 500ms|5s|2m|1h>, stragglers=<rate in [0,1]>, \
      preempt=priority|srtf, migration-cost=<duration>, defrag=idle|off, \
      checkpoint=<duration>, aging=on|off, seed=<u64>";
@@ -471,6 +566,23 @@ impl ModifierSet {
         if let Some(fm) = self.failures {
             if fm == FailureModel::philly() {
                 parts.push("failures=philly".to_string());
+            } else if let Some(corr) = fm.corr {
+                if corr.cascade > 0.0 {
+                    parts.push(format!(
+                        "failures=corr:{}:{}:{}:{}",
+                        fm.mtbf,
+                        fm.mean_repair,
+                        corr.scope.name(),
+                        corr.cascade
+                    ));
+                } else {
+                    parts.push(format!(
+                        "failures=corr:{}:{}:{}",
+                        fm.mtbf,
+                        fm.mean_repair,
+                        corr.scope.name()
+                    ));
+                }
             } else {
                 parts.push(format!(
                     "failures=exp:{}:{}:{}",
@@ -796,8 +908,38 @@ mod tests {
             Some(FailureModel {
                 mtbf: 100.0,
                 mean_repair: 50.0,
-                link_fraction: 0.5
+                link_fraction: 0.5,
+                corr: None,
             })
+        );
+
+        // Correlated domain-scoped model, with and without cascade.
+        let c = ModifierSet::parse("failures=corr:7200:600:rack").unwrap();
+        assert_eq!(
+            c.failures,
+            Some(FailureModel {
+                mtbf: 7200.0,
+                mean_repair: 600.0,
+                link_fraction: 0.0,
+                corr: Some(CorrFailure {
+                    scope: DomainScope::Rack,
+                    cascade: 0.0
+                }),
+            })
+        );
+        let c = ModifierSet::parse("failures=corr:7200:600:cube:0.3").unwrap();
+        let corr = c.failures.unwrap().corr.unwrap();
+        assert_eq!(corr.scope, DomainScope::Cube);
+        assert_eq!(corr.cascade, 0.3);
+        assert_eq!(
+            ModifierSet::parse("failures=corr:100:50:plane")
+                .unwrap()
+                .failures
+                .unwrap()
+                .corr
+                .unwrap()
+                .scope,
+            DomainScope::Plane
         );
 
         // Empty spec is the no-op set.
@@ -846,6 +988,30 @@ mod tests {
         assert!(err.contains("out of range"), "{err}");
         let err = ModifierSet::parse("justakey").unwrap_err();
         assert!(err.contains("not key=value"), "{err}");
+    }
+
+    #[test]
+    fn corr_failures_reject_bad_scopes_and_cascades() {
+        // The small-fix satellite: a bad sub-key inside `failures=` must
+        // be a structured error listing the valid values, like top-level
+        // unknown keys are.
+        let err = ModifierSet::parse("failures=corr:100:50:tray").unwrap_err();
+        assert!(
+            err.contains("unknown failure-domain scope 'tray'"),
+            "{err}"
+        );
+        assert!(err.contains("rack, cube, plane"), "must list valid scopes: {err}");
+        let err = ModifierSet::parse("failures=corr:100:50:rack:1.5").unwrap_err();
+        assert!(err.contains("cascade"), "{err}");
+        assert!(err.contains("out of range"), "{err}");
+        let err = ModifierSet::parse("failures=corr:0:50:rack").unwrap_err();
+        assert!(err.contains("must be > 0"), "{err}");
+        let err = ModifierSet::parse("failures=corr:100:50").unwrap_err();
+        assert!(err.contains("unknown failure model"), "{err}");
+        // Scope names round-trip.
+        for s in [DomainScope::Rack, DomainScope::Cube, DomainScope::Plane] {
+            assert_eq!(DomainScope::parse(s.name()), Ok(s));
+        }
     }
 
     #[test]
@@ -908,6 +1074,9 @@ mod tests {
             "failures=philly,preempt=priority,checkpoint=1h",
             "preempt=priority,aging=on",
             "failures=philly,preempt=srtf,aging=on,seed=9",
+            "failures=corr:7200:600:rack",
+            "failures=corr:7200:600:cube:0.25",
+            "failures=corr:21600:3600:plane,seed=11",
         ] {
             let m = ModifierSet::parse(spec).unwrap();
             let fp = m.fingerprint();

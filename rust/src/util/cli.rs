@@ -81,6 +81,43 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse `--<name>` as a duration in seconds (`500ms`/`5s`/`2m`/`1h`
+    /// suffixes, bare numbers are seconds); `default` when absent. `Err`
+    /// carries a ready-to-print message naming the option.
+    pub fn get_duration(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_duration_secs(v).map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+}
+
+/// Parse a duration with an optional `ms`/`s`/`m`/`h` suffix into seconds
+/// (bare numbers are seconds). CLI-boundary twin of the `--with` modifier
+/// duration syntax; kept here so `util` stays dependency-free.
+pub fn parse_duration_secs(v: &str) -> Result<f64, String> {
+    let (num, mult) = if let Some(n) = v.strip_suffix("ms") {
+        (n, 1e-3)
+    } else if let Some(n) = v.strip_suffix('s') {
+        (n, 1.0)
+    } else if let Some(n) = v.strip_suffix('m') {
+        (n, 60.0)
+    } else if let Some(n) = v.strip_suffix('h') {
+        (n, 3600.0)
+    } else {
+        (v, 1.0)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("malformed duration '{v}' (use e.g. 500ms, 5s, 2m, 1h)"))?;
+    if !x.is_finite() || x < 0.0 {
+        return Err(format!("duration '{v}' must be finite and >= 0"));
+    }
+    Ok(x * mult)
+}
+
+impl Args {
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.pos.get(i).map(|s| s.as_str())
     }
@@ -159,6 +196,24 @@ mod tests {
         assert_eq!(a.get_usize("runs", 7), 7);
         assert_eq!(a.get_f64("scale", 1.5), 1.5);
         assert_eq!(a.get_str("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn durations_parse_with_suffixes() {
+        assert_eq!(parse_duration_secs("500ms").unwrap(), 0.5);
+        assert_eq!(parse_duration_secs("5s").unwrap(), 5.0);
+        assert_eq!(parse_duration_secs("2m").unwrap(), 120.0);
+        assert_eq!(parse_duration_secs("1h").unwrap(), 3600.0);
+        assert_eq!(parse_duration_secs("7").unwrap(), 7.0);
+        assert!(parse_duration_secs("5x").unwrap_err().contains("malformed"));
+        assert!(parse_duration_secs("-1s").unwrap_err().contains(">= 0"));
+
+        let a = args(&["--snapshot-every", "1h"]);
+        assert_eq!(a.get_duration("snapshot-every", 0.0).unwrap(), 3600.0);
+        assert_eq!(a.get_duration("absent", 9.0).unwrap(), 9.0);
+        let b = args(&["--snapshot-every", "bogus"]);
+        let err = b.get_duration("snapshot-every", 0.0).unwrap_err();
+        assert!(err.contains("--snapshot-every"), "{err}");
     }
 
     #[test]

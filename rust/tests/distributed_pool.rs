@@ -11,6 +11,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
 
 use rfold::coordinator::pool::{self, PoolExecutor};
 use rfold::metrics::report;
@@ -228,6 +229,70 @@ fn sole_worker_death_is_observed_and_survived() {
         stats.workers[0].completed + stats.leader_fallback,
         4,
         "leader picks up everything the dead worker dropped: {stats:?}"
+    );
+}
+
+/// A worker whose first `flaky` accepted connections are dropped on the
+/// floor, after which every connection is served honestly through the
+/// library's own dispatch — the shape of a worker process restarting
+/// mid-sweep.
+fn spawn_recovering_worker(flaky: usize) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let mut dropped = 0usize;
+        while let Ok((stream, _)) = listener.accept() {
+            if dropped < flaky {
+                dropped += 1;
+                continue; // drop the stream: instant connection death
+            }
+            let mut out = stream.try_clone().unwrap();
+            for line in BufReader::new(stream).lines() {
+                let Ok(line) = line else { break };
+                match pool::worker_dispatch(line.trim()) {
+                    Some(reply) => {
+                        if writeln!(out, "{reply}").is_err() {
+                            break;
+                        }
+                    }
+                    None => break, // QUIT — back to accepting
+                }
+            }
+        }
+    });
+    addr
+}
+
+#[test]
+fn breaker_trips_then_probe_recovery_rejoins_the_grid() {
+    // Three dropped connections in a row trip the host's circuit
+    // breaker; after the cool-off, the half-open PING probe finds the
+    // worker serving again, closes the breaker, and the host finishes
+    // the grid remotely. The rows must not move by a byte, and the
+    // telemetry must record exactly one trip and one recovery.
+    let addr = spawn_recovering_worker(3);
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let executor = PoolExecutor::new(vec![addr.to_string()])
+        .with_breaker_backoff(Duration::from_millis(5));
+    let pooled = rows_pooled(&workloads, &executor);
+    assert_eq!(
+        rows_local(&workloads),
+        pooled,
+        "a breaker trip/recovery cycle must never change row bytes"
+    );
+    let stats = executor.stats();
+    assert_eq!(stats.hosts.len(), 1, "{stats:?}");
+    assert_eq!(stats.hosts[0].trips, 1, "three strikes, one trip: {stats:?}");
+    assert_eq!(
+        stats.hosts[0].recoveries, 1,
+        "the probe's PONG closes the breaker: {stats:?}"
+    );
+    let completed: usize = stats.workers.iter().map(|w| w.completed).sum();
+    // 2 cells × 1 workload × 2 runs = 4 unique trials, conserved.
+    assert_eq!(completed + stats.leader_fallback, 4, "{stats:?}");
+    assert!(
+        completed >= 3,
+        "the recovered worker serves the tail of the grid: {stats:?}"
     );
 }
 

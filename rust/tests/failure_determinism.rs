@@ -184,3 +184,53 @@ fn modified_runs_are_reproducible_end_to_end() {
     let m = ModifierSet::parse("failures=philly").unwrap();
     assert_eq!(rows_json(4, m), rows_json(2, m));
 }
+
+#[test]
+fn correlated_failures_byte_identical_across_worker_counts() {
+    // Domain-level faults (a whole rack/cube going down atomically, plus
+    // cascades) draw from the same dedicated fault stream as independent
+    // node faults, so the blast-radius path must hold the identical
+    // determinism contract: rows never move with the worker count.
+    let m = ModifierSet::parse("failures=corr:21600:3600:rack:0.3").unwrap();
+    let one = rows_json(1, m);
+    let eight = rows_json(8, m);
+    assert_eq!(one.len(), eight.len());
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(
+            a, b,
+            "correlated-failure row differs between --workers 1 and --workers 8"
+        );
+    }
+}
+
+#[test]
+fn correlated_failures_byte_identical_local_vs_pool() {
+    // The corr modifier crosses the wire as part of the ModifierSet
+    // fingerprint, so a pooled sweep must reproduce the same blast-radius
+    // realizations bit-for-bit.
+    let addr = rfold::coordinator::pool::spawn_worker().expect("spawn worker");
+    let pool = rfold::coordinator::pool::PoolExecutor::new(vec![addr.to_string()]);
+    let m = ModifierSet::parse("failures=corr:21600:3600:cube").unwrap();
+    let workloads = [Workload::Synthetic(Scenario::PaperDefault)];
+    let grid = |executor: &dyn sweep::TrialExecutor| -> Vec<String> {
+        sweep::run_grid_with(
+            &cells(),
+            &workloads,
+            2,
+            30,
+            5,
+            m,
+            &ResultCache::new(),
+            executor,
+        )
+        .iter()
+        .map(report::sweep_row_json)
+        .collect()
+    };
+    let local = grid(&sweep::LocalExecutor::new(1));
+    let pooled = grid(&pool);
+    assert_eq!(
+        local, pooled,
+        "pool must reproduce correlated-failure rows byte-exactly"
+    );
+}

@@ -12,8 +12,9 @@ use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 
 use rfold::coordinator::pool;
-use rfold::coordinator::serve::{spawn_server_on, submit_trace};
+use rfold::coordinator::serve::{spawn_server_on, spawn_server_on_opts, submit_trace, ServeOptions};
 use rfold::coordinator::snapshot;
+use rfold::coordinator::wal;
 use rfold::metrics::report;
 use rfold::placement::builtins;
 use rfold::shape::JobShape;
@@ -205,6 +206,149 @@ fn queue_cap_rejects_over_tcp() {
     assert!(drain_rows.iter().all(|r| r.starts_with("ROW ")));
     assert_eq!(c.cmd("SHUTDOWN"), "BYE");
     join.join().expect("service thread");
+}
+
+/// The crash-point lock: kill the daemon at *seeded, randomized* points
+/// mid-stream and recover purely from the durable artifacts (newest
+/// valid auto-snapshot + WAL suffix). Two kills, three daemon
+/// generations, one shared journal — the drained rows must be
+/// byte-identical to an uninterrupted batch run. Runs under correlated
+/// faults so recovery is exercised while the engine is mid-way through
+/// a fault RNG stream.
+#[test]
+fn seeded_crash_points_lose_no_acknowledged_job() {
+    let mut cfg = SimConfig::new(ClusterTopo::reconfigurable_4096(4), builtins::RFOLD);
+    cfg.modifiers = ModifierSet::parse("failures=corr:21600:3600:rack:0.3")
+        .expect("mods")
+        .for_trial(5);
+    let t = synthetic_trace(48, 9);
+    let expect = batch_rows(cfg, &t);
+
+    let dir = std::env::temp_dir().join(format!("rfold-crashpoints-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let dir_s = dir.to_string_lossy().into_owned();
+    let wal_path = format!("{dir_s}/arrivals.wal");
+    let opts = || ServeOptions {
+        wal: Some(wal_path.clone()),
+        replay: Vec::new(),
+        snapshot_every: 120.0,
+        snapshot_dir: Some(dir_s.clone()),
+        snapshot_keep: 3,
+    };
+
+    // Seeded crash points: one in each half of the stream, never at the
+    // very ends (a kill before any ACK or after the last is the trivial
+    // case the other tests already cover).
+    let mut rng = rfold::util::Pcg64::new(0xC4A5_0FF5, 1);
+    let half = t.len() / 2;
+    let cut1 = 1 + rng.below(half - 1);
+    let cut2 = half + rng.below(half - 1);
+    let spans = [0..cut1, cut1..cut2, cut2..t.len()];
+
+    let mut rows = Vec::new();
+    for (generation, span) in spans.into_iter().enumerate() {
+        // Recover from whatever the previous generation left on disk.
+        let (restore, skip) = match snapshot::load_newest(&dir_s).expect("snapshot scan") {
+            Some((snap, _)) => {
+                let skip = snap.jobs.len();
+                (Some(snap), skip)
+            }
+            None => (None, 0),
+        };
+        let mut o = opts();
+        if std::path::Path::new(&wal_path).exists() {
+            let r = wal::replay(&wal_path).expect("wal replay");
+            assert_eq!(
+                r.jobs.len(),
+                span.start,
+                "generation {generation}: the journal must hold every ACKed job"
+            );
+            assert!(!r.torn);
+            o.replay = r.jobs[skip..].to_vec();
+        } else {
+            assert_eq!(generation, 0, "only the first generation starts without a journal");
+        }
+        let (addr, _handle, join) =
+            spawn_server_on_opts("127.0.0.1:0", cfg, 1024, restore, o).expect("bind");
+        let last = span.end == t.len();
+        let s = submit_trace(&addr.to_string(), &t[span], 0.0, last).expect("submit");
+        assert_eq!(s.rejected, 0, "generation {generation}");
+        assert_eq!(s.errors, 0, "generation {generation}");
+        if last {
+            rows = s.rows;
+        }
+        // Kill without draining: in-memory state dies, disk survives.
+        assert_eq!(Client::connect(addr).cmd("SHUTDOWN"), "BYE");
+        join.join().expect("service thread");
+    }
+    assert_eq!(
+        rows, expect,
+        "crash points {cut1}/{cut2}: recovered bytes != uninterrupted batch bytes"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corruption hardening, end to end: damaged durable artifacts must be
+/// refused with structured errors — never a panic, and never a silent
+/// resume from wrong state.
+#[test]
+fn corrupt_durable_artifacts_fail_structurally() {
+    // Produce a genuine snapshot from a live daemon.
+    let cfg = SimConfig::new(ClusterTopo::static_4096(), builtins::FIRST_FIT);
+    let t = synthetic_trace(10, 2);
+    let dir = std::env::temp_dir().join(format!("rfold-corrupt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let dir_s = dir.to_string_lossy().into_owned();
+    let snap_path = format!("{dir_s}/manual.snap");
+    let (addr, _handle, join) = spawn_server_on("127.0.0.1:0", cfg, 1024, None).expect("bind");
+    let s = submit_trace(&addr.to_string(), &t, 0.0, false).expect("submit");
+    assert_eq!(s.accepted, t.len());
+    let mut c = Client::connect(addr);
+    assert!(c.cmd(&format!("SNAPSHOT {snap_path}")).starts_with("SNAPSHOT-OK"));
+    assert_eq!(c.cmd("SHUTDOWN"), "BYE");
+    join.join().expect("service thread");
+    let good = std::fs::read_to_string(&snap_path).expect("read snapshot");
+
+    // Truncated: the body line is gone.
+    let truncated = good.lines().next().unwrap().to_string();
+    std::fs::write(&snap_path, truncated).unwrap();
+    let err = snapshot::load(&snap_path).unwrap_err();
+    assert!(err.contains("missing body"), "{err}");
+
+    // Flipped checksum byte in the header.
+    let flipped = {
+        let (header, body) = good.split_once('\n').unwrap();
+        let mut h: Vec<char> = header.chars().collect();
+        let i = h.len() - 1;
+        h[i] = if h[i] == '0' { '1' } else { '0' };
+        format!("{}\n{body}", h.into_iter().collect::<String>())
+    };
+    std::fs::write(&snap_path, flipped).unwrap();
+    let err = snapshot::load(&snap_path).unwrap_err();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    // Wrong version.
+    std::fs::write(&snap_path, good.replacen("v1", "v999", 1)).unwrap();
+    let err = snapshot::load(&snap_path).unwrap_err();
+    assert!(err.contains("unsupported version"), "{err}");
+
+    // A directory holding only damaged snapshots is an error (resuming
+    // fresh would silently drop acknowledged state) ...
+    let err = snapshot::load_newest(&dir_s).unwrap_err();
+    assert!(err.contains("no valid"), "{err}");
+    // ... but the scan recovers the moment one valid snapshot exists.
+    std::fs::write(&snap_path, &good).unwrap();
+    assert!(snapshot::load_newest(&dir_s).expect("scan").is_some());
+
+    // An empty WAL is a structured error, not an empty replay.
+    let wal_path = format!("{dir_s}/empty.wal");
+    std::fs::write(&wal_path, "").unwrap();
+    let err = wal::replay(&wal_path).unwrap_err();
+    assert!(err.contains("empty file"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The CI soak: replay the recorded Philly sample into a live daemon at
